@@ -1,0 +1,58 @@
+//! Large-scale trace-driven simulation — regenerates the paper's Tables III
+//! and IV plus the Fig. 5 series in one run.
+//!
+//! * Table III: 240 jobs at baseline arrival density.
+//! * Table IV: 480 jobs at 2x density (the paper samples more jobs from the
+//!   same busiest period, so the arrival *rate* doubles).
+//! * Fig. 5a: JCT CDF points per policy; Fig. 5b: queueing by model.
+//!
+//! Run: `cargo run --release --example large_scale_sim`
+
+use wise_share::cluster::ClusterConfig;
+use wise_share::jobs::trace::{self, TraceConfig};
+use wise_share::perf::interference::InterferenceModel;
+use wise_share::report;
+use wise_share::sched::{self, POLICY_NAMES};
+use wise_share::sim::{engine, metrics};
+
+fn run_table(n_jobs: usize, load: f64, seed: u64, label: &str) -> anyhow::Result<()> {
+    let mut tcfg = TraceConfig::simulation(n_jobs, seed);
+    tcfg.load_factor = load;
+    let jobs = trace::generate(&tcfg);
+    let mut rows = Vec::new();
+    for name in POLICY_NAMES {
+        let mut p = sched::by_name(name).unwrap();
+        let out = engine::run(
+            ClusterConfig::simulation(),
+            &jobs,
+            InterferenceModel::new(),
+            p.as_mut(),
+        )?;
+        rows.push(metrics::summarize(name, &out.jobs, out.makespan_s));
+
+        if label == "Table III" {
+            // Fig. 5a: JCT CDF (decimated to ~20 points per policy).
+            let cdf = metrics::jct_cdf(&out.jobs);
+            let step = (cdf.len() / 20).max(1);
+            let pts: Vec<(f64, f64)> =
+                cdf.iter().step_by(step).map(|&(t, f)| (t, f)).collect();
+            print!("{}", report::csv_series(&format!("fig5a,{name}"), &pts));
+            // Fig. 5b: queueing by model.
+            let by: Vec<(f64, f64)> = metrics::queueing_by_model(&out.jobs)
+                .iter()
+                .enumerate()
+                .map(|(i, (_, q))| (i as f64, *q))
+                .collect();
+            print!("{}", report::csv_series(&format!("fig5b,{name}"), &by));
+        }
+    }
+    println!("\n=== {label} ({n_jobs} jobs, load x{load}) ===");
+    println!("{}", report::table34(&rows));
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    run_table(240, 1.0, 1, "Table III")?;
+    run_table(480, 2.0, 1, "Table IV")?;
+    Ok(())
+}

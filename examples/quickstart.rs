@@ -1,0 +1,67 @@
+//! Quickstart: the 60-second tour of the public API.
+//!
+//! Generates a small Philly-like trace, runs it under plain SJF and under
+//! the paper's SJF-BSBF on the simulated 16-GPU cluster, and prints the
+//! paper-style summary table plus one concrete sharing decision (Theorem 1
+//! + Algorithm 2) so you can see the mechanism itself.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use wise_share::cluster::ClusterConfig;
+use wise_share::jobs::trace::{self, TraceConfig};
+use wise_share::jobs::JobRecord;
+use wise_share::pair::batch_size_scaling;
+use wise_share::perf::interference::InterferenceModel;
+use wise_share::perf::profiles::ModelKind;
+use wise_share::report;
+use wise_share::sched;
+use wise_share::sim::{engine, metrics};
+
+fn main() -> anyhow::Result<()> {
+    // --- 1) one explicit pair decision: the heart of SJF-BSBF ------------
+    let running = JobRecord::new(wise_share::jobs::JobSpec {
+        id: 0,
+        model: ModelKind::Cifar10,
+        gpus: 4,
+        iterations: 4000,
+        batch: 128,
+        arrival_s: 0.0,
+    });
+    let newcomer = JobRecord::new(wise_share::jobs::JobSpec {
+        id: 1,
+        model: ModelKind::Bert,
+        gpus: 4,
+        iterations: 800,
+        batch: 16,
+        arrival_s: 100.0,
+    });
+    let xi = InterferenceModel::new();
+    let cfg = batch_size_scaling(&newcomer, &running, 4, 11.0, &xi)
+        .expect("this pair is memory-feasible");
+    println!("Theorem 1 + Algorithm 2 on (BERT@16 arriving, CIFAR10@128 running):");
+    println!(
+        "  share now (κ=0)? {}   sub-batch b̄ = {} (accumulation s = {})",
+        cfg.share, cfg.sub_batch, cfg.accum_step
+    );
+    println!(
+        "  pair mean JCT: overlap {:.0}s vs sequential {:.0}s\n",
+        cfg.schedule.overlap_avg, cfg.schedule.sequential_avg
+    );
+
+    // --- 2) a small end-to-end scheduling comparison ----------------------
+    let jobs = trace::generate(&TraceConfig::simulation(60, 7));
+    let mut rows = Vec::new();
+    for name in ["SJF", "SJF-FFS", "SJF-BSBF"] {
+        let mut policy = sched::by_name(name).unwrap();
+        let out = engine::run(
+            ClusterConfig::simulation(),
+            &jobs,
+            InterferenceModel::new(),
+            policy.as_mut(),
+        )?;
+        rows.push(metrics::summarize(name, &out.jobs, out.makespan_s));
+    }
+    println!("60-job trace on 16x4 GPUs (hours):");
+    println!("{}", report::table34(&rows));
+    Ok(())
+}

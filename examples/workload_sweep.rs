@@ -1,0 +1,45 @@
+//! Fig. 6a reproduction: average JCT vs workload intensity.
+//!
+//! The paper scales the 240-job baseline by 0.5x-2x (120-480 jobs, arrival
+//! density scaled with count). Expected shape: the elastic (Pollux-like)
+//! policy wins at light load, loses its edge as the cluster saturates, and
+//! SJF-BSBF stays lowest (or close) across the sweep by shrinking queueing
+//! via wise sharing.
+//!
+//! Run: `cargo run --release --example workload_sweep`
+
+use wise_share::cluster::ClusterConfig;
+use wise_share::jobs::trace::{self, TraceConfig};
+use wise_share::perf::interference::InterferenceModel;
+use wise_share::sched::{self, POLICY_NAMES};
+use wise_share::sim::{engine, metrics};
+
+fn main() -> anyhow::Result<()> {
+    print!("jobs");
+    for name in POLICY_NAMES {
+        print!(",{name}");
+    }
+    println!();
+    for scale in [0.5, 1.0, 1.5, 2.0] {
+        let n_jobs = (240.0 * scale) as usize;
+        let mut tcfg = TraceConfig::simulation(n_jobs, 1);
+        tcfg.load_factor = scale; // density scales with job count (Fig. 6a)
+        let jobs = trace::generate(&tcfg);
+        print!("{n_jobs}");
+        for name in POLICY_NAMES {
+            let mut p = sched::by_name(name).unwrap();
+            let out = engine::run(
+                ClusterConfig::simulation(),
+                &jobs,
+                InterferenceModel::new(),
+                p.as_mut(),
+            )?;
+            let s = metrics::summarize(name, &out.jobs, out.makespan_s);
+            print!(",{:.3}", s.all.avg_jct_s / 3600.0);
+        }
+        println!();
+    }
+    println!("\nvalues: average JCT in hours; expect Pollux best at 120 jobs,");
+    println!("SJF-BSBF best (or tied) from 240 jobs upward.");
+    Ok(())
+}

@@ -1,0 +1,134 @@
+"""AOT: lower the L2 training step to HLO *text* artifacts for the Rust runtime.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Emitted artifacts (default config, see model.DEFAULT):
+
+    artifacts/grad_step_mb{b}.hlo.txt   b in MICRO_BATCHES
+        inputs : params... (P arrays), x i32[b,T], y i32[b,T]
+        outputs: (loss f32[], grads... (P arrays))
+    artifacts/accum.hlo.txt             inputs: grads_a..., grads_b... -> sums
+    artifacts/apply.hlo.txt             inputs: params..., grads..., hp f32[2]
+                                        hp = [lr, 1/s]; outputs: params'
+    artifacts/init_params.hlo.txt       inputs: () -> params... (seeded init)
+    artifacts/meta.json                 param names/shapes, variants, config
+
+`make artifacts` re-runs this only when python/compile/** changes; Python is
+never on the Rust request path.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+# Sub-batch variants: Algorithm 2 halves the batch b <- b/2 down to 1, so the
+# runtime needs one grad_step executable per power-of-two micro-batch.
+MICRO_BATCHES = (1, 2, 4, 8)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple for rust side)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_grad_step(cfg: M.ModelConfig, micro_batch: int) -> str:
+    pspecs = [
+        jax.ShapeDtypeStruct(s, jnp.float32) for s in M.param_shapes(cfg)
+    ]
+    xspec = jax.ShapeDtypeStruct((micro_batch, cfg.seq_len), jnp.int32)
+
+    def fn(*args):
+        n = len(pspecs)
+        params, x, y = list(args[:n]), args[n], args[n + 1]
+        return M.grad_step(cfg, params, x, y)
+
+    return to_hlo_text(jax.jit(fn).lower(*pspecs, xspec, xspec))
+
+
+def lower_accum(cfg: M.ModelConfig) -> str:
+    n = len(M.param_shapes(cfg))
+    gspecs = [jax.ShapeDtypeStruct(s, jnp.float32) for s in M.param_shapes(cfg)] * 2
+    return to_hlo_text(jax.jit(lambda *g: M.accum(n, *g)).lower(*gspecs))
+
+
+def lower_apply(cfg: M.ModelConfig) -> str:
+    n = len(M.param_shapes(cfg))
+    specs = [jax.ShapeDtypeStruct(s, jnp.float32) for s in M.param_shapes(cfg)] * 2
+    specs.append(jax.ShapeDtypeStruct((2,), jnp.float32))
+    return to_hlo_text(jax.jit(lambda *a: M.apply_update(n, *a)).lower(*specs))
+
+
+def lower_init(cfg: M.ModelConfig, seed: int = 0) -> str:
+    return to_hlo_text(jax.jit(lambda: tuple(M.init_params(cfg, seed))).lower())
+
+
+def write_meta(cfg: M.ModelConfig, out_dir: str) -> None:
+    meta = {
+        "model": {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads,
+            "n_layers": cfg.n_layers,
+            "d_ff": cfg.d_ff,
+            "seq_len": cfg.seq_len,
+            "n_params": int(M.n_params(cfg)),
+        },
+        "param_names": M.param_names(cfg),
+        "param_shapes": [list(s) for s in M.param_shapes(cfg)],
+        "micro_batches": list(MICRO_BATCHES),
+        "artifacts": {
+            **{f"grad_step_mb{b}": f"grad_step_mb{b}.hlo.txt" for b in MICRO_BATCHES},
+            "accum": "accum.hlo.txt",
+            "apply": "apply.hlo.txt",
+            "init_params": "init_params.hlo.txt",
+        },
+    }
+    with open(os.path.join(out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--seq-len", type=int, default=M.DEFAULT.seq_len)
+    args = ap.parse_args()
+    cfg = M.ModelConfig(seq_len=args.seq_len) if args.seq_len != M.DEFAULT.seq_len else M.DEFAULT
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    for b in MICRO_BATCHES:
+        text = lower_grad_step(cfg, b)
+        path = os.path.join(args.out_dir, f"grad_step_mb{b}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+    for name, fn in [("accum", lower_accum), ("apply", lower_apply)]:
+        text = fn(cfg)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+    text = lower_init(cfg)
+    path = os.path.join(args.out_dir, "init_params.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {path} ({len(text)} chars)")
+    write_meta(cfg, args.out_dir)
+    print(f"wrote {os.path.join(args.out_dir, 'meta.json')}")
+
+
+if __name__ == "__main__":
+    main()

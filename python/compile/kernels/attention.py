@@ -1,0 +1,120 @@
+"""L1 Pallas kernel: blocked causal attention (flash-style online softmax).
+
+One grid step per (batch*head, q-block); the kernel scans key/value blocks
+with a running (max, sum) rescale — the classic flash-attention recurrence —
+so the full [T, T] logits matrix never materializes. On TPU this is the
+VMEM-resident analogue of the CUDA shared-memory flash kernel the DDP jobs
+in the paper would run; `interpret=True` lowers it to plain HLO for the CPU
+PJRT runtime (see DESIGN.md §6).
+
+Backward is defined via custom_vjp against the reference recomputation
+(cheap at our sequence lengths); pytest checks both fwd and grad against
+`ref.attention_batched_ref`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref as _ref
+
+DEFAULT_BLOCK_Q = 64
+DEFAULT_BLOCK_K = 64
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, causal: bool, t: int):
+    """Flash-style attention for one (bh, q-block) grid point.
+
+    q_ref: [bq, dh]; k_ref, v_ref: [T, dh] (full keys for this bh);
+    o_ref: [bq, dh]. Scans key blocks with online-softmax rescaling.
+    """
+    bq, dh = q_ref.shape
+    iq = pl.program_id(1)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    q = q_ref[...].astype(jnp.float32) * scale
+
+    n_kb = t // block_k
+    q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, block_k), 0)
+
+    def body(kb, carry):
+        m_prev, l_prev, acc = carry
+        k_blk = pl.load(k_ref, (pl.dslice(kb * block_k, block_k), slice(None)))
+        v_blk = pl.load(v_ref, (pl.dslice(kb * block_k, block_k), slice(None)))
+        s = q @ k_blk.astype(jnp.float32).T  # [bq, block_k]
+        if causal:
+            k_pos = kb * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (bq, block_k), 1
+            )
+            s = jnp.where(q_pos >= k_pos, s, -1e30)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + p @ v_blk.astype(jnp.float32)
+        return m_new, l_new, acc
+
+    m0 = jnp.full((bq,), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    acc0 = jnp.zeros((bq, dh), jnp.float32)
+    # Causal: key blocks strictly after this q block contribute nothing.
+    upper = n_kb if not causal else (iq * bq + bq + block_k - 1) // block_k
+    m, l, acc = jax.lax.fori_loop(0, upper, body, (m0, l0, acc0))
+    o_ref[...] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def _attention_fwd_impl(q, k, v, causal: bool, block_q: int, block_k: int):
+    b, h, t, dh = q.shape
+    bq = max(1, min(block_q, t))
+    while t % bq != 0:
+        bq -= 1
+    bk = max(1, min(block_k, t))
+    while t % bk != 0:
+        bk -= 1
+    qf = q.reshape(b * h, t, dh)
+    kf = k.reshape(b * h, t, dh)
+    vf = v.reshape(b * h, t, dh)
+    out = pl.pallas_call(
+        functools.partial(_attn_kernel, block_k=bk, causal=causal, t=t),
+        grid=(b * h, t // bq),
+        in_specs=[
+            pl.BlockSpec((None, bq, dh), lambda bh, iq: (bh, iq, 0)),
+            pl.BlockSpec((None, t, dh), lambda bh, iq: (bh, 0, 0)),
+            pl.BlockSpec((None, t, dh), lambda bh, iq: (bh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, bq, dh), lambda bh, iq: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, t, dh), q.dtype),
+        interpret=True,
+    )(qf, kf, vf)
+    return out.reshape(b, h, t, dh)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+) -> jax.Array:
+    """Batched multi-head attention, [B, H, T, dh] -> [B, H, T, dh]."""
+    return _attention_fwd_impl(q, k, v, causal, block_q, block_k)
+
+
+def _attention_vjp_fwd(q, k, v, causal, block_q, block_k):
+    out = _attention_fwd_impl(q, k, v, causal, block_q, block_k)
+    return out, (q, k, v)
+
+
+def _attention_vjp_bwd(causal, block_q, block_k, res, g):
+    q, k, v = res
+    # Backward by differentiating the reference recomputation: exact same
+    # math as the kernel (softmax(qk^T)v), and T is small in our models.
+    _, vjp = jax.vjp(lambda a, b, c: _ref.attention_batched_ref(a, b, c, causal), q, k, v)
+    return vjp(g)
+
+
+attention.defvjp(_attention_vjp_fwd, _attention_vjp_bwd)

@@ -1,0 +1,126 @@
+"""L1 Pallas kernel: blocked GEMM + fused linear (bias + GELU epilogue).
+
+Hardware adaptation (the paper's jobs ran CUDA DDP; our stand-in training
+kernel targets the TPU mental model — see DESIGN.md §6): the K loop is the
+innermost grid dimension so each (i, j) output tile stays resident across
+the contraction (the revisiting schedule is expressed via BlockSpec index
+maps — the TPU analogue of a CUDA threadblock tiling over shared memory),
+accumulation is fp32 for the MXU, and default tiles are MXU-shaped
+(128x128) clamped to the problem size. `interpret=True` everywhere: the CPU
+PJRT plugin cannot run Mosaic custom-calls, and interpret mode lowers to
+plain HLO that the Rust runtime executes directly.
+
+`fused_linear` carries a custom_vjp whose backward pass reuses the same
+Pallas GEMM (dx = g @ w.T, dw = x.T @ g), so the AOT'd training step runs
+Pallas tiles in both fwd and bwd.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default MXU-shaped tile; clamped per call to the (possibly tiny) problem.
+TILE_M = 128
+TILE_N = 128
+TILE_K = 128
+
+
+def _clamp(tile: int, dim: int) -> int:
+    """Largest tile <= `tile` that divides `dim` (grids must tile exactly)."""
+    t = max(1, min(tile, dim))
+    while dim % t != 0:
+        t -= 1
+    return t
+
+
+def _gemm_kernel(x_ref, w_ref, o_ref):
+    """One (i, j, k) grid step: o_tile += x_tile @ w_tile.
+
+    The output BlockSpec index map ignores k, so the same o tile is
+    revisited across the contraction — Pallas keeps it resident (VMEM on
+    TPU) and we accumulate in place in fp32.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m", "tile_n", "tile_k"))
+def matmul(
+    x: jax.Array,
+    w: jax.Array,
+    tile_m: int = TILE_M,
+    tile_n: int = TILE_N,
+    tile_k: int = TILE_K,
+) -> jax.Array:
+    """Blocked Pallas GEMM: [M, K] @ [K, N] -> [M, N], fp32 accumulation."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} != {k2}"
+    bm, bn, bk = _clamp(tile_m, m), _clamp(tile_n, n), _clamp(tile_k, k)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _gemm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, w)
+
+
+# --- fused linear with custom VJP -------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def fused_linear(x, w, b, gelu: bool = False):
+    """x @ w + b with optional (tanh-approx) GELU epilogue, Pallas GEMM core.
+
+    2-D x only ([M, K]); the model reshapes [B, T, K] -> [B*T, K] before
+    calling. Backward reuses the Pallas GEMM for both dx and dw.
+    """
+    y = matmul(x, w) + b
+    if gelu:
+        y = jax.nn.gelu(y, approximate=True)
+    return y
+
+
+def _fused_linear_fwd(x, w, b, gelu: bool):
+    z = matmul(x, w) + b
+    y = jax.nn.gelu(z, approximate=True) if gelu else z
+    return y, (x, w, z)
+
+
+def _dgelu(z):
+    """d/dz gelu(z), tanh approximation (matches jax.nn.gelu approximate)."""
+    c = jnp.sqrt(2.0 / jnp.pi).astype(z.dtype)
+    t = jnp.tanh(c * (z + 0.044715 * z**3))
+    dt = (1.0 - t**2) * c * (1.0 + 3 * 0.044715 * z**2)
+    return 0.5 * (1.0 + t) + 0.5 * z * dt
+
+
+def _fused_linear_bwd(gelu: bool, res, g):
+    x, w, z = res
+    if gelu:
+        g = g * _dgelu(z)
+    dx = matmul(g, w.T)
+    dw = matmul(x.T, g)
+    db = jnp.sum(g, axis=0)
+    return dx, dw, db
+
+
+fused_linear.defvjp(_fused_linear_fwd, _fused_linear_bwd)

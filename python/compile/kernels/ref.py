@@ -1,0 +1,49 @@
+"""Pure-jnp correctness oracles for the Pallas kernels (L1).
+
+Every Pallas kernel in this package has an exact reference here; pytest
+(`python/tests/`) asserts allclose between kernel and oracle across a
+hypothesis sweep of shapes/dtypes. The oracles are also used as the
+backward-pass definitions in the custom_vjp rules (see the kernel modules),
+so kernel-vs-ref agreement implies gradient correctness of the whole L2
+model up to float error.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Reference for kernels.matmul.matmul: plain fp32-accumulated GEMM."""
+    return jnp.matmul(x.astype(jnp.float32), w.astype(jnp.float32)).astype(x.dtype)
+
+
+def linear_ref(x: jax.Array, w: jax.Array, b: jax.Array, gelu: bool) -> jax.Array:
+    """Reference for kernels.matmul.fused_linear: x @ w + b, optionally GELU."""
+    y = matmul_ref(x, w) + b.astype(jnp.float32)
+    if gelu:
+        y = jax.nn.gelu(y, approximate=True)
+    return y.astype(x.dtype)
+
+
+def attention_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array, causal: bool = True
+) -> jax.Array:
+    """Reference for kernels.attention.attention.
+
+    q, k, v: [T, dh] single (batch, head) slice. Softmax over keys with
+    optional causal mask; fp32 softmax accumulation.
+    """
+    t = q.shape[0]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    logits = jnp.matmul(q.astype(jnp.float32), k.astype(jnp.float32).T) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+        logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.matmul(p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def attention_batched_ref(q, k, v, causal: bool = True):
+    """[B, H, T, dh] batched version of attention_ref."""
+    return jax.vmap(jax.vmap(lambda a, b, c: attention_ref(a, b, c, causal)))(q, k, v)

@@ -1,0 +1,184 @@
+"""L2: transformer language model fwd/bwd in JAX, built on the L1 kernels.
+
+This is the *workload* that the Rust coordinator's physical mode actually
+executes for every scheduled DL job: a decoder-only transformer LM trained
+with SGD on next-token prediction. It is deliberately decomposed into three
+AOT-compilable pieces so that **gradient accumulation — the paper's
+memory-pressure knob (Algorithm 2's sub-batch size b = B/s) — is owned by
+the Rust hot loop**, never by Python:
+
+    grad_step(params, x, y)   -> (loss, grads)        one micro-batch
+    accum(grads_a, grads_b)   -> grads_a + grads_b    fold micro-batches
+    apply(params, grads, hp)  -> params'              SGD, hp = [lr, 1/s]
+
+Running `apply(params, sum_of_s_micro_grads, [lr, 1/s])` is bit-for-bit the
+same update as one full-batch step with batch B = s*b (the property the
+paper relies on for "no accuracy degradation"; tested in
+python/tests/test_model.py::test_grad_accum_equivalence).
+
+Parameters travel as a *flat list* of arrays in the deterministic order
+given by `param_names()`; `aot.py` writes the shapes to
+artifacts/meta.json so the Rust runtime can allocate/feed them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import attention
+from .kernels.matmul import fused_linear
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Decoder-only transformer LM hyper-parameters."""
+
+    vocab: int = 512
+    d_model: int = 128
+    n_heads: int = 4
+    n_layers: int = 2
+    d_ff: int = 256
+    seq_len: int = 64
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+# A "tiny" config for fast pytest runs.
+TINY = ModelConfig(vocab=64, d_model=32, n_heads=2, n_layers=1, d_ff=64, seq_len=16)
+# Default config used by the AOT artifacts / physical-mode executor.
+DEFAULT = ModelConfig()
+
+
+def param_names(cfg: ModelConfig) -> List[str]:
+    """Deterministic flat parameter order — the AOT ABI with Rust."""
+    names = ["tok_emb", "pos_emb"]
+    for i in range(cfg.n_layers):
+        names += [
+            f"l{i}.ln1_g", f"l{i}.ln1_b",
+            f"l{i}.wq", f"l{i}.wk", f"l{i}.wv", f"l{i}.wo",
+            f"l{i}.ln2_g", f"l{i}.ln2_b",
+            f"l{i}.w1", f"l{i}.b1", f"l{i}.w2", f"l{i}.b2",
+        ]
+    names += ["lnf_g", "lnf_b", "head"]
+    return names
+
+
+def param_shapes(cfg: ModelConfig) -> List[Tuple[int, ...]]:
+    """Shapes matching `param_names` order."""
+    d, ff, v, t = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.seq_len
+    shapes: List[Tuple[int, ...]] = [(v, d), (t, d)]
+    for _ in range(cfg.n_layers):
+        shapes += [
+            (d,), (d,),
+            (d, d), (d, d), (d, d), (d, d),
+            (d,), (d,),
+            (d, ff), (ff,), (ff, d), (d,),
+        ]
+    shapes += [(d,), (d,), (d, v)]
+    return shapes
+
+
+def n_params(cfg: ModelConfig) -> int:
+    return sum(int(jnp.prod(jnp.asarray(s))) for s in param_shapes(cfg))
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> List[jax.Array]:
+    """Scaled-normal init, flat list in `param_names` order."""
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(param_shapes(cfg)))
+    out = []
+    for key, name, shape in zip(keys, param_names(cfg), param_shapes(cfg)):
+        if name.endswith(("_g",)):
+            out.append(jnp.ones(shape, jnp.float32))
+        elif name.endswith(("_b", ".b1", ".b2")):
+            out.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = shape[0] if len(shape) > 1 else 1
+            out.append(
+                jax.random.normal(key, shape, jnp.float32) / jnp.sqrt(float(fan_in))
+            )
+    return out
+
+
+def _layer_norm(x, g, b, eps: float = 1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def forward(cfg: ModelConfig, params: List[jax.Array], x: jax.Array) -> jax.Array:
+    """Logits for token ids x: [B, T] -> [B, T, vocab].
+
+    All dense projections run through the Pallas `fused_linear`; attention
+    runs through the Pallas flash kernel. Pre-LN residual blocks.
+    """
+    names = param_names(cfg)
+    p = dict(zip(names, params))
+    bsz, t = x.shape
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.head_dim
+
+    hdn = p["tok_emb"][x] + p["pos_emb"][None, :t, :]
+    for i in range(cfg.n_layers):
+        # --- attention block
+        a_in = _layer_norm(hdn, p[f"l{i}.ln1_g"], p[f"l{i}.ln1_b"])
+        flat = a_in.reshape(bsz * t, d)
+        q = fused_linear(flat, p[f"l{i}.wq"], jnp.zeros((d,)), False)
+        k = fused_linear(flat, p[f"l{i}.wk"], jnp.zeros((d,)), False)
+        v = fused_linear(flat, p[f"l{i}.wv"], jnp.zeros((d,)), False)
+
+        def heads(z):
+            return z.reshape(bsz, t, h, dh).transpose(0, 2, 1, 3)
+
+        o = attention(heads(q), heads(k), heads(v), True)
+        o = o.transpose(0, 2, 1, 3).reshape(bsz * t, d)
+        o = fused_linear(o, p[f"l{i}.wo"], jnp.zeros((d,)), False)
+        hdn = hdn + o.reshape(bsz, t, d)
+        # --- MLP block
+        m_in = _layer_norm(hdn, p[f"l{i}.ln2_g"], p[f"l{i}.ln2_b"])
+        m = fused_linear(m_in.reshape(bsz * t, d), p[f"l{i}.w1"], p[f"l{i}.b1"], True)
+        m = fused_linear(m, p[f"l{i}.w2"], p[f"l{i}.b2"], False)
+        hdn = hdn + m.reshape(bsz, t, d)
+
+    hdn = _layer_norm(hdn, p["lnf_g"], p["lnf_b"])
+    logits = fused_linear(hdn.reshape(bsz * t, d), p["head"], jnp.zeros((cfg.vocab,)), False)
+    return logits.reshape(bsz, t, cfg.vocab)
+
+
+def loss_fn(cfg: ModelConfig, params: List[jax.Array], x: jax.Array, y: jax.Array):
+    """Mean next-token cross-entropy over the batch."""
+    logits = forward(cfg, params, x)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+# --- The three AOT-compiled entry points ------------------------------------
+
+
+def grad_step(cfg: ModelConfig, params: List[jax.Array], x: jax.Array, y: jax.Array):
+    """One micro-batch: (loss, grads). grads in `param_names` order."""
+    loss, grads = jax.value_and_grad(lambda ps: loss_fn(cfg, ps, x, y))(params)
+    return (loss, *grads)
+
+
+def accum(n: int, *grads: jax.Array):
+    """Element-wise sum of two flat grad lists (first n + last n)."""
+    assert len(grads) == 2 * n
+    return tuple(a + b for a, b in zip(grads[:n], grads[n:]))
+
+
+def apply_update(n: int, *args: jax.Array):
+    """SGD: params - lr * (grads * inv_s). args = params(n), grads(n), hp[2].
+
+    hp is a f32[2] array [lr, inv_s]; inv_s = 1/s averages the s
+    accumulated micro-batch gradients back to the full-batch mean.
+    """
+    assert len(args) == 2 * n + 1
+    params, grads, hp = args[:n], args[n : 2 * n], args[2 * n]
+    lr, inv_s = hp[0], hp[1]
+    return tuple(p - lr * (g * inv_s) for p, g in zip(params, grads))

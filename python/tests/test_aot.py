@@ -1,0 +1,82 @@
+"""AOT path: HLO text emission is well-formed and meta matches the model ABI.
+
+Uses the TINY config (fast); `make artifacts` exercises the DEFAULT config.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model as M
+
+CFG = M.TINY
+
+
+def test_grad_step_hlo_text_parses_back(tmp_path):
+    text = aot.lower_grad_step(CFG, micro_batch=2)
+    assert text.startswith("HloModule"), text[:80]
+    # One ENTRY parameter per model param + x + y. (Nested fusion
+    # computations have their own parameter(k) lines, so take the max index.)
+    import re
+
+    idx = [int(m) for m in re.findall(r"parameter\((\d+)\)", text)]
+    assert max(idx) + 1 == len(M.param_shapes(CFG)) + 2
+
+
+def test_accum_hlo_has_adds():
+    text = aot.lower_accum(CFG)
+    assert text.startswith("HloModule")
+    assert text.count(" add(") >= len(M.param_shapes(CFG))
+
+
+def test_apply_hlo_has_hp_param():
+    text = aot.lower_apply(CFG)
+    assert "f32[2]" in text  # the [lr, inv_s] hyper-parameter vector
+
+
+def test_init_hlo_no_params():
+    text = aot.lower_init(CFG)
+    assert text.startswith("HloModule")
+    # The ENTRY computation of the init program takes no parameters
+    # (nested fusion/reduce computations may still have parameter lines).
+    lines = text.splitlines()
+    start = next(i for i, l in enumerate(lines) if l.startswith("ENTRY"))
+    entry_block = []
+    for l in lines[start + 1 :]:
+        if l.strip() == "}":
+            break
+        entry_block.append(l)
+    assert entry_block, "empty ENTRY block"
+    assert not any("parameter(" in l for l in entry_block), entry_block[:5]
+
+
+def test_meta_json_roundtrip(tmp_path):
+    aot.write_meta(CFG, str(tmp_path))
+    meta = json.load(open(tmp_path / "meta.json"))
+    assert meta["param_names"] == M.param_names(CFG)
+    assert [tuple(s) for s in meta["param_shapes"]] == list(M.param_shapes(CFG))
+    assert meta["micro_batches"] == list(aot.MICRO_BATCHES)
+    assert meta["model"]["n_params"] == M.n_params(CFG)
+
+
+def test_grad_step_execute_equals_direct_call():
+    """Compiling the lowered module and executing == calling grad_step."""
+    params = M.init_params(CFG, seed=0)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(9))
+    x = jax.random.randint(k1, (2, CFG.seq_len), 0, CFG.vocab, jnp.int32)
+    y = jax.random.randint(k2, (2, CFG.seq_len), 0, CFG.vocab, jnp.int32)
+
+    def fn(*args):
+        n = len(params)
+        return M.grad_step(CFG, list(args[:n]), args[n], args[n + 1])
+
+    direct = fn(*params, x, y)
+    jitted = jax.jit(fn)(*params, x, y)
+    import numpy as np
+
+    for d, j in zip(direct, jitted):
+        np.testing.assert_allclose(np.asarray(d), np.asarray(j), rtol=1e-5, atol=1e-5)

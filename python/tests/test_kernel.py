@@ -1,0 +1,187 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (the CORE signal).
+
+Hypothesis sweeps shapes/dtypes/tile sizes; every property asserts
+allclose against `compile.kernels.ref`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention as at
+from compile.kernels import matmul as mk
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", False)
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+    return x.astype(dtype)
+
+
+# ---------------------------------------------------------------- matmul
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 64),
+    n=st.integers(1, 96),
+    tile=st.sampled_from([8, 16, 32, 128]),
+)
+def test_matmul_matches_ref_shapes(m, k, n, tile):
+    x = _rand(m * 7 + 1, (m, k), jnp.float32)
+    w = _rand(n * 13 + 2, (k, n), jnp.float32)
+    got = mk.matmul(x, w, tile_m=tile, tile_n=tile, tile_k=tile)
+    want = ref.matmul_ref(x, w)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_dtypes(dtype):
+    x = _rand(3, (32, 24), dtype)
+    w = _rand(4, (24, 40), dtype)
+    got = np.asarray(mk.matmul(x, w), np.float32)
+    want = np.asarray(ref.matmul_ref(x, w), np.float32)
+    tol = 2e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+def test_matmul_identity():
+    x = _rand(5, (16, 16), jnp.float32)
+    eye = jnp.eye(16, dtype=jnp.float32)
+    np.testing.assert_allclose(mk.matmul(x, eye), x, rtol=1e-6, atol=1e-6)
+
+
+def test_matmul_rejects_bad_contraction():
+    x = jnp.zeros((4, 5))
+    w = jnp.zeros((6, 7))
+    with pytest.raises(AssertionError):
+        mk.matmul(x, w)
+
+
+def test_matmul_tile_clamp_indivisible():
+    # 30x30 with tile 128 must clamp to a divisor, not crash.
+    x = _rand(6, (30, 30), jnp.float32)
+    w = _rand(7, (30, 30), jnp.float32)
+    np.testing.assert_allclose(
+        mk.matmul(x, w), ref.matmul_ref(x, w), rtol=2e-5, atol=2e-5
+    )
+
+
+# ---------------------------------------------------------------- fused_linear
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 64),
+    k=st.integers(1, 48),
+    n=st.integers(1, 64),
+    gelu=st.booleans(),
+)
+def test_fused_linear_matches_ref(m, k, n, gelu):
+    x = _rand(m + 11, (m, k), jnp.float32)
+    w = _rand(n + 17, (k, n), jnp.float32)
+    b = _rand(k + 23, (n,), jnp.float32)
+    got = mk.fused_linear(x, w, b, gelu)
+    want = ref.linear_ref(x, w, b, gelu)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("gelu", [False, True])
+def test_fused_linear_grads_match_autodiff_of_ref(gelu):
+    x = _rand(1, (24, 16), jnp.float32)
+    w = _rand(2, (16, 32), jnp.float32)
+    b = _rand(3, (32,), jnp.float32)
+
+    def f_kernel(x, w, b):
+        return jnp.sum(jnp.sin(mk.fused_linear(x, w, b, gelu)))
+
+    def f_ref(x, w, b):
+        return jnp.sum(jnp.sin(ref.linear_ref(x, w, b, gelu)))
+
+    gk = jax.grad(f_kernel, argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(x, w, b)
+    for a, e in zip(gk, gr):
+        np.testing.assert_allclose(a, e, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------- attention
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 3),
+    h=st.sampled_from([1, 2, 4]),
+    t=st.sampled_from([8, 16, 24, 64]),
+    dh=st.sampled_from([8, 16, 32]),
+    causal=st.booleans(),
+    bq=st.sampled_from([4, 8, 16, 64]),
+)
+def test_attention_matches_ref(b, h, t, dh, causal, bq):
+    q = _rand(b * 100 + t, (b, h, t, dh), jnp.float32)
+    k = _rand(h * 100 + t + 1, (b, h, t, dh), jnp.float32)
+    v = _rand(dh * 100 + t + 2, (b, h, t, dh), jnp.float32)
+    got = at.attention(q, k, v, causal, bq, bq)
+    want = ref.attention_batched_ref(q, k, v, causal)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+def test_attention_causality():
+    """Future keys must not influence causal attention output."""
+    b, h, t, dh = 1, 2, 16, 8
+    q = _rand(1, (b, h, t, dh), jnp.float32)
+    k = _rand(2, (b, h, t, dh), jnp.float32)
+    v = _rand(3, (b, h, t, dh), jnp.float32)
+    base = at.attention(q, k, v, True, 8, 8)
+    # Perturb the last key/value; only the last query position may change.
+    k2 = k.at[:, :, -1, :].add(100.0)
+    v2 = v.at[:, :, -1, :].add(100.0)
+    pert = at.attention(q, k2, v2, True, 8, 8)
+    np.testing.assert_allclose(base[:, :, :-1], pert[:, :, :-1], rtol=1e-5, atol=1e-5)
+    assert not np.allclose(base[:, :, -1], pert[:, :, -1])
+
+
+def test_attention_softmax_rows_are_convex_combinations():
+    """Non-causal attention output rows lie within [min(v), max(v)] per dim."""
+    b, h, t, dh = 2, 2, 16, 8
+    q = _rand(4, (b, h, t, dh), jnp.float32)
+    k = _rand(5, (b, h, t, dh), jnp.float32)
+    v = _rand(6, (b, h, t, dh), jnp.float32)
+    out = np.asarray(at.attention(q, k, v, False, 8, 8))
+    vmin = np.asarray(v).min(axis=2, keepdims=True) - 1e-4
+    vmax = np.asarray(v).max(axis=2, keepdims=True) + 1e-4
+    assert (out >= vmin).all() and (out <= vmax).all()
+
+
+def test_attention_grad_matches_ref_grad():
+    b, h, t, dh = 1, 2, 16, 8
+    q = _rand(7, (b, h, t, dh), jnp.float32)
+    k = _rand(8, (b, h, t, dh), jnp.float32)
+    v = _rand(9, (b, h, t, dh), jnp.float32)
+
+    gk = jax.grad(lambda q, k, v: jnp.sum(at.attention(q, k, v, True, 8, 8) ** 2), (0, 1, 2))(q, k, v)
+    gr = jax.grad(
+        lambda q, k, v: jnp.sum(ref.attention_batched_ref(q, k, v, True) ** 2), (0, 1, 2)
+    )(q, k, v)
+    for a, e in zip(gk, gr):
+        np.testing.assert_allclose(a, e, rtol=1e-4, atol=1e-4)
+
+
+def test_attention_block_size_invariance():
+    """Result must not depend on the flash block decomposition."""
+    b, h, t, dh = 1, 1, 64, 16
+    q = _rand(10, (b, h, t, dh), jnp.float32)
+    k = _rand(11, (b, h, t, dh), jnp.float32)
+    v = _rand(12, (b, h, t, dh), jnp.float32)
+    o1 = at.attention(q, k, v, True, 64, 64)
+    o2 = at.attention(q, k, v, True, 8, 16)
+    o3 = at.attention(q, k, v, True, 16, 8)
+    np.testing.assert_allclose(o1, o2, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(o1, o3, rtol=2e-5, atol=2e-5)

@@ -1,0 +1,133 @@
+"""L2 correctness: model shapes, gradient-accumulation equivalence, training.
+
+The key paper property lives in `test_grad_accum_equivalence`: updating with
+the mean of s micro-batch gradients (sub-batch b = B/s) is numerically the
+same step as one full-batch update — gradient accumulation preserves
+convergence, which is what lets SJF-BSBF shrink sub-batches for GPU sharing
+without touching the user's effective batch size.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+CFG = M.TINY
+
+
+def _batch(cfg, bsz, seed=0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.randint(k1, (bsz, cfg.seq_len), 0, cfg.vocab, jnp.int32)
+    y = jax.random.randint(k2, (bsz, cfg.seq_len), 0, cfg.vocab, jnp.int32)
+    return x, y
+
+
+def test_param_shapes_match_names():
+    assert len(M.param_names(CFG)) == len(M.param_shapes(CFG))
+
+
+def test_param_count_positive_and_scales_with_layers():
+    small = M.n_params(M.TINY)
+    big = M.n_params(M.ModelConfig())
+    assert 0 < small < big
+
+
+def test_init_params_deterministic():
+    a = M.init_params(CFG, seed=7)
+    b = M.init_params(CFG, seed=7)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_forward_shape():
+    params = M.init_params(CFG)
+    x, _ = _batch(CFG, 2)
+    logits = M.forward(CFG, params, x)
+    assert logits.shape == (2, CFG.seq_len, CFG.vocab)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_loss_finite_and_near_uniform_at_init():
+    params = M.init_params(CFG)
+    x, y = _batch(CFG, 4)
+    loss = M.loss_fn(CFG, params, x, y)
+    # Random init => loss close to ln(vocab).
+    assert abs(float(loss) - np.log(CFG.vocab)) < 1.5
+
+
+def test_grad_step_returns_loss_and_all_grads():
+    params = M.init_params(CFG)
+    x, y = _batch(CFG, 2)
+    out = M.grad_step(CFG, params, x, y)
+    assert len(out) == 1 + len(params)
+    assert out[0].shape == ()
+    for g, p in zip(out[1:], params):
+        assert g.shape == p.shape
+
+
+def test_accum_is_elementwise_sum():
+    params = M.init_params(CFG)
+    n = len(params)
+    doubled = M.accum(n, *params, *params)
+    for d, p in zip(doubled, params):
+        np.testing.assert_allclose(d, 2 * np.asarray(p), rtol=1e-6)
+
+
+def test_apply_update_sgd_direction():
+    params = M.init_params(CFG)
+    n = len(params)
+    grads = [jnp.ones_like(p) for p in params]
+    hp = jnp.array([0.1, 0.5], jnp.float32)  # lr=0.1, inv_s=0.5
+    new = M.apply_update(n, *params, *grads, hp)
+    for p, q in zip(params, new):
+        np.testing.assert_allclose(np.asarray(q), np.asarray(p) - 0.05, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("s", [2, 4])
+def test_grad_accum_equivalence(s):
+    """mean of s micro-grads == full-batch grad; update identical."""
+    cfg = CFG
+    params = M.init_params(cfg)
+    n = len(params)
+    bsz = 4
+    x, y = _batch(cfg, bsz, seed=3)
+
+    # Full-batch step.
+    full = M.grad_step(cfg, params, x, y)
+    full_grads = list(full[1:])
+
+    # Accumulated micro-batch steps (b = bsz/s).
+    b = bsz // s
+    acc = None
+    for i in range(s):
+        out = M.grad_step(cfg, params, x[i * b : (i + 1) * b], y[i * b : (i + 1) * b])
+        g = list(out[1:])
+        acc = g if acc is None else list(M.accum(n, *acc, *g))
+
+    hp = jnp.array([0.5, 1.0 / s], jnp.float32)
+    via_accum = M.apply_update(n, *params, *acc, hp)
+    hp_full = jnp.array([0.5, 1.0], jnp.float32)
+    via_full = M.apply_update(n, *params, *full_grads, hp_full)
+    for a, f in zip(via_accum, via_full):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(f), rtol=2e-4, atol=2e-4)
+
+
+def test_training_reduces_loss():
+    """A few SGD steps on a fixed batch must reduce the loss (memorization)."""
+    cfg = CFG
+    params = list(M.init_params(cfg))
+    n = len(params)
+    x, y = _batch(cfg, 4, seed=1)
+    first = None
+    hp = jnp.array([0.5, 1.0], jnp.float32)
+    for _ in range(8):
+        out = M.grad_step(cfg, params, x, y)
+        loss, grads = out[0], list(out[1:])
+        if first is None:
+            first = float(loss)
+        params = list(M.apply_update(n, *params, *grads, hp))
+    out = M.grad_step(cfg, params, x, y)
+    assert float(out[0]) < first * 0.8, (first, float(out[0]))

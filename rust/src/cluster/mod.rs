@@ -1,0 +1,238 @@
+//! Multi-tenant GPU cluster substrate (paper §IV): `|S|` servers with `|N|`
+//! identical GPUs evenly distributed, interconnected through a
+//! sufficient-bandwidth switch. A GPU may hold at most `C` jobs (Eq. 9;
+//! the paper fixes C = 2 after observing that 3-way sharing is never
+//! beneficial). Gang allocation/release is atomic (Eqs. 8, 10–12).
+
+pub mod placement;
+
+
+use crate::jobs::JobId;
+
+/// Flat GPU identifier: `server * gpus_per_server + local_index`.
+pub type GpuId = usize;
+
+/// Cluster shape + per-GPU capacities.
+#[derive(Debug, Clone, Copy)]
+pub struct ClusterConfig {
+    pub servers: usize,
+    pub gpus_per_server: usize,
+    /// GPU memory budget, GB (2080 Ti = 11 GB in the paper's testbed).
+    pub gpu_mem_gb: f64,
+    /// Max co-located jobs per GPU (paper: C = 2).
+    pub max_share: usize,
+}
+
+impl ClusterConfig {
+    /// The paper's physical testbed: 4 servers × 4 GPUs.
+    pub fn physical() -> Self {
+        ClusterConfig { servers: 4, gpus_per_server: 4, gpu_mem_gb: 11.0, max_share: 2 }
+    }
+
+    /// The paper's simulation cluster: 16 servers × 4 GPUs.
+    pub fn simulation() -> Self {
+        ClusterConfig { servers: 16, gpus_per_server: 4, gpu_mem_gb: 11.0, max_share: 2 }
+    }
+
+    pub fn total_gpus(&self) -> usize {
+        self.servers * self.gpus_per_server
+    }
+}
+
+/// One GPU's live occupancy.
+#[derive(Debug, Clone, Default)]
+pub struct GpuSlot {
+    /// Jobs currently holding this GPU (len ≤ max_share).
+    pub jobs: Vec<JobId>,
+}
+
+/// Live cluster state: who holds which GPU.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    pub config: ClusterConfig,
+    slots: Vec<GpuSlot>,
+}
+
+impl Cluster {
+    pub fn new(config: ClusterConfig) -> Self {
+        Cluster { config, slots: vec![GpuSlot::default(); config.total_gpus()] }
+    }
+
+    pub fn server_of(&self, gpu: GpuId) -> usize {
+        gpu / self.config.gpus_per_server
+    }
+
+    pub fn slot(&self, gpu: GpuId) -> &GpuSlot {
+        &self.slots[gpu]
+    }
+
+    pub fn total_gpus(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// GPUs holding no job, ordered by (server, index) — placement picks
+    /// prefixes of this to consolidate gangs (Alg. 1 line 7).
+    pub fn free_gpus(&self) -> Vec<GpuId> {
+        (0..self.slots.len()).filter(|&g| self.slots[g].jobs.is_empty()).collect()
+    }
+
+    /// GPUs holding exactly one job — the sharing candidates `G_OJ`
+    /// (Alg. 1 line 5).
+    pub fn one_job_gpus(&self) -> Vec<GpuId> {
+        (0..self.slots.len()).filter(|&g| self.slots[g].jobs.len() == 1).collect()
+    }
+
+    /// Occupancy count per GPU.
+    pub fn load(&self, gpu: GpuId) -> usize {
+        self.slots[gpu].jobs.len()
+    }
+
+    /// Number of GPUs with at least one free share slot.
+    pub fn schedulable_gpus(&self) -> usize {
+        self.slots.iter().filter(|s| s.jobs.len() < self.config.max_share).count()
+    }
+
+    /// Atomically grant `gpus` to `job` (gang allocation). Panics on a slot
+    /// overflow — callers must have validated share capacity (Eq. 9).
+    pub fn allocate(&mut self, job: JobId, gpus: &[GpuId]) {
+        for &g in gpus {
+            let slot = &mut self.slots[g];
+            assert!(
+                slot.jobs.len() < self.config.max_share,
+                "GPU {g} over-shared: {:?} + job {job}",
+                slot.jobs
+            );
+            assert!(!slot.jobs.contains(&job), "job {job} already on GPU {g}");
+            slot.jobs.push(job);
+        }
+    }
+
+    /// Atomically release every GPU held by `job` (gang release).
+    pub fn release(&mut self, job: JobId) {
+        for slot in &mut self.slots {
+            slot.jobs.retain(|&j| j != job);
+        }
+    }
+
+    /// All jobs co-located with `job` anywhere on its gang.
+    pub fn co_runners(&self, job: JobId) -> Vec<JobId> {
+        let mut out: Vec<JobId> = self
+            .slots
+            .iter()
+            .filter(|s| s.jobs.contains(&job))
+            .flat_map(|s| s.jobs.iter().copied())
+            .filter(|&j| j != job)
+            .collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// GPUs held by `job`.
+    pub fn gpus_of(&self, job: JobId) -> Vec<GpuId> {
+        (0..self.slots.len()).filter(|&g| self.slots[g].jobs.contains(&job)).collect()
+    }
+
+    /// Distinct servers spanned by a GPU set (`S(J_k)` in Table I).
+    pub fn servers_spanned(&self, gpus: &[GpuId]) -> usize {
+        let mut servers: Vec<usize> = gpus.iter().map(|&g| self.server_of(g)).collect();
+        servers.sort_unstable();
+        servers.dedup();
+        servers.len()
+    }
+
+    /// Invariant check used by property tests: no slot over capacity, no
+    /// duplicate job entries on a slot.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        for (g, slot) in self.slots.iter().enumerate() {
+            if slot.jobs.len() > self.config.max_share {
+                return Err(format!("GPU {g} holds {} jobs", slot.jobs.len()));
+            }
+            let mut uniq = slot.jobs.clone();
+            uniq.sort_unstable();
+            uniq.dedup();
+            if uniq.len() != slot.jobs.len() {
+                return Err(format!("GPU {g} duplicate job entries"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cluster() -> Cluster {
+        Cluster::new(ClusterConfig::physical())
+    }
+
+    #[test]
+    fn fresh_cluster_all_free() {
+        let c = cluster();
+        assert_eq!(c.free_gpus().len(), 16);
+        assert_eq!(c.one_job_gpus().len(), 0);
+        assert_eq!(c.schedulable_gpus(), 16);
+    }
+
+    #[test]
+    fn allocate_release_roundtrip() {
+        let mut c = cluster();
+        c.allocate(7, &[0, 1, 2, 3]);
+        assert_eq!(c.free_gpus().len(), 12);
+        assert_eq!(c.one_job_gpus(), vec![0, 1, 2, 3]);
+        assert_eq!(c.gpus_of(7), vec![0, 1, 2, 3]);
+        c.release(7);
+        assert_eq!(c.free_gpus().len(), 16);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn sharing_two_jobs_per_gpu() {
+        let mut c = cluster();
+        c.allocate(1, &[0, 1]);
+        c.allocate(2, &[0, 1]);
+        assert_eq!(c.load(0), 2);
+        assert_eq!(c.co_runners(1), vec![2]);
+        assert_eq!(c.co_runners(2), vec![1]);
+        assert!(c.one_job_gpus().is_empty());
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "over-shared")]
+    fn c2_cap_enforced() {
+        let mut c = cluster();
+        c.allocate(1, &[0]);
+        c.allocate(2, &[0]);
+        c.allocate(3, &[0]); // Eq. 9 violation with C = 2
+    }
+
+    #[test]
+    #[should_panic(expected = "already on")]
+    fn no_duplicate_grant() {
+        let mut c = cluster();
+        c.allocate(1, &[0]);
+        c.allocate(1, &[0]);
+    }
+
+    #[test]
+    fn servers_spanned_counts_distinct() {
+        let c = cluster();
+        assert_eq!(c.servers_spanned(&[0, 1, 2, 3]), 1);
+        assert_eq!(c.servers_spanned(&[0, 4, 8, 12]), 4);
+        assert_eq!(c.servers_spanned(&[3, 4]), 2);
+    }
+
+    #[test]
+    fn partial_share_overlap() {
+        // Job 2 shares only part of job 1's gang (paper allows partial
+        // sharing: "fully or partially share the same set of GPUs").
+        let mut c = cluster();
+        c.allocate(1, &[0, 1, 2, 3]);
+        c.allocate(2, &[2, 3, 4, 5]);
+        assert_eq!(c.co_runners(1), vec![2]);
+        assert_eq!(c.one_job_gpus(), vec![0, 1, 4, 5]);
+        c.check_invariants().unwrap();
+    }
+}

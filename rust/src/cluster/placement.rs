@@ -1,0 +1,110 @@
+//! Gang placement: pick which physical GPUs a job gets.
+//!
+//! Alg. 1 line 7 — "select the top-G_k GPUs in G_free to make them as
+//! consolidated on the nodes as possible". Consolidation minimizes the
+//! number of servers spanned (fewer inter-node all-reduce hops).
+
+use super::{Cluster, GpuId};
+
+/// Choose `need` free GPUs, preferring servers with the most free GPUs so
+/// gangs span as few nodes as possible; within a server, lowest index first.
+/// Returns `None` if not enough free GPUs exist.
+pub fn consolidated_free(cluster: &Cluster, need: usize) -> Option<Vec<GpuId>> {
+    let free = cluster.free_gpus();
+    if free.len() < need {
+        return None;
+    }
+    // Bucket free GPUs per server.
+    let mut per_server: Vec<Vec<GpuId>> = vec![Vec::new(); cluster.config.servers];
+    for g in free {
+        per_server[cluster.server_of(g)].push(g);
+    }
+    // Exact fit first: a server whose free count equals `need` avoids
+    // fragmenting a bigger block. Then fullest-first.
+    let mut order: Vec<usize> = (0..per_server.len()).collect();
+    order.sort_by_key(|&s| {
+        let n = per_server[s].len();
+        let exact = n == need;
+        // exact fits first, then descending size, then server index
+        (if exact { 0usize } else { 1 }, usize::MAX - n, s)
+    });
+    let mut out = Vec::with_capacity(need);
+    for s in order {
+        for &g in &per_server[s] {
+            if out.len() == need {
+                return Some(out);
+            }
+            out.push(g);
+        }
+        if out.len() == need {
+            return Some(out);
+        }
+    }
+    if out.len() == need {
+        Some(out)
+    } else {
+        None
+    }
+}
+
+/// First-fit over free GPUs in index order (the FIFO/Tiresias default and
+/// the baseline the consolidation tests compare against).
+pub fn first_fit_free(cluster: &Cluster, need: usize) -> Option<Vec<GpuId>> {
+    let free = cluster.free_gpus();
+    if free.len() < need {
+        None
+    } else {
+        Some(free[..need].to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterConfig;
+
+    #[test]
+    fn consolidates_on_one_server_when_possible() {
+        let mut c = Cluster::new(ClusterConfig::physical());
+        // Occupy half of server 0.
+        c.allocate(9, &[0, 1]);
+        let got = consolidated_free(&c, 4).unwrap();
+        assert_eq!(c.servers_spanned(&got), 1, "got {got:?}");
+    }
+
+    #[test]
+    fn prefers_exact_fit_server() {
+        let mut c = Cluster::new(ClusterConfig::physical());
+        // Server 0: 2 free; server 1: 4 free. Need 2 -> take server 0's
+        // remainder, leaving server 1's block intact for a 4-gang.
+        c.allocate(9, &[0, 1]);
+        let got = consolidated_free(&c, 2).unwrap();
+        assert_eq!(got, vec![2, 3]);
+    }
+
+    #[test]
+    fn spans_servers_only_when_forced() {
+        let mut c = Cluster::new(ClusterConfig::physical());
+        c.allocate(9, &[0, 4, 8, 12]); // one GPU taken on every server
+        let got = consolidated_free(&c, 6).unwrap();
+        assert_eq!(got.len(), 6);
+        assert_eq!(c.servers_spanned(&got), 2);
+    }
+
+    #[test]
+    fn insufficient_returns_none() {
+        let mut c = Cluster::new(ClusterConfig::physical());
+        for j in 0..8 {
+            c.allocate(j, &[2 * j, 2 * j + 1]);
+        }
+        assert!(consolidated_free(&c, 1).is_none());
+        assert!(first_fit_free(&c, 1).is_none());
+    }
+
+    #[test]
+    fn first_fit_takes_lowest_indices() {
+        let mut c = Cluster::new(ClusterConfig::physical());
+        c.allocate(9, &[0]);
+        assert_eq!(first_fit_free(&c, 3).unwrap(), vec![1, 2, 3]);
+    }
+}

@@ -1,0 +1,325 @@
+//! Physical-mode coordinator: the online scheduling leader that runs a
+//! trace for real — every scheduled job's iterations are executed as PJRT
+//! train-steps by per-GPU worker threads, while the *same* [`Policy`]
+//! implementations used in simulation make the sharing decisions.
+//!
+//! Emulated-cluster semantics (DESIGN.md §3 substitution):
+//! * one OS worker thread per "GPU"; a job's gang *reserves* its GPUs for
+//!   scheduling purposes, and its compute runs on the gang's lead worker;
+//! * C = 2 sharing is physical: the lead worker round-robins one iteration
+//!   per co-located job — actual time-slicing, so interference is real
+//!   wall-clock contention, not a model;
+//! * `PjRtClient` is `!Send` (Rc internals), so each worker owns its own
+//!   [`ArtifactSet`] compiled lazily on first use.
+//!
+//! Wall-clock knobs (`PhysicalConfig`) compress the trace so the 30-job
+//! paper workload finishes in minutes while every layer still executes.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::cluster::{Cluster, ClusterConfig, GpuId};
+use crate::jobs::{JobId, JobRecord, JobSpec, JobState};
+use crate::perf::interference::InterferenceModel;
+use crate::runtime::executor::{TrainExecutor, TrainState};
+use crate::runtime::ArtifactSet;
+use crate::sim::{Decision, Policy, SimState};
+
+/// Physical-run tuning.
+#[derive(Debug, Clone)]
+pub struct PhysicalConfig {
+    pub cluster: ClusterConfig,
+    /// Trace arrival seconds are divided by this (e.g. 60 ⇒ a 1-minute gap
+    /// becomes 1 s of wall time).
+    pub time_compression: f64,
+    /// Trace iteration counts are multiplied by this (≤ 1 caps wall time).
+    pub iter_scale: f64,
+    /// SGD learning rate.
+    pub lr: f32,
+    /// Artifacts directory.
+    pub artifacts_dir: std::path::PathBuf,
+    /// Per-GPU batch cap for execution (the emulated GPU is a CPU thread;
+    /// the *scheduling* batch/sub-batch still follows the job spec).
+    pub exec_batch: u32,
+}
+
+impl Default for PhysicalConfig {
+    fn default() -> Self {
+        PhysicalConfig {
+            cluster: ClusterConfig::physical(),
+            time_compression: 60.0,
+            iter_scale: 0.1,
+            lr: 0.5,
+            artifacts_dir: ArtifactSet::default_dir(),
+            exec_batch: 8,
+        }
+    }
+}
+
+/// One point of a job's training-loss curve.
+#[derive(Debug, Clone, Copy)]
+pub struct LossPoint {
+    pub job: JobId,
+    pub step: u64,
+    pub loss: f32,
+    pub wall_s: f64,
+}
+
+/// Final report of a physical run.
+#[derive(Debug)]
+pub struct PhysicalOutcome {
+    pub jobs: Vec<JobRecord>,
+    pub makespan_s: f64,
+    pub loss_curves: Vec<LossPoint>,
+    /// Iterations actually executed through PJRT (across all jobs).
+    pub executed_iters: u64,
+}
+
+/// What a worker needs to know about an assigned job.
+#[derive(Debug, Clone)]
+struct Assignment {
+    job: JobId,
+    /// Execution accumulation step (scheduling decision, Algorithm 2).
+    accum_step: u32,
+    /// Per-iteration execution batch.
+    batch: u32,
+    seed: u64,
+}
+
+#[derive(Debug)]
+struct Progress {
+    job: JobId,
+    step: u64,
+    loss: f32,
+}
+
+/// Shared coordinator→worker assignment board.
+#[derive(Debug, Default)]
+struct Board {
+    /// Lead-GPU → jobs it must time-slice.
+    lanes: HashMap<GpuId, Vec<Assignment>>,
+}
+
+fn worker_loop(
+    gpu: GpuId,
+    board: Arc<Mutex<Board>>,
+    tx: Sender<Progress>,
+    cfg: PhysicalConfig,
+    stop: Arc<AtomicBool>,
+) {
+    // Per-worker artifact set (PjRtClient is !Send, so each worker owns a
+    // client). `load` only validates + opens the client; each executable
+    // compiles lazily on first use, so a lead worker pays for exactly the
+    // programs its jobs run (§Perf L3 fix #1 in EXPERIMENTS.md) — critical
+    // on the single-core testbed where compile time is serialized.
+    let set = ArtifactSet::load(cfg.artifacts_dir.clone())
+        .expect("worker failed to load artifacts");
+    let mut live: HashMap<JobId, (TrainState, u64)> = HashMap::new();
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return;
+        }
+        let lane: Vec<Assignment> = {
+            let b = board.lock().unwrap();
+            b.lanes.get(&gpu).cloned().unwrap_or_default()
+        };
+        if lane.is_empty() {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            continue;
+        }
+        let set_ref = &set;
+        // Round-robin: one iteration per co-located job — C=2 time-slicing.
+        for a in &lane {
+            // Job may have been unassigned meanwhile; cheap check.
+            if stop.load(Ordering::Relaxed) {
+                return;
+            }
+            let (state, _) = match live.entry(a.job) {
+                std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
+                std::collections::hash_map::Entry::Vacant(v) => {
+                    let exec = TrainExecutor::new(set_ref, a.seed, cfg.lr);
+                    match exec.init_state() {
+                        Ok(st) => v.insert((st, 0)),
+                        Err(e) => {
+                            eprintln!("worker {gpu}: init failed: {e:#}");
+                            continue;
+                        }
+                    }
+                }
+            };
+            let mut exec = TrainExecutor::new(set_ref, a.seed ^ state.step, cfg.lr);
+            match exec.train_step(state, a.batch, a.accum_step.min(a.batch)) {
+                Ok(loss) => {
+                    let _ = tx.send(Progress { job: a.job, step: state.step, loss });
+                }
+                Err(e) => {
+                    eprintln!("worker {gpu}: train_step failed for job {}: {e:#}", a.job);
+                    std::thread::sleep(std::time::Duration::from_millis(10));
+                }
+            }
+        }
+        // Drop states of jobs no longer assigned to this lane.
+        let assigned: Vec<JobId> = lane.iter().map(|a| a.job).collect();
+        live.retain(|j, _| assigned.contains(j));
+    }
+}
+
+/// Run `trace` physically under `policy`. Non-preemptive policies only
+/// (the physical coordinator does not checkpoint parameters on preemption).
+pub fn run_physical(
+    cfg: PhysicalConfig,
+    trace: &[JobSpec],
+    xi: InterferenceModel,
+    policy: &mut dyn Policy,
+) -> Result<PhysicalOutcome> {
+    let n_gpus = cfg.cluster.total_gpus();
+    let board = Arc::new(Mutex::new(Board::default()));
+    let stop = Arc::new(AtomicBool::new(false));
+    let (tx, rx): (Sender<Progress>, Receiver<Progress>) = channel();
+
+    let mut workers = Vec::new();
+    for g in 0..n_gpus {
+        let board = Arc::clone(&board);
+        let stop = Arc::clone(&stop);
+        let tx = tx.clone();
+        let cfg = cfg.clone();
+        workers.push(std::thread::spawn(move || worker_loop(g, board, tx, cfg, stop)));
+    }
+    drop(tx);
+
+    // Coordinator state mirrors the simulator's view so policies run as-is.
+    let mut state = SimState {
+        now: 0.0,
+        cluster: Cluster::new(cfg.cluster),
+        jobs: trace
+            .iter()
+            .cloned()
+            .map(|mut spec| {
+                spec.arrival_s /= cfg.time_compression;
+                let mut rec = JobRecord::new(spec);
+                rec.remaining_iters =
+                    (rec.remaining_iters * cfg.iter_scale).max(10.0).round();
+                rec
+            })
+            .collect(),
+        xi,
+        not_before: vec![0.0; trace.len()],
+        service_gpu_s: vec![0.0; trace.len()],
+    };
+    // Target iteration counts after scaling.
+    let targets: Vec<f64> = state.jobs.iter().map(|j| j.remaining_iters).collect();
+    let mut executed: Vec<u64> = vec![0; trace.len()];
+    let mut loss_curves: Vec<LossPoint> = Vec::new();
+    let t0 = Instant::now();
+
+    let result = (|| -> Result<()> {
+        loop {
+            state.now = t0.elapsed().as_secs_f64();
+            // Apply progress reports.
+            while let Ok(p) = rx.try_recv() {
+                let rec = &mut state.jobs[p.job];
+                if rec.state == JobState::Running && rec.remaining_iters > 0.0 {
+                    rec.remaining_iters -= 1.0;
+                    executed[p.job] += 1;
+                    loss_curves.push(LossPoint {
+                        job: p.job,
+                        step: p.step,
+                        loss: p.loss,
+                        wall_s: state.now,
+                    });
+                }
+            }
+            // Completions.
+            let mut changed = false;
+            for id in state.running() {
+                if state.jobs[id].remaining_iters <= 0.0 {
+                    state.cluster.release(id);
+                    let rec = &mut state.jobs[id];
+                    rec.state = JobState::Finished;
+                    rec.finish_s = Some(state.now);
+                    rec.gpus_held.clear();
+                    let mut b = board.lock().unwrap();
+                    for lane in b.lanes.values_mut() {
+                        lane.retain(|a| a.job != id);
+                    }
+                    changed = true;
+                }
+            }
+            // Queueing accounting (coarse: updated on each loop pass).
+            if state.jobs.iter().all(|j| j.state == JobState::Finished) {
+                return Ok(());
+            }
+            // Scheduling pass.
+            let decisions = policy.schedule(&state);
+            for d in decisions {
+                match d {
+                    Decision::Start { job, gpus, accum_step } => {
+                        state.cluster.allocate(job, &gpus);
+                        let rec = &mut state.jobs[job];
+                        rec.state = JobState::Running;
+                        rec.accum_step = accum_step;
+                        rec.gpus_held = gpus.clone();
+                        if rec.first_start_s.is_none() {
+                            rec.first_start_s = Some(state.now);
+                            rec.queued_s = state.now - rec.spec.arrival_s.max(0.0);
+                        }
+                        let lead = gpus[0];
+                        let mut b = board.lock().unwrap();
+                        b.lanes.entry(lead).or_default().push(Assignment {
+                            job,
+                            accum_step,
+                            batch: cfg.exec_batch,
+                            seed: job as u64 * 7919 + 17,
+                        });
+                        changed = true;
+                    }
+                    Decision::Preempt { .. } => {
+                        anyhow::bail!(
+                            "physical coordinator supports non-preemptive policies only"
+                        );
+                    }
+                }
+            }
+            let _ = changed;
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+    })();
+
+    stop.store(true, Ordering::Relaxed);
+    for w in workers {
+        let _ = w.join();
+    }
+    result?;
+
+    let makespan = t0.elapsed().as_secs_f64();
+    // Sanity: every job ran its scaled target.
+    for (id, rec) in state.jobs.iter().enumerate() {
+        debug_assert!(
+            executed[id] as f64 >= targets[id] - 0.5,
+            "job {id} executed {} of {}",
+            executed[id],
+            targets[id]
+        );
+        debug_assert_eq!(rec.state, JobState::Finished);
+    }
+    Ok(PhysicalOutcome {
+        jobs: state.jobs,
+        makespan_s: makespan,
+        loss_curves,
+        executed_iters: executed.iter().sum(),
+    })
+}
+
+/// Write loss curves as CSV (`job,step,loss,wall_s`).
+pub fn write_loss_csv(points: &[LossPoint], path: &std::path::Path) -> Result<()> {
+    let mut out = String::from("job,step,loss,wall_s\n");
+    for p in points {
+        out.push_str(&format!("{},{},{},{:.3}\n", p.job, p.step, p.loss, p.wall_s));
+    }
+    std::fs::write(path, out).context("writing loss csv")
+}

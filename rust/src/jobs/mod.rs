@@ -1,0 +1,168 @@
+//! DDL job model (paper Table I notation).
+//!
+//! A job `J_k` is characterized by requested GPU count `G_k`, training
+//! iterations `I_k`, per-GPU mini-batch `B_k`, arrival time `a_k`, and the
+//! workload profile that supplies its Eq. 3/4/7 performance model. Gang
+//! scheduling: all `G_k` GPUs start together and are held until completion
+//! (non-preemptive policies) or until the policy explicitly preempts.
+
+pub mod trace;
+
+
+use crate::perf::profiles::{ModelKind, WorkloadProfile};
+
+/// Dense job identifier (index into the simulation's job table).
+pub type JobId = usize;
+
+/// Immutable job description, as submitted by the tenant.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub id: JobId,
+    /// Workload profile (decides perf + memory models).
+    pub model: ModelKind,
+    /// Requested number of GPUs `G_k` (gang width).
+    pub gpus: usize,
+    /// Total training iterations `I_k`.
+    pub iterations: u64,
+    /// User-requested per-GPU mini-batch `B_k` (convergence-defining; never
+    /// changed — only split into sub-batches via gradient accumulation).
+    pub batch: u32,
+    /// Arrival time `a_k`, seconds from horizon start.
+    pub arrival_s: f64,
+}
+
+impl JobSpec {
+    pub fn profile(&self) -> WorkloadProfile {
+        WorkloadProfile::get(self.model)
+    }
+
+    /// Solo iteration time on `self.gpus` workers with accumulation step `s`.
+    pub fn iter_time(&self, s: u32) -> f64 {
+        self.profile().perf.iter_time(self.batch as f64, s, self.gpus)
+    }
+
+    /// Total solo execution time `L_k = t_iter · I_k` at accumulation `s`.
+    pub fn solo_runtime(&self, s: u32) -> f64 {
+        self.iter_time(s) * self.iterations as f64
+    }
+
+    /// Paper §VI job-size taxonomy: jobs requesting more than 4 GPUs are
+    /// "large" (Tables III/IV split rows on this).
+    pub fn is_large(&self) -> bool {
+        self.gpus > 4
+    }
+}
+
+/// Scheduler-facing lifecycle state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    /// Waiting in the pending queue.
+    Pending,
+    /// Running on its gang (possibly sharing GPUs).
+    Running,
+    /// Preempted by a preemptive policy; will re-queue.
+    Preempted,
+    /// All iterations done.
+    Finished,
+}
+
+/// Mutable per-job runtime record tracked by the simulator / coordinator.
+#[derive(Debug, Clone)]
+pub struct JobRecord {
+    pub spec: JobSpec,
+    pub state: JobState,
+    /// Iterations still to run (fractional while integrating progress).
+    pub remaining_iters: f64,
+    /// Accumulation step `s` currently in force (sub-batch = B/s).
+    pub accum_step: u32,
+    /// First time the job started running (for queueing-delay metrics).
+    pub first_start_s: Option<f64>,
+    /// Completion timestamp `T_k`.
+    pub finish_s: Option<f64>,
+    /// Cumulative seconds spent in `Pending`/`Preempted` while submitted.
+    pub queued_s: f64,
+    /// GPUs currently held (empty unless Running).
+    pub gpus_held: Vec<crate::cluster::GpuId>,
+}
+
+impl JobRecord {
+    pub fn new(spec: JobSpec) -> Self {
+        let iters = spec.iterations as f64;
+        JobRecord {
+            spec,
+            state: JobState::Pending,
+            remaining_iters: iters,
+            accum_step: 1,
+            first_start_s: None,
+            finish_s: None,
+            queued_s: 0.0,
+            gpus_held: Vec::new(),
+        }
+    }
+
+    /// Expected remaining solo runtime `L_k` — the SJF priority key.
+    pub fn remaining_solo_runtime(&self) -> f64 {
+        self.spec.iter_time(self.accum_step) * self.remaining_iters
+    }
+
+    /// Job completion time `T_k - a_k` (requires finished).
+    pub fn jct(&self) -> Option<f64> {
+        self.finish_s.map(|f| f - self.spec.arrival_s)
+    }
+
+    /// Queueing delay: first start − arrival (∞-safe: None until started).
+    pub fn queueing_delay(&self) -> Option<f64> {
+        self.first_start_s.map(|s| s - self.spec.arrival_s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> JobSpec {
+        JobSpec {
+            id: 0,
+            model: ModelKind::Cifar10,
+            gpus: 4,
+            iterations: 1000,
+            batch: 128,
+            arrival_s: 10.0,
+        }
+    }
+
+    #[test]
+    fn solo_runtime_scales_with_iterations() {
+        let s = spec();
+        assert!((s.solo_runtime(1) - s.iter_time(1) * 1000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn accumulation_never_speeds_up_solo() {
+        // Sub-batching adds (s-1) α overheads; solo runtime must not drop.
+        let s = spec();
+        assert!(s.solo_runtime(2) >= s.solo_runtime(1));
+        assert!(s.solo_runtime(4) >= s.solo_runtime(2));
+    }
+
+    #[test]
+    fn large_job_taxonomy() {
+        let mut s = spec();
+        assert!(!s.is_large());
+        s.gpus = 8;
+        assert!(s.is_large());
+        s.gpus = 5;
+        assert!(s.is_large());
+    }
+
+    #[test]
+    fn record_lifecycle_metrics() {
+        let mut r = JobRecord::new(spec());
+        assert_eq!(r.state, JobState::Pending);
+        assert!(r.jct().is_none());
+        r.first_start_s = Some(25.0);
+        r.finish_s = Some(125.0);
+        assert_eq!(r.queueing_delay(), Some(15.0));
+        assert_eq!(r.jct(), Some(115.0));
+    }
+}

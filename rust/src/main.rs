@@ -1,0 +1,211 @@
+//! `wise-share` — CLI launcher for the SJF-BSBF reproduction.
+//!
+//! Subcommands:
+//! * `simulate`   — run a policy (or all) over a synthetic/loaded trace on
+//!                  the simulated cluster; prints paper-style tables.
+//! * `physical`   — run the physical-mode coordinator: real PJRT training
+//!                  steps on emulated GPUs (requires `make artifacts`).
+//! * `trace-gen`  — generate and save a Philly-like trace as JSON.
+//! * `fit`        — demonstrate the Eq. 3/4 calibration path (Fig. 2 check).
+//!
+//! Flag parsing is first-party (`Args`) — the vendored crate set has no
+//! clap; see DESIGN.md §4.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use wise_share::cluster::ClusterConfig;
+use wise_share::coordinator::{run_physical, write_loss_csv, PhysicalConfig};
+use wise_share::jobs::trace::{self, TraceConfig};
+use wise_share::perf::fit::{fit_comp, Sample};
+use wise_share::perf::interference::InterferenceModel;
+use wise_share::perf::profiles::{ModelKind, WorkloadProfile};
+use wise_share::report;
+use wise_share::sched::{self, POLICY_NAMES};
+use wise_share::sim::{engine, metrics};
+
+const USAGE: &str = "\
+wise-share — SJF-BSBF scheduling reproduction
+
+USAGE:
+  wise-share simulate  [--policy NAME|all] [--jobs N] [--seed S] [--trace F]
+                       [--cluster physical|simulation] [--xi X] [--load L]
+  wise-share physical  [--policy NAME] [--jobs N] [--seed S]
+                       [--iter-scale F] [--compress F] [--loss-csv F]
+                       [--artifacts DIR]
+  wise-share trace-gen --out F [--jobs N] [--seed S] [--preset simulation|physical]
+  wise-share fit       [--model NAME]
+";
+
+/// Tiny `--key value` flag parser.
+struct Args(HashMap<String, String>);
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Self> {
+        let mut m = HashMap::new();
+        let mut it = argv.iter();
+        while let Some(a) = it.next() {
+            let key = a
+                .strip_prefix("--")
+                .with_context(|| format!("expected --flag, got {a:?}\n{USAGE}"))?;
+            let val = it.next().with_context(|| format!("--{key} needs a value"))?;
+            m.insert(key.to_string(), val.clone());
+        }
+        Ok(Args(m))
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.0.get(key).map(String::as_str)
+    }
+
+    fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{key} {v:?}: {e}")),
+        }
+    }
+}
+
+fn cluster_by_name(name: &str) -> Result<ClusterConfig> {
+    Ok(match name {
+        "physical" => ClusterConfig::physical(),
+        "simulation" => ClusterConfig::simulation(),
+        _ => bail!("unknown cluster preset {name} (physical|simulation)"),
+    })
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let cluster = cluster_by_name(args.get("cluster").unwrap_or("simulation"))?;
+    let jobs: usize = args.parse_or("jobs", 240)?;
+    let seed: u64 = args.parse_or("seed", 1)?;
+    let load: f64 = args.parse_or("load", 1.0)?;
+    let jobs_list = match args.get("trace") {
+        Some(p) => trace::load(std::path::Path::new(p)).context("loading trace")?,
+        None => {
+            let mut cfg = TraceConfig::simulation(jobs, seed);
+            cfg.load_factor = load;
+            trace::generate(&cfg)
+        }
+    };
+    let xi_model = match args.get("xi") {
+        Some(v) => InterferenceModel::with_global(v.parse()?),
+        None => InterferenceModel::new(),
+    };
+    let policy = args.get("policy").unwrap_or("all");
+    let names: Vec<String> = if policy == "all" {
+        POLICY_NAMES.iter().map(|s| s.to_string()).collect()
+    } else {
+        vec![policy.to_string()]
+    };
+    let mut rows = Vec::new();
+    for name in &names {
+        let mut p =
+            sched::by_name(name).with_context(|| format!("unknown policy {name}"))?;
+        let out = engine::run(cluster, &jobs_list, xi_model.clone(), p.as_mut())?;
+        let s = metrics::summarize(name, &out.jobs, out.makespan_s);
+        println!(
+            "{name}: makespan {:.0}s, avg JCT {:.1}s, {} preemptions, {} policy calls",
+            out.makespan_s, s.all.avg_jct_s, out.preemptions, out.policy_calls,
+        );
+        rows.push(s);
+    }
+    println!("\n{}", report::table34(&rows));
+    Ok(())
+}
+
+fn cmd_physical(args: &Args) -> Result<()> {
+    let policy = args.get("policy").unwrap_or("SJF-BSBF").to_string();
+    let mut p =
+        sched::by_name(&policy).with_context(|| format!("unknown policy {policy}"))?;
+    let mut cfg = PhysicalConfig {
+        iter_scale: args.parse_or("iter-scale", 0.02)?,
+        time_compression: args.parse_or("compress", 120.0)?,
+        ..PhysicalConfig::default()
+    };
+    if let Some(dir) = args.get("artifacts") {
+        cfg.artifacts_dir = PathBuf::from(dir);
+    }
+    let mut tcfg = TraceConfig::physical(args.parse_or("seed", 1)?);
+    tcfg.n_jobs = args.parse_or("jobs", 8)?;
+    let mut jobs_list = trace::generate(&tcfg);
+    for j in &mut jobs_list {
+        j.gpus = j.gpus.min(cfg.cluster.total_gpus());
+    }
+    let out = run_physical(cfg, &jobs_list, InterferenceModel::new(), p.as_mut())?;
+    let summary = metrics::summarize(&policy, &out.jobs, out.makespan_s);
+    println!(
+        "{policy}: makespan {:.1}s wall, avg JCT {:.1}s, {} PJRT iterations executed",
+        out.makespan_s, summary.all.avg_jct_s, out.executed_iters
+    );
+    println!("{}", report::table2(&[summary]));
+    if let Some(path) = args.get("loss-csv") {
+        let path = PathBuf::from(path);
+        write_loss_csv(&out.loss_curves, &path)?;
+        println!("loss curves -> {}", path.display());
+    }
+    Ok(())
+}
+
+fn cmd_trace_gen(args: &Args) -> Result<()> {
+    let out = PathBuf::from(args.get("out").context("--out is required")?);
+    let seed: u64 = args.parse_or("seed", 1)?;
+    let cfg = match args.get("preset").unwrap_or("simulation") {
+        "physical" => TraceConfig::physical(seed),
+        "simulation" => TraceConfig::simulation(args.parse_or("jobs", 240)?, seed),
+        p => bail!("unknown preset {p}"),
+    };
+    let jobs_list = trace::generate(&cfg);
+    trace::save(&jobs_list, &out)?;
+    println!("wrote {} jobs to {}", jobs_list.len(), out.display());
+    Ok(())
+}
+
+fn cmd_fit(args: &Args) -> Result<()> {
+    let model = args.get("model").unwrap_or("BERT");
+    let kind =
+        ModelKind::from_name(model).with_context(|| format!("unknown model {model}"))?;
+    let prof = WorkloadProfile::get(kind);
+    // Synthesize single-GPU samples from the ground-truth profile, then
+    // recover α/β — the calibration loop a deployment runs (§IV-B).
+    let samples: Vec<Sample> = [1u32, 2, 4, 8, 16, 32]
+        .iter()
+        .map(|&b| Sample { batch: b as f64, iter_time_s: prof.perf.comp.t_comp(b as f64) })
+        .collect();
+    let fitted = fit_comp(&samples).context("fit failed")?;
+    println!(
+        "{}: true α={:.4} β={:.5} | fitted α={:.4} β={:.5}",
+        kind.name(),
+        prof.perf.comp.alpha,
+        prof.perf.comp.beta,
+        fitted.alpha,
+        fitted.beta
+    );
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some((cmd, rest)) = argv.split_first() else {
+        println!("{USAGE}");
+        return Ok(());
+    };
+    let args = Args::parse(rest)?;
+    match cmd.as_str() {
+        "simulate" => cmd_simulate(&args),
+        "physical" => cmd_physical(&args),
+        "trace-gen" => cmd_trace_gen(&args),
+        "fit" => cmd_fit(&args),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other}\n{USAGE}"),
+    }
+}

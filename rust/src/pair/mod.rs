@@ -1,0 +1,357 @@
+//! The paper's analytical core (§V-A):
+//!
+//! * **Theorem 1** — for one running job B and one new job A that could share
+//!   B's GPU set, the average JCT of the pair is minimized at one of the two
+//!   endpoints of the insertion time κ: full overlap (κ = 0) or fully
+//!   sequential (A starts when B finishes). The objective is affine in κ, so
+//!   "evaluating the conditions for the best solution is the same as directly
+//!   comparing the fully overlapped time and the fully non-overlapped time".
+//! * **Algorithm 2** — sweep the new job's sub-batch b over `{B, B/2, …, 1}`
+//!   (gradient accumulation step s = B/b), apply Theorem 1 per candidate,
+//!   respect joint GPU-memory feasibility, and return the best
+//!   (share?, sub-batch, pair-JCT) configuration.
+
+
+use crate::jobs::JobRecord;
+use crate::perf::interference::InterferenceModel;
+
+/// Inputs describing one side of a (running, new) pair on a GPU set.
+#[derive(Debug, Clone, Copy)]
+pub struct PairSide {
+    /// Solo iteration time on the shared gang (Eq. 7 already applied).
+    pub iter_time: f64,
+    /// Remaining iterations.
+    pub iters: f64,
+    /// Interference ratio if shared (Eq. 5/6).
+    pub xi: f64,
+}
+
+/// Outcome of the κ-endpoint comparison for one pair configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct PairSchedule {
+    /// True ⇒ launch the new job immediately (κ = 0); false ⇒ run after.
+    pub share: bool,
+    /// Mean completion time of the two jobs measured from "now".
+    pub avg_jct: f64,
+    /// Mean JCT under full overlap (κ = 0).
+    pub overlap_avg: f64,
+    /// Mean JCT under sequential execution.
+    pub sequential_avg: f64,
+    /// Completion times (new, running) under the chosen schedule.
+    pub finish_new: f64,
+    pub finish_running: f64,
+}
+
+/// Theorem 1: compare κ = 0 (overlap) against sequential, pick the better.
+///
+/// `new` is job A (arriving), `running` is job B (already on the GPUs, its
+/// remaining work counted from now). Both completion times are measured from
+/// now; queueing history does not change the comparison.
+pub fn best_pair_schedule(new: PairSide, running: PairSide) -> PairSchedule {
+    assert!(new.xi >= 1.0 && running.xi >= 1.0, "ξ must be ≥ 1");
+    // --- full overlap, κ = 0 ------------------------------------------------
+    let ta_h = new.iter_time * new.xi; // t̂_A
+    let tb_h = running.iter_time * running.xi; // t̂_B
+    let (ov_new, ov_run) = if ta_h * new.iters <= tb_h * running.iters {
+        // A drains first; B finishes the tail solo.
+        let t_a = ta_h * new.iters;
+        let done_b = t_a / tb_h; // B iterations completed during overlap
+        let t_b = t_a + running.iter_time * (running.iters - done_b);
+        (t_a, t_b)
+    } else {
+        // B drains first; A finishes the tail solo.
+        let t_b = tb_h * running.iters;
+        let done_a = t_b / ta_h;
+        let t_a = t_b + new.iter_time * (new.iters - done_a);
+        (t_a, t_b)
+    };
+    let overlap_avg = 0.5 * (ov_new + ov_run);
+
+    // --- sequential: A waits for B ------------------------------------------
+    let seq_run = running.iter_time * running.iters;
+    let seq_new = seq_run + new.iter_time * new.iters;
+    let sequential_avg = 0.5 * (seq_new + seq_run);
+
+    let share = overlap_avg <= sequential_avg;
+    let (finish_new, finish_running) =
+        if share { (ov_new, ov_run) } else { (seq_new, seq_run) };
+    PairSchedule {
+        share,
+        avg_jct: overlap_avg.min(sequential_avg),
+        overlap_avg,
+        sequential_avg,
+        finish_new,
+        finish_running,
+    }
+}
+
+/// Algorithm 2 result: the best sharing configuration for the new job.
+#[derive(Debug, Clone, Copy)]
+pub struct SharingConfig {
+    /// `SF`: share now (κ = 0)? False ⇒ pair prefers sequential execution.
+    pub share: bool,
+    /// Chosen sub-batch `b̄` for the new job (accum step = B/b̄).
+    pub sub_batch: u32,
+    /// Accumulation step s = B / b̄.
+    pub accum_step: u32,
+    /// Best pair mean JCT `t̄` (the sort key in Alg. 1 line 14).
+    pub pair_jct: f64,
+    /// The full schedule at the winning configuration.
+    pub schedule: PairSchedule,
+}
+
+/// Algorithm 2: batch-size scaling with best sharing benefit.
+///
+/// * `new_job` — the pending job `J_k` (user batch `B_k` fixed).
+/// * `running` — the job currently holding the candidate GPU set; its batch
+///   and accumulation step are left untouched (paper §V-B3).
+/// * `gang` — number of GPUs in the shared set (the new job would run its
+///   gang exactly on the running job's GPUs).
+/// * `gpu_mem_gb` — per-GPU memory budget; joint footprint must fit.
+///
+/// Returns `None` if no sub-batch down to 1 fits in memory next to the
+/// running job (sharing physically impossible on this gang).
+pub fn batch_size_scaling(
+    new_job: &JobRecord,
+    running: &JobRecord,
+    gang: usize,
+    gpu_mem_gb: f64,
+    xi: &InterferenceModel,
+) -> Option<SharingConfig> {
+    batch_size_scaling_opts(new_job, running, gang, gpu_mem_gb, xi, true)
+}
+
+/// [`batch_size_scaling`] with the sub-batch sweep as a switch: with
+/// `sweep_batches = false` only the user's full batch is considered (the
+/// "no gradient accumulation" ablation — sharing becomes memory-infeasible
+/// whenever the full batches don't jointly fit).
+pub fn batch_size_scaling_opts(
+    new_job: &JobRecord,
+    running: &JobRecord,
+    gang: usize,
+    gpu_mem_gb: f64,
+    xi: &InterferenceModel,
+    sweep_batches: bool,
+) -> Option<SharingConfig> {
+    let new_prof = new_job.spec.profile();
+    let run_prof = running.spec.profile();
+    let run_mem =
+        run_prof.mem.mem_gb(running.spec.batch as f64 / running.accum_step as f64);
+    let budget = gpu_mem_gb - run_mem;
+    let (xi_new, xi_run) = xi.pair(new_job.spec.model, running.spec.model);
+
+    // Running job's solo iteration time on its own gang, at its own accum.
+    let run_side_iter = run_prof.perf.iter_time(
+        running.spec.batch as f64,
+        running.accum_step,
+        running.spec.gpus,
+    );
+
+    let mut best: Option<SharingConfig> = None;
+    let mut b = new_job.spec.batch.max(1);
+    loop {
+        let s = (new_job.spec.batch as f64 / b as f64).ceil() as u32;
+        if new_prof.mem.mem_gb(b as f64) <= budget {
+            let new_side = PairSide {
+                iter_time: new_prof.perf.iter_time(new_job.spec.batch as f64, s, gang),
+                iters: new_job.remaining_iters,
+                xi: xi_new,
+            };
+            let run_side = PairSide {
+                iter_time: run_side_iter,
+                iters: running.remaining_iters,
+                xi: xi_run,
+            };
+            let sched = best_pair_schedule(new_side, run_side);
+            let better = match &best {
+                None => true,
+                Some(cfg) => sched.avg_jct < cfg.pair_jct,
+            };
+            if better {
+                best = Some(SharingConfig {
+                    share: sched.share,
+                    sub_batch: b,
+                    accum_step: s,
+                    pair_jct: sched.avg_jct,
+                    schedule: sched,
+                });
+            }
+        }
+        if b == 1 || !sweep_batches {
+            break;
+        }
+        b /= 2;
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jobs::{JobRecord, JobSpec};
+    use crate::perf::profiles::ModelKind;
+
+    fn side(iter_time: f64, iters: f64, xi: f64) -> PairSide {
+        PairSide { iter_time, iters, xi }
+    }
+
+    #[test]
+    fn no_interference_always_shares() {
+        // ξ = 1 ⇒ overlap strictly dominates (B unchanged, A earlier).
+        let s = best_pair_schedule(side(1.0, 100.0, 1.0), side(1.0, 100.0, 1.0));
+        assert!(s.share);
+        assert!(s.overlap_avg < s.sequential_avg);
+    }
+
+    #[test]
+    fn catastrophic_interference_prefers_sequential() {
+        // ξ = 4 on both: overlap roughly quadruples both runtimes.
+        let s = best_pair_schedule(side(1.0, 100.0, 4.0), side(1.0, 100.0, 4.0));
+        assert!(!s.share);
+        assert_eq!(s.avg_jct, s.sequential_avg);
+    }
+
+    #[test]
+    fn overlap_times_match_closed_form_case_new_first() {
+        // t̂_A i_A < t̂_B i_B: Eq. 18/19 structure (roles per our naming).
+        let a = side(1.0, 10.0, 1.5); // t̂_A i_A = 15
+        let b = side(2.0, 20.0, 1.5); // t̂_B i_B = 60
+        let s = best_pair_schedule(a, b);
+        let t_a = 15.0;
+        let done_b = t_a / 3.0; // 5 iters of B during overlap
+        let t_b = t_a + 2.0 * (20.0 - done_b);
+        assert!((s.overlap_avg - 0.5 * (t_a + t_b)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sequential_is_sum_of_solos() {
+        let a = side(1.0, 10.0, 3.0);
+        let b = side(2.0, 5.0, 3.0);
+        let s = best_pair_schedule(a, b);
+        assert!((s.sequential_avg - 0.5 * ((10.0 + 10.0) + 10.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn theorem1_endpoints_dominate_interior() {
+        // Sample interior κ values and verify neither beats the best
+        // endpoint (the affine-in-κ argument of Theorem 1).
+        let t_a = 1.0;
+        let t_b = 1.3;
+        let (i_a, i_b) = (40.0, 70.0);
+        for &(xa, xb) in &[(1.2, 1.1), (1.8, 2.2), (1.05, 2.9), (2.5, 1.02)] {
+            let best =
+                best_pair_schedule(side(t_a, i_a, xa), side(t_b, i_b, xb)).avg_jct;
+            for k in 1..10 {
+                let kappa = k as f64 / 10.0 * t_b * i_b;
+                let avg = interior_avg(t_a, i_a, xa, t_b, i_b, xb, kappa);
+                assert!(
+                    best <= avg + 1e-9,
+                    "interior κ={kappa} beat endpoints: {avg} < {best} (ξ=({xa},{xb}))"
+                );
+            }
+        }
+    }
+
+    /// Simulate partial overlap: B runs alone for κ, then both share.
+    fn interior_avg(
+        t_a: f64,
+        i_a: f64,
+        xa: f64,
+        t_b: f64,
+        i_b: f64,
+        xb: f64,
+        kappa: f64,
+    ) -> f64 {
+        let mut rem_b = i_b - kappa / t_b;
+        if rem_b <= 0.0 {
+            // B already done before κ: A runs solo.
+            let t_bf = t_b * i_b;
+            return 0.5 * ((kappa.max(t_bf) + t_a * i_a) + t_bf);
+        }
+        let (ta_h, tb_h) = (t_a * xa, t_b * xb);
+        let (fin_a, fin_b) = if ta_h * i_a <= tb_h * rem_b {
+            let fa = kappa + ta_h * i_a;
+            let done_b = (fa - kappa) / tb_h;
+            (fa, fa + t_b * (rem_b - done_b))
+        } else {
+            let fb = kappa + tb_h * rem_b;
+            let done_a = (fb - kappa) / ta_h;
+            (fb + t_a * (i_a - done_a), fb)
+        };
+        0.5 * (fin_a + fin_b)
+    }
+
+    fn record(model: ModelKind, gpus: usize, iters: u64, batch: u32) -> JobRecord {
+        JobRecord::new(JobSpec { id: 0, model, gpus, iterations: iters, batch, arrival_s: 0.0 })
+    }
+
+    #[test]
+    fn alg2_finds_memory_feasible_sub_batch() {
+        // New BERT@16 next to a running CIFAR10@128 (4.3 GB resident): the
+        // full sub-batch 16 needs 10.3 GB > the 6.7 GB left, so Alg. 2 must
+        // shrink the new job via gradient accumulation (b = 4 fits: 5.7 GB).
+        let new = record(ModelKind::Bert, 4, 500, 16);
+        let run = record(ModelKind::Cifar10, 4, 500, 128);
+        let xi = InterferenceModel::new();
+        let cfg = batch_size_scaling(&new, &run, 4, 11.0, &xi).unwrap();
+        assert!(cfg.sub_batch < 16, "must shrink: {cfg:?}");
+        assert_eq!(cfg.accum_step, 16 / cfg.sub_batch);
+        let joint = {
+            let p = new.spec.profile().mem.mem_gb(cfg.sub_batch as f64);
+            let q = run.spec.profile().mem.mem_gb(128.0);
+            p + q
+        };
+        assert!(joint <= 11.0, "joint footprint {joint} GB");
+    }
+
+    #[test]
+    fn alg2_none_when_bases_collide() {
+        // Two BERTs cannot co-reside at all: the running job's footprint
+        // leaves less than the new job's 4.2 GB weight/optimizer base.
+        let new = record(ModelKind::Bert, 4, 500, 16);
+        let run = record(ModelKind::Bert, 4, 500, 16);
+        let xi = InterferenceModel::new();
+        assert!(batch_size_scaling(&new, &run, 4, 11.0, &xi).is_none());
+    }
+
+    #[test]
+    fn alg2_none_when_nothing_fits() {
+        // Two YoloV3 at batch 16: running uses 3.4+0.42·16 = 10.1 GB,
+        // leaving 0.9 GB < base 3.4 GB ⇒ no sub-batch fits.
+        let new = record(ModelKind::YoloV3, 4, 500, 16);
+        let run = record(ModelKind::YoloV3, 4, 500, 16);
+        let xi = InterferenceModel::new();
+        assert!(batch_size_scaling(&new, &run, 4, 11.0, &xi).is_none());
+    }
+
+    #[test]
+    fn alg2_polite_pair_shares() {
+        // NCF next to CIFAR10: tiny interference, plenty of memory ⇒ share.
+        let new = record(ModelKind::Ncf, 2, 1000, 4096);
+        let run = record(ModelKind::Cifar10, 2, 1000, 128);
+        let xi = InterferenceModel::new();
+        let cfg = batch_size_scaling(&new, &run, 2, 11.0, &xi).unwrap();
+        assert!(cfg.share, "{cfg:?}");
+    }
+
+    #[test]
+    fn alg2_heavy_pair_declines_to_share() {
+        // Two network-heavy detectors with room (small batches): ξ ≈ 6 ⇒
+        // Theorem 1 should pick sequential (SF = false).
+        let new = record(ModelKind::YoloV3, 4, 500, 4);
+        let run = record(ModelKind::YoloV3, 4, 500, 4);
+        let xi = InterferenceModel::new();
+        let cfg = batch_size_scaling(&new, &run, 4, 11.0, &xi).unwrap();
+        assert!(!cfg.share, "{cfg:?}");
+    }
+
+    #[test]
+    fn alg2_respects_global_xi_override() {
+        // Fig. 6b mechanism: ξ = 1.0 everywhere ⇒ always share.
+        let new = record(ModelKind::YoloV3, 4, 500, 4);
+        let run = record(ModelKind::YoloV3, 4, 500, 4);
+        let xi = InterferenceModel::with_global(1.0);
+        let cfg = batch_size_scaling(&new, &run, 4, 11.0, &xi).unwrap();
+        assert!(cfg.share);
+    }
+}

@@ -1,0 +1,138 @@
+//! Least-squares fitting of the Eq. 3/4 affine models from throughput
+//! samples (paper §IV-B: "By measuring DL job throughput under both sole
+//! execution and concurrent execution ... we can fit the time model
+//! (Equation (7)) for both cases and naturally infer the interference
+//! ratio ξ").
+//!
+//! This is the calibration path a deployment would run once per model on
+//! its own hardware; `wise-share fit` exposes it on the CLI and the Fig. 2
+//! bench validates fit quality against the synthetic ground truth.
+
+
+use super::{CompModel, PerfModel};
+
+/// One throughput observation: iteration time at a per-GPU batch size.
+#[derive(Debug, Clone, Copy)]
+pub struct Sample {
+    pub batch: f64,
+    pub iter_time_s: f64,
+}
+
+/// Ordinary least squares for `y = alpha + beta * x`.
+///
+/// Returns `(alpha, beta)`. Requires >= 2 distinct x values.
+pub fn ols(xs: &[f64], ys: &[f64]) -> Option<(f64, f64)> {
+    if xs.len() != ys.len() || xs.len() < 2 {
+        return None;
+    }
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let sxx: f64 = xs.iter().map(|x| (x - mx) * (x - mx)).sum();
+    if sxx <= f64::EPSILON {
+        return None;
+    }
+    let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+    let beta = sxy / sxx;
+    let alpha = my - beta * mx;
+    Some((alpha, beta))
+}
+
+/// Fit the compute model t_comp(B) = α + β·B from single-GPU samples
+/// (no communication term on one worker).
+pub fn fit_comp(samples: &[Sample]) -> Option<CompModel> {
+    let xs: Vec<f64> = samples.iter().map(|s| s.batch).collect();
+    let ys: Vec<f64> = samples.iter().map(|s| s.iter_time_s).collect();
+    let (alpha, beta) = ols(&xs, &ys)?;
+    Some(CompModel { alpha: alpha.max(0.0), beta: beta.max(0.0) })
+}
+
+/// Infer the interference ratio ξ = t_shared / t_solo from paired
+/// measurements at identical settings (paper Eq. 5/6 inversion).
+pub fn infer_xi(solo_iter_s: &[f64], shared_iter_s: &[f64]) -> Option<f64> {
+    if solo_iter_s.is_empty() || solo_iter_s.len() != shared_iter_s.len() {
+        return None;
+    }
+    let ratios: Vec<f64> = solo_iter_s
+        .iter()
+        .zip(shared_iter_s)
+        .filter(|(s, _)| **s > 0.0)
+        .map(|(s, sh)| sh / s)
+        .collect();
+    if ratios.is_empty() {
+        return None;
+    }
+    Some(ratios.iter().sum::<f64>() / ratios.len() as f64)
+}
+
+/// Mean relative error of a fitted perf model against observations taken at
+/// `(batch, n_workers)` settings — the Fig. 2 "model closely represents the
+/// observed data" check.
+pub fn relative_error(model: &PerfModel, obs: &[(f64, usize, f64)]) -> f64 {
+    if obs.is_empty() {
+        return 0.0;
+    }
+    obs.iter()
+        .map(|(batch, n, t_obs)| {
+            let t = model.iter_time(*batch, 1, *n);
+            (t - t_obs).abs() / t_obs.max(f64::EPSILON)
+        })
+        .sum::<f64>()
+        / obs.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perf::CommModel;
+
+    #[test]
+    fn ols_recovers_exact_line() {
+        let xs = [1.0, 2.0, 4.0, 8.0];
+        let ys: Vec<f64> = xs.iter().map(|x| 0.3 + 0.7 * x).collect();
+        let (a, b) = ols(&xs, &ys).unwrap();
+        assert!((a - 0.3).abs() < 1e-12 && (b - 0.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ols_rejects_degenerate() {
+        assert!(ols(&[1.0], &[2.0]).is_none());
+        assert!(ols(&[2.0, 2.0], &[1.0, 3.0]).is_none());
+        assert!(ols(&[1.0, 2.0], &[1.0]).is_none());
+    }
+
+    #[test]
+    fn fit_comp_recovers_ground_truth() {
+        let truth = CompModel { alpha: 0.015, beta: 0.004 };
+        let samples: Vec<Sample> = [2.0, 4.0, 8.0, 16.0, 32.0]
+            .iter()
+            .map(|&b| Sample { batch: b, iter_time_s: truth.t_comp(b) })
+            .collect();
+        let fit = fit_comp(&samples).unwrap();
+        assert!((fit.alpha - truth.alpha).abs() < 1e-9);
+        assert!((fit.beta - truth.beta).abs() < 1e-9);
+    }
+
+    #[test]
+    fn infer_xi_mean_ratio() {
+        let solo = [1.0, 2.0];
+        let shared = [1.5, 3.0];
+        assert!((infer_xi(&solo, &shared).unwrap() - 1.5).abs() < 1e-12);
+        assert!(infer_xi(&[], &[]).is_none());
+    }
+
+    #[test]
+    fn relative_error_zero_on_self() {
+        let m = PerfModel {
+            comp: CompModel { alpha: 0.01, beta: 0.002 },
+            comm: CommModel { alpha: 0.001, beta: 0.0005 },
+            msg_mb: 50.0,
+            delta: 2.0,
+        };
+        let obs: Vec<(f64, usize, f64)> = [(4.0, 1usize), (8.0, 4), (16.0, 8)]
+            .iter()
+            .map(|&(b, n)| (b, n, m.iter_time(b, 1, n)))
+            .collect();
+        assert!(relative_error(&m, &obs) < 1e-12);
+    }
+}

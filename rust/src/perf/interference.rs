@@ -1,0 +1,148 @@
+//! Interference ratios ξ for GPU-shared job pairs (Eqs. 5/6, Fig. 3).
+//!
+//! When jobs A and B share a GPU set, each one's iteration time inflates:
+//! `t̂ = t · ξ`, ξ ≥ 1. The paper measures ξ per (model, co-runner) pair and
+//! observes a spread up to ~6×. We reproduce that landscape with a
+//! contention-based default table derived from each profile's GPU / network
+//! intensity, and allow (a) explicit per-pair overrides (the interface a
+//! real deployment would fit from co-located profiling runs, §IV-B) and
+//! (b) a global constant override used by the Fig. 6b sensitivity sweep.
+
+use std::collections::HashMap;
+
+
+use super::profiles::{ModelKind, WorkloadProfile};
+
+/// Symmetric pair key (ξ is looked up per *victim*, so the map key is the
+/// ordered pair (victim, aggressor)).
+pub type PairKey = (ModelKind, ModelKind);
+
+#[derive(Debug, Clone, Default)]
+pub struct InterferenceModel {
+    /// Explicit measured ratios: (victim, aggressor) -> ξ_victim.
+    pub overrides: HashMap<String, f64>,
+    /// If set, every sharing pair uses this ξ for both jobs (Fig. 6b sweep).
+    pub global: Option<f64>,
+}
+
+impl InterferenceModel {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_global(xi: f64) -> Self {
+        Self { overrides: HashMap::new(), global: Some(xi) }
+    }
+
+    fn key(victim: ModelKind, aggressor: ModelKind) -> String {
+        format!("{}|{}", victim.name(), aggressor.name())
+    }
+
+    /// Register a measured ratio for (victim, aggressor).
+    pub fn set(&mut self, victim: ModelKind, aggressor: ModelKind, xi: f64) {
+        assert!(xi >= 1.0, "interference ratio must be >= 1");
+        self.overrides.insert(Self::key(victim, aggressor), xi);
+    }
+
+    /// ξ for `victim` when co-located with `aggressor`.
+    ///
+    /// Default model: contention on the SM/compute side plus contention on
+    /// the NIC, each proportional to the product of the two jobs' demands on
+    /// that resource. Calibrated to span ~[1.1, 3.2] for typical pairs with
+    /// the worst (two network-heavy detectors) near 6 — matching Fig. 3's
+    /// reported range ("up to 6").
+    pub fn xi(&self, victim: ModelKind, aggressor: ModelKind) -> f64 {
+        if let Some(g) = self.global {
+            return g;
+        }
+        if let Some(&v) = self.overrides.get(&Self::key(victim, aggressor)) {
+            return v;
+        }
+        let v = WorkloadProfile::get(victim);
+        let a = WorkloadProfile::get(aggressor);
+        // Compute-side slowdown: victim loses the fraction of cycles the
+        // aggressor occupies, amplified by how compute-bound the victim is.
+        let gpu = 1.0 + 0.45 * v.gpu_intensity * a.gpu_intensity;
+        // Network-side slowdown: NIC sharing hits comm-heavy victims hard
+        // and super-linearly (congestion) — this is what makes
+        // YoloV3-vs-YoloV3 pairs catastrophic in Fig. 3 while most other
+        // pairs stay mild (1.1-1.6).
+        let net = 1.0 + 4.5 * (v.net_intensity * a.net_intensity).powf(2.2);
+        // Iteration time inflates by the max of the two bottlenecks plus a
+        // residual coupling term.
+        let xi = gpu.max(net) + 0.35 * (gpu.min(net) - 1.0);
+        xi.max(1.0)
+    }
+
+    /// Both ratios for a sharing pair: (ξ_a, ξ_b).
+    pub fn pair(&self, a: ModelKind, b: ModelKind) -> (f64, f64) {
+        (self.xi(a, b), self.xi(b, a))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xi_at_least_one() {
+        let m = InterferenceModel::new();
+        for a in ModelKind::ALL {
+            for b in ModelKind::ALL {
+                assert!(m.xi(a, b) >= 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn range_matches_fig3() {
+        // Default table must span a wide range with worst cases near 6.
+        let m = InterferenceModel::new();
+        let mut lo = f64::INFINITY;
+        let mut hi = 0.0f64;
+        for a in ModelKind::ALL {
+            for b in ModelKind::ALL {
+                let xi = m.xi(a, b);
+                lo = lo.min(xi);
+                hi = hi.max(xi);
+            }
+        }
+        assert!(lo < 1.4, "light pairs should barely interfere: {lo}");
+        assert!(hi > 3.0 && hi < 7.0, "worst pair should approach 6: {hi}");
+    }
+
+    #[test]
+    fn ncf_is_a_polite_neighbor() {
+        // NCF (low GPU + net intensity) should hurt others the least.
+        let m = InterferenceModel::new();
+        let vs_ncf = m.xi(ModelKind::Bert, ModelKind::Ncf);
+        let vs_yolo = m.xi(ModelKind::Bert, ModelKind::YoloV3);
+        assert!(vs_ncf < vs_yolo);
+    }
+
+    #[test]
+    fn global_override_wins() {
+        let m = InterferenceModel::with_global(1.5);
+        for a in ModelKind::ALL {
+            for b in ModelKind::ALL {
+                assert_eq!(m.xi(a, b), 1.5);
+            }
+        }
+    }
+
+    #[test]
+    fn explicit_override_wins_over_default() {
+        let mut m = InterferenceModel::new();
+        m.set(ModelKind::Bert, ModelKind::Cifar10, 2.75);
+        assert_eq!(m.xi(ModelKind::Bert, ModelKind::Cifar10), 2.75);
+        // Reverse direction unaffected.
+        assert_ne!(m.xi(ModelKind::Cifar10, ModelKind::Bert), 2.75);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_sub_unit_ratio() {
+        let mut m = InterferenceModel::new();
+        m.set(ModelKind::Bert, ModelKind::Bert, 0.5);
+    }
+}

@@ -1,0 +1,239 @@
+//! Iteration-time / throughput model of a DDL job (paper §IV-A).
+//!
+//! * GPU compute:  `t_comp(B) = α_comp + β_comp · B`            (Eq. 3)
+//! * all-reduce:   `t_comm    = α_comm + β_comm · M`            (Eq. 2/4)
+//! * iteration with gradient-accumulation step `s` and compute/comm overlap
+//!   degree `δ` (Eq. 7):
+//!   `t_iter = (s-1)·t_comp(B/s) + (t_comp(B/s)^δ + t_comm^δ)^(1/δ)`
+//! * GPU sharing multiplies iteration time by an interference ratio ξ
+//!   (Eqs. 5/6), looked up in [`interference::InterferenceModel`].
+//!
+//! All times are seconds (f64); message sizes are MB.
+
+pub mod fit;
+pub mod interference;
+pub mod profiles;
+
+
+/// Affine GPU-compute model, Eq. 3.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CompModel {
+    /// Fixed per-iteration overhead (kernel launch, data loading), seconds.
+    pub alpha: f64,
+    /// Seconds per sample of per-GPU batch.
+    pub beta: f64,
+}
+
+impl CompModel {
+    /// `t_comp(B)` for a per-GPU batch of `b` samples.
+    pub fn t_comp(&self, b: f64) -> f64 {
+        self.alpha + self.beta * b
+    }
+}
+
+/// Affine all-reduce model, Eq. 2/4, with a ring-topology node factor.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CommModel {
+    /// Latency term `a` (seconds); grows with participant count.
+    pub alpha: f64,
+    /// Seconds per MB of gradient payload on the slowest link.
+    pub beta: f64,
+}
+
+impl CommModel {
+    /// `t_comm` for `msg_mb` MB across `n` workers (ring all-reduce transfers
+    /// `2(n-1)/n · M` on the bottleneck link; `n = 1` means no comm at all).
+    pub fn t_comm(&self, msg_mb: f64, n: usize) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        let ring = 2.0 * (n as f64 - 1.0) / n as f64;
+        self.alpha * (n as f64).log2() + self.beta * msg_mb * ring
+    }
+}
+
+/// Full per-job performance model (Eq. 7 assembly).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PerfModel {
+    pub comp: CompModel,
+    pub comm: CommModel,
+    /// Gradient payload per all-reduce, MB (model size).
+    pub msg_mb: f64,
+    /// Compute/communication overlap degree δ ≥ 1 (δ = 1: no overlap, sum;
+    /// δ → ∞: perfect overlap, max). Paper §IV-A4, borrowed from Pollux.
+    pub delta: f64,
+}
+
+impl PerfModel {
+    /// Iteration time (seconds) with user batch `batch` per GPU, accumulation
+    /// step `s` (sub-batch `batch/s`), over `n_workers` data-parallel GPUs.
+    ///
+    /// Eq. 7: `(s-1)` sub-batch passes back-to-back, the final one overlapped
+    /// with the all-reduce to degree δ.
+    pub fn iter_time(&self, batch: f64, s: u32, n_workers: usize) -> f64 {
+        assert!(s >= 1, "accumulation step must be >= 1");
+        let sub = batch / s as f64;
+        let tc = self.comp.t_comp(sub);
+        let tm = self.comm.t_comm(self.msg_mb, n_workers);
+        let overlapped = if tm == 0.0 {
+            tc
+        } else {
+            (tc.powf(self.delta) + tm.powf(self.delta)).powf(1.0 / self.delta)
+        };
+        (s as f64 - 1.0) * tc + overlapped
+    }
+
+    /// Throughput in samples/second (Eq. 14: `φ = B / t_iter`), aggregated
+    /// over all `n_workers` GPUs.
+    pub fn throughput(&self, batch: f64, s: u32, n_workers: usize) -> f64 {
+        n_workers as f64 * batch / self.iter_time(batch, s, n_workers)
+    }
+
+    /// Speedup of running on `n` workers vs 1 (used by the elastic baseline).
+    pub fn speedup(&self, batch: f64, n: usize) -> f64 {
+        self.throughput(batch, 1, n) / self.throughput(batch, 1, 1)
+    }
+}
+
+/// GPU memory footprint model: `mem(b) = base + per_sample · b` (GB).
+///
+/// This is what makes Algorithm 2's batch halving *necessary*: two co-located
+/// jobs must jointly fit in GPU memory, so the new job may have to shrink its
+/// sub-batch via gradient accumulation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MemModel {
+    /// Weights + optimizer state + activations at batch 0, GB.
+    pub base_gb: f64,
+    /// Activation growth per sample, GB.
+    pub per_sample_gb: f64,
+}
+
+impl MemModel {
+    pub fn mem_gb(&self, sub_batch: f64) -> f64 {
+        self.base_gb + self.per_sample_gb * sub_batch
+    }
+
+    /// Largest power-of-two sub-batch (≤ `batch`) fitting in `budget_gb`,
+    /// or `None` if even sub-batch 1 does not fit.
+    pub fn max_sub_batch(&self, batch: u32, budget_gb: f64) -> Option<u32> {
+        let mut b = batch.max(1);
+        loop {
+            if self.mem_gb(b as f64) <= budget_gb {
+                return Some(b);
+            }
+            if b == 1 {
+                return None;
+            }
+            b /= 2;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pm() -> PerfModel {
+        PerfModel {
+            comp: CompModel { alpha: 0.02, beta: 0.01 },
+            comm: CommModel { alpha: 0.002, beta: 0.001 },
+            msg_mb: 100.0,
+            delta: 2.0,
+        }
+    }
+
+    #[test]
+    fn comp_affine() {
+        let c = CompModel { alpha: 0.1, beta: 0.5 };
+        assert_eq!(c.t_comp(0.0), 0.1);
+        assert_eq!(c.t_comp(4.0), 2.1);
+    }
+
+    #[test]
+    fn comm_zero_for_single_worker() {
+        let c = CommModel { alpha: 0.1, beta: 0.5 };
+        assert_eq!(c.t_comm(100.0, 1), 0.0);
+        assert!(c.t_comm(100.0, 2) > 0.0);
+    }
+
+    #[test]
+    fn comm_monotone_in_workers() {
+        let c = CommModel { alpha: 0.01, beta: 0.001 };
+        let mut prev = 0.0;
+        for n in [2usize, 4, 8, 16] {
+            let t = c.t_comm(50.0, n);
+            assert!(t > prev, "t_comm must grow with workers");
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn iter_time_s1_is_overlapped_only() {
+        let m = pm();
+        let t = m.iter_time(8.0, 1, 4);
+        let tc = m.comp.t_comp(8.0);
+        let tm = m.comm.t_comm(m.msg_mb, 4);
+        let expect = (tc.powf(2.0) + tm.powf(2.0)).sqrt();
+        assert!((t - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn iter_time_accumulation_adds_sub_passes() {
+        let m = pm();
+        // s=2: one extra sub-batch pass of t_comp(B/2).
+        let t2 = m.iter_time(8.0, 2, 4);
+        let t1_half = m.comp.t_comp(4.0);
+        let tm = m.comm.t_comm(m.msg_mb, 4);
+        let expect = t1_half + (t1_half.powf(2.0) + tm.powf(2.0)).sqrt();
+        assert!((t2 - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accumulation_overhead_is_alpha_only_when_no_comm() {
+        // With n=1 (no comm), accumulation costs exactly (s-1)*alpha extra.
+        let m = pm();
+        let t1 = m.iter_time(8.0, 1, 1);
+        let t4 = m.iter_time(8.0, 4, 1);
+        assert!((t4 - t1 - 3.0 * m.comp.alpha).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overlap_bounds() {
+        // δ=1 (sum) is the worst case; large δ approaches max(tc, tm).
+        let mut m = pm();
+        m.delta = 1.0;
+        let sum = m.iter_time(8.0, 1, 8);
+        m.delta = 64.0;
+        let maxish = m.iter_time(8.0, 1, 8);
+        let tc = m.comp.t_comp(8.0);
+        let tm = m.comm.t_comm(m.msg_mb, 8);
+        assert!((sum - (tc + tm)).abs() < 1e-9);
+        assert!(maxish <= sum && maxish >= tc.max(tm) - 1e-9);
+    }
+
+    #[test]
+    fn throughput_matches_eq14() {
+        let m = pm();
+        let phi = m.throughput(8.0, 1, 4);
+        assert!((phi - 4.0 * 8.0 / m.iter_time(8.0, 1, 4)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn speedup_sublinear() {
+        let m = pm();
+        let s8 = m.speedup(8.0, 8);
+        assert!(s8 > 1.0 && s8 < 8.0, "comm must make speedup sublinear: {s8}");
+    }
+
+    #[test]
+    fn mem_max_sub_batch() {
+        let mm = MemModel { base_gb: 4.0, per_sample_gb: 0.5 };
+        // budget 11 GB: 4 + 0.5*b <= 11 -> b <= 14 -> largest p2 <= batch.
+        assert_eq!(mm.max_sub_batch(16, 11.0), Some(8));
+        assert_eq!(mm.max_sub_batch(8, 11.0), Some(8));
+        // budget 4.4 GB: 4 + 0.5*b <= 4.4 -> b <= 0.8 -> nothing fits.
+        assert_eq!(mm.max_sub_batch(16, 4.4), None);
+        // budget 4.6 GB: sub-batch 1 fits.
+        assert_eq!(mm.max_sub_batch(16, 4.6), Some(1));
+    }
+}

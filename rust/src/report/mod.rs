@@ -1,0 +1,105 @@
+//! Table/figure emitters: render run summaries as the markdown tables and
+//! CSV series the paper reports, so bench output is directly comparable.
+
+use std::fmt::Write as _;
+
+use crate::sim::metrics::Summary;
+
+/// Seconds → hours with 2 decimals (Tables III/IV unit).
+pub fn hrs(s: f64) -> f64 {
+    (s / 3600.0 * 100.0).round() / 100.0
+}
+
+/// Render a Table II-style block (makespan + avg JCT in seconds).
+pub fn table2(rows: &[Summary]) -> String {
+    let mut out = String::new();
+    writeln!(out, "| Policy | Makespan (seconds) | Average JCT (seconds) |").unwrap();
+    writeln!(out, "|---|---|---|").unwrap();
+    for r in rows {
+        writeln!(
+            out,
+            "| {} | {:.0} | {:.2} |",
+            r.policy, r.makespan_s, r.all.avg_jct_s
+        )
+        .unwrap();
+    }
+    out
+}
+
+/// Render a Table III/IV-style block (hours, all/large/small split).
+pub fn table34(rows: &[Summary]) -> String {
+    let mut out = String::new();
+    writeln!(out, "| Metrics (hrs) | Policy | All Jobs | Large Jobs | Small Jobs |")
+        .unwrap();
+    writeln!(out, "|---|---|---|---|---|").unwrap();
+    for r in rows {
+        writeln!(
+            out,
+            "| Average JCT | {} | {:.2} | {:.2} | {:.2} |",
+            r.policy,
+            hrs(r.all.avg_jct_s),
+            hrs(r.large.avg_jct_s),
+            hrs(r.small.avg_jct_s)
+        )
+        .unwrap();
+    }
+    for r in rows {
+        writeln!(
+            out,
+            "| Average Queuing Time | {} | {:.2} | {:.2} | {:.2} |",
+            r.policy,
+            hrs(r.all.avg_queue_s),
+            hrs(r.large.avg_queue_s),
+            hrs(r.small.avg_queue_s)
+        )
+        .unwrap();
+    }
+    out
+}
+
+/// CSV series for a figure: one `name,x,y` row per point.
+pub fn csv_series(name: &str, points: &[(f64, f64)]) -> String {
+    let mut out = String::new();
+    for (x, y) in points {
+        writeln!(out, "{name},{x},{y}").unwrap();
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::metrics::Aggregate;
+
+    fn summary(policy: &str, jct: f64) -> Summary {
+        let agg = Aggregate { n: 10, avg_jct_s: jct, avg_queue_s: jct / 3.0, p50_jct_s: jct, p90_jct_s: jct };
+        Summary { policy: policy.into(), makespan_s: 2.0 * jct, all: agg, large: agg, small: agg }
+    }
+
+    #[test]
+    fn table2_contains_all_policies() {
+        let t = table2(&[summary("FIFO", 662.6), summary("SJF-BSBF", 483.2)]);
+        assert!(t.contains("| FIFO | 1325 | 662.60 |"));
+        assert!(t.contains("SJF-BSBF"));
+    }
+
+    #[test]
+    fn table34_has_both_metric_blocks() {
+        let t = table34(&[summary("Pollux", 3744.0)]);
+        assert_eq!(t.matches("Pollux").count(), 2);
+        assert!(t.contains("| Average JCT | Pollux | 1.04 |"));
+    }
+
+    #[test]
+    fn hrs_rounds() {
+        assert_eq!(hrs(3600.0), 1.0);
+        assert_eq!(hrs(5400.0), 1.5);
+    }
+
+    #[test]
+    fn csv_shape() {
+        let s = csv_series("fig6a", &[(120.0, 1.1), (240.0, 2.2)]);
+        assert_eq!(s.lines().count(), 2);
+        assert!(s.starts_with("fig6a,120,1.1"));
+    }
+}

@@ -1,0 +1,259 @@
+//! PJRT runtime: load the AOT'd HLO-text artifacts produced by
+//! `python/compile/aot.py` and execute them from the Rust hot path.
+//!
+//! Python is build-time only — after `make artifacts`, this module gives
+//! the coordinator a self-contained training executor:
+//!
+//! * [`ArtifactSet`] — meta.json + compiled executables per micro-batch,
+//! * [`executor::TrainExecutor`] — the paper's gradient-accumulation
+//!   loop: `s × grad_step(sub_batch) → accum → apply(lr, 1/s)`.
+//!
+//! HLO *text* is the interchange format (not serialized protos): jax ≥ 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod executor;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Parsed `artifacts/meta.json` — the AOT ABI between L2 and L3.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub model: ModelMeta,
+    pub param_names: Vec<String>,
+    pub param_shapes: Vec<Vec<usize>>,
+    pub micro_batches: Vec<u32>,
+    pub artifacts: HashMap<String, String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub n_params: usize,
+}
+
+impl ArtifactMeta {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let doc = Json::parse(&text).context("parsing meta.json")?;
+        let m = doc.req("model")?;
+        let usz = |j: &Json, k: &str| -> Result<usize> {
+            j.req(k)?.as_usize().with_context(|| format!("{k} must be a number"))
+        };
+        let model = ModelMeta {
+            vocab: usz(m, "vocab")?,
+            d_model: usz(m, "d_model")?,
+            n_heads: usz(m, "n_heads")?,
+            n_layers: usz(m, "n_layers")?,
+            d_ff: usz(m, "d_ff")?,
+            seq_len: usz(m, "seq_len")?,
+            n_params: usz(m, "n_params")?,
+        };
+        let param_names: Vec<String> = doc
+            .req("param_names")?
+            .as_arr()
+            .context("param_names array")?
+            .iter()
+            .map(|j| j.as_str().map(str::to_string).context("param name"))
+            .collect::<Result<_>>()?;
+        let param_shapes: Vec<Vec<usize>> = doc
+            .req("param_shapes")?
+            .as_arr()
+            .context("param_shapes array")?
+            .iter()
+            .map(|j| {
+                j.as_arr()
+                    .context("shape array")?
+                    .iter()
+                    .map(|d| d.as_usize().context("dim"))
+                    .collect::<Result<Vec<usize>>>()
+            })
+            .collect::<Result<_>>()?;
+        let micro_batches: Vec<u32> = doc
+            .req("micro_batches")?
+            .as_arr()
+            .context("micro_batches array")?
+            .iter()
+            .map(|j| j.as_usize().map(|x| x as u32).context("micro batch"))
+            .collect::<Result<_>>()?;
+        let artifacts: HashMap<String, String> = doc
+            .req("artifacts")?
+            .as_obj()
+            .context("artifacts object")?
+            .iter()
+            .map(|(k, v)| {
+                Ok((k.clone(), v.as_str().context("artifact path")?.to_string()))
+            })
+            .collect::<Result<_>>()?;
+        let meta = ArtifactMeta { model, param_names, param_shapes, micro_batches, artifacts };
+        if meta.param_names.len() != meta.param_shapes.len() {
+            bail!("meta.json: param name/shape length mismatch");
+        }
+        Ok(meta)
+    }
+
+    /// Number of flat parameter arrays.
+    pub fn n_arrays(&self) -> usize {
+        self.param_names.len()
+    }
+
+    /// Largest micro-batch ≤ `sub_batch` with a compiled grad_step variant.
+    pub fn best_micro_batch(&self, sub_batch: u32) -> Option<u32> {
+        self.micro_batches.iter().copied().filter(|&b| b <= sub_batch).max()
+    }
+}
+
+/// Executables for one artifact directory, **compiled lazily per program**:
+/// a worker that only ever runs micro-batch 8 pays for 4 compilations
+/// (grad_step_mb8, accum, apply, init), not all 7 artifacts. On the
+/// single-core CI/testbed this is the difference between ~40 s and ~20 s of
+/// XLA compile per worker (§Perf L3 fix #1 in EXPERIMENTS.md).
+pub struct ArtifactSet {
+    pub meta: ArtifactMeta,
+    pub client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: std::cell::RefCell<HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+fn compile(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().context("non-utf8 artifact path")?,
+    )
+    .with_context(|| format!("parsing HLO text {path:?}"))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    Ok(client.compile(&comp)?)
+}
+
+impl ArtifactSet {
+    /// Open an artifact directory on a fresh CPU PJRT client. Validates
+    /// that every artifact file exists; compilation happens on first use.
+    pub fn load(dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = dir.into();
+        let meta = ArtifactMeta::load(&dir)?;
+        for file in meta.artifacts.values() {
+            let path = dir.join(file);
+            if !path.exists() {
+                bail!("artifact {path:?} missing — run `make artifacts`");
+            }
+        }
+        let client = xla::PjRtClient::cpu()?;
+        Ok(ArtifactSet { meta, client, dir, cache: Default::default() })
+    }
+
+    /// Default artifact directory: `$CARGO_MANIFEST_DIR/artifacts`.
+    pub fn default_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    /// Get (compiling on first use) the executable for a named artifact.
+    ///
+    /// Compilation takes a process-wide gate: on the single-core testbed,
+    /// letting N workers interleave their XLA compiles multiplies *every*
+    /// worker's time-to-first-step by N; serializing lets the first lead
+    /// start training immediately (§Perf L3 fix #2 in EXPERIMENTS.md).
+    fn exe(&self, name: &str) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(std::rc::Rc::clone(e));
+        }
+        static COMPILE_GATE: std::sync::Mutex<()> = std::sync::Mutex::new(());
+        let file = self
+            .artifact_file(name)
+            .with_context(|| format!("meta.json missing artifact {name}"))?;
+        let exe = {
+            let _gate = COMPILE_GATE.lock().unwrap_or_else(|e| e.into_inner());
+            std::rc::Rc::new(compile(&self.client, &self.dir.join(file))?)
+        };
+        self.cache.borrow_mut().insert(name.to_string(), std::rc::Rc::clone(&exe));
+        Ok(exe)
+    }
+
+    fn artifact_file(&self, name: &str) -> Option<&str> {
+        self.meta.artifacts.get(name).map(String::as_str)
+    }
+
+    /// Number of executables compiled so far (perf instrumentation).
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    pub fn grad_step_exe(&self, micro_batch: u32) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        if !self.meta.micro_batches.contains(&micro_batch) {
+            bail!("no grad_step artifact for micro-batch {micro_batch}");
+        }
+        self.exe(&format!("grad_step_mb{micro_batch}"))
+    }
+
+    pub fn accum_exe(&self) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        self.exe("accum")
+    }
+
+    pub fn apply_exe(&self) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        self.exe("apply")
+    }
+
+    /// Run the seeded init program → fresh parameter literals.
+    pub fn init_params(&self) -> Result<Vec<xla::Literal>> {
+        let init = self.exe("init_params")?;
+        let out = init.execute::<xla::Literal>(&[])?;
+        let tuple = out[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        if parts.len() != self.meta.n_arrays() {
+            bail!("init returned {} arrays, expected {}", parts.len(), self.meta.n_arrays());
+        }
+        Ok(parts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meta_parses() {
+        let meta = ArtifactMeta::load(&ArtifactSet::default_dir()).unwrap();
+        assert_eq!(meta.param_names.len(), meta.param_shapes.len());
+        assert!(meta.micro_batches.contains(&1));
+        assert!(meta.model.n_params > 100_000);
+    }
+
+    #[test]
+    fn best_micro_batch_picks_floor() {
+        let meta = ArtifactMeta::load(&ArtifactSet::default_dir()).unwrap();
+        // micro_batches = [1,2,4,8]
+        assert_eq!(meta.best_micro_batch(8), Some(8));
+        assert_eq!(meta.best_micro_batch(6), Some(4));
+        assert_eq!(meta.best_micro_batch(1), Some(1));
+        assert_eq!(meta.best_micro_batch(0), None);
+    }
+
+    #[test]
+    fn artifacts_compile_lazily_and_init_runs() {
+        let set = ArtifactSet::load(ArtifactSet::default_dir()).unwrap();
+        assert_eq!(set.compiled_count(), 0, "load must not compile anything");
+        let params = set.init_params().unwrap();
+        assert_eq!(set.compiled_count(), 1, "only init compiled");
+        assert_eq!(params.len(), set.meta.n_arrays());
+        // First param is the token embedding [vocab, d_model].
+        let emb = params[0].to_vec::<f32>().unwrap();
+        assert_eq!(emb.len(), set.meta.model.vocab * set.meta.model.d_model);
+        assert!(emb.iter().all(|x| x.is_finite()));
+        // Cached: second use does not recompile.
+        set.init_params().unwrap();
+        assert_eq!(set.compiled_count(), 1);
+        // Unknown micro-batch is rejected without compiling.
+        assert!(set.grad_step_exe(3).is_err());
+        assert_eq!(set.compiled_count(), 1);
+    }
+}

@@ -1,0 +1,209 @@
+//! Pollux-like elastic baseline (§VI-A baseline 5): periodically
+//! re-optimizes per-job GPU counts to maximize aggregate goodput.
+//!
+//! Faithful-in-shape simplification of Pollux (OSDI'21), documented in
+//! DESIGN.md: each interval, GPUs are assigned one at a time to the job
+//! with the best *marginal speedup per GPU* (diminishing-returns water
+//! filling over each job's Eq. 7 speedup curve), bounded by [0, 2×request].
+//! Changing a job's allocation costs a restart penalty (checkpoint +
+//! rebuild), which is exactly why Pollux excels at low load — re-scaling is
+//! cheap and GPUs are plentiful — and degrades under overload (Fig. 6a's
+//! crossover; [16], [20]). Unlike the real Pollux we never retune the batch
+//! size (the accuracy-degradation concern the paper raises).
+
+use crate::cluster::placement;
+use crate::jobs::JobId;
+use crate::sim::{Decision, Policy, SimState};
+
+#[derive(Debug)]
+pub struct Elastic {
+    /// Reallocation interval (Pollux default: 30 s).
+    pub tick_s: f64,
+    /// Restart penalty when an allocation changes.
+    pub penalty_s: f64,
+    /// Allocation cap as a multiple of the requested gang.
+    pub cap_factor: f64,
+    /// Hysteresis: only shrink/grow a running job if the plan differs by
+    /// more than this many GPUs (avoids reallocation thrash).
+    pub min_delta: usize,
+}
+
+impl Default for Elastic {
+    fn default() -> Self {
+        Elastic { tick_s: 30.0, penalty_s: 30.0, cap_factor: 2.0, min_delta: 2 }
+    }
+}
+
+impl Elastic {
+    /// Water-filling: distribute `total` GPUs over `jobs` by marginal
+    /// throughput gain. Returns the planned GPU count per job.
+    fn plan(&self, state: &SimState, jobs: &[JobId], total: usize) -> Vec<usize> {
+        let mut alloc = vec![0usize; jobs.len()];
+        let mut remaining = total;
+        // Seed: every job would like at least 1 GPU.
+        // Greedy: repeatedly give a GPU to the best marginal gain.
+        while remaining > 0 {
+            let mut best: Option<(usize, f64)> = None;
+            for (i, &id) in jobs.iter().enumerate() {
+                let spec = &state.jobs[id].spec;
+                let cap =
+                    ((spec.gpus as f64 * self.cap_factor).round() as usize).max(1);
+                if alloc[i] >= cap {
+                    continue;
+                }
+                let perf = spec.profile().perf;
+                let b = spec.batch as f64;
+                let cur = if alloc[i] == 0 {
+                    0.0
+                } else {
+                    perf.throughput(b, 1, alloc[i])
+                };
+                let nxt = perf.throughput(b, 1, alloc[i] + 1);
+                // Normalize by remaining work so short jobs are favoured
+                // (goodput-weighted fairness surrogate).
+                let weight = 1.0 / state.jobs[id].remaining_solo_runtime().max(1.0);
+                let gain = (nxt - cur) * weight;
+                if best.map(|(_, g)| gain > g).unwrap_or(true) {
+                    best = Some((i, gain));
+                }
+            }
+            match best {
+                Some((i, gain)) if gain > 0.0 => {
+                    alloc[i] += 1;
+                    remaining -= 1;
+                }
+                _ => break,
+            }
+        }
+        alloc
+    }
+}
+
+impl Policy for Elastic {
+    fn name(&self) -> &'static str {
+        "Pollux"
+    }
+
+    fn tick_interval(&self) -> Option<f64> {
+        Some(self.tick_s)
+    }
+
+    fn preemption_penalty(&self) -> f64 {
+        self.penalty_s
+    }
+
+    fn schedule(&mut self, state: &SimState) -> Vec<Decision> {
+        let mut active: Vec<JobId> = state.running();
+        active.extend(state.pending());
+        active.sort_unstable();
+        if active.is_empty() {
+            return vec![];
+        }
+        let plan = self.plan(state, &active, state.cluster.total_gpus());
+
+        let mut out = Vec::new();
+        let mut cluster = state.cluster.clone();
+        // Phase 1: preempt running jobs whose allocation changes enough
+        // (or drops to zero).
+        for (i, &id) in active.iter().enumerate() {
+            if state.jobs[id].state != crate::jobs::JobState::Running {
+                continue;
+            }
+            let held = state.jobs[id].gpus_held.len();
+            let want = plan[i];
+            let delta = held.abs_diff(want);
+            if want == 0 || delta > self.min_delta {
+                cluster.release(id);
+                out.push(Decision::Preempt { job: id });
+            }
+        }
+        // Phase 2: start eligible pending jobs at their planned width.
+        for (i, &id) in active.iter().enumerate() {
+            if state.jobs[id].state == crate::jobs::JobState::Running {
+                continue;
+            }
+            let want = plan[i].min(state.cluster.total_gpus());
+            if want == 0 {
+                continue;
+            }
+            if let Some(gpus) = placement::consolidated_free(&cluster, want) {
+                cluster.allocate(id, &gpus);
+                out.push(Decision::Start { job: id, gpus, accum_step: 1 });
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterConfig;
+    use crate::jobs::JobSpec;
+    use crate::perf::interference::InterferenceModel;
+    use crate::perf::profiles::ModelKind;
+    use crate::sim::engine;
+
+    fn job(id: usize, gpus: usize, iters: u64, arrival: f64) -> JobSpec {
+        JobSpec {
+            id,
+            model: ModelKind::ImageNet,
+            gpus,
+            iterations: iters,
+            batch: 32,
+            arrival_s: arrival,
+        }
+    }
+
+    #[test]
+    fn single_job_gets_expanded_allocation() {
+        // Alone on the cluster, an elastic job may exceed its request
+        // (up to cap) — goodput maximization.
+        let trace = vec![job(0, 4, 2000, 0.0)];
+        let out = engine::run(
+            ClusterConfig::physical(),
+            &trace,
+            InterferenceModel::new(),
+            &mut Elastic::default(),
+        )
+        .unwrap();
+        let jct = out.jobs[0].jct().unwrap();
+        let solo = trace[0].solo_runtime(1);
+        assert!(
+            jct < solo,
+            "elastic expansion should beat the requested gang: {jct} vs {solo}"
+        );
+    }
+
+    #[test]
+    fn all_jobs_finish_under_churn() {
+        let trace: Vec<JobSpec> =
+            (0..10).map(|i| job(i, 1 + (i % 4) * 2, 300 + 100 * i as u64, i as f64 * 20.0)).collect();
+        let out = engine::run(
+            ClusterConfig::physical(),
+            &trace,
+            InterferenceModel::new(),
+            &mut Elastic::default(),
+        )
+        .unwrap();
+        for j in &out.jobs {
+            assert_eq!(j.state, crate::jobs::JobState::Finished, "{j:?}");
+        }
+    }
+
+    #[test]
+    fn overload_causes_reallocation_churn() {
+        // Many jobs on a small cluster: elastic keeps re-planning, which is
+        // exactly its weakness at high load (Fig. 6a).
+        let trace: Vec<JobSpec> =
+            (0..12).map(|i| job(i, 4, 2000, i as f64 * 5.0)).collect();
+        let out = engine::run(
+            ClusterConfig::physical(),
+            &trace,
+            InterferenceModel::new(),
+            &mut Elastic::default(),
+        )
+        .unwrap();
+        assert!(out.preemptions > 0, "overload should trigger reallocation");
+    }
+}

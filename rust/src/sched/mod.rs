@@ -1,0 +1,51 @@
+//! The six scheduling policies evaluated in the paper (§VI-A Baselines):
+//! FIFO, SJF, Tiresias, Pollux-like elastic, SJF-FFS and the contribution,
+//! SJF-BSBF. All implement [`crate::sim::Policy`] and run unchanged on the
+//! simulator and (for the non-preemptive ones) the physical coordinator.
+
+pub mod elastic;
+pub mod fifo;
+pub mod sjf;
+pub mod sjf_bsbf;
+pub mod sjf_ffs;
+pub mod tiresias;
+
+pub use elastic::Elastic;
+pub use fifo::Fifo;
+pub use sjf::Sjf;
+pub use sjf_bsbf::SjfBsbf;
+pub use sjf_ffs::SjfFfs;
+pub use tiresias::Tiresias;
+
+use crate::sim::Policy;
+
+/// All policy names, in the paper's table order.
+pub const POLICY_NAMES: [&str; 6] =
+    ["FIFO", "SJF", "Tiresias", "Pollux", "SJF-FFS", "SJF-BSBF"];
+
+/// Instantiate a policy by its paper name (CLI / bench entry point).
+pub fn by_name(name: &str) -> Option<Box<dyn Policy>> {
+    Some(match name {
+        "FIFO" => Box::new(Fifo::default()),
+        "SJF" => Box::new(Sjf::default()),
+        "Tiresias" => Box::new(Tiresias::default()),
+        "Pollux" => Box::new(Elastic::default()),
+        "SJF-FFS" => Box::new(SjfFfs::default()),
+        "SJF-BSBF" => Box::new(SjfBsbf::default()),
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_name_instantiates() {
+        for name in POLICY_NAMES {
+            let p = by_name(name).unwrap_or_else(|| panic!("missing {name}"));
+            assert_eq!(p.name(), name);
+        }
+        assert!(by_name("bogus").is_none());
+    }
+}

@@ -1,0 +1,185 @@
+//! SJF-FFS: SJF with **first-fit sharing** (§VI-A baseline 4) — the
+//! aggressive-sharing strawman SJF-BSBF is compared against.
+//!
+//! "similar to SJF-BSBF except that it does not search the best sharing
+//! configuration ... but allocates the job to those GPUs that only have one
+//! job in a first fit manner if the free GPUs are not sufficient". It
+//! always shares when memory allows (κ = 0 unconditionally), picking the
+//! largest memory-feasible sub-batch — no Theorem 1, no interference check.
+
+use std::collections::HashMap;
+
+use crate::cluster::placement;
+use crate::jobs::JobId;
+use crate::sim::{Decision, Policy, SimState};
+
+use super::sjf::pending_by_runtime;
+
+#[derive(Debug, Default)]
+pub struct SjfFfs;
+
+impl Policy for SjfFfs {
+    fn name(&self) -> &'static str {
+        "SJF-FFS"
+    }
+
+    fn schedule(&mut self, state: &SimState) -> Vec<Decision> {
+        let mut cluster = state.cluster.clone();
+        let mut out = Vec::new();
+        // Track hypothetical accumulation choices for memory math of jobs
+        // we start within this same batch of decisions.
+        let mut started_accum: HashMap<JobId, u32> = HashMap::new();
+
+        for id in pending_by_runtime(state) {
+            let need = state.jobs[id].spec.gpus;
+            // 1) plain SJF on free GPUs
+            if let Some(gpus) = placement::consolidated_free(&cluster, need) {
+                cluster.allocate(id, &gpus);
+                started_accum.insert(id, 1);
+                out.push(Decision::Start { job: id, gpus, accum_step: 1 });
+                continue;
+            }
+            // 2) first-fit over one-job GPUs, memory-checked only.
+            let one_job = cluster.one_job_gpus();
+            let free = cluster.free_gpus();
+            if one_job.len() + free.len() < need {
+                continue;
+            }
+            let prof = state.jobs[id].spec.profile();
+            let budget = state.cluster.config.gpu_mem_gb;
+            // Largest sub-batch that fits next to the heaviest co-runner we
+            // would take (first-fit scan, conservative single pass).
+            let mut chosen: Vec<usize> = Vec::new();
+            let mut worst_resident = 0.0f64;
+            for &g in &one_job {
+                if chosen.len() == need {
+                    break;
+                }
+                let other = cluster.slot(g).jobs[0];
+                let orec = &state.jobs[other];
+                let o_accum =
+                    started_accum.get(&other).copied().unwrap_or(orec.accum_step);
+                let resident = orec
+                    .spec
+                    .profile()
+                    .mem
+                    .mem_gb(orec.spec.batch as f64 / o_accum as f64);
+                // Feasible at all? (even sub-batch 1 must fit)
+                if prof.mem.mem_gb(1.0) <= budget - resident {
+                    chosen.push(g);
+                    worst_resident = worst_resident.max(resident);
+                }
+            }
+            // Fill the remainder with free GPUs.
+            for &g in &free {
+                if chosen.len() == need {
+                    break;
+                }
+                chosen.push(g);
+            }
+            if chosen.len() < need || chosen.is_empty() {
+                continue;
+            }
+            let Some(sub) = prof
+                .mem
+                .max_sub_batch(state.jobs[id].spec.batch, budget - worst_resident)
+            else {
+                continue;
+            };
+            let accum = (state.jobs[id].spec.batch / sub).max(1);
+            cluster.allocate(id, &chosen);
+            started_accum.insert(id, accum);
+            out.push(Decision::Start { job: id, gpus: chosen, accum_step: accum });
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterConfig;
+    use crate::jobs::JobSpec;
+    use crate::perf::interference::InterferenceModel;
+    use crate::perf::profiles::ModelKind;
+    use crate::sim::engine;
+
+    fn job(id: usize, model: ModelKind, gpus: usize, iters: u64, batch: u32, arrival: f64) -> JobSpec {
+        JobSpec { id, model, gpus, iterations: iters, batch, arrival_s: arrival }
+    }
+
+    #[test]
+    fn shares_aggressively_when_cluster_full() {
+        // Fill all 16 GPUs with one CIFAR job, then a second arrives: FFS
+        // must co-locate instead of queueing.
+        let trace = vec![
+            job(0, ModelKind::Cifar10, 16, 3000, 128, 0.0),
+            job(1, ModelKind::Cifar10, 16, 100, 128, 1.0),
+        ];
+        let out = engine::run(
+            ClusterConfig::physical(),
+            &trace,
+            InterferenceModel::new(),
+            &mut SjfFfs,
+        )
+        .unwrap();
+        let q1 = out.jobs[1].queueing_delay().unwrap();
+        assert!(q1 < 1.0, "FFS should start immediately via sharing, q={q1}");
+    }
+
+    #[test]
+    fn shares_even_catastrophic_pairs() {
+        // Two YoloV3 at small batch: ξ ≈ 6 but memory fits — FFS shares
+        // anyway (that is its defining flaw vs BSBF).
+        let trace = vec![
+            job(0, ModelKind::YoloV3, 16, 1500, 4, 0.0),
+            job(1, ModelKind::YoloV3, 16, 1500, 4, 1.0),
+        ];
+        let out = engine::run(
+            ClusterConfig::physical(),
+            &trace,
+            InterferenceModel::new(),
+            &mut SjfFfs,
+        )
+        .unwrap();
+        let q1 = out.jobs[1].queueing_delay().unwrap();
+        assert!(q1 < 1.0, "FFS shares blindly, q={q1}");
+    }
+
+    #[test]
+    fn respects_memory_infeasibility() {
+        // Two batch-16 YoloV3: resident 10.1 GB leaves < base GB — cannot
+        // share; second job must wait for the first to finish.
+        let trace = vec![
+            job(0, ModelKind::YoloV3, 16, 500, 16, 0.0),
+            job(1, ModelKind::YoloV3, 16, 500, 16, 1.0),
+        ];
+        let out = engine::run(
+            ClusterConfig::physical(),
+            &trace,
+            InterferenceModel::new(),
+            &mut SjfFfs,
+        )
+        .unwrap();
+        let q1 = out.jobs[1].queueing_delay().unwrap();
+        assert!(q1 > 1.0, "memory-infeasible share must queue, q={q1}");
+    }
+
+    #[test]
+    fn shrinks_sub_batch_to_fit() {
+        // New BERT@16 next to a running CIFAR10@128 must shrink its
+        // sub-batch (gradient accumulation) to fit the 11 GB budget.
+        let trace = vec![
+            job(0, ModelKind::Cifar10, 16, 2000, 128, 0.0),
+            job(1, ModelKind::Bert, 16, 200, 16, 1.0),
+        ];
+        let out = engine::run(
+            ClusterConfig::physical(),
+            &trace,
+            InterferenceModel::new(),
+            &mut SjfFfs,
+        )
+        .unwrap();
+        assert!(out.jobs[1].accum_step > 1, "must gradient-accumulate");
+    }
+}

@@ -1,0 +1,168 @@
+//! Tiresias (NSDI'19) baseline: preemptive discretized 2D-LAS (§VI-A
+//! baseline 3 — "prioritizes least attained service jobs (consumed GPU
+//! numbers and training iterations) ... helps short-term jobs escape from
+//! resource starvation without any prior information").
+//!
+//! Simplification vs the full system (documented in DESIGN.md): two
+//! discrete priority queues split at an attained-service threshold
+//! (GPU·seconds), FIFO within a queue; reallocation happens at every event
+//! plus a periodic tick; demoted/evicted jobs pay a fixed
+//! checkpoint/restore penalty before they can restart (the paper's
+//! migration overhead).
+
+use crate::cluster::placement;
+use crate::jobs::JobId;
+use crate::sim::{Decision, Policy, SimState};
+
+#[derive(Debug)]
+pub struct Tiresias {
+    /// Attained-service boundary between queue 0 (high) and queue 1 (low).
+    pub threshold_gpu_s: f64,
+    /// Reallocation tick.
+    pub tick_s: f64,
+    /// Checkpoint/restore cost charged to a preempted job.
+    pub penalty_s: f64,
+}
+
+impl Default for Tiresias {
+    fn default() -> Self {
+        // ~ one hour of single-GPU service, the paper-trace scale knob.
+        Tiresias { threshold_gpu_s: 3600.0, tick_s: 60.0, penalty_s: 30.0 }
+    }
+}
+
+impl Tiresias {
+    /// 2D-LAS priority: (queue, arrival). Lower tuple = higher priority.
+    fn priority(&self, state: &SimState, id: JobId) -> (u8, f64, usize) {
+        let q = if state.service_gpu_s[id] < self.threshold_gpu_s { 0 } else { 1 };
+        (q, state.jobs[id].spec.arrival_s, id)
+    }
+}
+
+impl Policy for Tiresias {
+    fn name(&self) -> &'static str {
+        "Tiresias"
+    }
+
+    fn tick_interval(&self) -> Option<f64> {
+        Some(self.tick_s)
+    }
+
+    fn preemption_penalty(&self) -> f64 {
+        self.penalty_s
+    }
+
+    fn schedule(&mut self, state: &SimState) -> Vec<Decision> {
+        // Rank everyone active (running + eligible pending) by 2D-LAS.
+        let mut active: Vec<JobId> = state.running();
+        active.extend(state.pending());
+        active.sort_by(|&a, &b| {
+            let pa = self.priority(state, a);
+            let pb = self.priority(state, b);
+            pa.0.cmp(&pb.0).then(pa.1.total_cmp(&pb.1)).then(pa.2.cmp(&pb.2))
+        });
+
+        // Greedy exclusive admission in priority order.
+        let total = state.cluster.total_gpus();
+        let mut budget = total;
+        let mut should_run: Vec<JobId> = Vec::new();
+        for &id in &active {
+            let need = state.jobs[id].spec.gpus;
+            if need <= budget {
+                should_run.push(id);
+                budget -= need;
+            }
+        }
+
+        let mut out = Vec::new();
+        let mut cluster = state.cluster.clone();
+        // Preempt running jobs that lost their slot.
+        for id in state.running() {
+            if !should_run.contains(&id) {
+                cluster.release(id);
+                out.push(Decision::Preempt { job: id });
+            }
+        }
+        // Start admitted pending jobs on the freed/free GPUs.
+        for &id in &should_run {
+            if state.jobs[id].state == crate::jobs::JobState::Running {
+                continue;
+            }
+            if let Some(gpus) =
+                placement::consolidated_free(&cluster, state.jobs[id].spec.gpus)
+            {
+                cluster.allocate(id, &gpus);
+                out.push(Decision::Start { job: id, gpus, accum_step: 1 });
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterConfig;
+    use crate::jobs::JobSpec;
+    use crate::perf::interference::InterferenceModel;
+    use crate::perf::profiles::ModelKind;
+    use crate::sim::engine;
+
+    fn job(id: usize, gpus: usize, iters: u64, arrival: f64) -> JobSpec {
+        JobSpec {
+            id,
+            model: ModelKind::Cifar10,
+            gpus,
+            iterations: iters,
+            batch: 128,
+            arrival_s: arrival,
+        }
+    }
+
+    #[test]
+    fn preempts_long_job_for_newcomer() {
+        // A long 16-GPU hog crosses the service threshold; a newcomer with
+        // zero attained service must preempt it.
+        let trace = vec![job(0, 16, 100_000, 0.0), job(1, 16, 100, 4000.0)];
+        let out = engine::run(
+            ClusterConfig::physical(),
+            &trace,
+            InterferenceModel::new(),
+            &mut Tiresias::default(),
+        )
+        .unwrap();
+        assert!(out.preemptions >= 1, "expected at least one preemption");
+        // The newcomer should finish long before the hog.
+        assert!(out.jobs[1].finish_s.unwrap() < out.jobs[0].finish_s.unwrap());
+        // And its queueing is bounded by ~tick + penalty, not the hog's JCT.
+        assert!(out.jobs[1].queueing_delay().unwrap() < 200.0);
+    }
+
+    #[test]
+    fn no_preemption_when_cluster_fits_everyone() {
+        let trace = vec![job(0, 4, 500, 0.0), job(1, 4, 500, 1.0), job(2, 8, 500, 2.0)];
+        let out = engine::run(
+            ClusterConfig::physical(),
+            &trace,
+            InterferenceModel::new(),
+            &mut Tiresias::default(),
+        )
+        .unwrap();
+        assert_eq!(out.preemptions, 0);
+    }
+
+    #[test]
+    fn preempted_job_eventually_finishes() {
+        let trace = vec![job(0, 16, 20_000, 0.0), job(1, 16, 100, 3700.0)];
+        let out = engine::run(
+            ClusterConfig::physical(),
+            &trace,
+            InterferenceModel::new(),
+            &mut Tiresias::default(),
+        )
+        .unwrap();
+        for j in &out.jobs {
+            assert_eq!(j.state, crate::jobs::JobState::Finished);
+        }
+    }
+}

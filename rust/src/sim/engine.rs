@@ -1,0 +1,397 @@
+//! The discrete-event engine: advances time between events, integrates job
+//! progress at piecewise-constant rates, applies policy decisions, and
+//! enforces cluster/memory invariants on every transition.
+
+use anyhow::{bail, Context, Result};
+
+use super::{Decision, Policy, SimState};
+use crate::cluster::{Cluster, ClusterConfig};
+use crate::jobs::{JobRecord, JobSpec, JobState};
+use crate::perf::interference::InterferenceModel;
+
+/// Engine tuning knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineConfig {
+    /// Hard wall on simulated time (safety net against livelock).
+    pub max_sim_s: f64,
+    /// Numeric epsilon for "job finished".
+    pub eps_iters: f64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig { max_sim_s: 120.0 * 24.0 * 3600.0, eps_iters: 1e-6 }
+    }
+}
+
+/// Outcome of a full simulation run.
+#[derive(Debug, Clone)]
+pub struct SimOutcome {
+    pub jobs: Vec<JobRecord>,
+    /// Total simulated span from first arrival to last completion.
+    pub makespan_s: f64,
+    /// Number of policy invocations (scheduling operations).
+    pub policy_calls: u64,
+    /// Number of preemptions performed.
+    pub preemptions: u64,
+}
+
+/// Run `policy` over `trace` on a cluster of `cluster_cfg` with interference
+/// model `xi`. Jobs must be pre-sorted by arrival (trace::generate is).
+pub fn run(
+    cluster_cfg: ClusterConfig,
+    trace: &[JobSpec],
+    xi: InterferenceModel,
+    policy: &mut dyn Policy,
+) -> Result<SimOutcome> {
+    run_with(cluster_cfg, trace, xi, policy, EngineConfig::default())
+}
+
+pub fn run_with(
+    cluster_cfg: ClusterConfig,
+    trace: &[JobSpec],
+    xi: InterferenceModel,
+    policy: &mut dyn Policy,
+    engine_cfg: EngineConfig,
+) -> Result<SimOutcome> {
+    for j in trace {
+        if j.gpus > cluster_cfg.total_gpus() {
+            bail!("job {} requests {} GPUs > cluster {}", j.id, j.gpus, cluster_cfg.total_gpus());
+        }
+    }
+    let mut state = SimState {
+        now: 0.0,
+        cluster: Cluster::new(cluster_cfg),
+        jobs: trace.iter().cloned().map(JobRecord::new).collect(),
+        xi,
+        not_before: vec![0.0; trace.len()],
+        service_gpu_s: vec![0.0; trace.len()],
+    };
+    let mut arrivals: Vec<usize> = (0..trace.len()).collect();
+    arrivals.sort_by(|&a, &b| trace[a].arrival_s.total_cmp(&trace[b].arrival_s));
+    let mut next_arrival_idx = 0usize;
+    let mut next_tick = policy.tick_interval();
+    let mut policy_calls = 0u64;
+    let mut preemptions = 0u64;
+
+    loop {
+        // ---- choose the next event time -----------------------------------
+        let mut t_next = f64::INFINITY;
+        if next_arrival_idx < arrivals.len() {
+            t_next = t_next.min(trace[arrivals[next_arrival_idx]].arrival_s);
+        }
+        if let Some(tick) = next_tick {
+            t_next = t_next.min(tick);
+        }
+        for id in state.running() {
+            let it = state.effective_iter_time(id);
+            let finish = state.now + state.jobs[id].remaining_iters * it;
+            t_next = t_next.min(finish);
+        }
+        for (id, j) in state.jobs.iter().enumerate() {
+            if matches!(j.state, JobState::Preempted | JobState::Pending)
+                && j.spec.arrival_s <= state.now
+                && state.not_before[id] > state.now
+            {
+                t_next = t_next.min(state.not_before[id]);
+            }
+        }
+        if !t_next.is_finite() {
+            // No arrivals, no running jobs, nothing to wait for.
+            if state.jobs.iter().all(|j| j.state == JobState::Finished) {
+                break;
+            }
+            bail!(
+                "deadlock: {} unfinished jobs but no future events (policy never scheduled them?)",
+                state.jobs.iter().filter(|j| j.state != JobState::Finished).count()
+            );
+        }
+        if t_next > engine_cfg.max_sim_s {
+            bail!("simulation exceeded max_sim_s = {}", engine_cfg.max_sim_s);
+        }
+
+        // ---- integrate progress over [now, t_next] ------------------------
+        let dt = t_next - state.now;
+        if dt > 0.0 {
+            for id in state.running() {
+                let it = state.effective_iter_time(id);
+                let rec = &mut state.jobs[id];
+                rec.remaining_iters = (rec.remaining_iters - dt / it).max(0.0);
+                state.service_gpu_s[id] += rec.gpus_held.len() as f64 * dt;
+            }
+            for j in state.jobs.iter_mut() {
+                if matches!(j.state, JobState::Pending | JobState::Preempted)
+                    && j.spec.arrival_s <= state.now
+                {
+                    j.queued_s += dt;
+                }
+            }
+        }
+        state.now = t_next;
+
+        // ---- process arrivals ----------------------------------------------
+        while next_arrival_idx < arrivals.len()
+            && trace[arrivals[next_arrival_idx]].arrival_s <= state.now + 1e-9
+        {
+            next_arrival_idx += 1;
+        }
+
+        // ---- process completions -------------------------------------------
+        for id in state.running() {
+            if state.jobs[id].remaining_iters <= engine_cfg.eps_iters {
+                state.cluster.release(id);
+                let rec = &mut state.jobs[id];
+                rec.remaining_iters = 0.0;
+                rec.state = JobState::Finished;
+                rec.finish_s = Some(state.now);
+                rec.gpus_held.clear();
+            }
+        }
+
+        // ---- advance tick clock --------------------------------------------
+        if let Some(tick) = next_tick {
+            if tick <= state.now + 1e-9 {
+                next_tick = Some(tick + policy.tick_interval().unwrap());
+            }
+        }
+
+        // ---- invoke the policy ---------------------------------------------
+        let decisions = policy.schedule(&state);
+        policy_calls += 1;
+        for d in decisions {
+            apply(&mut state, d, policy.preemption_penalty(), &mut preemptions)
+                .context("applying policy decision")?;
+        }
+        debug_assert!(state.cluster.check_invariants().is_ok());
+
+        if state.jobs.iter().all(|j| j.state == JobState::Finished) {
+            break;
+        }
+    }
+
+    let first_arrival = trace.iter().map(|j| j.arrival_s).fold(f64::INFINITY, f64::min);
+    let last_finish = state
+        .jobs
+        .iter()
+        .filter_map(|j| j.finish_s)
+        .fold(0.0f64, f64::max);
+    Ok(SimOutcome {
+        jobs: state.jobs,
+        makespan_s: (last_finish - first_arrival.min(last_finish)).max(0.0),
+        policy_calls,
+        preemptions,
+    })
+}
+
+/// Validate + apply one decision. Errors indicate a buggy policy.
+fn apply(
+    state: &mut SimState,
+    decision: Decision,
+    penalty: f64,
+    preemptions: &mut u64,
+) -> Result<()> {
+    match decision {
+        Decision::Start { job, gpus, accum_step } => {
+            let rec = &state.jobs[job];
+            if !matches!(rec.state, JobState::Pending | JobState::Preempted) {
+                bail!("Start({job}): job is {:?}", rec.state);
+            }
+            if rec.spec.arrival_s > state.now + 1e-9 {
+                bail!("Start({job}): job has not arrived yet");
+            }
+            if state.not_before[job] > state.now + 1e-9 {
+                bail!("Start({job}): restart penalty until {}", state.not_before[job]);
+            }
+            if gpus.is_empty() {
+                bail!("Start({job}): empty gang");
+            }
+            if accum_step == 0 || (rec.spec.batch % accum_step != 0 && accum_step != 1) {
+                // Powers-of-two sweep guarantees divisibility for p2 batches;
+                // reject anything else outright.
+                bail!("Start({job}): invalid accumulation step {accum_step}");
+            }
+            // Memory feasibility on every granted GPU (Eq. 9 + footprint).
+            let my_mem =
+                rec.spec.profile().mem.mem_gb(rec.spec.batch as f64 / accum_step as f64);
+            for &g in &gpus {
+                let mut used = my_mem;
+                for &other in &state.cluster.slot(g).jobs {
+                    let o = &state.jobs[other];
+                    used += o
+                        .spec
+                        .profile()
+                        .mem
+                        .mem_gb(o.spec.batch as f64 / o.accum_step as f64);
+                }
+                if used > state.cluster.config.gpu_mem_gb + 1e-9 {
+                    bail!("Start({job}): GPU {g} memory over budget ({used:.2} GB)");
+                }
+            }
+            state.cluster.allocate(job, &gpus);
+            let rec = &mut state.jobs[job];
+            rec.state = JobState::Running;
+            rec.accum_step = accum_step;
+            rec.gpus_held = gpus;
+            if rec.first_start_s.is_none() {
+                rec.first_start_s = Some(state.now);
+            }
+        }
+        Decision::Preempt { job } => {
+            let rec = &state.jobs[job];
+            if rec.state != JobState::Running {
+                bail!("Preempt({job}): job is {:?}", rec.state);
+            }
+            state.cluster.release(job);
+            let rec = &mut state.jobs[job];
+            rec.state = JobState::Preempted;
+            rec.gpus_held.clear();
+            state.not_before[job] = state.now + penalty;
+            *preemptions += 1;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::placement;
+    use crate::perf::profiles::ModelKind;
+
+    /// Minimal exclusive FIFO used to exercise the engine itself.
+    struct MiniFifo;
+    impl Policy for MiniFifo {
+        fn name(&self) -> &'static str {
+            "mini-fifo"
+        }
+        fn schedule(&mut self, state: &SimState) -> Vec<Decision> {
+            let mut pending = state.pending();
+            pending.sort_by(|&a, &b| {
+                state.jobs[a].spec.arrival_s.total_cmp(&state.jobs[b].spec.arrival_s)
+            });
+            let mut cluster = state.cluster.clone();
+            let mut out = Vec::new();
+            for id in pending {
+                let need = state.jobs[id].spec.gpus;
+                if let Some(gpus) = placement::consolidated_free(&cluster, need) {
+                    cluster.allocate(id, &gpus);
+                    out.push(Decision::Start { job: id, gpus, accum_step: 1 });
+                } else {
+                    break; // strict FIFO HOL blocking
+                }
+            }
+            out
+        }
+    }
+
+    fn job(id: usize, gpus: usize, iters: u64, arrival: f64) -> JobSpec {
+        JobSpec {
+            id,
+            model: ModelKind::Cifar10,
+            gpus,
+            iterations: iters,
+            batch: 128,
+            arrival_s: arrival,
+        }
+    }
+
+    #[test]
+    fn single_job_runs_to_completion() {
+        let trace = vec![job(0, 4, 1000, 5.0)];
+        let out = run(
+            ClusterConfig::physical(),
+            &trace,
+            InterferenceModel::new(),
+            &mut MiniFifo,
+        )
+        .unwrap();
+        let j = &out.jobs[0];
+        assert_eq!(j.state, JobState::Finished);
+        let expect = trace[0].solo_runtime(1);
+        let jct = j.jct().unwrap();
+        assert!((jct - expect).abs() < 1e-6, "jct={jct} expect={expect}");
+        assert_eq!(j.queueing_delay().unwrap(), 0.0);
+    }
+
+    #[test]
+    fn queueing_accrues_under_contention() {
+        // Two 16-GPU jobs: second must wait for the first.
+        let trace = vec![job(0, 16, 1000, 0.0), job(1, 16, 1000, 0.0)];
+        let out = run(
+            ClusterConfig::physical(),
+            &trace,
+            InterferenceModel::new(),
+            &mut MiniFifo,
+        )
+        .unwrap();
+        let solo = trace[0].solo_runtime(1);
+        let q1 = out.jobs[1].queueing_delay().unwrap();
+        assert!((q1 - solo).abs() < 1e-6, "q1={q1} solo={solo}");
+        assert!((out.jobs[1].queued_s - solo).abs() < 1e-6);
+        assert!((out.makespan_s - 2.0 * solo).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rejects_oversized_job() {
+        let trace = vec![job(0, 64, 10, 0.0)];
+        assert!(run(
+            ClusterConfig::physical(),
+            &trace,
+            InterferenceModel::new(),
+            &mut MiniFifo
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn deadlock_detected_for_donothing_policy() {
+        struct Nothing;
+        impl Policy for Nothing {
+            fn name(&self) -> &'static str {
+                "nothing"
+            }
+            fn schedule(&mut self, _: &SimState) -> Vec<Decision> {
+                vec![]
+            }
+        }
+        let trace = vec![job(0, 1, 10, 0.0)];
+        let err = run(
+            ClusterConfig::physical(),
+            &trace,
+            InterferenceModel::new(),
+            &mut Nothing,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("deadlock"), "{err}");
+    }
+
+    #[test]
+    fn bad_decision_rejected() {
+        struct DoubleStart;
+        impl Policy for DoubleStart {
+            fn name(&self) -> &'static str {
+                "bad"
+            }
+            fn schedule(&mut self, state: &SimState) -> Vec<Decision> {
+                state
+                    .pending()
+                    .into_iter()
+                    .map(|id| Decision::Start { job: id, gpus: vec![0], accum_step: 1 })
+                    .chain(std::iter::once(Decision::Start {
+                        job: 0,
+                        gpus: vec![0],
+                        accum_step: 1,
+                    }))
+                    .collect()
+            }
+        }
+        let trace = vec![job(0, 1, 10, 0.0)];
+        assert!(run(
+            ClusterConfig::physical(),
+            &trace,
+            InterferenceModel::new(),
+            &mut DoubleStart
+        )
+        .is_err());
+    }
+}

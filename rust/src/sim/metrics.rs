@@ -1,0 +1,196 @@
+//! JCT / queueing / makespan metrics and CDFs — the quantities every table
+//! and figure in the paper reports (§VI).
+
+
+use crate::jobs::JobRecord;
+use crate::perf::profiles::ModelKind;
+
+/// Aggregate over one job population slice.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Aggregate {
+    pub n: usize,
+    pub avg_jct_s: f64,
+    pub avg_queue_s: f64,
+    pub p50_jct_s: f64,
+    pub p90_jct_s: f64,
+}
+
+/// Table II / III / IV style summary: all + large (> 4 GPUs) + small jobs.
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub policy: String,
+    pub makespan_s: f64,
+    pub all: Aggregate,
+    pub large: Aggregate,
+    pub small: Aggregate,
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+fn aggregate<'a>(jobs: impl Iterator<Item = &'a JobRecord>) -> Aggregate {
+    let mut jcts = Vec::new();
+    let mut queues = Vec::new();
+    for j in jobs {
+        if let Some(jct) = j.jct() {
+            jcts.push(jct);
+            queues.push(j.queued_s);
+        }
+    }
+    jcts.sort_by(f64::total_cmp);
+    let n = jcts.len();
+    if n == 0 {
+        return Aggregate::default();
+    }
+    Aggregate {
+        n,
+        avg_jct_s: jcts.iter().sum::<f64>() / n as f64,
+        avg_queue_s: queues.iter().sum::<f64>() / n as f64,
+        p50_jct_s: percentile(&jcts, 0.5),
+        p90_jct_s: percentile(&jcts, 0.9),
+    }
+}
+
+/// Build the Tables-style summary for a finished run.
+pub fn summarize(policy: &str, jobs: &[JobRecord], makespan_s: f64) -> Summary {
+    Summary {
+        policy: policy.to_string(),
+        makespan_s,
+        all: aggregate(jobs.iter()),
+        large: aggregate(jobs.iter().filter(|j| j.spec.is_large())),
+        small: aggregate(jobs.iter().filter(|j| !j.spec.is_large())),
+    }
+}
+
+/// JCT CDF: sorted (jct_seconds, cumulative_fraction) points (Figs. 4a/5a).
+pub fn jct_cdf(jobs: &[JobRecord]) -> Vec<(f64, f64)> {
+    let mut jcts: Vec<f64> = jobs.iter().filter_map(|j| j.jct()).collect();
+    jcts.sort_by(f64::total_cmp);
+    let n = jcts.len() as f64;
+    jcts.iter().enumerate().map(|(i, &t)| (t, (i + 1) as f64 / n)).collect()
+}
+
+/// Fraction of jobs with JCT below `threshold_s` (Fig. 4a-style claims).
+pub fn fraction_below(jobs: &[JobRecord], threshold_s: f64) -> f64 {
+    let done: Vec<f64> = jobs.iter().filter_map(|j| j.jct()).collect();
+    if done.is_empty() {
+        return 0.0;
+    }
+    done.iter().filter(|&&t| t <= threshold_s).count() as f64 / done.len() as f64
+}
+
+/// Average queueing delay per workload model (Figs. 4b/5b).
+pub fn queueing_by_model(jobs: &[JobRecord]) -> Vec<(ModelKind, f64)> {
+    ModelKind::ALL
+        .iter()
+        .filter_map(|&kind| {
+            let slice: Vec<&JobRecord> =
+                jobs.iter().filter(|j| j.spec.model == kind).collect();
+            if slice.is_empty() {
+                None
+            } else {
+                let avg =
+                    slice.iter().map(|j| j.queued_s).sum::<f64>() / slice.len() as f64;
+                Some((kind, avg))
+            }
+        })
+        .collect()
+}
+
+/// Mean JCT of the fastest `frac` of jobs (paper: "reducing the average JCT
+/// of the shortest 40% jobs by 37% than Pollux").
+pub fn avg_jct_fastest_fraction(jobs: &[JobRecord], frac: f64) -> f64 {
+    let mut jcts: Vec<f64> = jobs.iter().filter_map(|j| j.jct()).collect();
+    jcts.sort_by(f64::total_cmp);
+    let k = ((jcts.len() as f64 * frac).round() as usize).clamp(1, jcts.len().max(1));
+    if jcts.is_empty() {
+        return 0.0;
+    }
+    jcts[..k].iter().sum::<f64>() / k as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jobs::{JobSpec, JobState};
+
+    fn finished(id: usize, gpus: usize, model: ModelKind, arrival: f64, start: f64, finish: f64) -> JobRecord {
+        let mut r = JobRecord::new(JobSpec {
+            id,
+            model,
+            gpus,
+            iterations: 100,
+            batch: 8,
+            arrival_s: arrival,
+        });
+        r.state = JobState::Finished;
+        r.first_start_s = Some(start);
+        r.finish_s = Some(finish);
+        r.queued_s = start - arrival;
+        r.remaining_iters = 0.0;
+        r
+    }
+
+    #[test]
+    fn summary_splits_large_small() {
+        let jobs = vec![
+            finished(0, 2, ModelKind::Bert, 0.0, 0.0, 100.0),
+            finished(1, 8, ModelKind::YoloV3, 0.0, 50.0, 250.0),
+        ];
+        let s = summarize("test", &jobs, 250.0);
+        assert_eq!(s.all.n, 2);
+        assert_eq!(s.large.n, 1);
+        assert_eq!(s.small.n, 1);
+        assert!((s.all.avg_jct_s - 175.0).abs() < 1e-9);
+        assert!((s.large.avg_queue_s - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cdf_monotone_and_normalized() {
+        let jobs: Vec<JobRecord> = (0..10)
+            .map(|i| finished(i, 1, ModelKind::Ncf, 0.0, 0.0, (i + 1) as f64 * 10.0))
+            .collect();
+        let cdf = jct_cdf(&jobs);
+        assert_eq!(cdf.len(), 10);
+        assert!((cdf.last().unwrap().1 - 1.0).abs() < 1e-12);
+        for w in cdf.windows(2) {
+            assert!(w[0].0 <= w[1].0 && w[0].1 < w[1].1);
+        }
+        assert!((fraction_below(&jobs, 50.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fastest_fraction_mean() {
+        let jobs: Vec<JobRecord> = (0..10)
+            .map(|i| finished(i, 1, ModelKind::Ncf, 0.0, 0.0, (i + 1) as f64 * 10.0))
+            .collect();
+        // fastest 40% = JCTs 10..40 -> mean 25
+        assert!((avg_jct_fastest_fraction(&jobs, 0.4) - 25.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn queueing_by_model_groups() {
+        let jobs = vec![
+            finished(0, 1, ModelKind::Bert, 0.0, 10.0, 100.0),
+            finished(1, 1, ModelKind::Bert, 0.0, 30.0, 100.0),
+            finished(2, 1, ModelKind::Ncf, 0.0, 0.0, 50.0),
+        ];
+        let by = queueing_by_model(&jobs);
+        let bert = by.iter().find(|(k, _)| *k == ModelKind::Bert).unwrap();
+        assert!((bert.1 - 20.0).abs() < 1e-9);
+        assert_eq!(by.len(), 2);
+    }
+
+    #[test]
+    fn empty_population_safe() {
+        let s = summarize("none", &[], 0.0);
+        assert_eq!(s.all.n, 0);
+        assert_eq!(jct_cdf(&[]).len(), 0);
+        assert_eq!(fraction_below(&[], 10.0), 0.0);
+    }
+}

@@ -1,0 +1,82 @@
+//! Micro benchmark harness for the `cargo bench` targets (criterion is not
+//! in the vendored crate set). Reports min/mean/p50/p95 over timed
+//! iterations after a warm-up pass, in criterion-like one-line format.
+
+use std::time::Instant;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+}
+
+impl BenchStats {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} iters={:<4} mean={} min={} p50={} p95={}",
+            self.name,
+            self.iters,
+            fmt_s(self.mean_s),
+            fmt_s(self.min_s),
+            fmt_s(self.p50_s),
+            fmt_s(self.p95_s)
+        )
+    }
+}
+
+fn fmt_s(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.1}µs", s * 1e6)
+    }
+}
+
+/// Time `f` for at least `min_iters` iterations (and at least one), after
+/// one warm-up call. Prints and returns the stats.
+pub fn bench<F: FnMut()>(name: &str, min_iters: usize, mut f: F) -> BenchStats {
+    f(); // warm-up
+    let mut times = Vec::with_capacity(min_iters.max(1));
+    for _ in 0..min_iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(f64::total_cmp);
+    let stats = BenchStats {
+        name: name.to_string(),
+        iters: times.len(),
+        mean_s: times.iter().sum::<f64>() / times.len() as f64,
+        min_s: times[0],
+        p50_s: times[times.len() / 2],
+        p95_s: times[((times.len() as f64 * 0.95) as usize).min(times.len() - 1)],
+    };
+    println!("{}", stats.report());
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_ordering() {
+        let s = bench("noop", 16, || { std::hint::black_box(1 + 1); });
+        assert!(s.min_s <= s.p50_s && s.p50_s <= s.p95_s);
+        assert_eq!(s.iters, 16);
+    }
+
+    #[test]
+    fn formats_scale() {
+        assert!(fmt_s(2.0).ends_with('s'));
+        assert!(fmt_s(0.002).ends_with("ms"));
+        assert!(fmt_s(2e-6).ends_with("µs"));
+    }
+}

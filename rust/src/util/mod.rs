@@ -1,0 +1,9 @@
+//! First-party substrates that keep the build fully offline: deterministic
+//! RNG + distributions, a JSON parser/emitter, a micro benchmark harness,
+//! and a property-testing helper. (The build environment vendors only the
+//! `xla` dependency tree; see DESIGN.md §4.)
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;

@@ -1,0 +1,56 @@
+//! Property-testing helper (proptest is not in the vendored crate set):
+//! runs a property over `n` deterministically-generated random cases and
+//! reports the seed of the first failing case so it can be replayed.
+
+use super::rng::Rng;
+
+/// Run `prop(rng)` for `n` cases with per-case seeds derived from `seed`.
+/// Panics with the failing case seed on the first failure.
+pub fn forall<F: FnMut(&mut Rng) -> std::result::Result<(), String>>(
+    name: &str,
+    seed: u64,
+    n: usize,
+    mut prop: F,
+) {
+    for case in 0..n {
+        let case_seed = seed.wrapping_mul(0x100000001B3).wrapping_add(case as u64);
+        let mut rng = Rng::seed_from_u64(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property {name:?} failed at case {case} (seed {case_seed}): {msg}");
+        }
+    }
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        forall("unit-interval", 1, 256, |rng| {
+            let x = rng.f64();
+            prop_assert!((0.0..1.0).contains(&x), "x out of range: {x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "failed at case")]
+    fn reports_failing_seed() {
+        forall("always-fails-eventually", 2, 64, |rng| {
+            let x = rng.f64();
+            prop_assert!(x < 0.9, "got {x}");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,255 @@
+//! Property-based tests over the coordinator's core invariants (first-party
+//! `util::prop` harness; seeds are reported on failure for replay).
+//!
+//! Covered properties:
+//! * cluster allocation/release conservation + share-cap under random ops,
+//! * Theorem 1 endpoint optimality against randomized interior κ,
+//! * Algorithm 2 memory feasibility + accumulation-step arithmetic,
+//! * Eq. 7 monotonicity in batch / accumulation / interference,
+//! * end-to-end engine conservation over random small traces,
+//! * JSON parser round-trip over random documents.
+
+use wise_share::cluster::{Cluster, ClusterConfig};
+use wise_share::jobs::trace::{self, TraceConfig};
+use wise_share::jobs::{JobRecord, JobSpec, JobState};
+use wise_share::pair::{batch_size_scaling, best_pair_schedule, PairSide};
+use wise_share::perf::interference::InterferenceModel;
+use wise_share::perf::profiles::{ModelKind, WorkloadProfile};
+use wise_share::prop_assert;
+use wise_share::sched;
+use wise_share::sim::engine;
+use wise_share::util::json::Json;
+use wise_share::util::prop::forall;
+use wise_share::util::rng::Rng;
+
+const CASES: usize = 64;
+
+#[test]
+fn prop_cluster_alloc_release_conserves_slots() {
+    forall("cluster-conservation", 0xC1u64, CASES, |rng| {
+        let mut cluster = Cluster::new(ClusterConfig::physical());
+        let mut live: Vec<usize> = Vec::new();
+        for op in 0..40 {
+            if !live.is_empty() && rng.f64() < 0.4 {
+                let job = live.swap_remove(rng.index(live.len()));
+                cluster.release(job);
+            } else {
+                // Try to allocate 1-4 GPUs with a free share slot.
+                let want = 1 + rng.index(4);
+                let candidates: Vec<usize> = (0..cluster.total_gpus())
+                    .filter(|&g| cluster.load(g) < 2)
+                    .collect();
+                if candidates.len() < want {
+                    continue;
+                }
+                let job = 1000 + op;
+                let gpus: Vec<usize> = candidates[..want].to_vec();
+                cluster.allocate(job, &gpus);
+                live.push(job);
+            }
+            if let Err(e) = cluster.check_invariants() {
+                return Err(format!("invariant broken: {e}"));
+            }
+        }
+        // Release everything: cluster must be fully free again.
+        for job in live {
+            cluster.release(job);
+        }
+        prop_assert!(
+            cluster.free_gpus().len() == cluster.total_gpus(),
+            "slots leaked after full release"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_theorem1_endpoints_dominate_interior() {
+    forall("theorem1-endpoints", 0x71u64, 256, |rng| {
+        let t_a = 0.05 + rng.f64();
+        let t_b = 0.05 + rng.f64();
+        let i_a = 10.0 + rng.f64() * 5000.0;
+        let i_b = 10.0 + rng.f64() * 5000.0;
+        let xa = 1.0 + rng.f64() * 3.0;
+        let xb = 1.0 + rng.f64() * 3.0;
+        let best = best_pair_schedule(
+            PairSide { iter_time: t_a, iters: i_a, xi: xa },
+            PairSide { iter_time: t_b, iters: i_b, xi: xb },
+        );
+        // Interior κ: B alone for κ, then overlap.
+        for _ in 0..8 {
+            let kappa = rng.f64() * t_b * i_b;
+            let rem_b = i_b - kappa / t_b;
+            let (ta_h, tb_h) = (t_a * xa, t_b * xb);
+            let (fin_a, fin_b) = if ta_h * i_a <= tb_h * rem_b {
+                let fa = kappa + ta_h * i_a;
+                let done_b = (fa - kappa) / tb_h;
+                (fa, fa + t_b * (rem_b - done_b))
+            } else {
+                let fb = kappa + tb_h * rem_b;
+                let done_a = (fb - kappa) / ta_h;
+                (fb + t_a * (i_a - done_a), fb)
+            };
+            let interior = 0.5 * (fin_a + fin_b);
+            prop_assert!(
+                best.avg_jct <= interior + 1e-6,
+                "interior κ={kappa:.3} gives {interior:.3} < best {:.3} \
+                 (t_a={t_a:.3} t_b={t_b:.3} i_a={i_a:.0} i_b={i_b:.0} ξ=({xa:.2},{xb:.2}))",
+                best.avg_jct
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_alg2_configuration_always_memory_feasible() {
+    let kinds = ModelKind::ALL;
+    forall("alg2-memory", 0xA2u64, 256, |rng| {
+        let new_kind = *rng.choose(&kinds);
+        let run_kind = *rng.choose(&kinds);
+        let new_batch = [1u32, 2, 4, 8, 16, 32, 64, 128][rng.index(8)];
+        let mut mk = |kind: ModelKind, batch: u32| {
+            JobRecord::new(JobSpec {
+                id: 0,
+                model: kind,
+                gpus: 4,
+                iterations: 100 + rng.index(5000) as u64,
+                batch,
+                arrival_s: 0.0,
+            })
+        };
+        let new = mk(new_kind, new_batch);
+        let run_batch = WorkloadProfile::get(run_kind).default_batch;
+        let run = mk(run_kind, run_batch);
+        let xi = InterferenceModel::new();
+        if let Some(cfg) = batch_size_scaling(&new, &run, 4, 11.0, &xi) {
+            let new_mem = new.spec.profile().mem.mem_gb(cfg.sub_batch as f64);
+            let run_mem = run.spec.profile().mem.mem_gb(run_batch as f64);
+            prop_assert!(
+                new_mem + run_mem <= 11.0 + 1e-9,
+                "{:?}+{:?}: joint {:.2} GB over budget (sub {})",
+                new_kind,
+                run_kind,
+                new_mem + run_mem,
+                cfg.sub_batch
+            );
+            prop_assert!(
+                cfg.sub_batch <= new_batch && cfg.sub_batch >= 1,
+                "sub-batch {} outside [1, {new_batch}]",
+                cfg.sub_batch
+            );
+            prop_assert!(
+                cfg.accum_step == (new_batch as f64 / cfg.sub_batch as f64).ceil() as u32,
+                "accum {} != ceil({new_batch}/{})",
+                cfg.accum_step,
+                cfg.sub_batch
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_eq7_monotonicity() {
+    forall("eq7-monotone", 0xE7u64, 256, |rng| {
+        let kind = *rng.choose(&ModelKind::ALL);
+        let perf = WorkloadProfile::get(kind).perf;
+        let b = 2.0 + rng.f64() * 62.0;
+        let n = 1 + rng.index(16);
+        // monotone in batch
+        prop_assert!(
+            perf.iter_time(b * 2.0, 1, n) >= perf.iter_time(b, 1, n),
+            "{kind:?}: iter time must grow with batch"
+        );
+        // accumulation adds (s-1) sub-passes: never faster
+        prop_assert!(
+            perf.iter_time(b, 4, n) >= perf.iter_time(b, 2, n) - 1e-12,
+            "{kind:?}: accumulation cannot speed up an iteration"
+        );
+        // throughput positive and finite
+        let phi = perf.throughput(b, 1, n);
+        prop_assert!(phi.is_finite() && phi > 0.0, "{kind:?}: bad throughput {phi}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_engine_conserves_work_over_random_traces() {
+    let policies = ["FIFO", "SJF", "SJF-FFS", "SJF-BSBF"];
+    forall("engine-conservation", 0xE6u64, 24, |rng| {
+        let n = 8 + rng.index(24);
+        let seed = rng.next_u64();
+        let jobs = trace::generate(&TraceConfig::simulation(n, seed));
+        let name = *rng.choose(&policies);
+        let mut p = sched::by_name(name).unwrap();
+        let out = engine::run(
+            ClusterConfig::simulation(),
+            &jobs,
+            InterferenceModel::new(),
+            p.as_mut(),
+        )
+        .map_err(|e| format!("{name} failed: {e:#}"))?;
+        for j in &out.jobs {
+            prop_assert!(j.state == JobState::Finished, "{name}: unfinished job");
+            prop_assert!(
+                j.jct().unwrap() >= j.spec.solo_runtime(1) * 0.999,
+                "{name}: job {} finished faster than physics allows",
+                j.spec.id
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_random_documents() {
+    fn gen_value(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.index(4) } else { rng.index(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.f64() < 0.5),
+            2 => Json::Num((rng.f64() * 2e6).round() / 2.0 - 1e3),
+            3 => {
+                let n = rng.index(12);
+                Json::Str(
+                    (0..n)
+                        .map(|_| {
+                            *rng.choose(&['a', 'é', '"', '\\', '\n', 'z', '7', ' '])
+                        })
+                        .collect(),
+                )
+            }
+            4 => Json::Arr((0..rng.index(5)).map(|_| gen_value(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.index(5))
+                    .map(|i| (format!("k{i}"), gen_value(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    forall("json-roundtrip", 0x15u64, 512, |rng| {
+        let doc = gen_value(rng, 3);
+        let text = doc.to_string();
+        let back = Json::parse(&text).map_err(|e| format!("parse failed: {e:#}\n{text}"))?;
+        prop_assert!(back == doc, "roundtrip mismatch:\n{text}\n{back:?}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_trace_generator_wellformed() {
+    forall("trace-wellformed", 0x7Au64, 64, |rng| {
+        let n = 1 + rng.index(100);
+        let jobs = trace::generate(&TraceConfig::simulation(n, rng.next_u64()));
+        prop_assert!(jobs.len() == n, "wrong job count");
+        let mut prev = 0.0;
+        for j in &jobs {
+            prop_assert!(j.arrival_s >= prev, "arrivals must be sorted");
+            prev = j.arrival_s;
+            prop_assert!(j.gpus >= 1 && j.gpus <= 16, "bad gang width {}", j.gpus);
+            let mem = j.profile().mem.mem_gb(j.batch as f64);
+            prop_assert!(mem <= 11.0, "{:?} batch {} solo-infeasible: {mem:.1} GB", j.model, j.batch);
+        }
+        Ok(())
+    });
+}
