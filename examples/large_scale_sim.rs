@@ -1,58 +1,36 @@
 //! Large-scale trace-driven simulation — regenerates the paper's Tables III
-//! and IV plus the Fig. 5 series in one run.
+//! and IV through the [`wise_share::campaign`] subsystem instead of a
+//! hand-rolled per-table loop:
 //!
-//! * Table III: 240 jobs at baseline arrival density.
-//! * Table IV: 480 jobs at 2x density (the paper samples more jobs from the
-//!   same busiest period, so the arrival *rate* doubles).
-//! * Fig. 5a: JCT CDF points per policy; Fig. 5b: queueing by model.
+//! * Table III: 240 jobs at baseline arrival density (load ×1).
+//! * Table IV: 480 jobs at 2× density — expressed declaratively via the
+//!   `jobs_scale_load_baseline` axis knob (the paper samples more jobs
+//!   from the same busiest period, so the arrival *rate* doubles).
+//!
+//! Each cell runs every policy over 3 trace seeds on a worker pool and is
+//! reported seed-averaged with 95% CIs. The Fig. 5a/5b CSV series that
+//! used to piggyback here live in `cargo bench --bench figures`.
 //!
 //! Run: `cargo run --release --example large_scale_sim`
 
-use wise_share::cluster::ClusterConfig;
-use wise_share::jobs::trace::{self, TraceConfig};
-use wise_share::perf::interference::InterferenceModel;
-use wise_share::report;
-use wise_share::sched::{self, POLICY_NAMES};
-use wise_share::sim::{engine, metrics};
-
-fn run_table(n_jobs: usize, load: f64, seed: u64, label: &str) -> anyhow::Result<()> {
-    let mut tcfg = TraceConfig::simulation(n_jobs, seed);
-    tcfg.load_factor = load;
-    let jobs = trace::generate(&tcfg);
-    let mut rows = Vec::new();
-    for name in POLICY_NAMES {
-        let mut p = sched::by_name(name).unwrap();
-        let out = engine::run(
-            ClusterConfig::simulation(),
-            &jobs,
-            InterferenceModel::new(),
-            p.as_mut(),
-        )?;
-        rows.push(metrics::summarize(name, &out.jobs, out.makespan_s));
-
-        if label == "Table III" {
-            // Fig. 5a: JCT CDF (decimated to ~20 points per policy).
-            let cdf = metrics::jct_cdf(&out.jobs);
-            let step = (cdf.len() / 20).max(1);
-            let pts: Vec<(f64, f64)> =
-                cdf.iter().step_by(step).map(|&(t, f)| (t, f)).collect();
-            print!("{}", report::csv_series(&format!("fig5a,{name}"), &pts));
-            // Fig. 5b: queueing by model.
-            let by: Vec<(f64, f64)> = metrics::queueing_by_model(&out.jobs)
-                .iter()
-                .enumerate()
-                .map(|(i, (_, q))| (i as f64, *q))
-                .collect();
-            print!("{}", report::csv_series(&format!("fig5b,{name}"), &by));
-        }
-    }
-    println!("\n=== {label} ({n_jobs} jobs, load x{load}) ===");
-    println!("{}", report::table34(&rows));
-    Ok(())
-}
+use wise_share::campaign::{self, Axes, CampaignSpec};
+use wise_share::sched::POLICY_NAMES;
 
 fn main() -> anyhow::Result<()> {
-    run_table(240, 1.0, 1, "Table III")?;
-    run_table(480, 2.0, 1, "Table IV")?;
+    let mut spec = CampaignSpec::new("tables34");
+    spec.policies = POLICY_NAMES.iter().map(|s| s.to_string()).collect();
+    spec.axes = Axes {
+        load_factors: vec![1.0],
+        job_counts: vec![240, 480], // Table III, Table IV
+        gpu_counts: Vec::new(),     // the 16×4 simulation cluster
+        seeds: vec![1, 2, 3],
+        jobs_scale_load_baseline: Some(240), // 480 jobs ⇒ 2× density
+    };
+    let res = campaign::execute(&spec, 0)?;
+    print!("{}", campaign::emit::markdown(&spec.name, &res.cells));
+    println!("{} runs in {:.1}s wall", res.n_runs, res.wall_s);
+    if res.n_failures > 0 {
+        anyhow::bail!("{} of {} runs failed (see FAILED lines above)", res.n_failures, res.n_runs);
+    }
     Ok(())
 }

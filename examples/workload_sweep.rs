@@ -1,45 +1,51 @@
-//! Fig. 6a reproduction: average JCT vs workload intensity.
+//! Fig. 6a reproduction: average JCT vs workload intensity, driven by the
+//! [`wise_share::campaign`] paper preset instead of a hand-rolled sweep
+//! loop.
 //!
-//! The paper scales the 240-job baseline by 0.5x-2x (120-480 jobs, arrival
-//! density scaled with count). Expected shape: the elastic (Pollux-like)
-//! policy wins at light load, loses its edge as the cluster saturates, and
-//! SJF-BSBF stays lowest (or close) across the sweep by shrinking queueing
-//! via wise sharing.
+//! The paper scales the 240-job baseline by 0.5×–2× (120–480 jobs, arrival
+//! density scaled with count); the preset runs that grid for all six
+//! policies over 3 seeds on a worker pool. Expected shape: the elastic
+//! (Pollux-like) policy wins at light load, loses its edge as the cluster
+//! saturates, and SJF-BSBF stays lowest (or close) across the sweep by
+//! shrinking queueing via wise sharing.
 //!
 //! Run: `cargo run --release --example workload_sweep`
 
-use wise_share::cluster::ClusterConfig;
-use wise_share::jobs::trace::{self, TraceConfig};
-use wise_share::perf::interference::InterferenceModel;
-use wise_share::sched::{self, POLICY_NAMES};
-use wise_share::sim::{engine, metrics};
+use wise_share::campaign::{self, CampaignSpec};
+use wise_share::sched::POLICY_NAMES;
 
 fn main() -> anyhow::Result<()> {
+    let spec = CampaignSpec::paper_preset();
+    let res = campaign::execute(&spec, 0)?;
+    if res.n_failures > 0 {
+        print!("{}", campaign::emit::markdown(&spec.name, &res.cells));
+        anyhow::bail!("{} of {} runs failed (see FAILED lines above)", res.n_failures, res.n_runs);
+    }
+
+    // Compact Fig. 6a matrix: seed-averaged avg JCT (hours) per cell.
     print!("jobs");
     for name in POLICY_NAMES {
         print!(",{name}");
     }
     println!();
-    for scale in [0.5, 1.0, 1.5, 2.0] {
-        let n_jobs = (240.0 * scale) as usize;
-        let mut tcfg = TraceConfig::simulation(n_jobs, 1);
-        tcfg.load_factor = scale; // density scales with job count (Fig. 6a)
-        let jobs = trace::generate(&tcfg);
+    let mut jobs_axis: Vec<usize> = res.cells.iter().map(|c| c.key.n_jobs).collect();
+    jobs_axis.dedup();
+    for n_jobs in jobs_axis {
         print!("{n_jobs}");
         for name in POLICY_NAMES {
-            let mut p = sched::by_name(name).unwrap();
-            let out = engine::run(
-                ClusterConfig::simulation(),
-                &jobs,
-                InterferenceModel::new(),
-                p.as_mut(),
-            )?;
-            let s = metrics::summarize(name, &out.jobs, out.makespan_s);
-            print!(",{:.3}", s.all.avg_jct_s / 3600.0);
+            let cell = res
+                .cells
+                .iter()
+                .find(|c| c.key.n_jobs == n_jobs && c.key.policy == name)
+                .expect("every (jobs, policy) cell exists");
+            print!(",{:.3}", cell.all.avg_jct_s.mean() / 3600.0);
         }
         println!();
     }
     println!("\nvalues: average JCT in hours; expect Pollux best at 120 jobs,");
-    println!("SJF-BSBF best (or tied) from 240 jobs upward.");
+    println!("SJF-BSBF best (or tied) from 240 jobs upward.\n");
+
+    // Full seed-averaged tables with 95% CIs, one block per intensity.
+    print!("{}", campaign::emit::markdown(&spec.name, &res.cells));
     Ok(())
 }

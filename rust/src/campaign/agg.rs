@@ -1,0 +1,312 @@
+//! Streaming per-cell aggregation over the seed axis.
+//!
+//! Each sweep cell (policy × cluster × jobs × load) accumulates its
+//! per-seed run summaries into Welford [`Stream`]s — mean / sample std /
+//! min / max plus a normal-approximation 95% confidence interval — without
+//! ever storing the raw per-run results, so memory stays O(cells) no
+//! matter how many seeds a campaign sweeps.
+
+use std::collections::HashMap;
+
+use crate::sim::metrics::{Aggregate, Summary};
+
+use super::runner::RunOutcome;
+use super::sweep::CellKey;
+
+/// Welford online accumulator.
+#[derive(Debug, Clone)]
+pub struct Stream {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Stream {
+    fn default() -> Self {
+        Stream { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+}
+
+impl Stream {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.mean
+        }
+    }
+
+    /// Sample standard deviation (n−1 denominator); 0 below two samples.
+    pub fn std(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            (self.m2 / (self.n - 1) as f64).sqrt()
+        }
+    }
+
+    /// Half-width of the normal-approximation 95% CI of the mean
+    /// (`1.96·s/√n`); 0 below two samples. Bootstrap-free on purpose: seeds
+    /// are cheap, resampling is not.
+    pub fn ci95(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            1.96 * self.std() / (self.n as f64).sqrt()
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+}
+
+/// Streams for one population slice (all / large / small jobs).
+#[derive(Debug, Clone, Default)]
+pub struct SliceAgg {
+    pub avg_jct_s: Stream,
+    pub avg_queue_s: Stream,
+    pub p50_jct_s: Stream,
+    pub p90_jct_s: Stream,
+}
+
+impl SliceAgg {
+    fn push(&mut self, a: &Aggregate) {
+        // An empty slice (e.g. a seed that drew no large jobs) reports
+        // Aggregate::default(); averaging its placeholder zeros in would
+        // bias the slice stats, so such seeds are excluded — the stream's
+        // own n() records how many seeds actually contributed.
+        if a.n == 0 {
+            return;
+        }
+        self.avg_jct_s.push(a.avg_jct_s);
+        self.avg_queue_s.push(a.avg_queue_s);
+        self.p50_jct_s.push(a.p50_jct_s);
+        self.p90_jct_s.push(a.p90_jct_s);
+    }
+
+    /// Seed-averaged aggregate; `n` carries the seed count (not job count).
+    fn mean_aggregate(&self) -> Aggregate {
+        Aggregate {
+            n: self.avg_jct_s.n() as usize,
+            avg_jct_s: self.avg_jct_s.mean(),
+            avg_queue_s: self.avg_queue_s.mean(),
+            p50_jct_s: self.p50_jct_s.mean(),
+            p90_jct_s: self.p90_jct_s.mean(),
+        }
+    }
+}
+
+/// All statistics for one sweep cell.
+#[derive(Debug, Clone)]
+pub struct CellAgg {
+    pub key: CellKey,
+    pub makespan_s: Stream,
+    pub all: SliceAgg,
+    pub large: SliceAgg,
+    pub small: SliceAgg,
+    /// `(ordinal, seed, error)` for runs in this cell that failed.
+    pub errors: Vec<(usize, u64, String)>,
+}
+
+impl CellAgg {
+    fn new(key: CellKey) -> Self {
+        CellAgg {
+            key,
+            makespan_s: Stream::default(),
+            all: SliceAgg::default(),
+            large: SliceAgg::default(),
+            small: SliceAgg::default(),
+            errors: Vec::new(),
+        }
+    }
+
+    /// Number of successfully aggregated seeds.
+    pub fn seeds(&self) -> u64 {
+        self.makespan_s.n()
+    }
+
+    fn push_summary(&mut self, s: &Summary) {
+        self.makespan_s.push(s.makespan_s);
+        self.all.push(&s.all);
+        self.large.push(&s.large);
+        self.small.push(&s.small);
+    }
+
+    /// Seed-averaged [`Summary`], directly feedable to
+    /// [`crate::report::table34`] / [`crate::report::table2`].
+    pub fn mean_summary(&self) -> Summary {
+        Summary {
+            policy: self.key.policy.clone(),
+            makespan_s: self.makespan_s.mean(),
+            all: self.all.mean_aggregate(),
+            large: self.large.mean_aggregate(),
+            small: self.small.mean_aggregate(),
+        }
+    }
+}
+
+/// Consumes [`RunOutcome`]s one at a time (streaming — outcomes can be fed
+/// as workers produce them) and groups them into cells in first-appearance
+/// order, which for ordered outcome streams equals expansion order.
+#[derive(Debug, Default)]
+pub struct Aggregator {
+    cells: Vec<CellAgg>,
+    index: HashMap<CellKey, usize>,
+}
+
+impl Aggregator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, outcome: &RunOutcome) {
+        let i = match self.index.get(&outcome.cell) {
+            Some(&i) => i,
+            None => {
+                let i = self.cells.len();
+                self.index.insert(outcome.cell.clone(), i);
+                self.cells.push(CellAgg::new(outcome.cell.clone()));
+                i
+            }
+        };
+        match &outcome.summary {
+            Ok(s) => self.cells[i].push_summary(s),
+            Err(e) => {
+                self.cells[i].errors.push((outcome.ordinal, outcome.seed, e.clone()))
+            }
+        }
+    }
+
+    /// Cells in first-appearance order.
+    pub fn finish(self) -> Vec<CellAgg> {
+        self.cells
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(policy: &str) -> CellKey {
+        CellKey { total_gpus: 64, n_jobs: 240, load_milli: 1000, policy: policy.into() }
+    }
+
+    fn outcome(policy: &str, seed: u64, jct: f64) -> RunOutcome {
+        let agg = Aggregate {
+            n: 10,
+            avg_jct_s: jct,
+            avg_queue_s: jct / 4.0,
+            p50_jct_s: jct * 0.8,
+            p90_jct_s: jct * 2.0,
+        };
+        RunOutcome {
+            ordinal: seed as usize,
+            cell: key(policy),
+            seed,
+            summary: Ok(Summary {
+                policy: policy.into(),
+                makespan_s: 3.0 * jct,
+                all: agg,
+                large: agg,
+                small: agg,
+            }),
+        }
+    }
+
+    #[test]
+    fn welford_matches_closed_form() {
+        let mut s = Stream::default();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.push(x);
+        }
+        assert_eq!(s.n(), 8);
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        // Sample variance of this classic set is 32/7.
+        assert!((s.std() - (32.0f64 / 7.0).sqrt()).abs() < 1e-12);
+        assert_eq!(s.min(), 2.0);
+        assert_eq!(s.max(), 9.0);
+        assert!(s.ci95() > 0.0);
+    }
+
+    #[test]
+    fn constant_stream_has_zero_spread() {
+        let mut s = Stream::default();
+        for _ in 0..5 {
+            s.push(3.25);
+        }
+        assert_eq!(s.std(), 0.0);
+        assert_eq!(s.ci95(), 0.0);
+        assert_eq!(s.min(), s.max());
+    }
+
+    #[test]
+    fn empty_stream_is_safe() {
+        let s = Stream::default();
+        assert_eq!(s.n(), 0);
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.std(), 0.0);
+        assert_eq!(s.min(), 0.0);
+        assert_eq!(s.max(), 0.0);
+    }
+
+    #[test]
+    fn groups_by_cell_in_first_appearance_order() {
+        let mut agg = Aggregator::new();
+        agg.push(&outcome("FIFO", 1, 100.0));
+        agg.push(&outcome("SJF", 1, 50.0));
+        agg.push(&outcome("FIFO", 2, 140.0));
+        let cells = agg.finish();
+        assert_eq!(cells.len(), 2);
+        assert_eq!(cells[0].key.policy, "FIFO");
+        assert_eq!(cells[0].seeds(), 2);
+        assert_eq!(cells[1].seeds(), 1);
+        assert!((cells[0].all.avg_jct_s.mean() - 120.0).abs() < 1e-12);
+        let mean = cells[0].mean_summary();
+        assert_eq!(mean.policy, "FIFO");
+        assert!((mean.makespan_s - 360.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn errors_collect_per_cell() {
+        let mut agg = Aggregator::new();
+        agg.push(&outcome("FIFO", 1, 100.0));
+        agg.push(&RunOutcome {
+            ordinal: 7,
+            cell: key("FIFO"),
+            seed: 2,
+            summary: Err("boom".to_string()),
+        });
+        let cells = agg.finish();
+        assert_eq!(cells.len(), 1);
+        assert_eq!(cells[0].seeds(), 1);
+        assert_eq!(cells[0].errors, vec![(7, 2, "boom".to_string())]);
+    }
+}

@@ -1,0 +1,208 @@
+//! Campaign result emitters: the paper-style markdown tables (seed-averaged
+//! [`crate::report::table34`] blocks plus a confidence-interval table per
+//! scenario) and a long-format CSV — one row per (cell, slice, metric) —
+//! ready for pandas / gnuplot.
+
+use std::fmt::Write as _;
+
+use crate::report;
+use crate::sim::metrics::Summary;
+
+use super::agg::{CellAgg, Stream};
+
+/// Long-format CSV header.
+pub const CSV_HEADER: &str =
+    "campaign,gpus,jobs,load,policy,slice,metric,seeds,mean,std,min,max,ci95";
+
+/// One `(slice, metric)` CSV row per statistic of every cell, in cell
+/// (expansion) order. All values in seconds.
+pub fn long_csv(campaign: &str, cells: &[CellAgg]) -> String {
+    let mut out = String::new();
+    writeln!(out, "{CSV_HEADER}").unwrap();
+    for c in cells {
+        let base = format!(
+            "{campaign},{},{},{},{}",
+            c.key.total_gpus,
+            c.key.n_jobs,
+            c.key.load_factor(),
+            c.key.policy
+        );
+        let mut row = |slice: &str, metric: &str, s: &Stream| {
+            writeln!(
+                out,
+                "{base},{slice},{metric},{},{:.6},{:.6},{:.6},{:.6},{:.6}",
+                s.n(),
+                s.mean(),
+                s.std(),
+                s.min(),
+                s.max(),
+                s.ci95()
+            )
+            .unwrap();
+        };
+        for (slice, agg) in [("all", &c.all), ("large", &c.large), ("small", &c.small)] {
+            row(slice, "avg_jct_s", &agg.avg_jct_s);
+            row(slice, "p50_jct_s", &agg.p50_jct_s);
+            row(slice, "p90_jct_s", &agg.p90_jct_s);
+            row(slice, "avg_queue_s", &agg.avg_queue_s);
+        }
+        row("all", "makespan_s", &c.makespan_s);
+    }
+    out
+}
+
+/// Markdown report: cells grouped per scenario (GPUs × jobs × load), each
+/// group rendered as a seed-averaged Table III/IV block followed by a 95%
+/// CI table, with any per-run failures listed underneath.
+pub fn markdown(campaign: &str, cells: &[CellAgg]) -> String {
+    let mut out = String::new();
+    let mut i = 0;
+    while i < cells.len() {
+        let coords = cells[i].key.scenario_coords();
+        let mut j = i;
+        while j < cells.len() && cells[j].key.scenario_coords() == coords {
+            j += 1;
+        }
+        let group = &cells[i..j];
+        let k = &group[0].key;
+        // Per-policy success counts can differ (failed runs drop out), so
+        // the header reports the scenario's max; the CI table has the
+        // exact per-policy counts.
+        let seeds = group.iter().map(CellAgg::seeds).max().unwrap_or(0);
+        writeln!(
+            out,
+            "### {campaign}: {} GPUs, {} jobs, load x{} ({seeds} seed(s))\n",
+            k.total_gpus,
+            k.n_jobs,
+            k.load_factor(),
+        )
+        .unwrap();
+        // Cells with zero successful runs would render as a (winning!)
+        // 0.00-hour row — keep them out of the tables; their failures are
+        // listed below.
+        let ok: Vec<&CellAgg> = group.iter().filter(|c| c.seeds() > 0).collect();
+        if ok.is_empty() {
+            out.push_str("_no successful runs in this scenario_\n");
+        } else {
+            let rows: Vec<Summary> = ok.iter().map(|c| c.mean_summary()).collect();
+            out.push_str(&report::table34(&rows));
+            out.push('\n');
+            let header: Vec<String> =
+                ["Policy", "Avg JCT (hrs)", "±95% CI", "Makespan (hrs)", "±95% CI", "Seeds"]
+                    .iter()
+                    .map(|s| s.to_string())
+                    .collect();
+            let ci_rows: Vec<Vec<String>> = ok
+                .iter()
+                .map(|c| {
+                    vec![
+                        c.key.policy.clone(),
+                        format!("{:.2}", c.all.avg_jct_s.mean() / 3600.0),
+                        format!("{:.3}", c.all.avg_jct_s.ci95() / 3600.0),
+                        format!("{:.2}", c.makespan_s.mean() / 3600.0),
+                        format!("{:.3}", c.makespan_s.ci95() / 3600.0),
+                        format!("{}", c.seeds()),
+                    ]
+                })
+                .collect();
+            out.push_str(&report::markdown_table(&header, &ci_rows));
+        }
+        for c in group {
+            for (ordinal, seed, err) in &c.errors {
+                writeln!(
+                    out,
+                    "- FAILED run #{ordinal} ({}, seed {seed}): {err}",
+                    c.key.policy
+                )
+                .unwrap();
+            }
+        }
+        out.push('\n');
+        i = j;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::campaign::agg::Aggregator;
+    use crate::campaign::runner::RunOutcome;
+    use crate::campaign::sweep::CellKey;
+    use crate::sim::metrics::Aggregate;
+
+    fn cells() -> Vec<CellAgg> {
+        let mut agg = Aggregator::new();
+        for (policy, ord) in [("FIFO", 0usize), ("SJF-BSBF", 1)] {
+            for seed in [1u64, 2] {
+                let a = Aggregate {
+                    n: 10,
+                    avg_jct_s: 3600.0 * (1.0 + seed as f64),
+                    avg_queue_s: 600.0,
+                    p50_jct_s: 3000.0,
+                    p90_jct_s: 9000.0,
+                };
+                agg.push(&RunOutcome {
+                    ordinal: ord * 2 + seed as usize - 1,
+                    cell: CellKey {
+                        total_gpus: 64,
+                        n_jobs: 240,
+                        load_milli: 1500,
+                        policy: policy.to_string(),
+                    },
+                    seed,
+                    summary: Ok(Summary {
+                        policy: policy.to_string(),
+                        makespan_s: 7200.0,
+                        all: a,
+                        large: a,
+                        small: a,
+                    }),
+                });
+            }
+        }
+        agg.finish()
+    }
+
+    #[test]
+    fn csv_is_long_format_with_header() {
+        let csv = long_csv("demo", &cells());
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], CSV_HEADER);
+        // 2 cells x (3 slices x 4 metrics + makespan) = 26 data rows.
+        assert_eq!(lines.len(), 1 + 2 * 13);
+        assert!(lines[1].starts_with("demo,64,240,1.5,FIFO,all,avg_jct_s,2,"));
+        assert!(csv.contains("SJF-BSBF,all,makespan_s"));
+    }
+
+    #[test]
+    fn markdown_groups_and_reports_ci() {
+        let md = markdown("demo", &cells());
+        assert!(md.contains("### demo: 64 GPUs, 240 jobs, load x1.5 (2 seed(s))"));
+        // One table34 block: both policies appear in the JCT rows.
+        assert!(md.contains("| Average JCT | FIFO |"));
+        assert!(md.contains("| Average JCT | SJF-BSBF |"));
+        // CI table header and a CI value: mean JCT = 2.5h, ci95 > 0.
+        assert!(md.contains("±95% CI"));
+        assert!(md.contains("| FIFO | 2.50 |"));
+        assert!(!md.contains("FAILED"));
+    }
+
+    #[test]
+    fn markdown_lists_failures() {
+        let mut agg = Aggregator::new();
+        agg.push(&RunOutcome {
+            ordinal: 4,
+            cell: CellKey {
+                total_gpus: 64,
+                n_jobs: 120,
+                load_milli: 500,
+                policy: "FIFO".to_string(),
+            },
+            seed: 9,
+            summary: Err("deadlock".to_string()),
+        });
+        let md = markdown("demo", &agg.finish());
+        assert!(md.contains("FAILED run #4 (FIFO, seed 9): deadlock"));
+    }
+}

@@ -1,0 +1,86 @@
+//! `campaign` — declarative, parallel scenario sweeps with streaming
+//! aggregation (DESIGN.md §8).
+//!
+//! The paper's headline results (Tables II–IV, Fig. 6) are all *sweeps*:
+//! policy × load factor × trace size × seed. This subsystem makes those
+//! sweeps first-class instead of hand-rolled loops:
+//!
+//! 1. **Spec** ([`spec`]) — a declarative [`CampaignSpec`] (cluster, trace
+//!    shape, interference model, engine limits, policy list, sweep axes),
+//!    loadable from JSON via the first-party parser.
+//! 2. **Sweep** ([`sweep`]) — cartesian expansion into a deterministic,
+//!    ordered run matrix of self-contained [`ScenarioSpec`]s.
+//! 3. **Runner** ([`runner`]) — a `std::thread` worker pool; runs are
+//!    embarrassingly parallel (fresh trace + policy + cluster per run) and
+//!    outcomes return in expansion order regardless of completion order.
+//! 4. **Aggregation** ([`agg`]) — streaming Welford statistics per sweep
+//!    cell over the seed axis: mean/std/min/max + normal-approx 95% CIs
+//!    for avg/p50/p90 JCT, queueing delay and makespan.
+//! 5. **Emitters** ([`emit`]) — the existing `report` markdown tables
+//!    (seed-averaged) plus a long-format CSV.
+//!
+//! Entry points: `wise-share campaign --spec FILE` / `--preset paper` on
+//! the CLI, or [`execute`] / [`execute_serial`] from code (see
+//! `examples/large_scale_sim.rs` and `examples/workload_sweep.rs`).
+
+pub mod agg;
+pub mod emit;
+pub mod runner;
+pub mod spec;
+pub mod sweep;
+
+pub use agg::{Aggregator, CellAgg, SliceAgg, Stream};
+pub use runner::{default_threads, resolved_threads, run_parallel, run_serial, RunOutcome};
+pub use spec::{Axes, CampaignSpec, ScenarioSpec};
+pub use sweep::{expand, CellKey, RunPoint};
+
+use anyhow::Result;
+
+/// Aggregated output of a whole campaign.
+#[derive(Debug)]
+pub struct CampaignResult {
+    /// Per-cell statistics, in expansion order.
+    pub cells: Vec<CellAgg>,
+    /// Total runs in the matrix.
+    pub n_runs: usize,
+    /// Runs that errored (their cells list the details).
+    pub n_failures: usize,
+    /// Wall-clock spent running the matrix, seconds.
+    pub wall_s: f64,
+}
+
+fn aggregate(n_runs: usize, outcomes: Vec<RunOutcome>, wall_s: f64) -> CampaignResult {
+    let mut agg = Aggregator::new();
+    let mut n_failures = 0;
+    for o in &outcomes {
+        if o.summary.is_err() {
+            n_failures += 1;
+        }
+        agg.push(o);
+    }
+    CampaignResult { cells: agg.finish(), n_runs, n_failures, wall_s }
+}
+
+/// Run an already-expanded matrix in parallel (`threads` = 0 ⇒ auto) and
+/// aggregate — for callers that need the [`RunPoint`]s themselves (e.g. to
+/// report the matrix size before the run starts).
+pub fn execute_matrix(points: &[RunPoint], threads: usize) -> CampaignResult {
+    let t0 = std::time::Instant::now();
+    let outcomes = run_parallel(points, threads);
+    aggregate(points.len(), outcomes, t0.elapsed().as_secs_f64())
+}
+
+/// Expand, run in parallel (`threads` = 0 ⇒ auto), aggregate.
+pub fn execute(spec: &CampaignSpec, threads: usize) -> Result<CampaignResult> {
+    let points = expand(spec)?;
+    Ok(execute_matrix(&points, threads))
+}
+
+/// Expand, run serially on the calling thread, aggregate. The reference
+/// path the parallel runner is property-tested against.
+pub fn execute_serial(spec: &CampaignSpec) -> Result<CampaignResult> {
+    let points = expand(spec)?;
+    let t0 = std::time::Instant::now();
+    let outcomes = run_serial(&points);
+    Ok(aggregate(points.len(), outcomes, t0.elapsed().as_secs_f64()))
+}

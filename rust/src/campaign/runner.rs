@@ -1,0 +1,140 @@
+//! Parallel campaign runner: fan the run matrix out over a `std::thread`
+//! worker pool.
+//!
+//! Every [`RunPoint`] is self-contained (fresh trace, fresh policy, own
+//! cluster state), so runs are embarrassingly parallel. Workers pull the
+//! next un-started point from a shared atomic cursor and write the outcome
+//! into that point's dedicated slot — results therefore come back **in
+//! expansion order regardless of completion order**, which is what makes
+//! parallel output byte-identical to a serial run of the same matrix.
+//!
+//! Failures (a policy refusing to schedule, a livelocked run hitting
+//! `max_sim_s`) are captured per-run as strings instead of aborting the
+//! campaign; the aggregator reports them per cell.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::sim::metrics::Summary;
+
+use super::sweep::{CellKey, RunPoint};
+
+/// The result of one run, tagged with its matrix position.
+#[derive(Debug, Clone)]
+pub struct RunOutcome {
+    pub ordinal: usize,
+    pub cell: CellKey,
+    pub seed: u64,
+    pub summary: Result<Summary, String>,
+}
+
+fn run_one(point: &RunPoint) -> RunOutcome {
+    RunOutcome {
+        ordinal: point.ordinal,
+        cell: point.cell.clone(),
+        seed: point.scenario.trace.seed,
+        summary: point.scenario.run().map_err(|e| e.to_string()),
+    }
+}
+
+/// Number of workers to use when the caller passes 0 ("auto").
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// The worker count [`run_parallel`] will actually use for a matrix of
+/// `n_points` when asked for `requested` threads (0 ⇒ auto) — exposed so
+/// status output can match the runner exactly.
+pub fn resolved_threads(n_points: usize, requested: usize) -> usize {
+    let t = if requested == 0 { default_threads() } else { requested };
+    t.clamp(1, n_points.max(1))
+}
+
+/// Run the matrix on the calling thread, in expansion order — the old
+/// hand-rolled sweep loop, kept as the reference implementation the
+/// parallel runner is property-tested against (and benchmarked against in
+/// `benches/campaign_throughput.rs`).
+pub fn run_serial(points: &[RunPoint]) -> Vec<RunOutcome> {
+    points.iter().map(run_one).collect()
+}
+
+/// Run the matrix over `threads` workers (0 ⇒ [`default_threads`]).
+/// Returns outcomes in expansion order.
+pub fn run_parallel(points: &[RunPoint], threads: usize) -> Vec<RunOutcome> {
+    let threads = resolved_threads(points.len(), threads);
+    if threads <= 1 {
+        return run_serial(points);
+    }
+    let cursor = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<RunOutcome>>> =
+        points.iter().map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= points.len() {
+                    break;
+                }
+                *slots[i].lock().unwrap() = Some(run_one(&points[i]));
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("every slot filled by a worker"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::campaign::spec::{Axes, CampaignSpec};
+    use crate::campaign::sweep::expand;
+    use crate::cluster::ClusterConfig;
+
+    fn points() -> Vec<RunPoint> {
+        let mut spec = CampaignSpec::new("t");
+        spec.cluster = ClusterConfig::physical();
+        spec.policies = vec!["FIFO".to_string()];
+        spec.axes = Axes {
+            load_factors: vec![1.0],
+            job_counts: vec![10],
+            gpu_counts: Vec::new(),
+            seeds: vec![1, 2, 3, 4],
+            jobs_scale_load_baseline: None,
+        };
+        expand(&spec).unwrap()
+    }
+
+    #[test]
+    fn parallel_preserves_expansion_order() {
+        let pts = points();
+        let out = run_parallel(&pts, 4);
+        assert_eq!(out.len(), pts.len());
+        for (i, o) in out.iter().enumerate() {
+            assert_eq!(o.ordinal, i);
+            assert_eq!(o.seed, pts[i].scenario.trace.seed);
+            assert!(o.summary.is_ok(), "{:?}", o.summary);
+        }
+    }
+
+    #[test]
+    fn oversubscribed_pool_clamps_to_matrix() {
+        let pts = points();
+        let out = run_parallel(&pts, 64);
+        assert_eq!(out.len(), pts.len());
+    }
+
+    #[test]
+    fn failures_are_captured_not_fatal() {
+        let mut pts = points();
+        // Sabotage one run: an unknown policy fails at construction time.
+        pts[1].scenario.policy = "Bogus".to_string();
+        let out = run_parallel(&pts, 2);
+        assert!(out[1].summary.is_err());
+        // The rest of the matrix must still complete.
+        assert!(out[0].summary.is_ok());
+        assert!(out[2].summary.is_ok());
+        assert!(out[3].summary.is_ok());
+    }
+}

@@ -1,0 +1,372 @@
+//! Declarative campaign specifications: what to sweep, over which cluster,
+//! trace shape, interference model and engine limits — loadable from JSON
+//! (via the first-party [`Json`] parser) or built programmatically.
+//!
+//! A [`CampaignSpec`] describes a whole sweep; the expander
+//! ([`super::sweep::expand`]) resolves it into an ordered list of
+//! [`ScenarioSpec`]s, each one a fully-determined single simulation run
+//! (policy × cluster size × job count × load factor × seed).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::cluster::ClusterConfig;
+use crate::jobs::trace::{self, TraceConfig};
+use crate::perf::interference::InterferenceModel;
+use crate::sched;
+use crate::sim::metrics::{self, Summary};
+use crate::sim::{engine, EngineConfig};
+use crate::util::json::Json;
+
+/// The axes of the cartesian sweep (paper Tables II–IV + Fig. 6a are all
+/// points on these axes).
+#[derive(Debug, Clone)]
+pub struct Axes {
+    /// Arrival-density multipliers (Fig. 6a's workload-intensity axis).
+    pub load_factors: Vec<f64>,
+    /// Trace sizes (number of jobs sampled from the busiest period).
+    pub job_counts: Vec<usize>,
+    /// Cluster sizes in total GPUs; empty ⇒ use the spec's base cluster.
+    /// Each entry must be a multiple of the base `gpus_per_server`.
+    pub gpu_counts: Vec<usize>,
+    /// Trace seeds; aggregation (mean/std/CI) runs across this axis.
+    pub seeds: Vec<u64>,
+    /// If `Some(baseline)`, each run's effective load factor is further
+    /// multiplied by `n_jobs / baseline` — the paper's "arrival density
+    /// scales with job count" convention (Fig. 6a, Table IV = 480 jobs at
+    /// 2× the 240-job baseline density).
+    pub jobs_scale_load_baseline: Option<usize>,
+}
+
+/// A declarative scenario sweep: base configuration plus [`Axes`].
+#[derive(Debug, Clone)]
+pub struct CampaignSpec {
+    pub name: String,
+    /// Base cluster shape; the `gpu_counts` axis rescales `servers` while
+    /// keeping `gpus_per_server`, memory and the share cap fixed.
+    pub cluster: ClusterConfig,
+    /// Mean inter-arrival gap of the Philly-like generator, seconds.
+    pub mean_interarrival_s: f64,
+    /// Iteration-count range of the generator (heavy-tailed, clipped).
+    pub iter_range: (u64, u64),
+    /// `Some(ξ)` injects a constant interference ratio for every sharing
+    /// pair (the Fig. 6b sensitivity axis); `None` uses the default model.
+    pub xi_global: Option<f64>,
+    /// Engine wall on simulated time (safety net against livelock).
+    pub max_sim_s: f64,
+    /// Policies to run (paper names, see [`sched::POLICY_NAMES`]).
+    pub policies: Vec<String>,
+    pub axes: Axes,
+}
+
+impl CampaignSpec {
+    /// A single-cell campaign over the paper's simulation defaults:
+    /// 16×4 cluster, 240-job trace shape, one seed — callers then override
+    /// policies and axes.
+    pub fn new(name: &str) -> CampaignSpec {
+        let base = TraceConfig::simulation(240, 1);
+        CampaignSpec {
+            name: name.to_string(),
+            cluster: ClusterConfig::simulation(),
+            mean_interarrival_s: base.mean_interarrival_s,
+            iter_range: base.iter_range,
+            xi_global: None,
+            max_sim_s: EngineConfig::default().max_sim_s,
+            policies: Vec::new(),
+            axes: Axes {
+                load_factors: vec![1.0],
+                job_counts: vec![240],
+                gpu_counts: Vec::new(),
+                seeds: vec![1],
+                jobs_scale_load_baseline: None,
+            },
+        }
+    }
+
+    /// The paper grid: all six policies × {120, 240, 360, 480} jobs with
+    /// arrival density scaled by job count × 3 seeds on the 64-GPU
+    /// simulation cluster. The (240, ×1) cell reproduces Table III, the
+    /// (480, ×2) cell Table IV, and the whole job-count row Fig. 6a.
+    pub fn paper_preset() -> CampaignSpec {
+        let mut spec = CampaignSpec::new("paper");
+        spec.policies = sched::POLICY_NAMES.iter().map(|s| s.to_string()).collect();
+        spec.axes = Axes {
+            load_factors: vec![1.0],
+            job_counts: vec![120, 240, 360, 480],
+            gpu_counts: Vec::new(),
+            seeds: vec![1, 2, 3],
+            jobs_scale_load_baseline: Some(240),
+        };
+        spec
+    }
+
+    /// Parse a spec from a JSON document. Missing optional fields fall back
+    /// to the [`CampaignSpec::new`] defaults; `policies` and `axes` are
+    /// required. See README.md for the schema and a worked example.
+    pub fn from_json(doc: &Json) -> Result<CampaignSpec> {
+        let name = match doc.get("name") {
+            None | Some(Json::Null) => "campaign",
+            Some(v) => v.as_str().context("name must be a string")?,
+        };
+        let mut spec = CampaignSpec::new(name);
+        if let Some(c) = doc.get("cluster") {
+            spec.cluster = ClusterConfig {
+                servers: c.req("servers")?.as_u64().context("servers must be a non-negative integer")? as usize,
+                gpus_per_server: c
+                    .req("gpus_per_server")?
+                    .as_u64()
+                    .context("gpus_per_server must be a non-negative integer")?
+                    as usize,
+                gpu_mem_gb: opt_f64(c, "gpu_mem_gb")?.unwrap_or(spec.cluster.gpu_mem_gb),
+                max_share: opt_usize(c, "max_share")?.unwrap_or(spec.cluster.max_share),
+            };
+        }
+        if let Some(t) = doc.get("trace") {
+            spec.mean_interarrival_s =
+                opt_f64(t, "mean_interarrival_s")?.unwrap_or(spec.mean_interarrival_s);
+            spec.iter_range = (
+                opt_u64(t, "iter_lo")?.unwrap_or(spec.iter_range.0),
+                opt_u64(t, "iter_hi")?.unwrap_or(spec.iter_range.1),
+            );
+        }
+        spec.xi_global = opt_f64(doc, "xi_global")?;
+        spec.max_sim_s = opt_f64(doc, "max_sim_s")?.unwrap_or(spec.max_sim_s);
+        spec.policies = doc
+            .req("policies")?
+            .as_arr()
+            .context("policies must be an array")?
+            .iter()
+            .map(|p| p.as_str().map(str::to_string).context("policy names must be strings"))
+            .collect::<Result<Vec<String>>>()?;
+        let axes = doc.req("axes")?;
+        spec.axes = Axes {
+            load_factors: f64_list(axes, "load_factors", vec![1.0])?,
+            job_counts: usize_list(axes, "job_counts", vec![240])?,
+            gpu_counts: usize_list(axes, "gpu_counts", Vec::new())?,
+            seeds: u64_list(axes, "seeds", vec![1])?,
+            jobs_scale_load_baseline: opt_usize(axes, "scale_load_with_jobs")?,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Load and validate a spec from a JSON file.
+    pub fn load(path: &Path) -> Result<CampaignSpec> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading campaign spec {}", path.display()))?;
+        let doc = Json::parse(&text).context("parsing campaign spec")?;
+        Self::from_json(&doc)
+    }
+
+    /// Check that every axis is non-empty and every value can actually run.
+    pub fn validate(&self) -> Result<()> {
+        if self.policies.is_empty() {
+            bail!("campaign {:?}: no policies", self.name);
+        }
+        for p in &self.policies {
+            if sched::by_name(p).is_none() {
+                bail!(
+                    "campaign {:?}: unknown policy {p:?} (known: {})",
+                    self.name,
+                    sched::POLICY_NAMES.join(", ")
+                );
+            }
+        }
+        let a = &self.axes;
+        if a.load_factors.is_empty() || a.job_counts.is_empty() || a.seeds.is_empty() {
+            bail!("campaign {:?}: load_factors, job_counts and seeds must be non-empty", self.name);
+        }
+        for &n in &a.job_counts {
+            if n == 0 {
+                bail!("campaign {:?}: job counts must be > 0", self.name);
+            }
+        }
+        for &l in &a.load_factors {
+            if !(l > 0.0) || !l.is_finite() {
+                bail!("campaign {:?}: load factor {l} must be finite and > 0", self.name);
+            }
+        }
+        if let Some(x) = self.xi_global {
+            if !(x >= 1.0) {
+                bail!("campaign {:?}: xi_global {x} must be >= 1.0", self.name);
+            }
+        }
+        if let Some(0) = a.jobs_scale_load_baseline {
+            bail!("campaign {:?}: scale_load_with_jobs baseline must be > 0", self.name);
+        }
+        if self.cluster.servers == 0 || self.cluster.gpus_per_server == 0 {
+            bail!("campaign {:?}: degenerate cluster shape", self.name);
+        }
+        // The simulation trace mix requests gangs of up to 16 GPUs; every
+        // swept cluster size must be able to host them (the engine rejects
+        // oversized jobs outright).
+        let min_gpus = 16;
+        let sizes: Vec<usize> = if a.gpu_counts.is_empty() {
+            vec![self.cluster.total_gpus()]
+        } else {
+            a.gpu_counts.clone()
+        };
+        for g in sizes {
+            if g % self.cluster.gpus_per_server != 0 {
+                bail!(
+                    "campaign {:?}: {g} GPUs is not a multiple of gpus_per_server {}",
+                    self.name,
+                    self.cluster.gpus_per_server
+                );
+            }
+            if g < min_gpus {
+                bail!(
+                    "campaign {:?}: {g} GPUs cannot host the trace's largest gang ({min_gpus})",
+                    self.name
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One fully-resolved run: everything [`ScenarioSpec::run`] needs to
+/// deterministically reproduce a single simulation, independently of any
+/// other run — which is what makes the campaign embarrassingly parallel.
+#[derive(Debug, Clone)]
+pub struct ScenarioSpec {
+    pub policy: String,
+    pub cluster: ClusterConfig,
+    pub trace: TraceConfig,
+    pub xi_global: Option<f64>,
+    pub max_sim_s: f64,
+}
+
+impl ScenarioSpec {
+    /// Generate the trace, construct a fresh policy, and simulate.
+    pub fn run(&self) -> Result<Summary> {
+        let jobs = trace::generate(&self.trace);
+        let mut policy = sched::by_name(&self.policy)
+            .with_context(|| format!("unknown policy {:?}", self.policy))?;
+        let xi = match self.xi_global {
+            Some(x) => InterferenceModel::with_global(x),
+            None => InterferenceModel::new(),
+        };
+        let engine_cfg = EngineConfig { max_sim_s: self.max_sim_s, ..EngineConfig::default() };
+        let out = engine::run_with(self.cluster, &jobs, xi, policy.as_mut(), engine_cfg)
+            .with_context(|| {
+                format!(
+                    "policy {} on {} jobs (seed {}, load x{})",
+                    self.policy, self.trace.n_jobs, self.trace.seed, self.trace.load_factor
+                )
+            })?;
+        Ok(metrics::summarize(&self.policy, &out.jobs, out.makespan_s))
+    }
+}
+
+// ---------------------------------------------------- JSON field helpers
+
+fn opt_f64(j: &Json, key: &str) -> Result<Option<f64>> {
+    match j.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => Ok(Some(
+            v.as_f64().with_context(|| format!("{key} must be a number"))?,
+        )),
+    }
+}
+
+fn opt_usize(j: &Json, key: &str) -> Result<Option<usize>> {
+    Ok(opt_u64(j, key)?.map(|x| x as usize))
+}
+
+fn opt_u64(j: &Json, key: &str) -> Result<Option<u64>> {
+    match j.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => Ok(Some(
+            v.as_u64()
+                .with_context(|| format!("{key} must be a non-negative integer"))?,
+        )),
+    }
+}
+
+fn f64_list(j: &Json, key: &str, default: Vec<f64>) -> Result<Vec<f64>> {
+    match j.get(key) {
+        None | Some(Json::Null) => Ok(default),
+        Some(v) => v
+            .as_arr()
+            .with_context(|| format!("{key} must be an array"))?
+            .iter()
+            .map(|x| x.as_f64().with_context(|| format!("{key} entries must be numbers")))
+            .collect(),
+    }
+}
+
+fn usize_list(j: &Json, key: &str, default: Vec<usize>) -> Result<Vec<usize>> {
+    Ok(u64_list(j, key, default.iter().map(|&x| x as u64).collect())?
+        .into_iter()
+        .map(|x| x as usize)
+        .collect())
+}
+
+fn u64_list(j: &Json, key: &str, default: Vec<u64>) -> Result<Vec<u64>> {
+    match j.get(key) {
+        None | Some(Json::Null) => Ok(default),
+        Some(v) => v
+            .as_arr()
+            .with_context(|| format!("{key} must be an array"))?
+            .iter()
+            .map(|x| {
+                x.as_u64()
+                    .with_context(|| format!("{key} entries must be non-negative integers"))
+            })
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_preset_validates() {
+        let spec = CampaignSpec::paper_preset();
+        spec.validate().unwrap();
+        assert_eq!(spec.policies.len(), 6);
+        assert_eq!(spec.axes.job_counts, vec![120, 240, 360, 480]);
+        assert_eq!(spec.axes.jobs_scale_load_baseline, Some(240));
+    }
+
+    #[test]
+    fn validate_rejects_unknown_policy() {
+        let mut spec = CampaignSpec::new("x");
+        spec.policies = vec!["NoSuchPolicy".to_string()];
+        assert!(spec.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_empty_axes() {
+        let mut spec = CampaignSpec::new("x");
+        spec.policies = vec!["FIFO".to_string()];
+        spec.axes.seeds = Vec::new();
+        assert!(spec.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_tiny_cluster() {
+        let mut spec = CampaignSpec::new("x");
+        spec.policies = vec!["FIFO".to_string()];
+        spec.axes.gpu_counts = vec![8]; // cannot host a 16-GPU gang
+        assert!(spec.validate().is_err());
+    }
+
+    #[test]
+    fn scenario_run_produces_summary() {
+        let scenario = ScenarioSpec {
+            policy: "FIFO".to_string(),
+            cluster: ClusterConfig::physical(),
+            trace: TraceConfig::simulation(12, 3),
+            xi_global: None,
+            max_sim_s: EngineConfig::default().max_sim_s,
+        };
+        let s = scenario.run().unwrap();
+        assert_eq!(s.policy, "FIFO");
+        assert_eq!(s.all.n, 12);
+        assert!(s.all.avg_jct_s > 0.0);
+    }
+}

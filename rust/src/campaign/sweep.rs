@@ -1,0 +1,197 @@
+//! Cartesian sweep expansion: resolve a [`CampaignSpec`] into an ordered,
+//! deterministic run matrix.
+//!
+//! Axis nesting order (outer → inner): GPU count → job count → load factor
+//! → policy → seed. The order is part of the subsystem's contract — run
+//! ordinals are stable across processes, results are reported in expansion
+//! order regardless of which worker finished first, and cells (everything
+//! but the seed) appear in first-occurrence order in every emitter.
+
+use anyhow::{bail, Result};
+
+use crate::cluster::ClusterConfig;
+use crate::jobs::trace::TraceConfig;
+
+use super::spec::{CampaignSpec, ScenarioSpec};
+
+/// Aggregation cell coordinates: one point of the sweep with the seed axis
+/// projected out. `load_milli` keeps the key `Eq`/`Hash`-able; the factor
+/// is quantized to 1/1000 *before* being handed to the trace generator, so
+/// the key is exact, not a lossy rendering.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct CellKey {
+    pub total_gpus: usize,
+    pub n_jobs: usize,
+    /// Effective load factor × 1000.
+    pub load_milli: u64,
+    pub policy: String,
+}
+
+impl CellKey {
+    pub fn load_factor(&self) -> f64 {
+        self.load_milli as f64 / 1000.0
+    }
+
+    /// The non-policy coordinates — emitters group cells on this.
+    pub fn scenario_coords(&self) -> (usize, usize, u64) {
+        (self.total_gpus, self.n_jobs, self.load_milli)
+    }
+}
+
+/// One entry of the expanded run matrix.
+#[derive(Debug, Clone)]
+pub struct RunPoint {
+    /// Position in the matrix (0-based, expansion order).
+    pub ordinal: usize,
+    pub cell: CellKey,
+    pub scenario: ScenarioSpec,
+}
+
+/// Expand a validated spec into its full run matrix. Two calls over the
+/// same spec yield identical matrices; duplicates only occur when an axis
+/// itself lists duplicate values (legal — repeating a seed is how the
+/// zero-variance property test exercises aggregation).
+pub fn expand(spec: &CampaignSpec) -> Result<Vec<RunPoint>> {
+    spec.validate()?;
+    let gpu_counts = if spec.axes.gpu_counts.is_empty() {
+        vec![spec.cluster.total_gpus()]
+    } else {
+        spec.axes.gpu_counts.clone()
+    };
+    let mut points = Vec::new();
+    for &gpus in &gpu_counts {
+        let cluster = ClusterConfig {
+            servers: gpus / spec.cluster.gpus_per_server,
+            ..spec.cluster
+        };
+        for &n_jobs in &spec.axes.job_counts {
+            // Distinct axis values must stay distinct after quantization,
+            // or two cells would silently merge (shrinking the CIs).
+            let mut seen_millis: Vec<(u64, f64)> = Vec::new();
+            for &load in &spec.axes.load_factors {
+                let effective = match spec.axes.jobs_scale_load_baseline {
+                    Some(base) => load * n_jobs as f64 / base as f64,
+                    None => load,
+                };
+                let load_milli = (effective * 1000.0).round() as u64;
+                if load_milli == 0 {
+                    bail!(
+                        "campaign {:?}: effective load factor {effective} at {n_jobs} jobs \
+                         quantizes to 0 (minimum representable is 0.001)",
+                        spec.name
+                    );
+                }
+                if let Some((_, prev)) =
+                    seen_millis.iter().find(|(m, p)| *m == load_milli && *p != load)
+                {
+                    bail!(
+                        "campaign {:?}: load factors {prev} and {load} both quantize to \
+                         {} (1/1000 resolution)",
+                        spec.name,
+                        load_milli as f64 / 1000.0
+                    );
+                }
+                seen_millis.push((load_milli, load));
+                let quantized = load_milli as f64 / 1000.0;
+                for policy in &spec.policies {
+                    let cell = CellKey {
+                        total_gpus: gpus,
+                        n_jobs,
+                        load_milli,
+                        policy: policy.clone(),
+                    };
+                    for &seed in &spec.axes.seeds {
+                        let mut trace = TraceConfig::simulation(n_jobs, seed);
+                        trace.mean_interarrival_s = spec.mean_interarrival_s;
+                        trace.iter_range = spec.iter_range;
+                        trace.load_factor = quantized;
+                        points.push(RunPoint {
+                            ordinal: points.len(),
+                            cell: cell.clone(),
+                            scenario: ScenarioSpec {
+                                policy: policy.clone(),
+                                cluster,
+                                trace,
+                                xi_global: spec.xi_global,
+                                max_sim_s: spec.max_sim_s,
+                            },
+                        });
+                    }
+                }
+            }
+        }
+    }
+    Ok(points)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::campaign::spec::Axes;
+
+    fn spec() -> CampaignSpec {
+        let mut s = CampaignSpec::new("t");
+        s.policies = vec!["FIFO".to_string(), "SJF".to_string()];
+        s.axes = Axes {
+            load_factors: vec![0.5, 1.0],
+            job_counts: vec![30, 60],
+            gpu_counts: vec![32, 64],
+            seeds: vec![1, 2, 3],
+            jobs_scale_load_baseline: None,
+        };
+        s
+    }
+
+    #[test]
+    fn matrix_size_is_axis_product() {
+        let pts = expand(&spec()).unwrap();
+        assert_eq!(pts.len(), 2 * 2 * 2 * 2 * 3);
+        for (i, p) in pts.iter().enumerate() {
+            assert_eq!(p.ordinal, i);
+        }
+    }
+
+    #[test]
+    fn nesting_order_gpus_jobs_load_policy_seed() {
+        let pts = expand(&spec()).unwrap();
+        // Innermost axis: seeds vary fastest.
+        assert_eq!(pts[0].scenario.trace.seed, 1);
+        assert_eq!(pts[1].scenario.trace.seed, 2);
+        assert_eq!(pts[2].scenario.trace.seed, 3);
+        // Then policy.
+        assert_eq!(pts[0].cell.policy, "FIFO");
+        assert_eq!(pts[3].cell.policy, "SJF");
+        // Outermost: GPU count flips halfway through.
+        assert_eq!(pts[0].cell.total_gpus, 32);
+        assert_eq!(pts[pts.len() - 1].cell.total_gpus, 64);
+        // Cluster shape follows the GPU axis (gpus_per_server fixed at 4).
+        assert_eq!(pts[0].scenario.cluster.servers, 8);
+        assert_eq!(pts[pts.len() - 1].scenario.cluster.servers, 16);
+    }
+
+    #[test]
+    fn load_scaling_with_jobs_baseline() {
+        let mut s = spec();
+        s.axes.gpu_counts = Vec::new();
+        s.axes.load_factors = vec![1.0];
+        s.axes.jobs_scale_load_baseline = Some(60);
+        let pts = expand(&s).unwrap();
+        let l30 = pts.iter().find(|p| p.cell.n_jobs == 30).unwrap();
+        let l60 = pts.iter().find(|p| p.cell.n_jobs == 60).unwrap();
+        assert_eq!(l30.cell.load_factor(), 0.5);
+        assert_eq!(l60.cell.load_factor(), 1.0);
+        assert_eq!(l30.scenario.trace.load_factor, 0.5);
+    }
+
+    #[test]
+    fn expansion_is_deterministic() {
+        let a = expand(&spec()).unwrap();
+        let b = expand(&spec()).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.cell, y.cell);
+            assert_eq!(x.scenario.trace.seed, y.scenario.trace.seed);
+            assert_eq!(x.scenario.trace.load_factor, y.scenario.trace.load_factor);
+        }
+    }
+}

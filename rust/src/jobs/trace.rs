@@ -237,6 +237,39 @@ mod tests {
     }
 
     #[test]
+    fn load_factor_scales_arrival_density_monotonically() {
+        // Same seed ⇒ the same uniform draws; the Exp inverse transform
+        // then divides every gap by the rate, so the horizon must shrink
+        // monotonically — and exactly proportionally — as load rises.
+        let span = |load: f64| {
+            let mut cfg = TraceConfig::simulation(64, 17);
+            cfg.load_factor = load;
+            generate(&cfg).last().unwrap().arrival_s
+        };
+        let loads = [0.5, 1.0, 2.0, 4.0];
+        let spans: Vec<f64> = loads.iter().map(|&l| span(l)).collect();
+        for w in spans.windows(2) {
+            assert!(w[1] < w[0], "higher load must compress arrivals: {spans:?}");
+        }
+        // Doubling load twice (0.5 -> 2.0) quarters the horizon; the ratio
+        // is exact because scaling by powers of two commutes with IEEE
+        // rounding.
+        let ratio = spans[0] / spans[2];
+        assert!((ratio - 4.0).abs() < 1e-9, "span must scale as 1/load, got {ratio}");
+        // Only arrival times move: the rest of the trace is load-invariant.
+        let mut dense = TraceConfig::simulation(64, 17);
+        dense.load_factor = 4.0;
+        let a = generate(&TraceConfig::simulation(64, 17));
+        let b = generate(&dense);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.model, y.model);
+            assert_eq!(x.gpus, y.gpus);
+            assert_eq!(x.iterations, y.iterations);
+            assert_eq!(x.batch, y.batch);
+        }
+    }
+
+    #[test]
     fn json_roundtrip() {
         let dir = std::env::temp_dir().join(format!("wise-share-test-{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();

@@ -11,7 +11,8 @@
 //!
 //! * **L3 (this crate)** — cluster substrate, discrete-event simulator, six
 //!   scheduling policies, Philly-like trace generation, metrics/reporting,
-//!   and a physical-mode coordinator that *actually executes* every job's
+//!   a declarative parallel scenario-sweep engine ([`campaign`]), and a
+//!   physical-mode coordinator that *actually executes* every job's
 //!   training iterations via AOT-compiled XLA programs through PJRT
 //!   ([`runtime`], [`coordinator`]).
 //! * **L2** — `python/compile/model.py`: a transformer LM fwd/bwd in JAX
@@ -23,6 +24,7 @@
 //! See DESIGN.md for the full system inventory and the per-experiment index
 //! (every table/figure of the paper mapped to a bench target).
 
+pub mod campaign;
 pub mod cluster;
 pub mod coordinator;
 pub mod jobs;

@@ -3,6 +3,9 @@
 //! Subcommands:
 //! * `simulate`   — run a policy (or all) over a synthetic/loaded trace on
 //!                  the simulated cluster; prints paper-style tables.
+//! * `campaign`   — run a declarative scenario sweep (policy × load × jobs
+//!                  × GPUs × seeds) on a parallel worker pool; prints
+//!                  seed-averaged tables with CIs and writes a long CSV.
 //! * `physical`   — run the physical-mode coordinator: real PJRT training
 //!                  steps on emulated GPUs (requires `make artifacts`).
 //! * `trace-gen`  — generate and save a Philly-like trace as JSON.
@@ -16,6 +19,7 @@ use std::path::PathBuf;
 
 use anyhow::{bail, Context, Result};
 
+use wise_share::campaign::{self, CampaignSpec};
 use wise_share::cluster::ClusterConfig;
 use wise_share::coordinator::{run_physical, write_loss_csv, PhysicalConfig};
 use wise_share::jobs::trace::{self, TraceConfig};
@@ -32,6 +36,8 @@ wise-share — SJF-BSBF scheduling reproduction
 USAGE:
   wise-share simulate  [--policy NAME|all] [--jobs N] [--seed S] [--trace F]
                        [--cluster physical|simulation] [--xi X] [--load L]
+  wise-share campaign  (--spec FILE | --preset paper) [--threads N]
+                       [--csv F]
   wise-share physical  [--policy NAME] [--jobs N] [--seed S]
                        [--iter-scale F] [--compress F] [--loss-csv F]
                        [--artifacts DIR]
@@ -120,6 +126,40 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_campaign(args: &Args) -> Result<()> {
+    let spec = match (args.get("spec"), args.get("preset")) {
+        (Some(path), None) => CampaignSpec::load(&PathBuf::from(path))?,
+        (None, Some("paper")) => CampaignSpec::paper_preset(),
+        (None, Some(other)) => bail!("unknown preset {other:?} (available: paper)"),
+        (Some(_), Some(_)) => bail!("--spec and --preset are mutually exclusive"),
+        (None, None) => bail!("campaign needs --spec FILE or --preset paper\n{USAGE}"),
+    };
+    let threads: usize = args.parse_or("threads", 0)?;
+    let points = campaign::expand(&spec)?;
+    println!(
+        "campaign {:?}: {} runs over {} worker thread(s)",
+        spec.name,
+        points.len(),
+        campaign::resolved_threads(points.len(), threads),
+    );
+    let res = campaign::execute_matrix(&points, threads);
+    print!("{}", campaign::emit::markdown(&spec.name, &res.cells));
+    let csv_path = PathBuf::from(args.get("csv").unwrap_or("campaign_results.csv"));
+    std::fs::write(&csv_path, campaign::emit::long_csv(&spec.name, &res.cells))
+        .with_context(|| format!("writing {}", csv_path.display()))?;
+    println!(
+        "long-format CSV -> {} ({} runs in {:.1}s wall, {} failed)",
+        csv_path.display(),
+        res.n_runs,
+        res.wall_s,
+        res.n_failures
+    );
+    if res.n_failures > 0 {
+        bail!("{} of {} runs failed (see FAILED lines above)", res.n_failures, res.n_runs);
+    }
+    Ok(())
+}
+
 fn cmd_physical(args: &Args) -> Result<()> {
     let policy = args.get("policy").unwrap_or("SJF-BSBF").to_string();
     let mut p =
@@ -199,6 +239,7 @@ fn main() -> Result<()> {
     let args = Args::parse(rest)?;
     match cmd.as_str() {
         "simulate" => cmd_simulate(&args),
+        "campaign" => cmd_campaign(&args),
         "physical" => cmd_physical(&args),
         "trace-gen" => cmd_trace_gen(&args),
         "fit" => cmd_fit(&args),

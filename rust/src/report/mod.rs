@@ -57,6 +57,19 @@ pub fn table34(rows: &[Summary]) -> String {
     out
 }
 
+/// Render a generic markdown table — the shared substrate for emitters
+/// whose columns are not one of the fixed paper-table layouts (e.g. the
+/// campaign confidence-interval table).
+pub fn markdown_table(header: &[String], rows: &[Vec<String>]) -> String {
+    let mut out = String::new();
+    writeln!(out, "| {} |", header.join(" | ")).unwrap();
+    writeln!(out, "|{}|", vec!["---"; header.len()].join("|")).unwrap();
+    for row in rows {
+        writeln!(out, "| {} |", row.join(" | ")).unwrap();
+    }
+    out
+}
+
 /// CSV series for a figure: one `name,x,y` row per point.
 pub fn csv_series(name: &str, points: &[(f64, f64)]) -> String {
     let mut out = String::new();
@@ -94,6 +107,15 @@ mod tests {
     fn hrs_rounds() {
         assert_eq!(hrs(3600.0), 1.0);
         assert_eq!(hrs(5400.0), 1.5);
+    }
+
+    #[test]
+    fn markdown_table_generic_shape() {
+        let header: Vec<String> = vec!["A".into(), "B".into()];
+        let rows = vec![vec!["1".to_string(), "2".to_string()]];
+        let t = markdown_table(&header, &rows);
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines, vec!["| A | B |", "|---|---|", "| 1 | 2 |"]);
     }
 
     #[test]

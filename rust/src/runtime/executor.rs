@@ -173,9 +173,26 @@ mod tests {
 
     /// ArtifactSet is !Sync (Rc inside PjRtClient), so the PJRT checks run
     /// sequentially inside one test against a single compiled set.
+    /// Self-skips when `make artifacts` has not run or the PJRT runtime is
+    /// the offline stub (DESIGN.md §4); artifact corruption stays loud.
     #[test]
     fn executor_end_to_end_against_artifacts() {
-        let s = ArtifactSet::load(ArtifactSet::default_dir()).unwrap();
+        let dir = ArtifactSet::default_dir();
+        if !dir.join("meta.json").exists() {
+            eprintln!(
+                "skipping executor_end_to_end_against_artifacts: artifacts not built \
+                 (run `make artifacts`)"
+            );
+            return;
+        }
+        let s = match ArtifactSet::load(dir) {
+            Ok(s) => s,
+            Err(e) if e.to_string().contains("not available") => {
+                eprintln!("skipping executor_end_to_end_against_artifacts: {e:#}");
+                return;
+            }
+            Err(e) => panic!("artifacts exist but failed to load: {e:#}"),
+        };
 
         // 1) plain step: loss finite.
         let mut exec = TrainExecutor::new(&s, 42, 0.1);

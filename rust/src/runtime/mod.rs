@@ -220,9 +220,22 @@ impl ArtifactSet {
 mod tests {
     use super::*;
 
+    /// Artifact-dependent tests self-skip only when `make artifacts` has
+    /// not run — the physical path is optional in the offline build (see
+    /// DESIGN.md §4). When the artifacts *do* exist, parse/validation
+    /// failures stay loud: corruption must fail the suite, not skip it.
+    fn meta_or_skip(test: &str) -> Option<ArtifactMeta> {
+        let dir = ArtifactSet::default_dir();
+        if !dir.join("meta.json").exists() {
+            eprintln!("skipping {test}: artifacts not built (run `make artifacts`)");
+            return None;
+        }
+        Some(ArtifactMeta::load(&dir).expect("artifacts exist but meta.json is unloadable"))
+    }
+
     #[test]
     fn meta_parses() {
-        let meta = ArtifactMeta::load(&ArtifactSet::default_dir()).unwrap();
+        let Some(meta) = meta_or_skip("meta_parses") else { return };
         assert_eq!(meta.param_names.len(), meta.param_shapes.len());
         assert!(meta.micro_batches.contains(&1));
         assert!(meta.model.n_params > 100_000);
@@ -230,8 +243,22 @@ mod tests {
 
     #[test]
     fn best_micro_batch_picks_floor() {
-        let meta = ArtifactMeta::load(&ArtifactSet::default_dir()).unwrap();
-        // micro_batches = [1,2,4,8]
+        // Synthetic meta: independent of the artifact files on disk.
+        let meta = ArtifactMeta {
+            model: ModelMeta {
+                vocab: 512,
+                d_model: 64,
+                n_heads: 4,
+                n_layers: 2,
+                d_ff: 256,
+                seq_len: 64,
+                n_params: 200_000,
+            },
+            param_names: vec!["tok_emb".to_string()],
+            param_shapes: vec![vec![512, 64]],
+            micro_batches: vec![1, 2, 4, 8],
+            artifacts: HashMap::new(),
+        };
         assert_eq!(meta.best_micro_batch(8), Some(8));
         assert_eq!(meta.best_micro_batch(6), Some(4));
         assert_eq!(meta.best_micro_batch(1), Some(1));
@@ -240,7 +267,19 @@ mod tests {
 
     #[test]
     fn artifacts_compile_lazily_and_init_runs() {
-        let set = ArtifactSet::load(ArtifactSet::default_dir()).unwrap();
+        if meta_or_skip("artifacts_compile_lazily_and_init_runs").is_none() {
+            return; // artifacts not built
+        }
+        let set = match ArtifactSet::load(ArtifactSet::default_dir()) {
+            Ok(s) => s,
+            // Offline stub: the PJRT client cannot come up. Anything else
+            // (missing artifact files, bad meta) is real corruption.
+            Err(e) if e.to_string().contains("not available") => {
+                eprintln!("skipping artifacts_compile_lazily_and_init_runs: {e:#}");
+                return;
+            }
+            Err(e) => panic!("artifacts exist but failed to load: {e:#}"),
+        };
         assert_eq!(set.compiled_count(), 0, "load must not compile anything");
         let params = set.init_params().unwrap();
         assert_eq!(set.compiled_count(), 1, "only init compiled");

@@ -13,6 +13,8 @@
 pub mod engine;
 pub mod metrics;
 
+pub use engine::{EngineConfig, SimOutcome};
+
 use crate::cluster::{Cluster, GpuId};
 use crate::jobs::{JobId, JobRecord, JobState};
 use crate::perf::interference::InterferenceModel;

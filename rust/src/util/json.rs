@@ -46,6 +46,27 @@ impl Json {
         self.as_f64().map(|x| x as usize)
     }
 
+    /// Exact non-negative integer accessor: rejects fractional and negative
+    /// numbers rather than truncating (a 1.5 in a seed list is a typo, not
+    /// a request for seed 1). Bounded at 2^53 — beyond that the f64 carrier
+    /// has already lost integer precision, so "exact" cannot be honored.
+    pub fn as_u64(&self) -> Option<u64> {
+        const MAX_EXACT: f64 = 9_007_199_254_740_992.0; // 2^53
+        match self {
+            Json::Num(x) if *x >= 0.0 && x.fract() == 0.0 && *x < MAX_EXACT => {
+                Some(*x as u64)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -149,6 +170,16 @@ impl From<f64> for Json {
 impl From<usize> for Json {
     fn from(x: usize) -> Self {
         Json::Num(x as f64)
+    }
+}
+impl From<u64> for Json {
+    fn from(x: u64) -> Self {
+        Json::Num(x as f64)
+    }
+}
+impl From<bool> for Json {
+    fn from(b: bool) -> Self {
+        Json::Bool(b)
     }
 }
 impl From<&str> for Json {
@@ -377,5 +408,23 @@ mod tests {
     fn integer_emission_is_exact() {
         assert_eq!(Json::Num(240.0).to_string(), "240");
         assert_eq!(Json::Num(0.5).to_string(), "0.5");
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let j = Json::parse(r#"{"n": 42, "b": true, "s": "x"}"#).unwrap();
+        assert_eq!(j.get("n").unwrap().as_u64(), Some(42));
+        assert_eq!(j.get("b").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("s").unwrap().as_bool(), None);
+        assert_eq!(j.get("n").unwrap().as_bool(), None);
+        // Exactness: no truncation, no negative wraparound, no values the
+        // f64 carrier cannot represent exactly.
+        assert_eq!(Json::Num(1.5).as_u64(), None);
+        assert_eq!(Json::Num(-1.0).as_u64(), None);
+        assert_eq!(Json::Num(0.0).as_u64(), Some(0));
+        assert_eq!(Json::Num(9_007_199_254_740_992.0).as_u64(), None); // 2^53
+        assert_eq!(Json::Num(9_007_199_254_740_991.0).as_u64(), Some(9_007_199_254_740_991));
+        assert_eq!(Json::from(7u64), Json::Num(7.0));
+        assert_eq!(Json::from(false), Json::Bool(false));
     }
 }

@@ -1,0 +1,220 @@
+//! Campaign subsystem correctness (the properties the subsystem is allowed
+//! to be trusted on):
+//!
+//! * sweep expansion is deterministic and duplicate-free,
+//! * the parallel runner's output is byte-identical to serial execution of
+//!   the same matrix (every emitter, every cell),
+//! * aggregation over identical seeds yields exactly zero variance,
+//! * JSON specs parse into the same matrices as programmatic ones.
+
+use std::collections::HashSet;
+
+use wise_share::campaign::{self, Axes, CampaignSpec, RunPoint};
+use wise_share::cluster::ClusterConfig;
+use wise_share::prop_assert;
+use wise_share::util::json::Json;
+use wise_share::util::prop::forall;
+
+/// A cheap campaign: 16-GPU cluster (the simulation trace never requests
+/// more than 16 GPUs, so every job still fits), small traces.
+fn small_spec(policies: &[&str], job_counts: Vec<usize>, seeds: Vec<u64>) -> CampaignSpec {
+    let mut spec = CampaignSpec::new("test");
+    spec.cluster = ClusterConfig::physical();
+    spec.policies = policies.iter().map(|s| s.to_string()).collect();
+    spec.axes = Axes {
+        load_factors: vec![1.0],
+        job_counts,
+        gpu_counts: Vec::new(),
+        seeds,
+        jobs_scale_load_baseline: None,
+    };
+    spec
+}
+
+fn fingerprints(points: &[RunPoint]) -> Vec<String> {
+    points
+        .iter()
+        .map(|p| format!("{}|{:?}|{}", p.ordinal, p.cell, p.scenario.trace.seed))
+        .collect()
+}
+
+#[test]
+fn expansion_deterministic_and_duplicate_free() {
+    let spec = CampaignSpec::paper_preset();
+    let a = campaign::expand(&spec).unwrap();
+    let b = campaign::expand(&spec).unwrap();
+    // 4 job counts x 1 load x 6 policies x 3 seeds.
+    assert_eq!(a.len(), 4 * 6 * 3);
+    assert_eq!(fingerprints(&a), fingerprints(&b));
+    let uniq: HashSet<String> = fingerprints(&a)
+        .into_iter()
+        .map(|fp| fp.splitn(2, '|').nth(1).unwrap().to_string())
+        .collect();
+    assert_eq!(uniq.len(), a.len(), "duplicate (cell, seed) run points");
+    for (i, p) in a.iter().enumerate() {
+        assert_eq!(p.ordinal, i, "ordinals must be dense expansion positions");
+    }
+}
+
+#[test]
+fn prop_expansion_matrix_size_and_uniqueness() {
+    forall("expansion-matrix", 0xCA, 32, |rng| {
+        let base = rng.next_u64() % 1_000_000;
+        let seeds: Vec<u64> = (0..1 + rng.index(3)).map(|i| base + i as u64).collect();
+        let jobs: Vec<usize> = [16usize, 24, 40][..1 + rng.index(3)].to_vec();
+        let loads: Vec<f64> = [0.75, 1.5][..1 + rng.index(2)].to_vec();
+        let pols: Vec<&str> = ["FIFO", "SJF"][..1 + rng.index(2)].to_vec();
+        let mut spec = small_spec(&pols, jobs.clone(), seeds.clone());
+        spec.axes.load_factors = loads.clone();
+        let pts = campaign::expand(&spec).map_err(|e| e.to_string())?;
+        prop_assert!(
+            pts.len() == jobs.len() * loads.len() * pols.len() * seeds.len(),
+            "matrix size {} != axis product",
+            pts.len()
+        );
+        let uniq: HashSet<String> = pts
+            .iter()
+            .map(|p| format!("{:?}|{}", p.cell, p.scenario.trace.seed))
+            .collect();
+        prop_assert!(uniq.len() == pts.len(), "duplicates in expansion");
+        Ok(())
+    });
+}
+
+#[test]
+fn parallel_runner_matches_serial_byte_identical() {
+    let spec = small_spec(&["FIFO", "SJF"], vec![24], vec![1, 2, 3]);
+    let serial = campaign::execute_serial(&spec).unwrap();
+    let parallel = campaign::execute(&spec, 4).unwrap();
+    assert_eq!(serial.n_runs, 6);
+    assert_eq!(serial.n_failures, 0);
+    assert_eq!(parallel.n_failures, 0);
+    assert_eq!(
+        campaign::emit::long_csv(&spec.name, &serial.cells),
+        campaign::emit::long_csv(&spec.name, &parallel.cells),
+        "parallel CSV must be byte-identical to serial"
+    );
+    assert_eq!(
+        campaign::emit::markdown(&spec.name, &serial.cells),
+        campaign::emit::markdown(&spec.name, &parallel.cells),
+        "parallel markdown must be byte-identical to serial"
+    );
+}
+
+#[test]
+fn identical_seeds_aggregate_with_zero_variance() {
+    // Duplicating a seed on the axis is legal and must collapse to zero
+    // spread — same spec ⇒ same trace ⇒ same simulation, exactly.
+    let spec = small_spec(&["SJF-BSBF"], vec![20], vec![7, 7, 7]);
+    let res = campaign::execute(&spec, 2).unwrap();
+    assert_eq!(res.n_runs, 3);
+    assert_eq!(res.n_failures, 0);
+    assert_eq!(res.cells.len(), 1);
+    let c = &res.cells[0];
+    assert_eq!(c.seeds(), 3);
+    let streams = [
+        &c.makespan_s,
+        &c.all.avg_jct_s,
+        &c.all.avg_queue_s,
+        &c.all.p50_jct_s,
+        &c.all.p90_jct_s,
+        &c.large.avg_jct_s,
+        &c.small.avg_jct_s,
+    ];
+    for s in streams {
+        assert_eq!(s.std(), 0.0, "identical seeds must have zero std");
+        assert_eq!(s.ci95(), 0.0, "identical seeds must have zero CI");
+        assert_eq!(s.min(), s.max(), "identical seeds must have min == max");
+    }
+    assert!(c.makespan_s.mean() > 0.0);
+}
+
+#[test]
+fn distinct_seeds_actually_spread() {
+    // The dual of the zero-variance property: different seeds produce
+    // different traces, so the spread must be strictly positive.
+    let spec = small_spec(&["FIFO"], vec![20], vec![1, 2, 3]);
+    let res = campaign::execute(&spec, 0).unwrap();
+    assert_eq!(res.cells.len(), 1);
+    assert!(res.cells[0].all.avg_jct_s.std() > 0.0);
+}
+
+#[test]
+fn spec_parses_from_json_and_expands() {
+    let text = r#"{
+      "name": "mini",
+      "cluster": {"servers": 4, "gpus_per_server": 4},
+      "trace": {"mean_interarrival_s": 12.5, "iter_lo": 100, "iter_hi": 900},
+      "xi_global": 1.5,
+      "policies": ["FIFO", "SJF-BSBF"],
+      "axes": {
+        "load_factors": [0.5, 1.0],
+        "job_counts": [16],
+        "seeds": [1, 2],
+        "scale_load_with_jobs": 16
+      }
+    }"#;
+    let spec = CampaignSpec::from_json(&Json::parse(text).unwrap()).unwrap();
+    assert_eq!(spec.name, "mini");
+    assert_eq!(spec.cluster.total_gpus(), 16);
+    assert_eq!(spec.mean_interarrival_s, 12.5);
+    assert_eq!(spec.iter_range, (100, 900));
+    assert_eq!(spec.xi_global, Some(1.5));
+    assert_eq!(spec.axes.jobs_scale_load_baseline, Some(16));
+    let pts = campaign::expand(&spec).unwrap();
+    assert_eq!(pts.len(), 2 * 2 * 2);
+    // 16 jobs on a 16-job baseline: load factors pass through unchanged.
+    assert_eq!(pts[0].cell.load_factor(), 0.5);
+    assert_eq!(pts[0].scenario.trace.mean_interarrival_s, 12.5);
+    assert_eq!(pts[0].scenario.xi_global, Some(1.5));
+}
+
+#[test]
+fn spec_validation_rejects_bad_inputs() {
+    let mut spec = small_spec(&["FIFO"], vec![16], vec![1]);
+    spec.policies = vec!["NoSuchPolicy".to_string()];
+    assert!(campaign::expand(&spec).is_err());
+
+    let mut spec = small_spec(&["FIFO"], vec![16], vec![1]);
+    spec.axes.load_factors = Vec::new();
+    assert!(campaign::expand(&spec).is_err());
+
+    let mut spec = small_spec(&["FIFO"], vec![16], vec![1]);
+    spec.axes.gpu_counts = vec![13]; // not a multiple of gpus_per_server
+    assert!(campaign::expand(&spec).is_err());
+
+    let mut spec = small_spec(&["FIFO"], vec![16], vec![1]);
+    spec.xi_global = Some(0.5); // interference ratios are >= 1
+    assert!(campaign::expand(&spec).is_err());
+
+    let spec = small_spec(&["FIFO"], vec![0], vec![1]); // empty trace
+    assert!(campaign::expand(&spec).is_err());
+
+    let mut spec = small_spec(&["FIFO"], vec![16], vec![1]);
+    spec.axes.load_factors = vec![1e-5]; // quantizes to a 0 load cell
+    assert!(campaign::expand(&spec).is_err());
+
+    let mut spec = small_spec(&["FIFO"], vec![16], vec![1]);
+    spec.axes.load_factors = vec![1.0, 1.0004]; // merge under 1/1000 quantization
+    assert!(campaign::expand(&spec).is_err());
+
+    // A wrongly-typed field must error, not silently disappear.
+    let text = r#"{
+      "policies": ["FIFO"],
+      "axes": {"job_counts": [16], "seeds": [1], "scale_load_with_jobs": "240"}
+    }"#;
+    assert!(CampaignSpec::from_json(&Json::parse(text).unwrap()).is_err());
+}
+
+#[test]
+fn paper_preset_covers_tables_and_fig6a() {
+    let spec = CampaignSpec::paper_preset();
+    let pts = campaign::expand(&spec).unwrap();
+    assert_eq!(pts.len(), 4 * 6 * 3);
+    assert!(pts.iter().all(|p| p.cell.total_gpus == 64));
+    // Table III cell: 240 jobs at x1 density; Table IV: 480 jobs at x2.
+    assert!(pts.iter().any(|p| p.cell.n_jobs == 240 && p.cell.load_factor() == 1.0));
+    assert!(pts.iter().any(|p| p.cell.n_jobs == 480 && p.cell.load_factor() == 2.0));
+    // Fig. 6a light-load end: 120 jobs at x0.5.
+    assert!(pts.iter().any(|p| p.cell.n_jobs == 120 && p.cell.load_factor() == 0.5));
+}

@@ -1,0 +1,241 @@
+//! First-party stand-in for the `anyhow` crate, vendored so the build is
+//! fully offline (the build environment has no crates.io access; see
+//! DESIGN.md §4). Implements the subset this repository uses:
+//!
+//! * [`Error`] — a boxed-source, message-carrying error type,
+//! * [`Result<T>`] — `Result<T, Error>`,
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`,
+//! * [`anyhow!`] / [`bail!`] — format-style error construction.
+//!
+//! Like the real crate, `Error` deliberately does **not** implement
+//! `std::error::Error`: the blanket `From<E: std::error::Error>` conversion
+//! (what makes `?` work on std errors) is only coherent because of that.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result` specialized to [`Error`], matching `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A message-carrying error with an optional boxed source.
+///
+/// Context added via [`Context`] is folded into the message front-to-back,
+/// so `Display` shows `"outer context: inner cause"` like the real crate's
+/// `{:#}` rendering.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Construct an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Prepend a context layer to the message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: format!("{context}: {}", self.msg), source: self.source }
+    }
+
+    /// The underlying cause, if this error wraps a std error.
+    pub fn source(&self) -> Option<&(dyn StdError + 'static)> {
+        match &self.source {
+            Some(b) => Some(b.as_ref()),
+            None => None,
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        let mut cause = self.source.as_deref().and_then(StdError::source);
+        if cause.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(c) = cause {
+            write!(f, "\n    {c}")?;
+            cause = c.source();
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string(), source: Some(Box::new(e)) }
+    }
+}
+
+/// Marker type parameter for the `Result<T, Error>` impl of [`Context`]
+/// (disambiguates it from the blanket std-error impl without negative
+/// reasoning — the same role `Infallible` plays for `Option`).
+pub enum ChainMarker {}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+///
+/// The second type parameter only disambiguates the three impls; it never
+/// appears in the methods.
+pub trait Context<T, E> {
+    /// Wrap the error with a context message.
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    /// Wrap the error with a lazily-evaluated context message.
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T, E> for Result<T, E>
+where
+    E: StdError + Send + Sync + 'static,
+{
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T, ChainMarker> for Result<T, Error> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| e.context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any displayable value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`anyhow!`] error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`anyhow!`] error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> Result<(), std::io::Error> {
+        Err(std::io::Error::new(std::io::ErrorKind::Other, "boom"))
+    }
+
+    #[test]
+    fn context_layers_fold_into_display() {
+        let e = io_err().context("reading file").unwrap_err();
+        assert_eq!(e.to_string(), "reading file: boom");
+        let e2: Result<()> = Err(e);
+        let e2 = e2.with_context(|| format!("step {}", 2)).unwrap_err();
+        assert_eq!(e2.to_string(), "step 2: reading file: boom");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing value").unwrap_err();
+        assert_eq!(e.to_string(), "missing value");
+        assert!(Some(3u32).context("present").is_ok());
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<u32> {
+            let n: u32 = "not a number".parse()?;
+            Ok(n)
+        }
+        assert!(inner().unwrap_err().to_string().contains("invalid digit"));
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        fn f(x: u32) -> Result<()> {
+            if x > 3 {
+                bail!("x too big: {x}");
+            }
+            Ok(())
+        }
+        assert_eq!(f(5).unwrap_err().to_string(), "x too big: 5");
+        assert!(f(1).is_ok());
+        let e = anyhow!("{} + {}", 1, 2);
+        assert_eq!(e.to_string(), "1 + 2");
+        let e = anyhow!(std::fmt::Error);
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn source_chain_preserved() {
+        let e = io_err().context("ctx").unwrap_err();
+        assert!(e.source().is_some());
+    }
+}
