@@ -3,6 +3,18 @@
 //! train-steps by per-GPU worker threads, while the *same* [`Policy`]
 //! implementations used in simulation make the sharing decisions.
 //!
+//! Since the `sched_core` redesign the coordinator is a thin wall-clock
+//! backend over the shared scheduling core: it owns a [`SchedContext`]
+//! (the same world view the simulator engine uses), translates wall time
+//! into the same typed [`Event`]s (`Arrival`, `Completion`, `Tick`,
+//! `RestartEligible`), and applies every policy transaction through the
+//! shared, fully validated [`SchedContext::apply`] path. There is no
+//! coordinator-local decision handling: an over-memory, double-start or
+//! before-arrival decision fails here exactly as it would in simulation
+//! (it used to be applied silently). Queueing time and attained service
+//! (`service_gpu_s`, Tiresias' 2D-LAS input) accrue continuously through
+//! `SchedContext::advance_wall`, matching the engine's accounting.
+//!
 //! Emulated-cluster semantics (DESIGN.md §3 substitution):
 //! * one OS worker thread per "GPU"; a job's gang *reserves* its GPUs for
 //!   scheduling purposes, and its compute runs on the gang's lead worker;
@@ -21,14 +33,14 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::cluster::{Cluster, ClusterConfig, GpuId};
-use crate::jobs::{JobId, JobRecord, JobSpec, JobState};
+use crate::jobs::{JobId, JobRecord, JobSpec};
 use crate::perf::interference::InterferenceModel;
 use crate::runtime::executor::{TrainExecutor, TrainState};
 use crate::runtime::ArtifactSet;
-use crate::sim::{Decision, Policy, SimState};
+use crate::sched_core::{Decision, Event, Policy, SchedContext};
 
 /// Physical-run tuning.
 #[derive(Debug, Clone)]
@@ -170,7 +182,8 @@ fn worker_loop(
 }
 
 /// Run `trace` physically under `policy`. Non-preemptive policies only
-/// (the physical coordinator does not checkpoint parameters on preemption).
+/// (the physical coordinator does not checkpoint parameters on preemption);
+/// a transaction containing a `Preempt` is rejected before it is applied.
 pub fn run_physical(
     cfg: PhysicalConfig,
     trace: &[JobSpec],
@@ -192,100 +205,99 @@ pub fn run_physical(
     }
     drop(tx);
 
-    // Coordinator state mirrors the simulator's view so policies run as-is.
-    let mut state = SimState {
-        now: 0.0,
-        cluster: Cluster::new(cfg.cluster),
-        jobs: trace
-            .iter()
-            .cloned()
-            .map(|mut spec| {
-                spec.arrival_s /= cfg.time_compression;
-                let mut rec = JobRecord::new(spec);
-                rec.remaining_iters =
-                    (rec.remaining_iters * cfg.iter_scale).max(10.0).round();
-                rec
-            })
-            .collect(),
-        xi,
-        not_before: vec![0.0; trace.len()],
-        service_gpu_s: vec![0.0; trace.len()],
-    };
+    // The same scheduling context the simulator engine uses — policies and
+    // decision validation run identically in both backends.
+    let records: Vec<JobRecord> = trace
+        .iter()
+        .cloned()
+        .map(|mut spec| {
+            spec.arrival_s /= cfg.time_compression;
+            let mut rec = JobRecord::new(spec);
+            rec.remaining_iters = (rec.remaining_iters * cfg.iter_scale).max(10.0).round();
+            rec
+        })
+        .collect();
+    let mut ctx = SchedContext::new(Cluster::new(cfg.cluster), records, xi);
     // Target iteration counts after scaling.
-    let targets: Vec<f64> = state.jobs.iter().map(|j| j.remaining_iters).collect();
+    let targets: Vec<f64> = ctx.jobs.iter().map(|j| j.remaining_iters).collect();
     let mut executed: Vec<u64> = vec![0; trace.len()];
     let mut loss_curves: Vec<LossPoint> = Vec::new();
     let t0 = Instant::now();
 
     let result = (|| -> Result<()> {
+        let penalty = policy.preemption_penalty();
+        // Tick cadence follows the compressed trace timeline: arrivals are
+        // divided by `time_compression`, so a policy's tick interval is
+        // too — a Tick fires after the same amount of *workload* time in
+        // both backends, not 60x rarer on the wall clock.
+        let tick_wall_s = policy.tick_interval().map(|t| t / cfg.time_compression);
+        let mut next_tick = tick_wall_s;
+        let mut events: Vec<Event> = Vec::new();
+        let mut clock_events: Vec<Event> = Vec::new();
         loop {
-            state.now = t0.elapsed().as_secs_f64();
-            // Apply progress reports.
+            // Wall clock drives the shared context: queueing time and
+            // attained service (Tiresias' 2D-LAS input) accrue here, and
+            // arrivals / restart eligibilities fire as typed events.
+            clock_events.clear();
+            ctx.advance_wall(t0.elapsed().as_secs_f64(), &mut clock_events);
+            // Apply progress reports from the workers (real execution is
+            // what advances remaining_iters in physical mode).
             while let Ok(p) = rx.try_recv() {
-                let rec = &mut state.jobs[p.job];
-                if rec.state == JobState::Running && rec.remaining_iters > 0.0 {
-                    rec.remaining_iters -= 1.0;
+                if ctx.note_progress(p.job) {
                     executed[p.job] += 1;
                     loss_curves.push(LossPoint {
                         job: p.job,
                         step: p.step,
                         loss: p.loss,
-                        wall_s: state.now,
+                        wall_s: ctx.now(),
                     });
                 }
             }
-            // Completions.
-            let mut changed = false;
-            for id in state.running() {
-                if state.jobs[id].remaining_iters <= 0.0 {
-                    state.cluster.release(id);
-                    let rec = &mut state.jobs[id];
-                    rec.state = JobState::Finished;
-                    rec.finish_s = Some(state.now);
-                    rec.gpus_held.clear();
+            // Completions through the same shared path as the engine.
+            events.clear();
+            ctx.collect_completions(0.0, &mut events);
+            for ev in &events {
+                if let Event::Completion { job } = ev {
                     let mut b = board.lock().unwrap();
                     for lane in b.lanes.values_mut() {
-                        lane.retain(|a| a.job != id);
+                        lane.retain(|a| a.job != *job);
                     }
-                    changed = true;
                 }
             }
-            // Queueing accounting (coarse: updated on each loop pass).
-            if state.jobs.iter().all(|j| j.state == JobState::Finished) {
+            events.append(&mut clock_events);
+            if let Some(tick) = next_tick {
+                if tick <= ctx.now() + 1e-9 {
+                    next_tick = Some(tick + tick_wall_s.unwrap());
+                    events.push(Event::Tick);
+                }
+            }
+            // Deliver events; validate + apply through sched_core's single
+            // transaction path (no coordinator-local Decision handling).
+            // Delivery happens before the all-finished exit so the last
+            // job's Completion reaches the policy — the engine's "exactly
+            // one Completion per job" guarantee holds in both backends.
+            for &ev in &events {
+                let txn = policy.on_event(&ctx, ev);
+                if txn.has_preempt() {
+                    bail!("physical coordinator supports non-preemptive policies only");
+                }
+                ctx.apply(&txn, penalty)
+                    .context("physical coordinator rejected a policy transaction")?;
+                let mut b = board.lock().unwrap();
+                for d in txn.ops() {
+                    if let Decision::Start { job, gpus, accum_step } = d {
+                        b.lanes.entry(gpus[0]).or_default().push(Assignment {
+                            job: *job,
+                            accum_step: *accum_step,
+                            batch: cfg.exec_batch,
+                            seed: *job as u64 * 7919 + 17,
+                        });
+                    }
+                }
+            }
+            if ctx.all_finished() {
                 return Ok(());
             }
-            // Scheduling pass.
-            let decisions = policy.schedule(&state);
-            for d in decisions {
-                match d {
-                    Decision::Start { job, gpus, accum_step } => {
-                        state.cluster.allocate(job, &gpus);
-                        let rec = &mut state.jobs[job];
-                        rec.state = JobState::Running;
-                        rec.accum_step = accum_step;
-                        rec.gpus_held = gpus.clone();
-                        if rec.first_start_s.is_none() {
-                            rec.first_start_s = Some(state.now);
-                            rec.queued_s = state.now - rec.spec.arrival_s.max(0.0);
-                        }
-                        let lead = gpus[0];
-                        let mut b = board.lock().unwrap();
-                        b.lanes.entry(lead).or_default().push(Assignment {
-                            job,
-                            accum_step,
-                            batch: cfg.exec_batch,
-                            seed: job as u64 * 7919 + 17,
-                        });
-                        changed = true;
-                    }
-                    Decision::Preempt { .. } => {
-                        anyhow::bail!(
-                            "physical coordinator supports non-preemptive policies only"
-                        );
-                    }
-                }
-            }
-            let _ = changed;
             std::thread::sleep(std::time::Duration::from_millis(5));
         }
     })();
@@ -297,6 +309,7 @@ pub fn run_physical(
     result?;
 
     let makespan = t0.elapsed().as_secs_f64();
+    let state = ctx.into_state();
     // Sanity: every job ran its scaled target.
     for (id, rec) in state.jobs.iter().enumerate() {
         debug_assert!(
@@ -305,7 +318,7 @@ pub fn run_physical(
             executed[id],
             targets[id]
         );
-        debug_assert_eq!(rec.state, JobState::Finished);
+        debug_assert_eq!(rec.state, crate::jobs::JobState::Finished);
     }
     Ok(PhysicalOutcome {
         jobs: state.jobs,

@@ -9,12 +9,16 @@
 //!
 //! ## Architecture (three layers)
 //!
-//! * **L3 (this crate)** — cluster substrate, discrete-event simulator, six
+//! * **L3 (this crate)** — cluster substrate, the shared event-driven
+//!   scheduling core ([`sched_core`]: typed events, cached scheduling
+//!   context, validated transaction layer), discrete-event simulator, six
 //!   scheduling policies, Philly-like trace generation, metrics/reporting,
 //!   a declarative parallel scenario-sweep engine ([`campaign`]), and a
 //!   physical-mode coordinator that *actually executes* every job's
 //!   training iterations via AOT-compiled XLA programs through PJRT
-//!   ([`runtime`], [`coordinator`]).
+//!   ([`runtime`], [`coordinator`]) — through the *same* `sched_core`
+//!   apply path the simulator uses, so sim/physical fidelity is by
+//!   construction, not by convention.
 //! * **L2** — `python/compile/model.py`: a transformer LM fwd/bwd in JAX
 //!   decomposed into `grad_step` / `accum` / `apply` artifacts so the Rust
 //!   hot loop owns the gradient-accumulation schedule.
@@ -33,10 +37,12 @@ pub mod perf;
 pub mod report;
 pub mod runtime;
 pub mod sched;
+pub mod sched_core;
 pub mod sim;
 pub mod util;
 
 pub use cluster::{Cluster, ClusterConfig};
 pub use jobs::{JobRecord, JobSpec, JobState};
 pub use perf::interference::InterferenceModel;
-pub use sim::{engine::run as simulate, Policy};
+pub use sched_core::{Event, Policy, SchedContext, Txn};
+pub use sim::engine::run as simulate;

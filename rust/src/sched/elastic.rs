@@ -13,7 +13,7 @@
 
 use crate::cluster::placement;
 use crate::jobs::JobId;
-use crate::sim::{Decision, Policy, SimState};
+use crate::sched_core::{Event, Policy, SchedContext, Txn};
 
 #[derive(Debug)]
 pub struct Elastic {
@@ -37,7 +37,7 @@ impl Default for Elastic {
 impl Elastic {
     /// Water-filling: distribute `total` GPUs over `jobs` by marginal
     /// throughput gain. Returns the planned GPU count per job.
-    fn plan(&self, state: &SimState, jobs: &[JobId], total: usize) -> Vec<usize> {
+    fn plan(&self, ctx: &SchedContext, jobs: &[JobId], total: usize) -> Vec<usize> {
         let mut alloc = vec![0usize; jobs.len()];
         let mut remaining = total;
         // Seed: every job would like at least 1 GPU.
@@ -45,7 +45,7 @@ impl Elastic {
         while remaining > 0 {
             let mut best: Option<(usize, f64)> = None;
             for (i, &id) in jobs.iter().enumerate() {
-                let spec = &state.jobs[id].spec;
+                let spec = &ctx.jobs[id].spec;
                 let cap =
                     ((spec.gpus as f64 * self.cap_factor).round() as usize).max(1);
                 if alloc[i] >= cap {
@@ -61,7 +61,7 @@ impl Elastic {
                 let nxt = perf.throughput(b, 1, alloc[i] + 1);
                 // Normalize by remaining work so short jobs are favoured
                 // (goodput-weighted fairness surrogate).
-                let weight = 1.0 / state.jobs[id].remaining_solo_runtime().max(1.0);
+                let weight = 1.0 / ctx.jobs[id].remaining_solo_runtime().max(1.0);
                 let gain = (nxt - cur) * weight;
                 if best.map(|(_, g)| gain > g).unwrap_or(true) {
                     best = Some((i, gain));
@@ -92,46 +92,46 @@ impl Policy for Elastic {
         self.penalty_s
     }
 
-    fn schedule(&mut self, state: &SimState) -> Vec<Decision> {
-        let mut active: Vec<JobId> = state.running();
-        active.extend(state.pending());
+    fn on_event(&mut self, ctx: &SchedContext, _ev: Event) -> Txn {
+        let mut active: Vec<JobId> = ctx.running().to_vec();
+        active.extend_from_slice(ctx.pending());
         active.sort_unstable();
         if active.is_empty() {
-            return vec![];
+            return Txn::new();
         }
-        let plan = self.plan(state, &active, state.cluster.total_gpus());
+        let plan = self.plan(ctx, &active, ctx.cluster.total_gpus());
 
-        let mut out = Vec::new();
-        let mut cluster = state.cluster.clone();
+        let mut txn = Txn::new();
+        let mut cluster = ctx.cluster.clone();
         // Phase 1: preempt running jobs whose allocation changes enough
         // (or drops to zero).
         for (i, &id) in active.iter().enumerate() {
-            if state.jobs[id].state != crate::jobs::JobState::Running {
+            if ctx.jobs[id].state != crate::jobs::JobState::Running {
                 continue;
             }
-            let held = state.jobs[id].gpus_held.len();
+            let held = ctx.jobs[id].gpus_held.len();
             let want = plan[i];
             let delta = held.abs_diff(want);
             if want == 0 || delta > self.min_delta {
                 cluster.release(id);
-                out.push(Decision::Preempt { job: id });
+                txn.preempt(id);
             }
         }
         // Phase 2: start eligible pending jobs at their planned width.
         for (i, &id) in active.iter().enumerate() {
-            if state.jobs[id].state == crate::jobs::JobState::Running {
+            if ctx.jobs[id].state == crate::jobs::JobState::Running {
                 continue;
             }
-            let want = plan[i].min(state.cluster.total_gpus());
+            let want = plan[i].min(ctx.cluster.total_gpus());
             if want == 0 {
                 continue;
             }
             if let Some(gpus) = placement::consolidated_free(&cluster, want) {
                 cluster.allocate(id, &gpus);
-                out.push(Decision::Start { job: id, gpus, accum_step: 1 });
+                txn.start(id, gpus, 1);
             }
         }
-        out
+        txn
     }
 }
 

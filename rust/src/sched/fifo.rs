@@ -7,7 +7,7 @@
 //! are designed to relieve.
 
 use crate::cluster::placement;
-use crate::sim::{Decision, Policy, SimState};
+use crate::sched_core::{Event, Policy, SchedContext, Txn};
 
 #[derive(Debug, Default)]
 pub struct Fifo;
@@ -17,27 +17,27 @@ impl Policy for Fifo {
         "FIFO"
     }
 
-    fn schedule(&mut self, state: &SimState) -> Vec<Decision> {
-        let mut pending = state.pending();
+    fn on_event(&mut self, ctx: &SchedContext, _ev: Event) -> Txn {
+        let mut pending: Vec<usize> = ctx.pending().to_vec();
         pending.sort_by(|&a, &b| {
-            state.jobs[a]
+            ctx.jobs[a]
                 .spec
                 .arrival_s
-                .total_cmp(&state.jobs[b].spec.arrival_s)
+                .total_cmp(&ctx.jobs[b].spec.arrival_s)
                 .then(a.cmp(&b))
         });
-        let mut cluster = state.cluster.clone();
-        let mut out = Vec::new();
+        let mut cluster = ctx.cluster.clone();
+        let mut txn = Txn::new();
         for id in pending {
-            match placement::consolidated_free(&cluster, state.jobs[id].spec.gpus) {
+            match placement::consolidated_free(&cluster, ctx.jobs[id].spec.gpus) {
                 Some(gpus) => {
                     cluster.allocate(id, &gpus);
-                    out.push(Decision::Start { job: id, gpus, accum_step: 1 });
+                    txn.start(id, gpus, 1);
                 }
                 None => break, // HOL blocking
             }
         }
-        out
+        txn
     }
 }
 

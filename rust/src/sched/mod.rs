@@ -1,7 +1,10 @@
 //! The six scheduling policies evaluated in the paper (§VI-A Baselines):
 //! FIFO, SJF, Tiresias, Pollux-like elastic, SJF-FFS and the contribution,
-//! SJF-BSBF. All implement [`crate::sim::Policy`] and run unchanged on the
-//! simulator and (for the non-preemptive ones) the physical coordinator.
+//! SJF-BSBF. All implement the event-driven
+//! [`crate::sched_core::Policy`] — `on_event(&SchedContext, Event) -> Txn`
+//! — and run unchanged on the simulator and (for the non-preemptive ones)
+//! the physical coordinator, which share the `sched_core` validation and
+//! apply path. See DESIGN.md §9 for the policy-author guide.
 
 pub mod elastic;
 pub mod fifo;
@@ -17,7 +20,7 @@ pub use sjf_bsbf::SjfBsbf;
 pub use sjf_ffs::SjfFfs;
 pub use tiresias::Tiresias;
 
-use crate::sim::Policy;
+use crate::sched_core::Policy;
 
 /// All policy names, in the paper's table order.
 pub const POLICY_NAMES: [&str; 6] =

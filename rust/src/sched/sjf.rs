@@ -8,18 +8,19 @@
 //! blocked longer job whenever they fit.
 
 use crate::cluster::placement;
-use crate::sim::{Decision, Policy, SimState};
+use crate::sched_core::{Event, Policy, SchedContext, Txn};
 
 #[derive(Debug, Default)]
 pub struct Sjf;
 
 /// Pending ids sorted by remaining solo runtime (the SJF key), ties by id.
-pub(crate) fn pending_by_runtime(state: &SimState) -> Vec<usize> {
-    let mut pending = state.pending();
+/// Reads the context's incrementally maintained pending cache.
+pub(crate) fn pending_by_runtime(ctx: &SchedContext) -> Vec<usize> {
+    let mut pending: Vec<usize> = ctx.pending().to_vec();
     pending.sort_by(|&a, &b| {
-        state.jobs[a]
+        ctx.jobs[a]
             .remaining_solo_runtime()
-            .total_cmp(&state.jobs[b].remaining_solo_runtime())
+            .total_cmp(&ctx.jobs[b].remaining_solo_runtime())
             .then(a.cmp(&b))
     });
     pending
@@ -30,18 +31,18 @@ impl Policy for Sjf {
         "SJF"
     }
 
-    fn schedule(&mut self, state: &SimState) -> Vec<Decision> {
-        let mut cluster = state.cluster.clone();
-        let mut out = Vec::new();
-        for id in pending_by_runtime(state) {
+    fn on_event(&mut self, ctx: &SchedContext, _ev: Event) -> Txn {
+        let mut cluster = ctx.cluster.clone();
+        let mut txn = Txn::new();
+        for id in pending_by_runtime(ctx) {
             if let Some(gpus) =
-                placement::consolidated_free(&cluster, state.jobs[id].spec.gpus)
+                placement::consolidated_free(&cluster, ctx.jobs[id].spec.gpus)
             {
                 cluster.allocate(id, &gpus);
-                out.push(Decision::Start { job: id, gpus, accum_step: 1 });
+                txn.start(id, gpus, 1);
             }
         }
-        out
+        txn
     }
 }
 

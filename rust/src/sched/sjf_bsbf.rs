@@ -22,7 +22,7 @@ use std::collections::HashMap;
 use crate::cluster::{placement, GpuId};
 use crate::jobs::JobId;
 use crate::pair::{batch_size_scaling_opts, SharingConfig};
-use crate::sim::{Decision, Policy, SimState};
+use crate::sched_core::{Event, Policy, SchedContext, Txn};
 
 use super::sjf::pending_by_runtime;
 
@@ -57,21 +57,21 @@ impl Policy for SjfBsbf {
         "SJF-BSBF"
     }
 
-    fn schedule(&mut self, state: &SimState) -> Vec<Decision> {
+    fn on_event(&mut self, ctx: &SchedContext, _ev: Event) -> Txn {
         let t0 = std::time::Instant::now();
-        let mut cluster = state.cluster.clone();
-        let mut out = Vec::new();
+        let mut cluster = ctx.cluster.clone();
+        let mut txn = Txn::new();
         // Accumulation steps chosen for jobs started in this batch (their
         // memory footprint matters for later candidates in the same pass).
         let mut started_accum: HashMap<JobId, u32> = HashMap::new();
 
-        for id in pending_by_runtime(state) {
-            let need = state.jobs[id].spec.gpus;
+        for id in pending_by_runtime(ctx) {
+            let need = ctx.jobs[id].spec.gpus;
             // --- lines 6-7: exclusive start on free GPUs
             if let Some(gpus) = placement::consolidated_free(&cluster, need) {
                 cluster.allocate(id, &gpus);
                 started_accum.insert(id, 1);
-                out.push(Decision::Start { job: id, gpus, accum_step: 1 });
+                txn.start(id, gpus, 1);
                 continue;
             }
             // --- line 9 gate: free + one-job GPUs must cover the request
@@ -89,16 +89,16 @@ impl Policy for SjfBsbf {
             for (owner, gpus) in owners {
                 // A job we just started this pass has a hypothetical accum
                 // step; respect it for memory math.
-                let mut orec = state.jobs[owner].clone();
+                let mut orec = ctx.jobs[owner].clone();
                 if let Some(&a) = started_accum.get(&owner) {
                     orec.accum_step = a;
                 }
                 let Some(cfg) = batch_size_scaling_opts(
-                    &state.jobs[id],
+                    &ctx.jobs[id],
                     &orec,
                     need,
-                    state.cluster.config.gpu_mem_gb,
-                    &state.xi,
+                    ctx.cluster.config.gpu_mem_gb,
+                    &ctx.xi,
                     self.sweep_batches,
                 ) else {
                     continue;
@@ -141,10 +141,10 @@ impl Policy for SjfBsbf {
             }
             cluster.allocate(id, &chosen);
             started_accum.insert(id, accum);
-            out.push(Decision::Start { job: id, gpus: chosen, accum_step: accum });
+            txn.start(id, chosen, accum);
         }
         self.op_latencies_s.push(t0.elapsed().as_secs_f64());
-        out
+        txn
     }
 }
 

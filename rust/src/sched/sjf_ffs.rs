@@ -11,7 +11,7 @@ use std::collections::HashMap;
 
 use crate::cluster::placement;
 use crate::jobs::JobId;
-use crate::sim::{Decision, Policy, SimState};
+use crate::sched_core::{Event, Policy, SchedContext, Txn};
 
 use super::sjf::pending_by_runtime;
 
@@ -23,20 +23,20 @@ impl Policy for SjfFfs {
         "SJF-FFS"
     }
 
-    fn schedule(&mut self, state: &SimState) -> Vec<Decision> {
-        let mut cluster = state.cluster.clone();
-        let mut out = Vec::new();
+    fn on_event(&mut self, ctx: &SchedContext, _ev: Event) -> Txn {
+        let mut cluster = ctx.cluster.clone();
+        let mut txn = Txn::new();
         // Track hypothetical accumulation choices for memory math of jobs
         // we start within this same batch of decisions.
         let mut started_accum: HashMap<JobId, u32> = HashMap::new();
 
-        for id in pending_by_runtime(state) {
-            let need = state.jobs[id].spec.gpus;
+        for id in pending_by_runtime(ctx) {
+            let need = ctx.jobs[id].spec.gpus;
             // 1) plain SJF on free GPUs
             if let Some(gpus) = placement::consolidated_free(&cluster, need) {
                 cluster.allocate(id, &gpus);
                 started_accum.insert(id, 1);
-                out.push(Decision::Start { job: id, gpus, accum_step: 1 });
+                txn.start(id, gpus, 1);
                 continue;
             }
             // 2) first-fit over one-job GPUs, memory-checked only.
@@ -45,8 +45,8 @@ impl Policy for SjfFfs {
             if one_job.len() + free.len() < need {
                 continue;
             }
-            let prof = state.jobs[id].spec.profile();
-            let budget = state.cluster.config.gpu_mem_gb;
+            let prof = ctx.jobs[id].spec.profile();
+            let budget = ctx.cluster.config.gpu_mem_gb;
             // Largest sub-batch that fits next to the heaviest co-runner we
             // would take (first-fit scan, conservative single pass).
             let mut chosen: Vec<usize> = Vec::new();
@@ -56,7 +56,7 @@ impl Policy for SjfFfs {
                     break;
                 }
                 let other = cluster.slot(g).jobs[0];
-                let orec = &state.jobs[other];
+                let orec = &ctx.jobs[other];
                 let o_accum =
                     started_accum.get(&other).copied().unwrap_or(orec.accum_step);
                 let resident = orec
@@ -82,16 +82,16 @@ impl Policy for SjfFfs {
             }
             let Some(sub) = prof
                 .mem
-                .max_sub_batch(state.jobs[id].spec.batch, budget - worst_resident)
+                .max_sub_batch(ctx.jobs[id].spec.batch, budget - worst_resident)
             else {
                 continue;
             };
-            let accum = (state.jobs[id].spec.batch / sub).max(1);
+            let accum = (ctx.jobs[id].spec.batch / sub).max(1);
             cluster.allocate(id, &chosen);
             started_accum.insert(id, accum);
-            out.push(Decision::Start { job: id, gpus: chosen, accum_step: accum });
+            txn.start(id, chosen, accum);
         }
-        out
+        txn
     }
 }
 

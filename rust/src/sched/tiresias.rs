@@ -12,7 +12,7 @@
 
 use crate::cluster::placement;
 use crate::jobs::JobId;
-use crate::sim::{Decision, Policy, SimState};
+use crate::sched_core::{Event, Policy, SchedContext, Txn};
 
 #[derive(Debug)]
 pub struct Tiresias {
@@ -33,9 +33,9 @@ impl Default for Tiresias {
 
 impl Tiresias {
     /// 2D-LAS priority: (queue, arrival). Lower tuple = higher priority.
-    fn priority(&self, state: &SimState, id: JobId) -> (u8, f64, usize) {
-        let q = if state.service_gpu_s[id] < self.threshold_gpu_s { 0 } else { 1 };
-        (q, state.jobs[id].spec.arrival_s, id)
+    fn priority(&self, ctx: &SchedContext, id: JobId) -> (u8, f64, usize) {
+        let q = if ctx.service_gpu_s[id] < self.threshold_gpu_s { 0 } else { 1 };
+        (q, ctx.jobs[id].spec.arrival_s, id)
     }
 }
 
@@ -52,50 +52,51 @@ impl Policy for Tiresias {
         self.penalty_s
     }
 
-    fn schedule(&mut self, state: &SimState) -> Vec<Decision> {
-        // Rank everyone active (running + eligible pending) by 2D-LAS.
-        let mut active: Vec<JobId> = state.running();
-        active.extend(state.pending());
+    fn on_event(&mut self, ctx: &SchedContext, _ev: Event) -> Txn {
+        // Rank everyone active (running + eligible pending) by 2D-LAS,
+        // straight from the context's incremental caches.
+        let mut active: Vec<JobId> = ctx.running().to_vec();
+        active.extend_from_slice(ctx.pending());
         active.sort_by(|&a, &b| {
-            let pa = self.priority(state, a);
-            let pb = self.priority(state, b);
+            let pa = self.priority(ctx, a);
+            let pb = self.priority(ctx, b);
             pa.0.cmp(&pb.0).then(pa.1.total_cmp(&pb.1)).then(pa.2.cmp(&pb.2))
         });
 
         // Greedy exclusive admission in priority order.
-        let total = state.cluster.total_gpus();
+        let total = ctx.cluster.total_gpus();
         let mut budget = total;
         let mut should_run: Vec<JobId> = Vec::new();
         for &id in &active {
-            let need = state.jobs[id].spec.gpus;
+            let need = ctx.jobs[id].spec.gpus;
             if need <= budget {
                 should_run.push(id);
                 budget -= need;
             }
         }
 
-        let mut out = Vec::new();
-        let mut cluster = state.cluster.clone();
+        let mut txn = Txn::new();
+        let mut cluster = ctx.cluster.clone();
         // Preempt running jobs that lost their slot.
-        for id in state.running() {
+        for &id in ctx.running() {
             if !should_run.contains(&id) {
                 cluster.release(id);
-                out.push(Decision::Preempt { job: id });
+                txn.preempt(id);
             }
         }
         // Start admitted pending jobs on the freed/free GPUs.
         for &id in &should_run {
-            if state.jobs[id].state == crate::jobs::JobState::Running {
+            if ctx.jobs[id].state == crate::jobs::JobState::Running {
                 continue;
             }
             if let Some(gpus) =
-                placement::consolidated_free(&cluster, state.jobs[id].spec.gpus)
+                placement::consolidated_free(&cluster, ctx.jobs[id].spec.gpus)
             {
                 cluster.allocate(id, &gpus);
-                out.push(Decision::Start { job: id, gpus, accum_step: 1 });
+                txn.start(id, gpus, 1);
             }
         }
-        out
+        txn
     }
 }
 

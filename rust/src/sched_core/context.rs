@@ -1,0 +1,469 @@
+//! [`SchedContext`]: the world view shared by both scheduling backends.
+//!
+//! Owns the [`SimState`] plus incrementally-maintained index caches so
+//! that (a) policies read the pending/running sets as slices instead of
+//! re-allocating `Vec`s per call, and (b) the engine selects its next
+//! event from min-heaps in O(log n) instead of rescanning every running
+//! job per event. All mutation goes through the methods here and through
+//! [`SchedContext::apply`](super::txn) — the caches can never drift from
+//! the state they index.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::ops::Deref;
+
+use crate::cluster::Cluster;
+use crate::jobs::{JobId, JobRecord, JobState};
+use crate::perf::interference::InterferenceModel;
+use crate::sim::SimState;
+
+use super::Event;
+
+/// Eligibility slack shared with the legacy `SimState` scans: a time `t`
+/// counts as reached once `now + EPS >= t`.
+pub(super) const T_EPS: f64 = 1e-9;
+
+/// Total-order wrapper so event times can live in a [`BinaryHeap`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub(super) struct OrdF64(pub f64);
+
+impl Eq for OrdF64 {}
+
+impl PartialOrd for OrdF64 {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for OrdF64 {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+/// Insert into a sorted id set (no-op if present).
+pub(super) fn set_insert(v: &mut Vec<JobId>, id: JobId) {
+    if let Err(i) = v.binary_search(&id) {
+        v.insert(i, id);
+    }
+}
+
+/// Remove from a sorted id set (no-op if absent).
+pub(super) fn set_remove(v: &mut Vec<JobId>, id: JobId) {
+    if let Ok(i) = v.binary_search(&id) {
+        v.remove(i);
+    }
+}
+
+/// Sort an arrival queue by (arrival, id) descending, so the next arrival
+/// pops from the back and simultaneous arrivals pop in ascending id order.
+fn sort_arrivals_desc(state: &SimState, ids: &mut [JobId]) {
+    ids.sort_by(|&a, &b| {
+        let (aa, ab) = (state.jobs[a].spec.arrival_s, state.jobs[b].spec.arrival_s);
+        ab.total_cmp(&aa).then(b.cmp(&a))
+    });
+}
+
+/// The read view handed to policies and the single mutation path shared
+/// by the simulator engine and the physical coordinator.
+///
+/// Derefs to [`SimState`] for read access to jobs, cluster, interference
+/// model, `not_before` and `service_gpu_s`; the state itself is private
+/// so every transition flows through the validated methods below.
+#[derive(Debug, Clone)]
+pub struct SchedContext {
+    pub(super) state: SimState,
+    /// Eligible pending set: arrived, `Pending`/`Preempted`, past any
+    /// restart penalty. Sorted ascending by id.
+    pub(super) pending: Vec<JobId>,
+    /// Running set, sorted ascending by id.
+    pub(super) running: Vec<JobId>,
+    /// Waiting set (queue-time accrual): arrived and `Pending`/
+    /// `Preempted`, *including* jobs still under a restart penalty.
+    pub(super) waiting: Vec<JobId>,
+    /// Jobs not yet arrived, sorted by (arrival, id) descending so the
+    /// next arrival pops from the back.
+    pub(super) future_arrivals: Vec<JobId>,
+    /// Min-heap of `(not_before, job)` restart-penalty expiries.
+    pub(super) restart_heap: BinaryHeap<Reverse<(OrdF64, JobId)>>,
+    /// Min-heap of `(projected finish, job, epoch)`; entries whose epoch
+    /// is stale (the job's progress rate changed since) are skipped.
+    pub(super) finish_heap: BinaryHeap<Reverse<(OrdF64, JobId, u64)>>,
+    /// Per-job rate epoch, bumped whenever the job's iteration rate
+    /// changes (start, preempt, finish, or a co-runner change).
+    pub(super) rate_epoch: Vec<u64>,
+    /// Count of `Finished` jobs (O(1) `all_finished`).
+    pub(super) finished: usize,
+    /// Whether finish projections are maintained. True under the
+    /// simulated clock; the first `advance_wall` call turns it off —
+    /// projections are simulated-time quantities, meaningless against
+    /// the wall clock, and the coordinator never consults them.
+    pub(super) project_finishes: bool,
+}
+
+impl Deref for SchedContext {
+    type Target = SimState;
+
+    fn deref(&self) -> &SimState {
+        &self.state
+    }
+}
+
+impl SchedContext {
+    /// Fresh context at `now = 0` over unstarted (all-`Pending`) job
+    /// records. Every job — including those arriving at `t = 0` — is a
+    /// *future* arrival: its `Arrival` event fires on the first
+    /// `advance_*` call that reaches its arrival time, so backends see
+    /// one event per job, always.
+    pub fn new(cluster: Cluster, jobs: Vec<JobRecord>, xi: InterferenceModel) -> Self {
+        debug_assert!(jobs.iter().all(|j| j.state == JobState::Pending));
+        let n = jobs.len();
+        let state = SimState {
+            now: 0.0,
+            cluster,
+            jobs,
+            xi,
+            not_before: vec![0.0; n],
+            service_gpu_s: vec![0.0; n],
+        };
+        let mut future_arrivals: Vec<JobId> = (0..n).collect();
+        sort_arrivals_desc(&state, &mut future_arrivals);
+        SchedContext {
+            state,
+            pending: Vec::new(),
+            running: Vec::new(),
+            waiting: Vec::new(),
+            future_arrivals,
+            restart_heap: BinaryHeap::new(),
+            finish_heap: BinaryHeap::new(),
+            rate_epoch: vec![0; n],
+            finished: 0,
+            project_finishes: true,
+        }
+    }
+
+    /// Build a context over an arbitrary world snapshot (tests, benches,
+    /// synthetic mid-simulation states), rebuilding every cache. Unlike
+    /// [`SchedContext::new`], jobs whose arrival time has already passed
+    /// are indexed as pending/waiting immediately — no `Arrival` events
+    /// fire for them.
+    pub fn from_state(state: SimState) -> Self {
+        let n = state.jobs.len();
+        let mut ctx = SchedContext {
+            state,
+            pending: Vec::new(),
+            running: Vec::new(),
+            waiting: Vec::new(),
+            future_arrivals: Vec::new(),
+            restart_heap: BinaryHeap::new(),
+            finish_heap: BinaryHeap::new(),
+            rate_epoch: vec![0; n],
+            finished: 0,
+            project_finishes: true,
+        };
+        let now = ctx.state.now;
+        for id in 0..n {
+            let rec = &ctx.state.jobs[id];
+            match rec.state {
+                JobState::Running => ctx.running.push(id),
+                JobState::Finished => ctx.finished += 1,
+                JobState::Pending | JobState::Preempted => {
+                    if rec.spec.arrival_s <= now + T_EPS {
+                        ctx.waiting.push(id);
+                        if ctx.state.not_before[id] <= now + T_EPS {
+                            ctx.pending.push(id);
+                        } else {
+                            ctx.restart_heap
+                                .push(Reverse((OrdF64(ctx.state.not_before[id]), id)));
+                        }
+                    } else {
+                        ctx.future_arrivals.push(id);
+                    }
+                }
+            }
+        }
+        let mut future = std::mem::take(&mut ctx.future_arrivals);
+        sort_arrivals_desc(&ctx.state, &mut future);
+        ctx.future_arrivals = future;
+        let running = ctx.running.clone();
+        for id in running {
+            ctx.reproject(id);
+        }
+        ctx
+    }
+
+    /// Consume the context, returning the final world state.
+    pub fn into_state(self) -> SimState {
+        self.state
+    }
+
+    pub fn state(&self) -> &SimState {
+        &self.state
+    }
+
+    pub fn now(&self) -> f64 {
+        self.state.now
+    }
+
+    /// Jobs currently eligible for scheduling (arrived, not running, past
+    /// their restart penalty), ascending by id. Maintained incrementally —
+    /// no allocation, no scan.
+    pub fn pending(&self) -> &[JobId] {
+        &self.pending
+    }
+
+    /// Running jobs, ascending by id. Maintained incrementally.
+    pub fn running(&self) -> &[JobId] {
+        &self.running
+    }
+
+    /// Arrived jobs accruing queueing delay (eligible or penalty-held).
+    pub fn waiting(&self) -> &[JobId] {
+        &self.waiting
+    }
+
+    pub fn all_finished(&self) -> bool {
+        self.finished == self.state.jobs.len()
+    }
+
+    pub fn unfinished(&self) -> usize {
+        self.state.jobs.len() - self.finished
+    }
+
+    // ---------------------------------------------- next-event queries
+
+    /// Earliest future arrival, if any.
+    pub fn next_arrival(&self) -> Option<f64> {
+        self.future_arrivals.last().map(|&id| self.state.jobs[id].spec.arrival_s)
+    }
+
+    /// Earliest restart-penalty expiry among preempted jobs, if any.
+    pub fn next_restart(&self) -> Option<f64> {
+        self.restart_heap.peek().map(|&Reverse((OrdF64(t), _))| t)
+    }
+
+    /// Earliest projected completion among running jobs, if any.
+    ///
+    /// O(log n) amortized: the heap holds one live entry per running job
+    /// (re-pushed whenever a rate changes); stale entries are popped here.
+    /// Simulated-clock backends only — after the first `advance_wall`
+    /// call projections are no longer maintained and this returns `None`
+    /// (wall-mode completions come from real execution progress).
+    pub fn next_finish(&mut self) -> Option<f64> {
+        while let Some(&Reverse((OrdF64(t), id, epoch))) = self.finish_heap.peek() {
+            if epoch == self.rate_epoch[id] {
+                return Some(t);
+            }
+            let _ = self.finish_heap.pop();
+        }
+        None
+    }
+
+    // ------------------------------------------------ time advancement
+
+    /// Simulator clock: advance to `t`, integrating job progress at the
+    /// piecewise-constant Eq. 7 × ξ rates, accruing `service_gpu_s` and
+    /// `queued_s`, and firing `Arrival`/`RestartEligible` events due by
+    /// `t` into `events`.
+    pub fn advance_sim(&mut self, t: f64, events: &mut Vec<Event>) {
+        self.advance(t, true, events);
+    }
+
+    /// Wall clock (physical coordinator): advance to `t`, accruing
+    /// `service_gpu_s` and `queued_s` and firing events — but *not*
+    /// integrating `remaining_iters`, which real execution drives through
+    /// [`SchedContext::note_progress`].
+    pub fn advance_wall(&mut self, t: f64, events: &mut Vec<Event>) {
+        // Wall mode never consults next_finish(); stop maintaining (and
+        // accumulating) simulated-time projections from here on.
+        self.project_finishes = false;
+        self.finish_heap.clear();
+        self.advance(t, false, events);
+    }
+
+    fn advance(&mut self, t: f64, integrate: bool, events: &mut Vec<Event>) {
+        let dt = t - self.state.now;
+        if dt > 0.0 {
+            // Take the sets out so the loop can mutate `state` freely; the
+            // transitions below never touch them mid-loop.
+            let running = std::mem::take(&mut self.running);
+            for &id in &running {
+                if integrate {
+                    let it = self.state.effective_iter_time(id);
+                    let rec = &mut self.state.jobs[id];
+                    rec.remaining_iters = (rec.remaining_iters - dt / it).max(0.0);
+                }
+                let held = self.state.jobs[id].gpus_held.len() as f64;
+                self.state.service_gpu_s[id] += held * dt;
+            }
+            self.running = running;
+            let waiting = std::mem::take(&mut self.waiting);
+            for &id in &waiting {
+                self.state.jobs[id].queued_s += dt;
+            }
+            self.waiting = waiting;
+        }
+        self.state.now = t;
+
+        while let Some(&id) = self.future_arrivals.last() {
+            if self.state.jobs[id].spec.arrival_s > t + T_EPS {
+                break;
+            }
+            self.future_arrivals.pop();
+            set_insert(&mut self.waiting, id);
+            set_insert(&mut self.pending, id);
+            events.push(Event::Arrival { job: id });
+        }
+        while let Some(&Reverse((OrdF64(nb), id))) = self.restart_heap.peek() {
+            if nb > t + T_EPS {
+                break;
+            }
+            self.restart_heap.pop();
+            // Guards: the job may have restarted meanwhile (zero-penalty
+            // preempt + same-transaction start), or this entry may be
+            // stale because a newer preemption pushed a later expiry.
+            if matches!(self.state.jobs[id].state, JobState::Pending | JobState::Preempted)
+                && self.state.not_before[id] <= t + T_EPS
+            {
+                set_insert(&mut self.pending, id);
+                events.push(Event::RestartEligible { job: id });
+            }
+        }
+    }
+
+    // ------------------------------------------------ completion path
+
+    /// Finish every running job whose `remaining_iters <= eps`, firing a
+    /// `Completion` event per job (ascending id). Shared by the engine
+    /// (`eps = eps_iters`) and the coordinator (`eps = 0`).
+    pub fn collect_completions(&mut self, eps: f64, events: &mut Vec<Event>) {
+        let done: Vec<JobId> = self
+            .running
+            .iter()
+            .copied()
+            .filter(|&id| self.state.jobs[id].remaining_iters <= eps)
+            .collect();
+        for id in done {
+            self.finish_job(id);
+            events.push(Event::Completion { job: id });
+        }
+    }
+
+    /// Engine helper for floating-point finish-projection stalls.
+    ///
+    /// A projected completion can fire while integration leaves a
+    /// residual just above the engine's `eps_iters` (at large `now` the
+    /// round-off of `now + remaining·t_iter` undershoots by up to
+    /// ~ulp(now)/2). The projection was pushed once and nothing bumps the
+    /// job's rate epoch, so without intervention the next-event time is
+    /// pinned at `now` forever. For every live heap entry not strictly in
+    /// the future this either (a) re-pushes a fresh projection from the
+    /// current residual when that lands strictly after `now` — the
+    /// per-event recomputation the old rescan engine got for free — or
+    /// (b) completes the job through the normal completion path when the
+    /// residual's runtime is below f64 resolution at `now`, firing its
+    /// `Completion` into `events`.
+    pub fn resolve_finish_stall(&mut self, events: &mut Vec<Event>) {
+        while let Some(t) = self.next_finish() {
+            if t > self.state.now {
+                break;
+            }
+            let Some(&std::cmp::Reverse((_, id, _))) = self.finish_heap.peek() else {
+                break;
+            };
+            let rem_t = self.state.jobs[id].remaining_iters
+                * self.state.effective_iter_time(id);
+            if self.state.now + rem_t > self.state.now {
+                self.reproject(id);
+            } else {
+                self.finish_job(id);
+                events.push(Event::Completion { job: id });
+            }
+        }
+    }
+
+    fn finish_job(&mut self, id: JobId) {
+        let co = self.state.cluster.co_runners(id);
+        self.state.cluster.release(id);
+        let rec = &mut self.state.jobs[id];
+        rec.remaining_iters = 0.0;
+        rec.state = JobState::Finished;
+        rec.finish_s = Some(self.state.now);
+        rec.gpus_held.clear();
+        set_remove(&mut self.running, id);
+        self.finished += 1;
+        self.rate_epoch[id] += 1;
+        for c in co {
+            self.reproject(c);
+        }
+    }
+
+    /// Physical mode: record one really-executed iteration of `job`.
+    /// Returns false (and changes nothing) if the job is not running or
+    /// already done — late progress reports from a worker are dropped,
+    /// exactly as before.
+    pub fn note_progress(&mut self, job: JobId) -> bool {
+        let Some(rec) = self.state.jobs.get_mut(job) else { return false };
+        if rec.state == JobState::Running && rec.remaining_iters > 0.0 {
+            rec.remaining_iters -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+
+    // ------------------------------------------------ cache plumbing
+
+    /// Invalidate `id`'s finish projection and, if it is running, push a
+    /// fresh one at the current rate.
+    pub(super) fn reproject(&mut self, id: JobId) {
+        self.rate_epoch[id] += 1;
+        if self.project_finishes && self.state.jobs[id].state == JobState::Running {
+            let t = self.state.now
+                + self.state.jobs[id].remaining_iters * self.state.effective_iter_time(id);
+            self.finish_heap.push(Reverse((OrdF64(t), id, self.rate_epoch[id])));
+        }
+    }
+
+    /// Debug check: the incremental caches must agree with a fresh scan
+    /// of the state (used under `debug_assert!` after every apply).
+    pub fn cache_integrity(&self) -> Result<(), String> {
+        if self.pending != self.state.pending() {
+            return Err(format!(
+                "pending cache {:?} != scan {:?}",
+                self.pending,
+                self.state.pending()
+            ));
+        }
+        if self.running != self.state.running() {
+            return Err(format!(
+                "running cache {:?} != scan {:?}",
+                self.running,
+                self.state.running()
+            ));
+        }
+        let waiting: Vec<JobId> = self
+            .state
+            .jobs
+            .iter()
+            .enumerate()
+            .filter(|(_, j)| {
+                matches!(j.state, JobState::Pending | JobState::Preempted)
+                    && j.spec.arrival_s <= self.state.now + T_EPS
+            })
+            .map(|(id, _)| id)
+            .collect();
+        if self.waiting != waiting {
+            return Err(format!(
+                "waiting cache {:?} != scan {waiting:?}",
+                self.waiting
+            ));
+        }
+        let finished =
+            self.state.jobs.iter().filter(|j| j.state == JobState::Finished).count();
+        if finished != self.finished {
+            return Err(format!("finished {} != scan {finished}", self.finished));
+        }
+        Ok(())
+    }
+}

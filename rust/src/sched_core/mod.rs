@@ -1,0 +1,93 @@
+//! `sched_core` — the one event-driven scheduling API shared by the
+//! simulator ([`crate::sim::engine`]) and the physical coordinator
+//! ([`crate::coordinator`]).
+//!
+//! The paper's validation story (§VI: simulator within 5% of the physical
+//! testbed) only holds if both backends run the *same* scheduling core.
+//! This module is that core, split into three pieces:
+//!
+//! * **[`Event`]** — what happened: a job [`Event::Arrival`], a job
+//!   [`Event::Completion`], a preempted job becoming
+//!   [`Event::RestartEligible`] again, or a periodic [`Event::Tick`].
+//!   Backends translate their native notion of time (simulated event time
+//!   vs wall clock) into this one vocabulary.
+//! * **[`SchedContext`]** — the read view handed to policies. It owns the
+//!   world state ([`crate::sim::SimState`], reachable via `Deref`) plus
+//!   *incrementally maintained* index caches: the eligible-pending set,
+//!   the running set, the waiting set (queue-time accrual), a min-heap of
+//!   projected finish times and a min-heap of restart-penalty expiries.
+//!   Policies read `ctx.pending()` / `ctx.running()` as slices instead of
+//!   re-deriving them with an O(n) scan per call, and the engine picks its
+//!   next event in O(log n) instead of rescanning every running job.
+//! * **[`Txn`]** — the write path. A policy returns a transaction of
+//!   [`Decision`]s from [`Policy::on_event`]; [`SchedContext::apply`] is
+//!   the *single* place that validates (gang non-empty and within share
+//!   capacity, accumulation-step divisibility, Eq. 9 memory budget, job
+//!   state machine, arrival and `not_before` gates) and applies them —
+//!   for both backends. A buggy policy gets an error, never corrupted
+//!   cluster state, in simulation and in physical mode alike.
+//!
+//! See DESIGN.md "§9 sched_core — writing a policy" for the authoring
+//! guide and the exact guarantees.
+
+pub mod context;
+pub mod txn;
+
+pub use context::SchedContext;
+pub use txn::{ApplyReport, Decision, Txn};
+
+use crate::jobs::JobId;
+
+/// What the backend observed since the last policy invocation. Policies
+/// receive exactly one event per [`Policy::on_event`] call; simultaneous
+/// events (e.g. two arrivals at the same instant) are delivered as
+/// consecutive calls at the same `ctx.now()`, completions first, then
+/// arrivals, then restart eligibilities, then the tick.
+///
+/// An event describes what *happened*, not what is actionable now: a
+/// transaction applied by an earlier same-instant delivery may already
+/// have started the subject of a queued `Arrival`/`RestartEligible`.
+/// Before issuing a `Start`, always confirm the job is still in
+/// [`SchedContext::pending`] (the full-pass policies in `sched/` get
+/// this for free by planning from `ctx.pending()` on every call).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Event {
+    /// `job` arrived and joined the eligible pending set (at delivery
+    /// time it may already have been started by an earlier same-instant
+    /// transaction — re-check [`SchedContext::pending`]).
+    Arrival { job: JobId },
+    /// `job` finished all its iterations; its GPUs are free again.
+    Completion { job: JobId },
+    /// `job`'s restart penalty expired and it rejoined the pending set
+    /// (same caveat as `Arrival`: it may have been restarted by an
+    /// earlier same-instant transaction).
+    RestartEligible { job: JobId },
+    /// Periodic invocation, fired every [`Policy::tick_interval`] seconds.
+    Tick,
+}
+
+/// A scheduling policy: a named, stateful event handler.
+///
+/// `on_event` must be a *pure decision function* of `(self, ctx, ev)`:
+/// it reads the world through `ctx` and returns a [`Txn`] of decisions,
+/// which the backend validates and applies through the shared
+/// [`SchedContext::apply`] path. Policies never mutate the world directly,
+/// so a scheduling bug cannot corrupt cluster invariants in either
+/// backend.
+pub trait Policy {
+    fn name(&self) -> &'static str;
+
+    /// Handle one event. Return an empty [`Txn`] to do nothing.
+    fn on_event(&mut self, ctx: &SchedContext, ev: Event) -> Txn;
+
+    /// Periodic invocation interval, e.g. for Tiresias/elastic
+    /// reallocation. `None` (default) means event-driven only.
+    fn tick_interval(&self) -> Option<f64> {
+        None
+    }
+
+    /// Seconds a preempted job loses before it can restart.
+    fn preemption_penalty(&self) -> f64 {
+        30.0
+    }
+}

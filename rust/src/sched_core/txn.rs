@@ -1,0 +1,239 @@
+//! The validated transaction layer: [`Txn`] is what a policy returns,
+//! [`SchedContext::apply`] is the single place — for the simulator *and*
+//! the physical coordinator — where decisions are checked against every
+//! scheduling invariant and turned into state transitions.
+//!
+//! Invariants enforced per [`Decision::Start`]:
+//! * the job id exists and is `Pending`/`Preempted` (state machine),
+//! * the job has arrived (`arrival_s <= now`),
+//! * any restart penalty has expired (`not_before <= now`),
+//! * the gang is non-empty, in range, duplicate-free, and every granted
+//!   GPU has a free share slot (Eq. 9's C cap) not already held by the
+//!   job,
+//! * the accumulation step divides the batch (or is 1),
+//! * the Eq. 9 memory budget holds on every granted GPU given all
+//!   co-residents' sub-batches.
+//!
+//! Per [`Decision::Preempt`]: the job must be `Running`; it re-queues
+//! with `not_before = now + penalty`.
+//!
+//! Decisions apply sequentially: each is validated against the state left
+//! by the previous ones, so a transaction that double-starts a job or
+//! overfills a GPU fails on the offending decision with the cluster in a
+//! consistent (partially-applied) state — the backend treats any error as
+//! a fatal policy bug, exactly as the old engine did.
+
+use anyhow::{bail, Context, Result};
+
+use crate::cluster::GpuId;
+use crate::jobs::{JobId, JobState};
+
+use super::context::{set_insert, set_remove, OrdF64, SchedContext, T_EPS};
+
+/// Scheduling action requested by a policy.
+#[derive(Debug, Clone)]
+pub enum Decision {
+    /// Gang-start a pending/preempted job on explicit GPUs with the given
+    /// gradient-accumulation step (sub-batch = B / accum_step).
+    Start { job: JobId, gpus: Vec<GpuId>, accum_step: u32 },
+    /// Preempt a running job (preemptive policies only); it re-queues and
+    /// may not restart before `now + penalty` (checkpoint/restore cost).
+    Preempt { job: JobId },
+}
+
+/// An ordered batch of decisions produced by one [`super::Policy::on_event`]
+/// call. Built with [`Txn::start`]/[`Txn::preempt`]; applied — and only
+/// applied — through [`SchedContext::apply`].
+#[derive(Debug, Clone, Default)]
+pub struct Txn {
+    ops: Vec<Decision>,
+}
+
+impl Txn {
+    pub fn new() -> Self {
+        Txn { ops: Vec::new() }
+    }
+
+    pub fn start(&mut self, job: JobId, gpus: Vec<GpuId>, accum_step: u32) {
+        self.ops.push(Decision::Start { job, gpus, accum_step });
+    }
+
+    pub fn preempt(&mut self, job: JobId) {
+        self.ops.push(Decision::Preempt { job });
+    }
+
+    pub fn ops(&self) -> &[Decision] {
+        &self.ops
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// Whether any decision preempts — the physical coordinator rejects
+    /// such transactions up front (it cannot checkpoint parameters).
+    pub fn has_preempt(&self) -> bool {
+        self.ops.iter().any(|d| matches!(d, Decision::Preempt { .. }))
+    }
+}
+
+/// What a successfully applied transaction did.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ApplyReport {
+    pub starts: u64,
+    pub preemptions: u64,
+}
+
+impl SchedContext {
+    /// Validate and apply `txn`, decision by decision. Errors indicate a
+    /// buggy policy; the offending decision is *not* applied.
+    ///
+    /// This is the only write path for policy decisions in both backends
+    /// — the simulator engine and the physical coordinator call exactly
+    /// this method, so a malformed decision is rejected identically in
+    /// simulation and in physical mode.
+    pub fn apply(&mut self, txn: &Txn, penalty: f64) -> Result<ApplyReport> {
+        let mut report = ApplyReport::default();
+        for d in txn.ops() {
+            self.apply_one(d, penalty, &mut report)
+                .context("applying policy decision")?;
+        }
+        debug_assert!(self.state.cluster.check_invariants().is_ok());
+        debug_assert!(self.cache_integrity().is_ok(), "{:?}", self.cache_integrity());
+        Ok(report)
+    }
+
+    fn apply_one(
+        &mut self,
+        decision: &Decision,
+        penalty: f64,
+        report: &mut ApplyReport,
+    ) -> Result<()> {
+        match decision {
+            Decision::Start { job, gpus, accum_step } => {
+                self.apply_start(*job, gpus, *accum_step)?;
+                report.starts += 1;
+            }
+            Decision::Preempt { job } => {
+                self.apply_preempt(*job, penalty)?;
+                report.preemptions += 1;
+            }
+        }
+        Ok(())
+    }
+
+    fn apply_start(&mut self, job: JobId, gpus: &[GpuId], accum_step: u32) -> Result<()> {
+        let now = self.state.now;
+        let Some(rec) = self.state.jobs.get(job) else {
+            bail!("Start({job}): unknown job id");
+        };
+        if !matches!(rec.state, JobState::Pending | JobState::Preempted) {
+            bail!("Start({job}): job is {:?}", rec.state);
+        }
+        if rec.spec.arrival_s > now + T_EPS {
+            bail!("Start({job}): job has not arrived yet");
+        }
+        if self.state.not_before[job] > now + T_EPS {
+            bail!("Start({job}): restart penalty until {}", self.state.not_before[job]);
+        }
+        if gpus.is_empty() {
+            bail!("Start({job}): empty gang");
+        }
+        for (i, &g) in gpus.iter().enumerate() {
+            if g >= self.state.cluster.total_gpus() {
+                bail!("Start({job}): GPU {g} out of range");
+            }
+            if gpus[..i].contains(&g) {
+                bail!("Start({job}): GPU {g} granted twice in one gang");
+            }
+            let slot = self.state.cluster.slot(g);
+            if slot.jobs.contains(&job) {
+                bail!("Start({job}): job already holds GPU {g}");
+            }
+            if slot.jobs.len() >= self.state.cluster.config.max_share {
+                bail!(
+                    "Start({job}): GPU {g} over share capacity C = {}",
+                    self.state.cluster.config.max_share
+                );
+            }
+        }
+        if accum_step == 0 || (rec.spec.batch % accum_step != 0 && accum_step != 1) {
+            // Powers-of-two sweep guarantees divisibility for p2 batches;
+            // reject anything else outright.
+            bail!("Start({job}): invalid accumulation step {accum_step}");
+        }
+        // Memory feasibility on every granted GPU (Eq. 9 + footprint).
+        let my_mem =
+            rec.spec.profile().mem.mem_gb(rec.spec.batch as f64 / accum_step as f64);
+        for &g in gpus {
+            let mut used = my_mem;
+            for &other in &self.state.cluster.slot(g).jobs {
+                let o = &self.state.jobs[other];
+                used += o
+                    .spec
+                    .profile()
+                    .mem
+                    .mem_gb(o.spec.batch as f64 / o.accum_step as f64);
+            }
+            if used > self.state.cluster.config.gpu_mem_gb + 1e-9 {
+                bail!("Start({job}): GPU {g} memory over budget ({used:.2} GB)");
+            }
+        }
+        self.state.cluster.allocate(job, gpus);
+        let rec = &mut self.state.jobs[job];
+        rec.state = JobState::Running;
+        rec.accum_step = accum_step;
+        rec.gpus_held = gpus.to_vec();
+        if rec.first_start_s.is_none() {
+            rec.first_start_s = Some(now);
+        }
+        set_remove(&mut self.pending, job);
+        set_remove(&mut self.waiting, job);
+        set_insert(&mut self.running, job);
+        self.reproject(job);
+        for co in self.state.cluster.co_runners(job) {
+            self.reproject(co);
+        }
+        Ok(())
+    }
+
+    fn apply_preempt(&mut self, job: JobId, penalty: f64) -> Result<()> {
+        let Some(rec) = self.state.jobs.get(job) else {
+            bail!("Preempt({job}): unknown job id");
+        };
+        if rec.state != JobState::Running {
+            bail!("Preempt({job}): job is {:?}", rec.state);
+        }
+        let co = self.state.cluster.co_runners(job);
+        self.state.cluster.release(job);
+        let rec = &mut self.state.jobs[job];
+        rec.state = JobState::Preempted;
+        rec.gpus_held.clear();
+        let not_before = self.state.now + penalty;
+        self.state.not_before[job] = not_before;
+        set_remove(&mut self.running, job);
+        set_insert(&mut self.waiting, job);
+        self.rate_epoch[job] += 1;
+        if not_before <= self.state.now + T_EPS {
+            // Zero (or sub-epsilon) penalty: immediately schedulable again
+            // — including by a later decision in this same transaction.
+            set_insert(&mut self.pending, job);
+        }
+        // Always queue the expiry so the backend delivers the documented
+        // RestartEligible event (immediately, for a zero penalty — the
+        // pop's state guard drops it if the job restarted in the
+        // meantime). Without this a zero-penalty preempt would re-queue
+        // the job silently and, with no other events due, the engine
+        // would report a deadlock on a well-behaved workload.
+        self.restart_heap
+            .push(std::cmp::Reverse((OrdF64(not_before), job)));
+        for c in co {
+            self.reproject(c);
+        }
+        Ok(())
+    }
+}

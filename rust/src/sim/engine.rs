@@ -1,13 +1,20 @@
 //! The discrete-event engine: advances time between events, integrates job
-//! progress at piecewise-constant rates, applies policy decisions, and
-//! enforces cluster/memory invariants on every transition.
+//! progress at piecewise-constant rates, delivers typed [`Event`]s to the
+//! policy, and applies the returned [`Txn`]s through the shared
+//! [`sched_core`](crate::sched_core) validation layer.
+//!
+//! Event selection is O(log n) per event: next arrival comes from the
+//! context's sorted arrival queue, next completion from its lazily
+//! invalidated finish-time min-heap, next restart eligibility from its
+//! penalty min-heap — replacing the old per-event O(running + n) rescan.
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
-use super::{Decision, Policy, SimState};
+use super::{Event, Policy, SimState};
 use crate::cluster::{Cluster, ClusterConfig};
-use crate::jobs::{JobRecord, JobSpec, JobState};
+use crate::jobs::{JobRecord, JobSpec};
 use crate::perf::interference::InterferenceModel;
+use crate::sched_core::SchedContext;
 
 /// Engine tuning knobs.
 #[derive(Debug, Clone, Copy)]
@@ -30,7 +37,7 @@ pub struct SimOutcome {
     pub jobs: Vec<JobRecord>,
     /// Total simulated span from first arrival to last completion.
     pub makespan_s: f64,
-    /// Number of policy invocations (scheduling operations).
+    /// Number of policy invocations (events delivered).
     pub policy_calls: u64,
     /// Number of preemptions performed.
     pub preemptions: u64,
@@ -59,117 +66,89 @@ pub fn run_with(
             bail!("job {} requests {} GPUs > cluster {}", j.id, j.gpus, cluster_cfg.total_gpus());
         }
     }
-    let mut state = SimState {
-        now: 0.0,
-        cluster: Cluster::new(cluster_cfg),
-        jobs: trace.iter().cloned().map(JobRecord::new).collect(),
+    let mut ctx = SchedContext::new(
+        Cluster::new(cluster_cfg),
+        trace.iter().cloned().map(JobRecord::new).collect(),
         xi,
-        not_before: vec![0.0; trace.len()],
-        service_gpu_s: vec![0.0; trace.len()],
-    };
-    let mut arrivals: Vec<usize> = (0..trace.len()).collect();
-    arrivals.sort_by(|&a, &b| trace[a].arrival_s.total_cmp(&trace[b].arrival_s));
-    let mut next_arrival_idx = 0usize;
+    );
+    let penalty = policy.preemption_penalty();
     let mut next_tick = policy.tick_interval();
     let mut policy_calls = 0u64;
     let mut preemptions = 0u64;
+    // Events that fired at the current instant, in delivery order:
+    // completions, then arrivals, then restart eligibilities, then tick.
+    let mut events: Vec<Event> = Vec::new();
+    let mut clock_events: Vec<Event> = Vec::new();
 
     loop {
-        // ---- choose the next event time -----------------------------------
+        // ---- choose the next event time (heap peeks, O(log n)) ------------
         let mut t_next = f64::INFINITY;
-        if next_arrival_idx < arrivals.len() {
-            t_next = t_next.min(trace[arrivals[next_arrival_idx]].arrival_s);
+        if let Some(t) = ctx.next_arrival() {
+            t_next = t_next.min(t);
         }
         if let Some(tick) = next_tick {
             t_next = t_next.min(tick);
         }
-        for id in state.running() {
-            let it = state.effective_iter_time(id);
-            let finish = state.now + state.jobs[id].remaining_iters * it;
-            t_next = t_next.min(finish);
+        if let Some(t) = ctx.next_finish() {
+            t_next = t_next.min(t);
         }
-        for (id, j) in state.jobs.iter().enumerate() {
-            if matches!(j.state, JobState::Preempted | JobState::Pending)
-                && j.spec.arrival_s <= state.now
-                && state.not_before[id] > state.now
-            {
-                t_next = t_next.min(state.not_before[id]);
-            }
+        if let Some(t) = ctx.next_restart() {
+            t_next = t_next.min(t);
         }
         if !t_next.is_finite() {
             // No arrivals, no running jobs, nothing to wait for.
-            if state.jobs.iter().all(|j| j.state == JobState::Finished) {
+            if ctx.all_finished() {
                 break;
             }
             bail!(
                 "deadlock: {} unfinished jobs but no future events (policy never scheduled them?)",
-                state.jobs.iter().filter(|j| j.state != JobState::Finished).count()
+                ctx.unfinished()
             );
         }
         if t_next > engine_cfg.max_sim_s {
             bail!("simulation exceeded max_sim_s = {}", engine_cfg.max_sim_s);
         }
 
-        // ---- integrate progress over [now, t_next] ------------------------
-        let dt = t_next - state.now;
-        if dt > 0.0 {
-            for id in state.running() {
-                let it = state.effective_iter_time(id);
-                let rec = &mut state.jobs[id];
-                rec.remaining_iters = (rec.remaining_iters - dt / it).max(0.0);
-                state.service_gpu_s[id] += rec.gpus_held.len() as f64 * dt;
-            }
-            for j in state.jobs.iter_mut() {
-                if matches!(j.state, JobState::Pending | JobState::Preempted)
-                    && j.spec.arrival_s <= state.now
-                {
-                    j.queued_s += dt;
-                }
-            }
-        }
-        state.now = t_next;
+        // ---- advance: integrate progress, fire arrivals/restarts ----------
+        clock_events.clear();
+        ctx.advance_sim(t_next, &mut clock_events);
 
-        // ---- process arrivals ----------------------------------------------
-        while next_arrival_idx < arrivals.len()
-            && trace[arrivals[next_arrival_idx]].arrival_s <= state.now + 1e-9
-        {
-            next_arrival_idx += 1;
-        }
-
-        // ---- process completions -------------------------------------------
-        for id in state.running() {
-            if state.jobs[id].remaining_iters <= engine_cfg.eps_iters {
-                state.cluster.release(id);
-                let rec = &mut state.jobs[id];
-                rec.remaining_iters = 0.0;
-                rec.state = JobState::Finished;
-                rec.finish_s = Some(state.now);
-                rec.gpus_held.clear();
-            }
-        }
-
-        // ---- advance tick clock --------------------------------------------
+        // ---- completions, then the clock events, then the tick ------------
+        events.clear();
+        ctx.collect_completions(engine_cfg.eps_iters, &mut events);
+        events.append(&mut clock_events);
         if let Some(tick) = next_tick {
-            if tick <= state.now + 1e-9 {
+            if tick <= ctx.now() + 1e-9 {
                 next_tick = Some(tick + policy.tick_interval().unwrap());
+                events.push(Event::Tick);
+            }
+        }
+        if events.is_empty() {
+            // A finish projection fired but round-off left the job's
+            // residual above eps_iters: refresh the projection (or finish
+            // the job if its residual runtime is below clock resolution)
+            // so the next-event time makes forward progress.
+            ctx.resolve_finish_stall(&mut events);
+            if events.is_empty() {
+                continue;
             }
         }
 
-        // ---- invoke the policy ---------------------------------------------
-        let decisions = policy.schedule(&state);
-        policy_calls += 1;
-        for d in decisions {
-            apply(&mut state, d, policy.preemption_penalty(), &mut preemptions)
-                .context("applying policy decision")?;
+        // ---- deliver each event; apply through the shared txn layer -------
+        for &ev in &events {
+            let txn = policy.on_event(&ctx, ev);
+            policy_calls += 1;
+            let report = ctx.apply(&txn, penalty)?;
+            preemptions += report.preemptions;
         }
-        debug_assert!(state.cluster.check_invariants().is_ok());
 
-        if state.jobs.iter().all(|j| j.state == JobState::Finished) {
+        if ctx.all_finished() {
             break;
         }
     }
 
     let first_arrival = trace.iter().map(|j| j.arrival_s).fold(f64::INFINITY, f64::min);
+    let state: SimState = ctx.into_state();
     let last_finish = state
         .jobs
         .iter()
@@ -183,80 +162,13 @@ pub fn run_with(
     })
 }
 
-/// Validate + apply one decision. Errors indicate a buggy policy.
-fn apply(
-    state: &mut SimState,
-    decision: Decision,
-    penalty: f64,
-    preemptions: &mut u64,
-) -> Result<()> {
-    match decision {
-        Decision::Start { job, gpus, accum_step } => {
-            let rec = &state.jobs[job];
-            if !matches!(rec.state, JobState::Pending | JobState::Preempted) {
-                bail!("Start({job}): job is {:?}", rec.state);
-            }
-            if rec.spec.arrival_s > state.now + 1e-9 {
-                bail!("Start({job}): job has not arrived yet");
-            }
-            if state.not_before[job] > state.now + 1e-9 {
-                bail!("Start({job}): restart penalty until {}", state.not_before[job]);
-            }
-            if gpus.is_empty() {
-                bail!("Start({job}): empty gang");
-            }
-            if accum_step == 0 || (rec.spec.batch % accum_step != 0 && accum_step != 1) {
-                // Powers-of-two sweep guarantees divisibility for p2 batches;
-                // reject anything else outright.
-                bail!("Start({job}): invalid accumulation step {accum_step}");
-            }
-            // Memory feasibility on every granted GPU (Eq. 9 + footprint).
-            let my_mem =
-                rec.spec.profile().mem.mem_gb(rec.spec.batch as f64 / accum_step as f64);
-            for &g in &gpus {
-                let mut used = my_mem;
-                for &other in &state.cluster.slot(g).jobs {
-                    let o = &state.jobs[other];
-                    used += o
-                        .spec
-                        .profile()
-                        .mem
-                        .mem_gb(o.spec.batch as f64 / o.accum_step as f64);
-                }
-                if used > state.cluster.config.gpu_mem_gb + 1e-9 {
-                    bail!("Start({job}): GPU {g} memory over budget ({used:.2} GB)");
-                }
-            }
-            state.cluster.allocate(job, &gpus);
-            let rec = &mut state.jobs[job];
-            rec.state = JobState::Running;
-            rec.accum_step = accum_step;
-            rec.gpus_held = gpus;
-            if rec.first_start_s.is_none() {
-                rec.first_start_s = Some(state.now);
-            }
-        }
-        Decision::Preempt { job } => {
-            let rec = &state.jobs[job];
-            if rec.state != JobState::Running {
-                bail!("Preempt({job}): job is {:?}", rec.state);
-            }
-            state.cluster.release(job);
-            let rec = &mut state.jobs[job];
-            rec.state = JobState::Preempted;
-            rec.gpus_held.clear();
-            state.not_before[job] = state.now + penalty;
-            *preemptions += 1;
-        }
-    }
-    Ok(())
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::cluster::placement;
+    use crate::jobs::JobState;
     use crate::perf::profiles::ModelKind;
+    use crate::sched_core::Txn;
 
     /// Minimal exclusive FIFO used to exercise the engine itself.
     struct MiniFifo;
@@ -264,23 +176,23 @@ mod tests {
         fn name(&self) -> &'static str {
             "mini-fifo"
         }
-        fn schedule(&mut self, state: &SimState) -> Vec<Decision> {
-            let mut pending = state.pending();
+        fn on_event(&mut self, ctx: &SchedContext, _ev: Event) -> Txn {
+            let mut pending: Vec<usize> = ctx.pending().to_vec();
             pending.sort_by(|&a, &b| {
-                state.jobs[a].spec.arrival_s.total_cmp(&state.jobs[b].spec.arrival_s)
+                ctx.jobs[a].spec.arrival_s.total_cmp(&ctx.jobs[b].spec.arrival_s)
             });
-            let mut cluster = state.cluster.clone();
-            let mut out = Vec::new();
+            let mut cluster = ctx.cluster.clone();
+            let mut txn = Txn::new();
             for id in pending {
-                let need = state.jobs[id].spec.gpus;
+                let need = ctx.jobs[id].spec.gpus;
                 if let Some(gpus) = placement::consolidated_free(&cluster, need) {
                     cluster.allocate(id, &gpus);
-                    out.push(Decision::Start { job: id, gpus, accum_step: 1 });
+                    txn.start(id, gpus, 1);
                 } else {
                     break; // strict FIFO HOL blocking
                 }
             }
-            out
+            txn
         }
     }
 
@@ -350,8 +262,8 @@ mod tests {
             fn name(&self) -> &'static str {
                 "nothing"
             }
-            fn schedule(&mut self, _: &SimState) -> Vec<Decision> {
-                vec![]
+            fn on_event(&mut self, _: &SchedContext, _: Event) -> Txn {
+                Txn::new()
             }
         }
         let trace = vec![job(0, 1, 10, 0.0)];
@@ -372,17 +284,13 @@ mod tests {
             fn name(&self) -> &'static str {
                 "bad"
             }
-            fn schedule(&mut self, state: &SimState) -> Vec<Decision> {
-                state
-                    .pending()
-                    .into_iter()
-                    .map(|id| Decision::Start { job: id, gpus: vec![0], accum_step: 1 })
-                    .chain(std::iter::once(Decision::Start {
-                        job: 0,
-                        gpus: vec![0],
-                        accum_step: 1,
-                    }))
-                    .collect()
+            fn on_event(&mut self, ctx: &SchedContext, _: Event) -> Txn {
+                let mut txn = Txn::new();
+                for &id in ctx.pending() {
+                    txn.start(id, vec![0], 1);
+                }
+                txn.start(0, vec![0], 1);
+                txn
             }
         }
         let trace = vec![job(0, 1, 10, 0.0)];
@@ -393,5 +301,156 @@ mod tests {
             &mut DoubleStart
         )
         .is_err());
+    }
+
+    #[test]
+    fn events_fire_in_documented_order() {
+        // Job 1 arrives exactly when job 0 finishes: the policy must see
+        // the completion event before the arrival event, both at the same
+        // instant, and the state at the completion event must already show
+        // job 1 as pending (all transitions precede all deliveries).
+        struct Recorder {
+            seen: Vec<Event>,
+        }
+        impl Policy for Recorder {
+            fn name(&self) -> &'static str {
+                "recorder"
+            }
+            fn on_event(&mut self, ctx: &SchedContext, ev: Event) -> Txn {
+                self.seen.push(ev);
+                let mut txn = Txn::new();
+                // Exclusive FIFO so the run terminates.
+                let mut cluster = ctx.cluster.clone();
+                for &id in ctx.pending() {
+                    if let Some(gpus) =
+                        placement::consolidated_free(&cluster, ctx.jobs[id].spec.gpus)
+                    {
+                        cluster.allocate(id, &gpus);
+                        txn.start(id, gpus, 1);
+                    }
+                }
+                txn
+            }
+        }
+        let solo = job(0, 16, 1000, 0.0).solo_runtime(1);
+        let trace = vec![job(0, 16, 1000, 0.0), job(1, 4, 10, solo)];
+        let mut rec = Recorder { seen: Vec::new() };
+        run(ClusterConfig::physical(), &trace, InterferenceModel::new(), &mut rec)
+            .unwrap();
+        let c0 = rec
+            .seen
+            .iter()
+            .position(|e| *e == Event::Completion { job: 0 })
+            .expect("completion delivered");
+        let a1 = rec
+            .seen
+            .iter()
+            .position(|e| *e == Event::Arrival { job: 1 })
+            .expect("arrival delivered");
+        assert!(c0 < a1, "completion must be delivered before the same-instant arrival");
+        assert_eq!(rec.seen[0], Event::Arrival { job: 0 });
+    }
+
+    #[test]
+    fn preemption_emits_restart_eligible_event() {
+        // A policy that preempts job 0 at the first arrival of job 1 and
+        // restarts whatever is eligible: the engine must deliver a
+        // RestartEligible event exactly one penalty later.
+        struct OneShotPreempt {
+            fired: bool,
+            restart_seen: Option<f64>,
+        }
+        impl Policy for OneShotPreempt {
+            fn name(&self) -> &'static str {
+                "one-shot"
+            }
+            fn preemption_penalty(&self) -> f64 {
+                17.0
+            }
+            fn on_event(&mut self, ctx: &SchedContext, ev: Event) -> Txn {
+                let mut txn = Txn::new();
+                match ev {
+                    Event::RestartEligible { .. } => self.restart_seen = Some(ctx.now()),
+                    Event::Arrival { job: 1 } if !self.fired => {
+                        self.fired = true;
+                        txn.preempt(0);
+                        return txn;
+                    }
+                    _ => {}
+                }
+                let mut cluster = ctx.cluster.clone();
+                for &id in ctx.pending() {
+                    if let Some(gpus) =
+                        placement::consolidated_free(&cluster, ctx.jobs[id].spec.gpus)
+                    {
+                        cluster.allocate(id, &gpus);
+                        txn.start(id, gpus, 1);
+                    }
+                }
+                txn
+            }
+        }
+        let trace = vec![job(0, 16, 1000, 0.0), job(1, 16, 10, 3.0)];
+        let mut p = OneShotPreempt { fired: false, restart_seen: None };
+        let out = run(ClusterConfig::physical(), &trace, InterferenceModel::new(), &mut p)
+            .unwrap();
+        assert_eq!(out.preemptions, 1);
+        let t = p.restart_seen.expect("RestartEligible must be delivered");
+        assert!((t - 20.0).abs() < 1e-6, "penalty expiry at 3 + 17 s, got {t}");
+        assert!(out.jobs.iter().all(|j| j.state == JobState::Finished));
+    }
+
+    #[test]
+    fn zero_penalty_preempt_fires_restart_eligible_immediately() {
+        // A zero-penalty preempt must still deliver RestartEligible (at
+        // the preemption instant) — a policy that only reacts to events
+        // would otherwise never learn the job is schedulable again and
+        // the run would end in a spurious deadlock.
+        struct ZeroPenalty {
+            preempted: bool,
+            restart_at: Option<f64>,
+        }
+        impl Policy for ZeroPenalty {
+            fn name(&self) -> &'static str {
+                "zero-penalty"
+            }
+            fn preemption_penalty(&self) -> f64 {
+                0.0
+            }
+            fn on_event(&mut self, ctx: &SchedContext, ev: Event) -> Txn {
+                let mut txn = Txn::new();
+                match ev {
+                    Event::Arrival { job: 1 } if !self.preempted => {
+                        self.preempted = true;
+                        txn.preempt(0);
+                        return txn; // deliberately restart only on the event
+                    }
+                    Event::RestartEligible { job: 0 } => {
+                        self.restart_at = Some(ctx.now());
+                    }
+                    _ => {}
+                }
+                let mut cluster = ctx.cluster.clone();
+                for &id in ctx.pending() {
+                    if let Some(gpus) =
+                        placement::consolidated_free(&cluster, ctx.jobs[id].spec.gpus)
+                    {
+                        cluster.allocate(id, &gpus);
+                        txn.start(id, gpus, 1);
+                    }
+                }
+                txn
+            }
+        }
+        let trace = vec![job(0, 4, 1000, 0.0), job(1, 4, 10, 2.0)];
+        let mut p = ZeroPenalty { preempted: false, restart_at: None };
+        let out = run(ClusterConfig::physical(), &trace, InterferenceModel::new(), &mut p)
+            .unwrap();
+        assert_eq!(out.preemptions, 1);
+        let t = p
+            .restart_at
+            .expect("zero-penalty preempt must still fire RestartEligible");
+        assert!((t - 2.0).abs() < 1e-9, "expiry at the preemption instant, got {t}");
+        assert!(out.jobs.iter().all(|j| j.state == JobState::Finished));
     }
 }

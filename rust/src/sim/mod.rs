@@ -5,21 +5,32 @@
 //! The engine integrates job progress piecewise: between consecutive events
 //! (arrival, finish, policy tick, restart-eligibility) every running job's
 //! iteration rate is constant, determined by its gang size, accumulation
-//! step and current co-runners (Eq. 7 × ξ). Policies are pure decision
-//! functions over a read-only [`SimState`] view; the engine validates and
-//! applies their [`Decision`]s, so scheduling bugs cannot corrupt cluster
-//! invariants.
+//! step and current co-runners (Eq. 7 × ξ). Policies are event handlers
+//! over a read-only [`crate::sched_core::SchedContext`] view; the shared
+//! [`crate::sched_core`] transaction layer validates and applies their
+//! [`Txn`]s — in this engine and in the physical coordinator alike — so
+//! scheduling bugs cannot corrupt cluster invariants in either backend.
+//!
+//! [`SimState`] is the plain world data both backends share: the clock,
+//! the cluster occupancy, the job records and the per-job `not_before` /
+//! `service_gpu_s` arrays. Scheduling code reads it through
+//! `SchedContext` (which `Deref`s to it and adds the incremental caches).
 
 pub mod engine;
 pub mod metrics;
 
 pub use engine::{EngineConfig, SimOutcome};
 
-use crate::cluster::{Cluster, GpuId};
+// The scheduling API lives in `sched_core` and is shared with the
+// physical coordinator; re-exported here for the simulator-centric
+// import paths used across the crate and its examples.
+pub use crate::sched_core::{Decision, Event, Policy, SchedContext, Txn};
+
+use crate::cluster::Cluster;
 use crate::jobs::{JobId, JobRecord, JobState};
 use crate::perf::interference::InterferenceModel;
 
-/// Read-only world view handed to policies.
+/// The world data shared by the simulator and the physical coordinator.
 #[derive(Debug, Clone)]
 pub struct SimState {
     pub now: f64,
@@ -29,13 +40,17 @@ pub struct SimState {
     /// Earliest restart time per job (preemption/migration penalty).
     pub not_before: Vec<f64>,
     /// Cumulative attained service (GPU·seconds) per job — Tiresias' 2D-LAS
-    /// priority input.
+    /// priority input. Accrued by both backends (simulated and wall time).
     pub service_gpu_s: Vec<f64>,
 }
 
 impl SimState {
     /// Jobs currently eligible for scheduling: arrived, not running, past
     /// their restart penalty.
+    ///
+    /// O(n) scan. Scheduling code should prefer the incrementally
+    /// maintained [`SchedContext::pending`]; this remains as the
+    /// reference implementation the caches are checked against.
     pub fn pending(&self) -> Vec<JobId> {
         self.jobs
             .iter()
@@ -49,6 +64,7 @@ impl SimState {
             .collect()
     }
 
+    /// O(n) scan; prefer [`SchedContext::running`] in scheduling code.
     pub fn running(&self) -> Vec<JobId> {
         self.jobs
             .iter()
@@ -84,32 +100,5 @@ impl SimState {
             .map(|&co| self.xi.xi(rec.spec.model, self.jobs[co].spec.model))
             .fold(1.0f64, f64::max);
         solo / width_scale * xi
-    }
-}
-
-/// Scheduling action returned by a policy.
-#[derive(Debug, Clone)]
-pub enum Decision {
-    /// Gang-start a pending/preempted job on explicit GPUs with the given
-    /// gradient-accumulation step (sub-batch = B / accum_step).
-    Start { job: JobId, gpus: Vec<GpuId>, accum_step: u32 },
-    /// Preempt a running job (preemptive policies only); it re-queues and
-    /// may not restart before `now + penalty` (checkpoint/restore cost).
-    Preempt { job: JobId },
-}
-
-/// A scheduling policy: a named, stateful decision function.
-pub trait Policy {
-    fn name(&self) -> &'static str;
-    /// Invoked at every event (arrival, finish, restart-eligibility) and at
-    /// each periodic tick if [`Policy::tick_interval`] is set.
-    fn schedule(&mut self, state: &SimState) -> Vec<Decision>;
-    /// Periodic invocation interval, e.g. for Tiresias/elastic reallocation.
-    fn tick_interval(&self) -> Option<f64> {
-        None
-    }
-    /// Seconds a preempted job loses before it can restart.
-    fn preemption_penalty(&self) -> f64 {
-        30.0
     }
 }

@@ -1,0 +1,266 @@
+//! Cross-backend conformance: `sim::engine` and the physical coordinator
+//! share ONE decision-validation/apply path (`sched_core`'s
+//! `SchedContext::apply`). These tests build the context exactly the way
+//! each backend does — simulated clock via `advance_sim`, wall clock via
+//! `advance_wall` — and assert that the same malformed transactions are
+//! rejected with *identical* errors through both, and that valid
+//! transactions leave both in identical scheduling states.
+//!
+//! This pins the fix for the old coordinator bypass, where physical-mode
+//! `Start` decisions were applied with no validation at all (over-memory
+//! and double-start decisions went through silently while the simulator
+//! would bail).
+
+use wise_share::cluster::{Cluster, ClusterConfig};
+use wise_share::jobs::{JobRecord, JobSpec, JobState};
+use wise_share::perf::interference::InterferenceModel;
+use wise_share::perf::profiles::ModelKind;
+use wise_share::prop_assert;
+use wise_share::sched_core::{SchedContext, Txn};
+use wise_share::util::prop::forall;
+use wise_share::util::rng::Rng;
+
+fn spec(id: usize, model: ModelKind, iters: u64, batch: u32, arrival: f64) -> JobSpec {
+    JobSpec { id, model, gpus: 1, iterations: iters, batch, arrival_s: arrival }
+}
+
+/// The conformance workload (16-GPU physical cluster):
+/// * job 0 — YoloV3@16 (10.1 GB), running on GPU 0: any co-location is
+///   memory-infeasible; re-starting it is a state-machine violation;
+/// * job 1 — YoloV3@16, pending: the probe most malformed txns target;
+/// * job 2 — arrives at t = 100, far in the future;
+/// * job 3 — preempted at t = 1 with a 30 s penalty: `not_before = 31`;
+/// * jobs 4/5 — NCF@4096 (3.4 GB each), sharing GPU 8: the C = 2 slot cap;
+/// * job 6 — NCF@4096, pending: the share-capacity probe.
+fn jobs() -> Vec<JobRecord> {
+    vec![
+        spec(0, ModelKind::YoloV3, 500, 16, 0.0),
+        spec(1, ModelKind::YoloV3, 500, 16, 0.0),
+        spec(2, ModelKind::Cifar10, 500, 128, 100.0),
+        spec(3, ModelKind::Cifar10, 500, 128, 0.0),
+        spec(4, ModelKind::Ncf, 500, 4096, 0.0),
+        spec(5, ModelKind::Ncf, 500, 4096, 0.0),
+        spec(6, ModelKind::Ncf, 500, 4096, 0.0),
+    ]
+    .into_iter()
+    .map(JobRecord::new)
+    .collect()
+}
+
+/// Build the workload's context the way one backend does: the simulator
+/// advances the simulated clock (`advance_sim`), the coordinator the wall
+/// clock (`advance_wall`). Everything downstream — validation, caches,
+/// transitions — is the shared code under test.
+fn make_ctx(wall_clock: bool) -> SchedContext {
+    let mut ctx = SchedContext::new(
+        Cluster::new(ClusterConfig::physical()),
+        jobs(),
+        InterferenceModel::new(),
+    );
+    let mut events = Vec::new();
+    if wall_clock {
+        ctx.advance_wall(1.0, &mut events);
+    } else {
+        ctx.advance_sim(1.0, &mut events);
+    }
+    assert_eq!(events.len(), 6, "jobs 0,1,3..6 arrive by t=1");
+    let mut setup = Txn::new();
+    setup.start(0, vec![0], 1);
+    setup.start(3, vec![4], 1);
+    setup.start(4, vec![8], 1);
+    setup.start(5, vec![8], 1);
+    ctx.apply(&setup, 30.0).expect("setup starts are valid");
+    let mut preempt = Txn::new();
+    preempt.preempt(3);
+    ctx.apply(&preempt, 30.0).expect("setup preempt is valid");
+    ctx
+}
+
+/// The malformed-transaction catalogue. Every case must be rejected — and
+/// rejected identically — by both backends.
+fn malformed(case: usize) -> (&'static str, Txn) {
+    let mut txn = Txn::new();
+    let name = match case {
+        0 => {
+            txn.start(1, vec![], 1);
+            "empty gang"
+        }
+        1 => {
+            // Second YoloV3@16 next to the first: 20.2 GB on an 11 GB GPU.
+            txn.start(1, vec![0], 1);
+            "memory over budget"
+        }
+        2 => {
+            txn.start(2, vec![12], 1);
+            "start before arrival"
+        }
+        3 => {
+            txn.start(3, vec![12], 1);
+            "start during restart penalty"
+        }
+        4 => {
+            txn.start(0, vec![12], 1);
+            "double start (job already running)"
+        }
+        5 => {
+            txn.start(1, vec![12], 0);
+            "zero accumulation step"
+        }
+        6 => {
+            txn.start(1, vec![12], 3);
+            "accumulation step does not divide batch"
+        }
+        7 => {
+            txn.start(99, vec![12], 1);
+            "unknown job id"
+        }
+        8 => {
+            txn.start(1, vec![999], 1);
+            "GPU out of range"
+        }
+        9 => {
+            txn.start(1, vec![12, 12], 1);
+            "duplicate GPU in gang"
+        }
+        10 => {
+            // GPU 8 already holds jobs 4 and 5 (C = 2).
+            txn.start(6, vec![8], 1);
+            "share capacity exceeded"
+        }
+        11 => {
+            txn.preempt(1);
+            "preempt a non-running job"
+        }
+        _ => unreachable!("unknown case {case}"),
+    };
+    (name, txn)
+}
+
+const N_CASES: usize = 12;
+
+#[test]
+fn every_malformed_txn_rejected_identically() {
+    for case in 0..N_CASES {
+        let (name, txn) = malformed(case);
+        let sim_err = make_ctx(false)
+            .apply(&txn, 30.0)
+            .expect_err(name)
+            .to_string();
+        let wall_err = make_ctx(true)
+            .apply(&txn, 30.0)
+            .expect_err(name)
+            .to_string();
+        assert_eq!(
+            sim_err, wall_err,
+            "{name}: backends must reject with the same error"
+        );
+        assert!(
+            sim_err.contains("applying policy decision"),
+            "{name}: error must come from the shared apply path: {sim_err}"
+        );
+    }
+}
+
+#[test]
+fn prop_malformed_rejection_is_backend_invariant() {
+    // Randomized interleavings: a random malformed case, optionally after
+    // extra *valid* work, still fails identically through both backends.
+    forall("cross-backend-reject", 0xCBu64, 128, |rng: &mut Rng| {
+        let case = rng.index(N_CASES);
+        let start_probe_first = rng.f64() < 0.5 && !matches!(case, 1 | 4..=10);
+        let run = |wall: bool| -> Result<String, String> {
+            let mut ctx = make_ctx(wall);
+            if start_probe_first {
+                // Valid prefix: start job 6 exclusively on a free GPU.
+                let mut ok = Txn::new();
+                ok.start(6, vec![13], 1);
+                ctx.apply(&ok, 30.0).map_err(|e| format!("valid prefix failed: {e}"))?;
+            }
+            let (_, txn) = malformed(case);
+            match ctx.apply(&txn, 30.0) {
+                Ok(_) => Err("malformed txn was accepted".to_string()),
+                Err(e) => Ok(e.to_string()),
+            }
+        };
+        let sim = run(false)?;
+        let wall = run(true)?;
+        prop_assert!(
+            sim == wall,
+            "case {case}: sim rejected with {sim:?}, coordinator with {wall:?}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn valid_txn_applies_identically_across_backends() {
+    let mut sim = make_ctx(false);
+    let mut wall = make_ctx(true);
+    let mut txn = Txn::new();
+    txn.start(1, vec![12], 1);
+    txn.start(6, vec![13], 1);
+    for ctx in [&mut sim, &mut wall] {
+        let report = ctx.apply(&txn, 30.0).unwrap();
+        assert_eq!(report.starts, 2);
+        assert_eq!(report.preemptions, 0);
+    }
+    assert_eq!(sim.pending(), wall.pending());
+    assert_eq!(sim.running(), wall.running());
+    for id in 0..sim.jobs.len() {
+        assert_eq!(sim.jobs[id].state, wall.jobs[id].state, "job {id}");
+        assert_eq!(sim.jobs[id].gpus_held, wall.jobs[id].gpus_held, "job {id}");
+        assert_eq!(sim.jobs[id].first_start_s, wall.jobs[id].first_start_s, "job {id}");
+        assert_eq!(sim.jobs[id].accum_step, wall.jobs[id].accum_step, "job {id}");
+    }
+    sim.cache_integrity().unwrap();
+    wall.cache_integrity().unwrap();
+}
+
+#[test]
+fn coordinator_style_context_tracks_service_and_queueing() {
+    // The two physical-mode accounting fixes: attained service accrues for
+    // running jobs (Tiresias' 2D-LAS input is no longer frozen at 0) and
+    // queueing time accrues continuously for every waiting job.
+    let mut ctx = make_ctx(true);
+    let mut events = Vec::new();
+    ctx.advance_wall(11.0, &mut events);
+    assert!(events.is_empty(), "no arrivals between t=1 and t=11");
+    // Job 0 ran on 1 GPU for 10 s of wall time.
+    assert!((ctx.service_gpu_s[0] - 10.0).abs() < 1e-9);
+    // Jobs 4/5 share GPU 8 — each held one GPU for 10 s.
+    assert!((ctx.service_gpu_s[4] - 10.0).abs() < 1e-9);
+    // Pending job 1 and penalty-held job 3 both queued over [1, 11] — the
+    // engine's continuous accrual, not the old first-start snapshot.
+    assert!((ctx.jobs[1].queued_s - 10.0).abs() < 1e-9, "{}", ctx.jobs[1].queued_s);
+    assert!((ctx.jobs[3].queued_s - 10.0).abs() < 1e-9, "{}", ctx.jobs[3].queued_s);
+    // Job 2 has not arrived: no queueing yet.
+    assert_eq!(ctx.jobs[2].queued_s, 0.0);
+    // Advancing past the penalty fires RestartEligible for job 3, past the
+    // arrival fires Arrival for job 2 — wall mode uses the same event
+    // plumbing as the simulator.
+    ctx.advance_wall(150.0, &mut events);
+    use wise_share::sched_core::Event;
+    assert!(events.contains(&Event::RestartEligible { job: 3 }));
+    assert!(events.contains(&Event::Arrival { job: 2 }));
+    assert!(ctx.pending().contains(&2) && ctx.pending().contains(&3));
+    // Wall mode never integrates remaining_iters — real execution does.
+    assert_eq!(ctx.jobs[0].remaining_iters, 500.0);
+    assert_eq!(ctx.jobs[0].state, JobState::Running);
+}
+
+#[test]
+fn wall_progress_drives_completion_through_shared_path() {
+    let mut ctx = make_ctx(true);
+    for _ in 0..500 {
+        assert!(ctx.note_progress(0));
+    }
+    assert!(!ctx.note_progress(0), "no more iterations to report");
+    let mut events = Vec::new();
+    ctx.collect_completions(0.0, &mut events);
+    use wise_share::sched_core::Event;
+    assert_eq!(events, vec![Event::Completion { job: 0 }]);
+    assert_eq!(ctx.jobs[0].state, JobState::Finished);
+    assert!(ctx.jobs[0].gpus_held.is_empty());
+    assert!(!ctx.running().contains(&0));
+    ctx.cache_integrity().unwrap();
+}
