@@ -23,6 +23,7 @@ fn main() -> anyhow::Result<()> {
         load_factors: vec![1.0],
         job_counts: vec![240, 480], // Table III, Table IV
         gpu_counts: Vec::new(),     // the 16×4 simulation cluster
+        topologies: Vec::new(),
         seeds: vec![1, 2, 3],
         jobs_scale_load_baseline: Some(240), // 480 jobs ⇒ 2× density
     };

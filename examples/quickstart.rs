@@ -36,12 +36,12 @@ impl Policy for Greedy {
 
     fn on_event(&mut self, ctx: &SchedContext, _ev: Event) -> Txn {
         let mut txn = Txn::new();
-        let mut cluster = ctx.cluster.clone(); // hypothetical placements
+        let mut plan = ctx.overlay(); // hypothetical placements, no deep copy
         for &id in ctx.pending() {
             if let Some(gpus) =
-                placement::consolidated_free(&cluster, ctx.jobs[id].spec.gpus)
+                placement::consolidated_free(&plan, ctx.jobs[id].spec.gpus)
             {
-                cluster.allocate(id, &gpus);
+                plan.allocate(id, &gpus);
                 txn.start(id, gpus, 1); // exclusive: accumulation step 1
             }
         }

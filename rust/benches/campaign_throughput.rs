@@ -16,6 +16,7 @@ fn main() {
         load_factors: vec![1.0],
         job_counts: vec![120],
         gpu_counts: Vec::new(),
+        topologies: Vec::new(),
         seeds: (1..=6).collect(),
         jobs_scale_load_baseline: None,
     };

@@ -14,7 +14,7 @@
 //! a 2048-running-job context, and `engine/event-loop/2048-jobs` records
 //! the resulting end-to-end event-loop throughput on a large trace.
 
-use wise_share::cluster::{Cluster, ClusterConfig};
+use wise_share::cluster::{AllocView, Cluster, ClusterConfig};
 use wise_share::jobs::trace::{self, TraceConfig};
 use wise_share::jobs::{JobRecord, JobState};
 use wise_share::pair::{batch_size_scaling, best_pair_schedule, PairSide};
@@ -147,6 +147,37 @@ fn main() {
          O(running) rescan at {} running jobs",
         rescan.mean_s / heap.mean_s.max(1e-12),
         n_running
+    );
+
+    // ---- clone vs overlay: the policy planning view at 2048 GPUs ----------
+    // Every full-pass policy plans hypothetical placements per event. The
+    // old way deep-copied the cluster (one heap allocation per GPU slot);
+    // the context's overlay records deltas over a borrow with pooled
+    // scratch. Both cases acquire the view, read the occupancy classes and
+    // hypothetically place one 4-gang — the per-event pattern.
+    let big = ClusterConfig {
+        servers: 512,
+        gpus_per_server: 4,
+        gpu_mem_gb: 11.0,
+        max_share: 2,
+    };
+    let ctx2k = SchedContext::from_state(busy_state(big, 64));
+    let one_job_target = ctx2k.cluster.one_job_gpus()[0..4].to_vec();
+    let clone_stats = bench("plan-view/clone/2048-gpus", 300, || {
+        let mut cluster = ctx2k.cluster.clone();
+        cluster.allocate(usize::MAX, &one_job_target);
+        std::hint::black_box((cluster.free_count(), cluster.one_job_count()));
+    });
+    let overlay_stats = bench("plan-view/overlay/2048-gpus", 20_000, || {
+        let mut plan = ctx2k.overlay();
+        plan.allocate(usize::MAX, &one_job_target);
+        std::hint::black_box((plan.free_count(), plan.one_job_count()));
+    });
+    println!(
+        "plan-view speedup: overlay is {:.0}x cheaper than a full cluster \
+         clone at {} GPUs",
+        clone_stats.mean_s / overlay_stats.mean_s.max(1e-12),
+        big.total_gpus()
     );
 
     // ---- end-to-end event loop on a large trace ---------------------------

@@ -216,7 +216,13 @@ mod tests {
     use super::*;
 
     fn key(policy: &str) -> CellKey {
-        CellKey { total_gpus: 64, n_jobs: 240, load_milli: 1000, policy: policy.into() }
+        CellKey {
+            topology: "uniform-16x4".to_string(),
+            total_gpus: 64,
+            n_jobs: 240,
+            load_milli: 1000,
+            policy: policy.into(),
+        }
     }
 
     fn outcome(policy: &str, seed: u64, jct: f64) -> RunOutcome {

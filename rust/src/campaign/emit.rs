@@ -12,7 +12,7 @@ use super::agg::{CellAgg, Stream};
 
 /// Long-format CSV header.
 pub const CSV_HEADER: &str =
-    "campaign,gpus,jobs,load,policy,slice,metric,seeds,mean,std,min,max,ci95";
+    "campaign,topology,gpus,jobs,load,policy,slice,metric,seeds,mean,std,min,max,ci95";
 
 /// One `(slice, metric)` CSV row per statistic of every cell, in cell
 /// (expansion) order. All values in seconds.
@@ -21,7 +21,8 @@ pub fn long_csv(campaign: &str, cells: &[CellAgg]) -> String {
     writeln!(out, "{CSV_HEADER}").unwrap();
     for c in cells {
         let base = format!(
-            "{campaign},{},{},{},{}",
+            "{campaign},{},{},{},{},{}",
+            c.key.topology,
             c.key.total_gpus,
             c.key.n_jobs,
             c.key.load_factor(),
@@ -51,9 +52,11 @@ pub fn long_csv(campaign: &str, cells: &[CellAgg]) -> String {
     out
 }
 
-/// Markdown report: cells grouped per scenario (GPUs × jobs × load), each
-/// group rendered as a seed-averaged Table III/IV block followed by a 95%
-/// CI table, with any per-run failures listed underneath.
+/// Markdown report: cells grouped per scenario (topology × GPUs × jobs ×
+/// load), each group rendered as a seed-averaged Table III/IV block
+/// followed by a 95% CI table, with any per-run failures listed
+/// underneath — a topology-axis campaign therefore reports one block per
+/// cluster shape.
 pub fn markdown(campaign: &str, cells: &[CellAgg]) -> String {
     let mut out = String::new();
     let mut i = 0;
@@ -71,7 +74,8 @@ pub fn markdown(campaign: &str, cells: &[CellAgg]) -> String {
         let seeds = group.iter().map(CellAgg::seeds).max().unwrap_or(0);
         writeln!(
             out,
-            "### {campaign}: {} GPUs, {} jobs, load x{} ({seeds} seed(s))\n",
+            "### {campaign}: {}, {} GPUs, {} jobs, load x{} ({seeds} seed(s))\n",
+            k.topology,
             k.total_gpus,
             k.n_jobs,
             k.load_factor(),
@@ -145,6 +149,7 @@ mod tests {
                 agg.push(&RunOutcome {
                     ordinal: ord * 2 + seed as usize - 1,
                     cell: CellKey {
+                        topology: "uniform-16x4".to_string(),
                         total_gpus: 64,
                         n_jobs: 240,
                         load_milli: 1500,
@@ -171,14 +176,14 @@ mod tests {
         assert_eq!(lines[0], CSV_HEADER);
         // 2 cells x (3 slices x 4 metrics + makespan) = 26 data rows.
         assert_eq!(lines.len(), 1 + 2 * 13);
-        assert!(lines[1].starts_with("demo,64,240,1.5,FIFO,all,avg_jct_s,2,"));
+        assert!(lines[1].starts_with("demo,uniform-16x4,64,240,1.5,FIFO,all,avg_jct_s,2,"));
         assert!(csv.contains("SJF-BSBF,all,makespan_s"));
     }
 
     #[test]
     fn markdown_groups_and_reports_ci() {
         let md = markdown("demo", &cells());
-        assert!(md.contains("### demo: 64 GPUs, 240 jobs, load x1.5 (2 seed(s))"));
+        assert!(md.contains("### demo: uniform-16x4, 64 GPUs, 240 jobs, load x1.5 (2 seed(s))"));
         // One table34 block: both policies appear in the JCT rows.
         assert!(md.contains("| Average JCT | FIFO |"));
         assert!(md.contains("| Average JCT | SJF-BSBF |"));
@@ -194,6 +199,7 @@ mod tests {
         agg.push(&RunOutcome {
             ordinal: 4,
             cell: CellKey {
+                topology: "uniform-16x4".to_string(),
                 total_gpus: 64,
                 n_jobs: 120,
                 load_milli: 500,

@@ -6,8 +6,9 @@
 //! sweeps first-class instead of hand-rolled loops:
 //!
 //! 1. **Spec** ([`spec`]) — a declarative [`CampaignSpec`] (cluster, trace
-//!    shape, interference model, engine limits, policy list, sweep axes),
-//!    loadable from JSON via the first-party parser.
+//!    shape, interference model, engine limits, policy list, sweep axes —
+//!    including a `topologies` axis of named cluster shapes, DESIGN.md
+//!    §10), loadable from JSON via the first-party parser.
 //! 2. **Sweep** ([`sweep`]) — cartesian expansion into a deterministic,
 //!    ordered run matrix of self-contained [`ScenarioSpec`]s.
 //! 3. **Runner** ([`runner`]) — a `std::thread` worker pool; runs are

@@ -100,6 +100,7 @@ mod tests {
             load_factors: vec![1.0],
             job_counts: vec![10],
             gpu_counts: Vec::new(),
+            topologies: Vec::new(),
             seeds: vec![1, 2, 3, 4],
             jobs_scale_load_baseline: None,
         };

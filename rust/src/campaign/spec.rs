@@ -11,7 +11,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use crate::cluster::ClusterConfig;
+use crate::cluster::{topology, Cluster, ClusterConfig};
 use crate::jobs::trace::{self, TraceConfig};
 use crate::perf::interference::InterferenceModel;
 use crate::sched;
@@ -30,6 +30,10 @@ pub struct Axes {
     /// Cluster sizes in total GPUs; empty ⇒ use the spec's base cluster.
     /// Each entry must be a multiple of the base `gpus_per_server`.
     pub gpu_counts: Vec<usize>,
+    /// Named cluster shapes ([`topology::SHAPE_NAMES`]) to sweep; empty ⇒
+    /// the uniform base cluster. A topology fixes the whole cluster shape,
+    /// so this axis is mutually exclusive with `gpu_counts`.
+    pub topologies: Vec<String>,
     /// Trace seeds; aggregation (mean/std/CI) runs across this axis.
     pub seeds: Vec<u64>,
     /// If `Some(baseline)`, each run's effective load factor is further
@@ -78,6 +82,7 @@ impl CampaignSpec {
                 load_factors: vec![1.0],
                 job_counts: vec![240],
                 gpu_counts: Vec::new(),
+                topologies: Vec::new(),
                 seeds: vec![1],
                 jobs_scale_load_baseline: None,
             },
@@ -95,6 +100,7 @@ impl CampaignSpec {
             load_factors: vec![1.0],
             job_counts: vec![120, 240, 360, 480],
             gpu_counts: Vec::new(),
+            topologies: Vec::new(),
             seeds: vec![1, 2, 3],
             jobs_scale_load_baseline: Some(240),
         };
@@ -112,7 +118,11 @@ impl CampaignSpec {
         let mut spec = CampaignSpec::new(name);
         if let Some(c) = doc.get("cluster") {
             spec.cluster = ClusterConfig {
-                servers: c.req("servers")?.as_u64().context("servers must be a non-negative integer")? as usize,
+                servers: c
+                    .req("servers")?
+                    .as_u64()
+                    .context("servers must be a non-negative integer")?
+                    as usize,
                 gpus_per_server: c
                     .req("gpus_per_server")?
                     .as_u64()
@@ -144,9 +154,23 @@ impl CampaignSpec {
             load_factors: f64_list(axes, "load_factors", vec![1.0])?,
             job_counts: usize_list(axes, "job_counts", vec![240])?,
             gpu_counts: usize_list(axes, "gpu_counts", Vec::new())?,
+            topologies: str_list(axes, "topologies", Vec::new())?,
             seeds: u64_list(axes, "seeds", vec![1])?,
             jobs_scale_load_baseline: opt_usize(axes, "scale_load_with_jobs")?,
         };
+        // A named topology fixes the whole cluster shape; accepting an
+        // explicit cluster block alongside would silently ignore it
+        // (max_share, memory, shape), so reject the combination outright
+        // — same policy as the gpu_counts conflict in validate().
+        if !matches!(doc.get("cluster"), None | Some(Json::Null))
+            && !spec.axes.topologies.is_empty()
+        {
+            bail!(
+                "campaign {:?}: the cluster block and the topologies axis are \
+                 mutually exclusive (a named topology fixes the whole cluster shape)",
+                spec.name
+            );
+        }
         spec.validate()?;
         Ok(spec)
     }
@@ -198,10 +222,36 @@ impl CampaignSpec {
         if self.cluster.servers == 0 || self.cluster.gpus_per_server == 0 {
             bail!("campaign {:?}: degenerate cluster shape", self.name);
         }
+        if self.cluster.max_share == 0 {
+            bail!("campaign {:?}: max_share must be >= 1", self.name);
+        }
         // The simulation trace mix requests gangs of up to 16 GPUs; every
-        // swept cluster size must be able to host them (the engine rejects
-        // oversized jobs outright).
+        // swept cluster shape must be able to host them (the engine
+        // rejects oversized jobs outright).
         let min_gpus = 16;
+        if !a.topologies.is_empty() {
+            // A named topology fixes the whole shape — rescaling it by a
+            // GPU count has no defined meaning.
+            if !a.gpu_counts.is_empty() {
+                bail!(
+                    "campaign {:?}: the topologies and gpu_counts axes are mutually exclusive",
+                    self.name
+                );
+            }
+            for name in &a.topologies {
+                let t = topology::by_name_or_err(name)
+                    .with_context(|| format!("campaign {:?}", self.name))?;
+                if t.total_gpus() < min_gpus {
+                    bail!(
+                        "campaign {:?}: topology {name:?} ({} GPUs) cannot host the \
+                         trace's largest gang ({min_gpus})",
+                        self.name,
+                        t.total_gpus()
+                    );
+                }
+            }
+            return Ok(());
+        }
         let sizes: Vec<usize> = if a.gpu_counts.is_empty() {
             vec![self.cluster.total_gpus()]
         } else {
@@ -232,13 +282,25 @@ impl CampaignSpec {
 #[derive(Debug, Clone)]
 pub struct ScenarioSpec {
     pub policy: String,
+    /// Uniform cluster shape; used when `topology` is `None`, a summary
+    /// otherwise.
     pub cluster: ClusterConfig,
+    /// Named topology shape ([`topology::by_name`]) overriding `cluster`.
+    pub topology: Option<String>,
     pub trace: TraceConfig,
     pub xi_global: Option<f64>,
     pub max_sim_s: f64,
 }
 
 impl ScenarioSpec {
+    /// The cluster this scenario runs on.
+    pub fn build_cluster(&self) -> Result<Cluster> {
+        Ok(match &self.topology {
+            Some(name) => Cluster::with_topology(topology::by_name_or_err(name)?),
+            None => Cluster::new(self.cluster),
+        })
+    }
+
     /// Generate the trace, construct a fresh policy, and simulate.
     pub fn run(&self) -> Result<Summary> {
         let jobs = trace::generate(&self.trace);
@@ -249,7 +311,8 @@ impl ScenarioSpec {
             None => InterferenceModel::new(),
         };
         let engine_cfg = EngineConfig { max_sim_s: self.max_sim_s, ..EngineConfig::default() };
-        let out = engine::run_with(self.cluster, &jobs, xi, policy.as_mut(), engine_cfg)
+        let cluster = self.build_cluster()?;
+        let out = engine::run_cluster(cluster, &jobs, xi, policy.as_mut(), engine_cfg)
             .with_context(|| {
                 format!(
                     "policy {} on {} jobs (seed {}, load x{})",
@@ -319,6 +382,22 @@ fn u64_list(j: &Json, key: &str, default: Vec<u64>) -> Result<Vec<u64>> {
     }
 }
 
+fn str_list(j: &Json, key: &str, default: Vec<String>) -> Result<Vec<String>> {
+    match j.get(key) {
+        None | Some(Json::Null) => Ok(default),
+        Some(v) => v
+            .as_arr()
+            .with_context(|| format!("{key} must be an array"))?
+            .iter()
+            .map(|x| {
+                x.as_str()
+                    .map(str::to_string)
+                    .with_context(|| format!("{key} entries must be strings"))
+            })
+            .collect(),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -356,10 +435,28 @@ mod tests {
     }
 
     #[test]
+    fn validate_topology_axis() {
+        let mut spec = CampaignSpec::new("x");
+        spec.policies = vec!["FIFO".to_string()];
+        spec.axes.topologies = vec!["uniform-16x4".to_string()];
+        spec.validate().unwrap();
+        // Unknown shape names are rejected with the known list.
+        spec.axes.topologies = vec!["no-such-shape".to_string()];
+        let err = spec.validate().unwrap_err().to_string();
+        assert!(err.contains("unknown topology shape"), "{err}");
+        assert!(err.contains("uniform-16x4"), "{err}");
+        // A topology fixes the shape: combining with gpu_counts is an error.
+        spec.axes.topologies = vec!["uniform-16x4".to_string()];
+        spec.axes.gpu_counts = vec![64];
+        assert!(spec.validate().is_err());
+    }
+
+    #[test]
     fn scenario_run_produces_summary() {
         let scenario = ScenarioSpec {
             policy: "FIFO".to_string(),
             cluster: ClusterConfig::physical(),
+            topology: None,
             trace: TraceConfig::simulation(12, 3),
             xi_global: None,
             max_sim_s: EngineConfig::default().max_sim_s,
@@ -368,5 +465,22 @@ mod tests {
         assert_eq!(s.policy, "FIFO");
         assert_eq!(s.all.n, 12);
         assert!(s.all.avg_jct_s > 0.0);
+    }
+
+    #[test]
+    fn scenario_with_topology_builds_that_cluster() {
+        let scenario = ScenarioSpec {
+            policy: "FIFO".to_string(),
+            cluster: ClusterConfig::physical(),
+            topology: Some("hetero-16x4-2tier".to_string()),
+            trace: TraceConfig::simulation(8, 3),
+            xi_global: None,
+            max_sim_s: EngineConfig::default().max_sim_s,
+        };
+        let cluster = scenario.build_cluster().unwrap();
+        assert_eq!(cluster.total_gpus(), 64);
+        assert_eq!(cluster.mem_gb(63), 22.0);
+        let s = scenario.run().unwrap();
+        assert_eq!(s.all.n, 8);
     }
 }

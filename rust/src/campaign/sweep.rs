@@ -1,15 +1,16 @@
 //! Cartesian sweep expansion: resolve a [`CampaignSpec`] into an ordered,
 //! deterministic run matrix.
 //!
-//! Axis nesting order (outer → inner): GPU count → job count → load factor
-//! → policy → seed. The order is part of the subsystem's contract — run
-//! ordinals are stable across processes, results are reported in expansion
-//! order regardless of which worker finished first, and cells (everything
-//! but the seed) appear in first-occurrence order in every emitter.
+//! Axis nesting order (outer → inner): cluster shape (topology or GPU
+//! count) → job count → load factor → policy → seed. The order is part of
+//! the subsystem's contract — run ordinals are stable across processes,
+//! results are reported in expansion order regardless of which worker
+//! finished first, and cells (everything but the seed) appear in
+//! first-occurrence order in every emitter.
 
 use anyhow::{bail, Result};
 
-use crate::cluster::ClusterConfig;
+use crate::cluster::{topology, ClusterConfig};
 use crate::jobs::trace::TraceConfig;
 
 use super::spec::{CampaignSpec, ScenarioSpec};
@@ -20,6 +21,9 @@ use super::spec::{CampaignSpec, ScenarioSpec};
 /// the key is exact, not a lossy rendering.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct CellKey {
+    /// Cluster shape name: a named topology from the `topologies` axis,
+    /// or `uniform-{servers}x{gpus_per_server}` for flat-config cells.
+    pub topology: String,
     pub total_gpus: usize,
     pub n_jobs: usize,
     /// Effective load factor × 1000.
@@ -33,9 +37,14 @@ impl CellKey {
     }
 
     /// The non-policy coordinates — emitters group cells on this.
-    pub fn scenario_coords(&self) -> (usize, usize, u64) {
-        (self.total_gpus, self.n_jobs, self.load_milli)
+    pub fn scenario_coords(&self) -> (&str, usize, usize, u64) {
+        (&self.topology, self.total_gpus, self.n_jobs, self.load_milli)
     }
+}
+
+/// The cell name of a uniform (flat-config) cluster shape.
+pub fn uniform_shape_name(cluster: &ClusterConfig) -> String {
+    format!("uniform-{}x{}", cluster.servers, cluster.gpus_per_server)
 }
 
 /// One entry of the expanded run matrix.
@@ -47,23 +56,60 @@ pub struct RunPoint {
     pub scenario: ScenarioSpec,
 }
 
+/// One resolved point of the cluster-shape axis.
+struct ShapeVariant {
+    /// `Some(name)` for topology-axis cells, `None` for flat configs.
+    topology: Option<String>,
+    cluster: ClusterConfig,
+    name: String,
+    total_gpus: usize,
+}
+
 /// Expand a validated spec into its full run matrix. Two calls over the
 /// same spec yield identical matrices; duplicates only occur when an axis
 /// itself lists duplicate values (legal — repeating a seed is how the
 /// zero-variance property test exercises aggregation).
 pub fn expand(spec: &CampaignSpec) -> Result<Vec<RunPoint>> {
     spec.validate()?;
-    let gpu_counts = if spec.axes.gpu_counts.is_empty() {
-        vec![spec.cluster.total_gpus()]
+    let variants: Vec<ShapeVariant> = if !spec.axes.topologies.is_empty() {
+        spec.axes
+            .topologies
+            .iter()
+            .map(|name| {
+                let t = topology::by_name(name).expect("validated topology name");
+                ShapeVariant {
+                    topology: Some(name.clone()),
+                    cluster: t.summary_config(),
+                    name: name.clone(),
+                    total_gpus: t.total_gpus(),
+                }
+            })
+            .collect()
     } else {
-        spec.axes.gpu_counts.clone()
+        let gpu_counts = if spec.axes.gpu_counts.is_empty() {
+            vec![spec.cluster.total_gpus()]
+        } else {
+            spec.axes.gpu_counts.clone()
+        };
+        gpu_counts
+            .iter()
+            .map(|&gpus| {
+                let cluster = ClusterConfig {
+                    servers: gpus / spec.cluster.gpus_per_server,
+                    ..spec.cluster
+                };
+                ShapeVariant {
+                    topology: None,
+                    name: uniform_shape_name(&cluster),
+                    cluster,
+                    total_gpus: gpus,
+                }
+            })
+            .collect()
     };
     let mut points = Vec::new();
-    for &gpus in &gpu_counts {
-        let cluster = ClusterConfig {
-            servers: gpus / spec.cluster.gpus_per_server,
-            ..spec.cluster
-        };
+    for variant in &variants {
+        let cluster = variant.cluster;
         for &n_jobs in &spec.axes.job_counts {
             // Distinct axis values must stay distinct after quantization,
             // or two cells would silently merge (shrinking the CIs).
@@ -95,7 +141,8 @@ pub fn expand(spec: &CampaignSpec) -> Result<Vec<RunPoint>> {
                 let quantized = load_milli as f64 / 1000.0;
                 for policy in &spec.policies {
                     let cell = CellKey {
-                        total_gpus: gpus,
+                        topology: variant.name.clone(),
+                        total_gpus: variant.total_gpus,
                         n_jobs,
                         load_milli,
                         policy: policy.clone(),
@@ -111,6 +158,7 @@ pub fn expand(spec: &CampaignSpec) -> Result<Vec<RunPoint>> {
                             scenario: ScenarioSpec {
                                 policy: policy.clone(),
                                 cluster,
+                                topology: variant.topology.clone(),
                                 trace,
                                 xi_global: spec.xi_global,
                                 max_sim_s: spec.max_sim_s,
@@ -136,6 +184,7 @@ mod tests {
             load_factors: vec![0.5, 1.0],
             job_counts: vec![30, 60],
             gpu_counts: vec![32, 64],
+            topologies: Vec::new(),
             seeds: vec![1, 2, 3],
             jobs_scale_load_baseline: None,
         };
@@ -167,6 +216,28 @@ mod tests {
         // Cluster shape follows the GPU axis (gpus_per_server fixed at 4).
         assert_eq!(pts[0].scenario.cluster.servers, 8);
         assert_eq!(pts[pts.len() - 1].scenario.cluster.servers, 16);
+        // Flat configs are named by their uniform shape.
+        assert_eq!(pts[0].cell.topology, "uniform-8x4");
+        assert_eq!(pts[pts.len() - 1].cell.topology, "uniform-16x4");
+    }
+
+    #[test]
+    fn topology_axis_expands_per_shape() {
+        let mut s = spec();
+        s.axes.gpu_counts = Vec::new();
+        s.axes.topologies =
+            vec!["uniform-16x4".to_string(), "hetero-16x4-2tier".to_string()];
+        let pts = expand(&s).unwrap();
+        // 2 topologies x 2 jobs x 2 loads x 2 policies x 3 seeds.
+        assert_eq!(pts.len(), 2 * 2 * 2 * 2 * 3);
+        assert_eq!(pts[0].cell.topology, "uniform-16x4");
+        assert_eq!(pts[0].scenario.topology.as_deref(), Some("uniform-16x4"));
+        let last = &pts[pts.len() - 1];
+        assert_eq!(last.cell.topology, "hetero-16x4-2tier");
+        assert_eq!(last.scenario.topology.as_deref(), Some("hetero-16x4-2tier"));
+        assert!(pts.iter().all(|p| p.cell.total_gpus == 64));
+        // The summary cluster is conservative for the hetero shape.
+        assert_eq!(last.scenario.cluster.gpu_mem_gb, 11.0);
     }
 
     #[test]

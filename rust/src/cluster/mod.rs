@@ -1,18 +1,33 @@
-//! Multi-tenant GPU cluster substrate (paper §IV): `|S|` servers with `|N|`
-//! identical GPUs evenly distributed, interconnected through a
-//! sufficient-bandwidth switch. A GPU may hold at most `C` jobs (Eq. 9;
-//! the paper fixes C = 2 after observing that 3-way sharing is never
-//! beneficial). Gang allocation/release is atomic (Eqs. 8, 10–12).
+//! Multi-tenant GPU cluster substrate (paper §IV): servers of GPUs on a
+//! [`topology::Topology`] — per-server GPU type (memory + compute scale)
+//! and two link tiers. The paper's own model (`|S|` identical servers
+//! behind a sufficient-bandwidth switch) is the uniform special case a
+//! flat [`ClusterConfig`] constructs. A GPU may hold at most `C` jobs
+//! (Eq. 9; the paper fixes C = 2 after observing that 3-way sharing is
+//! never beneficial). Gang allocation/release is atomic (Eqs. 8, 10–12).
+//!
+//! Occupancy classes (free / one-job / schedulable) are maintained
+//! incrementally per server on every allocate/release, so policy passes
+//! read them in O(1) instead of rescanning every slot; [`AllocView`] is
+//! the read interface shared by the live [`Cluster`] and the hypothetical
+//! [`overlay::ClusterOverlay`] planning view.
 
+pub mod overlay;
 pub mod placement;
+pub mod topology;
 
+pub use overlay::ClusterOverlay;
+pub use topology::Topology;
 
 use crate::jobs::JobId;
+use crate::perf::GangSpan;
 
-/// Flat GPU identifier: `server * gpus_per_server + local_index`.
+/// Flat GPU identifier: dense over servers in topology order.
 pub type GpuId = usize;
 
-/// Cluster shape + per-GPU capacities.
+/// Flat (uniform) cluster shape + per-GPU capacities. Still the common
+/// currency of call sites that sweep cluster *sizes*; a richer shape is a
+/// [`topology::Topology`].
 #[derive(Debug, Clone, Copy)]
 pub struct ClusterConfig {
     pub servers: usize,
@@ -46,20 +61,107 @@ pub struct GpuSlot {
     pub jobs: Vec<JobId>,
 }
 
+/// Read-only occupancy view shared by the live [`Cluster`] and the
+/// hypothetical [`overlay::ClusterOverlay`]: placement strategies
+/// ([`placement`]) are generic over it, so policies plan against an
+/// overlay with exactly the code that also queries the real cluster.
+pub trait AllocView {
+    fn topology(&self) -> &Topology;
+    /// Max co-located jobs per GPU (Eq. 9's C).
+    fn max_share(&self) -> usize;
+    /// Occupancy count of one GPU.
+    fn load(&self, gpu: GpuId) -> usize;
+    /// First job on a GPU, if any — the sharing-partner lookup for
+    /// one-job GPUs (`G_OJ`, Alg. 1 line 5).
+    fn owner(&self, gpu: GpuId) -> Option<JobId>;
+    /// Total GPUs holding no job. O(1).
+    fn free_count(&self) -> usize;
+    /// Total GPUs holding exactly one job. O(1).
+    fn one_job_count(&self) -> usize;
+    /// Free GPUs on one server. O(1).
+    fn server_free(&self, server: usize) -> usize;
+
+    fn total_gpus(&self) -> usize {
+        self.topology().total_gpus()
+    }
+
+    fn server_of(&self, gpu: GpuId) -> usize {
+        self.topology().server_of(gpu)
+    }
+
+    /// Memory budget of one GPU, GB (per-type under heterogeneity).
+    fn mem_gb(&self, gpu: GpuId) -> f64 {
+        self.topology().mem_gb(gpu)
+    }
+
+    /// Placement summary of a GPU set (see [`Topology::span_of`]).
+    fn span_of(&self, gpus: &[GpuId]) -> GangSpan {
+        self.topology().span_of(gpus)
+    }
+
+    /// GPUs holding no job, ordered by (server, index) — placement picks
+    /// prefixes of this to consolidate gangs (Alg. 1 line 7).
+    fn free_gpus(&self) -> Vec<GpuId> {
+        (0..self.total_gpus()).filter(|&g| self.load(g) == 0).collect()
+    }
+
+    /// GPUs holding exactly one job — the sharing candidates `G_OJ`
+    /// (Alg. 1 line 5).
+    fn one_job_gpus(&self) -> Vec<GpuId> {
+        (0..self.total_gpus()).filter(|&g| self.load(g) == 1).collect()
+    }
+}
+
 /// Live cluster state: who holds which GPU.
 #[derive(Debug, Clone)]
 pub struct Cluster {
+    /// Flat summary shape. Exact for uniform topologies; conservative
+    /// (widest server, smallest GPU) for heterogeneous ones.
     pub config: ClusterConfig,
+    topology: Topology,
     slots: Vec<GpuSlot>,
+    // Incrementally maintained occupancy classes (checked against a
+    // from-scratch rescan by `check_invariants` and the property tests).
+    free_per_server: Vec<usize>,
+    one_job_per_server: Vec<usize>,
+    n_free: usize,
+    n_one_job: usize,
+    n_schedulable: usize,
 }
 
 impl Cluster {
+    /// A uniform cluster — the paper's model, byte-compatible with the
+    /// pre-topology behavior.
     pub fn new(config: ClusterConfig) -> Self {
-        Cluster { config, slots: vec![GpuSlot::default(); config.total_gpus()] }
+        let mut cluster = Self::with_topology(Topology::from_config(&config));
+        cluster.config = config; // keep the caller's exact summary
+        cluster
+    }
+
+    /// A cluster over an arbitrary (possibly heterogeneous) topology.
+    pub fn with_topology(topology: Topology) -> Self {
+        let config = topology.summary_config();
+        let total = topology.total_gpus();
+        let free_per_server: Vec<usize> =
+            (0..topology.n_servers()).map(|s| topology.server(s).gpus).collect();
+        Cluster {
+            config,
+            slots: vec![GpuSlot::default(); total],
+            free_per_server,
+            one_job_per_server: vec![0; topology.n_servers()],
+            n_free: total,
+            n_one_job: 0,
+            n_schedulable: total,
+            topology,
+        }
+    }
+
+    pub fn topology(&self) -> &Topology {
+        &self.topology
     }
 
     pub fn server_of(&self, gpu: GpuId) -> usize {
-        gpu / self.config.gpus_per_server
+        self.topology.server_of(gpu)
     }
 
     pub fn slot(&self, gpu: GpuId) -> &GpuSlot {
@@ -70,16 +172,46 @@ impl Cluster {
         self.slots.len()
     }
 
-    /// GPUs holding no job, ordered by (server, index) — placement picks
-    /// prefixes of this to consolidate gangs (Alg. 1 line 7).
+    /// GPUs holding no job, ordered by (server, index). Delegates to the
+    /// [`AllocView`] default so the class definition lives in one place.
     pub fn free_gpus(&self) -> Vec<GpuId> {
-        (0..self.slots.len()).filter(|&g| self.slots[g].jobs.is_empty()).collect()
+        AllocView::free_gpus(self)
     }
 
-    /// GPUs holding exactly one job — the sharing candidates `G_OJ`
-    /// (Alg. 1 line 5).
+    /// GPUs holding exactly one job (`G_OJ`, Alg. 1 line 5). Delegates to
+    /// the [`AllocView`] default.
     pub fn one_job_gpus(&self) -> Vec<GpuId> {
-        (0..self.slots.len()).filter(|&g| self.slots[g].jobs.len() == 1).collect()
+        AllocView::one_job_gpus(self)
+    }
+
+    /// Count of free GPUs — maintained incrementally, O(1).
+    pub fn free_count(&self) -> usize {
+        self.n_free
+    }
+
+    /// Count of one-job GPUs — maintained incrementally, O(1).
+    pub fn one_job_count(&self) -> usize {
+        self.n_one_job
+    }
+
+    /// Free GPUs on one server — maintained incrementally, O(1).
+    pub fn server_free(&self, server: usize) -> usize {
+        self.free_per_server[server]
+    }
+
+    /// One-job GPUs on one server — maintained incrementally, O(1).
+    pub fn server_one_job(&self, server: usize) -> usize {
+        self.one_job_per_server[server]
+    }
+
+    /// Memory budget of one GPU, GB.
+    pub fn mem_gb(&self, gpu: GpuId) -> f64 {
+        self.topology.mem_gb(gpu)
+    }
+
+    /// Placement summary of a GPU set (see [`Topology::span_of`]).
+    pub fn span_of(&self, gpus: &[GpuId]) -> GangSpan {
+        self.topology.span_of(gpus)
     }
 
     /// Occupancy count per GPU.
@@ -87,30 +219,64 @@ impl Cluster {
         self.slots[gpu].jobs.len()
     }
 
-    /// Number of GPUs with at least one free share slot.
+    /// Number of GPUs with at least one free share slot — maintained
+    /// incrementally, O(1).
     pub fn schedulable_gpus(&self) -> usize {
-        self.slots.iter().filter(|s| s.jobs.len() < self.config.max_share).count()
+        self.n_schedulable
+    }
+
+    fn on_load_change(&mut self, gpu: GpuId, old: usize, new: usize) {
+        let s = self.topology.server_of(gpu);
+        if old == 0 {
+            self.free_per_server[s] -= 1;
+            self.n_free -= 1;
+        }
+        if new == 0 {
+            self.free_per_server[s] += 1;
+            self.n_free += 1;
+        }
+        if old == 1 {
+            self.one_job_per_server[s] -= 1;
+            self.n_one_job -= 1;
+        }
+        if new == 1 {
+            self.one_job_per_server[s] += 1;
+            self.n_one_job += 1;
+        }
+        let cap = self.config.max_share;
+        if old >= cap && new < cap {
+            self.n_schedulable += 1;
+        }
+        if old < cap && new >= cap {
+            self.n_schedulable -= 1;
+        }
     }
 
     /// Atomically grant `gpus` to `job` (gang allocation). Panics on a slot
     /// overflow — callers must have validated share capacity (Eq. 9).
     pub fn allocate(&mut self, job: JobId, gpus: &[GpuId]) {
         for &g in gpus {
-            let slot = &mut self.slots[g];
+            let before = self.slots[g].jobs.len();
             assert!(
-                slot.jobs.len() < self.config.max_share,
+                before < self.config.max_share,
                 "GPU {g} over-shared: {:?} + job {job}",
-                slot.jobs
+                self.slots[g].jobs
             );
-            assert!(!slot.jobs.contains(&job), "job {job} already on GPU {g}");
-            slot.jobs.push(job);
+            assert!(!self.slots[g].jobs.contains(&job), "job {job} already on GPU {g}");
+            self.slots[g].jobs.push(job);
+            self.on_load_change(g, before, before + 1);
         }
     }
 
     /// Atomically release every GPU held by `job` (gang release).
     pub fn release(&mut self, job: JobId) {
-        for slot in &mut self.slots {
-            slot.jobs.retain(|&j| j != job);
+        for g in 0..self.slots.len() {
+            let before = self.slots[g].jobs.len();
+            self.slots[g].jobs.retain(|&j| j != job);
+            let after = self.slots[g].jobs.len();
+            if after != before {
+                self.on_load_change(g, before, after);
+            }
         }
     }
 
@@ -142,7 +308,8 @@ impl Cluster {
     }
 
     /// Invariant check used by property tests: no slot over capacity, no
-    /// duplicate job entries on a slot.
+    /// duplicate job entries on a slot, and every incrementally maintained
+    /// occupancy count agreeing with a from-scratch rescan.
     pub fn check_invariants(&self) -> Result<(), String> {
         for (g, slot) in self.slots.iter().enumerate() {
             if slot.jobs.len() > self.config.max_share {
@@ -155,7 +322,74 @@ impl Cluster {
                 return Err(format!("GPU {g} duplicate job entries"));
             }
         }
+        let free = self.free_gpus();
+        let one_job = self.one_job_gpus();
+        if free.len() != self.n_free {
+            return Err(format!("free count {} != rescan {}", self.n_free, free.len()));
+        }
+        if one_job.len() != self.n_one_job {
+            return Err(format!(
+                "one-job count {} != rescan {}",
+                self.n_one_job,
+                one_job.len()
+            ));
+        }
+        if free.iter().any(|g| one_job.contains(g)) {
+            return Err("free and one-job sets overlap".to_string());
+        }
+        let schedulable = self
+            .slots
+            .iter()
+            .filter(|s| s.jobs.len() < self.config.max_share)
+            .count();
+        if schedulable != self.n_schedulable {
+            return Err(format!(
+                "schedulable count {} != rescan {schedulable}",
+                self.n_schedulable
+            ));
+        }
+        for s in 0..self.topology.n_servers() {
+            let range = self.topology.server_range(s);
+            let f = free.iter().filter(|&&g| range.contains(&g)).count();
+            let o = one_job.iter().filter(|&&g| range.contains(&g)).count();
+            if f != self.free_per_server[s] || o != self.one_job_per_server[s] {
+                return Err(format!(
+                    "server {s} counts (free {}, one-job {}) != rescan ({f}, {o})",
+                    self.free_per_server[s], self.one_job_per_server[s]
+                ));
+            }
+        }
         Ok(())
+    }
+}
+
+impl AllocView for Cluster {
+    fn topology(&self) -> &Topology {
+        &self.topology
+    }
+
+    fn max_share(&self) -> usize {
+        self.config.max_share
+    }
+
+    fn load(&self, gpu: GpuId) -> usize {
+        self.slots[gpu].jobs.len()
+    }
+
+    fn owner(&self, gpu: GpuId) -> Option<JobId> {
+        self.slots[gpu].jobs.first().copied()
+    }
+
+    fn free_count(&self) -> usize {
+        self.n_free
+    }
+
+    fn one_job_count(&self) -> usize {
+        self.n_one_job
+    }
+
+    fn server_free(&self, server: usize) -> usize {
+        self.free_per_server[server]
     }
 }
 
@@ -171,7 +405,9 @@ mod tests {
     fn fresh_cluster_all_free() {
         let c = cluster();
         assert_eq!(c.free_gpus().len(), 16);
+        assert_eq!(c.free_count(), 16);
         assert_eq!(c.one_job_gpus().len(), 0);
+        assert_eq!(c.one_job_count(), 0);
         assert_eq!(c.schedulable_gpus(), 16);
     }
 
@@ -180,10 +416,15 @@ mod tests {
         let mut c = cluster();
         c.allocate(7, &[0, 1, 2, 3]);
         assert_eq!(c.free_gpus().len(), 12);
+        assert_eq!(c.free_count(), 12);
         assert_eq!(c.one_job_gpus(), vec![0, 1, 2, 3]);
+        assert_eq!(c.one_job_count(), 4);
+        assert_eq!(c.server_free(0), 0);
+        assert_eq!(c.server_one_job(0), 4);
         assert_eq!(c.gpus_of(7), vec![0, 1, 2, 3]);
         c.release(7);
         assert_eq!(c.free_gpus().len(), 16);
+        assert_eq!(c.free_count(), 16);
         c.check_invariants().unwrap();
     }
 
@@ -196,6 +437,8 @@ mod tests {
         assert_eq!(c.co_runners(1), vec![2]);
         assert_eq!(c.co_runners(2), vec![1]);
         assert!(c.one_job_gpus().is_empty());
+        assert_eq!(c.one_job_count(), 0);
+        assert_eq!(c.schedulable_gpus(), 14);
         c.check_invariants().unwrap();
     }
 
@@ -233,6 +476,19 @@ mod tests {
         c.allocate(2, &[2, 3, 4, 5]);
         assert_eq!(c.co_runners(1), vec![2]);
         assert_eq!(c.one_job_gpus(), vec![0, 1, 4, 5]);
+        assert_eq!(c.one_job_count(), 4);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn heterogeneous_cluster_exposes_per_gpu_budgets() {
+        let c = Cluster::with_topology(topology::by_name("hetero-16x4-2tier").unwrap());
+        assert_eq!(c.total_gpus(), 64);
+        assert_eq!(c.mem_gb(0), 11.0);
+        assert_eq!(c.mem_gb(32), 22.0);
+        // The summary config is conservative: smallest GPU wins.
+        assert_eq!(c.config.gpu_mem_gb, 11.0);
+        assert_eq!(c.span_of(&[0, 1]).bandwidth_gbps, 100.0);
         c.check_invariants().unwrap();
     }
 }

@@ -1,0 +1,313 @@
+//! Hypothetical-allocation overlay: the planning view policies use
+//! instead of deep-copying the cluster.
+//!
+//! A full-pass policy plans a whole transaction per event: it tentatively
+//! places job after job, letting each placement constrain the next. The
+//! old way was `ctx.cluster.clone()` — one heap allocation per GPU slot,
+//! per policy, per event. A [`ClusterOverlay`] borrows the live
+//! [`Cluster`] read-only and records only the deltas (hypothetical gangs
+//! and releases), with per-server occupancy counters copied once; its
+//! scratch buffers live in an [`OverlayPool`] owned by the scheduling
+//! context, so steady-state acquisition allocates nothing at all
+//! (`cargo bench --bench sched_overhead`, `plan-view/*`).
+//!
+//! The overlay implements the same [`AllocView`] the live cluster does,
+//! so `placement::*` runs unchanged over either — and produces the same
+//! GPU orderings a mutated clone would, which is what keeps the policy
+//! refactor byte-identical (pinned by `rust/tests/topology.rs`).
+
+use std::cell::RefCell;
+
+use crate::jobs::JobId;
+
+use super::{AllocView, Cluster, GpuId, Topology};
+
+/// Reusable scratch buffers of one overlay (cleared between uses).
+#[derive(Debug, Default, Clone)]
+struct OverlayBufs {
+    /// Hypothetically granted jobs per GPU (on top of the base cluster).
+    extra: Vec<Vec<JobId>>,
+    /// GPUs with a non-empty `extra` entry (for O(touched) cleanup).
+    touched: Vec<GpuId>,
+    /// Jobs hypothetically released from their base-cluster GPUs, kept
+    /// sorted so membership checks on the read path are O(log k).
+    released: Vec<JobId>,
+    /// Per-server free counts (the only per-server class placement
+    /// consults — [`AllocView::server_free`]); the one-job class is
+    /// tracked as a cluster-wide total only.
+    free_per_server: Vec<usize>,
+}
+
+/// Pool of [`OverlayBufs`], owned by the scheduling context. Cloning a
+/// pool yields an empty one (scratch is never shared between contexts).
+#[derive(Debug, Default)]
+pub struct OverlayPool {
+    bufs: RefCell<Vec<OverlayBufs>>,
+}
+
+impl Clone for OverlayPool {
+    fn clone(&self) -> Self {
+        OverlayPool::default()
+    }
+}
+
+impl OverlayPool {
+    /// Borrow `base` into a fresh overlay, reusing pooled scratch buffers
+    /// when available.
+    pub fn acquire<'a>(&'a self, base: &'a Cluster) -> ClusterOverlay<'a> {
+        let mut bufs = self.bufs.borrow_mut().pop().unwrap_or_default();
+        bufs.extra.resize(base.total_gpus(), Vec::new());
+        let topo = base.topology();
+        bufs.free_per_server.clear();
+        bufs.free_per_server.extend((0..topo.n_servers()).map(|s| base.server_free(s)));
+        ClusterOverlay {
+            base,
+            pool: self,
+            bufs,
+            free_count: base.free_count(),
+            one_job_count: base.one_job_count(),
+        }
+    }
+}
+
+/// A borrowed planning view over a [`Cluster`]: reads fall through to the
+/// base state, hypothetical [`ClusterOverlay::allocate`] /
+/// [`ClusterOverlay::release`] calls are recorded as deltas. Dropped
+/// overlays return their scratch to the pool.
+#[derive(Debug)]
+pub struct ClusterOverlay<'a> {
+    base: &'a Cluster,
+    pool: &'a OverlayPool,
+    bufs: OverlayBufs,
+    free_count: usize,
+    one_job_count: usize,
+}
+
+impl ClusterOverlay<'_> {
+    fn is_released(&self, job: JobId) -> bool {
+        self.bufs.released.binary_search(&job).is_ok()
+    }
+
+    fn base_load(&self, gpu: GpuId) -> usize {
+        let jobs = &self.base.slot(gpu).jobs;
+        if self.bufs.released.is_empty() {
+            jobs.len()
+        } else {
+            jobs.iter().filter(|&&j| !self.is_released(j)).count()
+        }
+    }
+
+    /// Whether `job` holds `gpu` in this view (base or hypothetical).
+    pub fn holds(&self, gpu: GpuId, job: JobId) -> bool {
+        (self.base.slot(gpu).jobs.contains(&job) && !self.is_released(job))
+            || self.bufs.extra[gpu].contains(&job)
+    }
+
+    fn on_load_change(&mut self, gpu: GpuId, old: usize, new: usize) {
+        let s = self.base.topology().server_of(gpu);
+        if old == 0 {
+            self.bufs.free_per_server[s] -= 1;
+            self.free_count -= 1;
+        }
+        if new == 0 {
+            self.bufs.free_per_server[s] += 1;
+            self.free_count += 1;
+        }
+        if old == 1 {
+            self.one_job_count -= 1;
+        }
+        if new == 1 {
+            self.one_job_count += 1;
+        }
+    }
+
+    /// Hypothetically grant `gpus` to `job` (same panics as
+    /// [`Cluster::allocate`]: the plan must respect the share cap).
+    pub fn allocate(&mut self, job: JobId, gpus: &[GpuId]) {
+        for &g in gpus {
+            let before = self.load(g);
+            assert!(
+                before < self.base.config.max_share,
+                "GPU {g} over-shared in plan: + job {job}"
+            );
+            assert!(!self.holds(g, job), "job {job} already on GPU {g} in plan");
+            if self.bufs.extra[g].is_empty() {
+                self.bufs.touched.push(g);
+            }
+            self.bufs.extra[g].push(job);
+            self.on_load_change(g, before, before + 1);
+        }
+    }
+
+    /// Hypothetically release every GPU held by `job` — base-held gangs
+    /// (a planned preemption) and plan-granted ones alike.
+    pub fn release(&mut self, job: JobId) {
+        let already = self.is_released(job);
+        let mut found_base = false;
+        for g in 0..self.base.total_gpus() {
+            let on_base = !already && self.base.slot(g).jobs.contains(&job);
+            let on_extra = self.bufs.extra[g].contains(&job);
+            if !(on_base || on_extra) {
+                continue;
+            }
+            let before = self.load(g);
+            if on_extra {
+                self.bufs.extra[g].retain(|&j| j != job);
+            }
+            found_base |= on_base;
+            // A job never holds the same GPU twice, so the drop is 1.
+            self.on_load_change(g, before, before - 1);
+        }
+        if found_base {
+            if let Err(i) = self.bufs.released.binary_search(&job) {
+                self.bufs.released.insert(i, job);
+            }
+        }
+    }
+}
+
+impl AllocView for ClusterOverlay<'_> {
+    fn topology(&self) -> &Topology {
+        self.base.topology()
+    }
+
+    fn max_share(&self) -> usize {
+        self.base.config.max_share
+    }
+
+    fn load(&self, gpu: GpuId) -> usize {
+        self.base_load(gpu) + self.bufs.extra[gpu].len()
+    }
+
+    fn owner(&self, gpu: GpuId) -> Option<JobId> {
+        // Base residents first, then plan grants — the same order a
+        // mutated clone's slot vector would hold.
+        self.base
+            .slot(gpu)
+            .jobs
+            .iter()
+            .find(|&&j| !self.is_released(j))
+            .copied()
+            .or_else(|| self.bufs.extra[gpu].first().copied())
+    }
+
+    fn free_count(&self) -> usize {
+        self.free_count
+    }
+
+    fn one_job_count(&self) -> usize {
+        self.one_job_count
+    }
+
+    fn server_free(&self, server: usize) -> usize {
+        self.bufs.free_per_server[server]
+    }
+}
+
+impl Drop for ClusterOverlay<'_> {
+    fn drop(&mut self) {
+        for &g in &self.bufs.touched {
+            self.bufs.extra[g].clear();
+        }
+        self.bufs.touched.clear();
+        self.bufs.released.clear();
+        self.pool.bufs.borrow_mut().push(std::mem::take(&mut self.bufs));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterConfig;
+
+    fn base() -> Cluster {
+        let mut c = Cluster::new(ClusterConfig::physical());
+        c.allocate(1, &[0, 1, 2, 3]);
+        c.allocate(2, &[2, 3]);
+        c
+    }
+
+    #[test]
+    fn overlay_mirrors_base_reads() {
+        let c = base();
+        let pool = OverlayPool::default();
+        let view = pool.acquire(&c);
+        assert_eq!(view.free_count(), c.free_count());
+        assert_eq!(view.one_job_count(), c.one_job_count());
+        assert_eq!(view.free_gpus(), c.free_gpus());
+        assert_eq!(view.one_job_gpus(), c.one_job_gpus());
+        assert_eq!(view.owner(0), Some(1));
+        assert_eq!(view.load(2), 2);
+    }
+
+    #[test]
+    fn hypothetical_allocate_matches_a_mutated_clone() {
+        let c = base();
+        let mut clone = c.clone();
+        let pool = OverlayPool::default();
+        let mut view = pool.acquire(&c);
+        for (job, gpus) in [(7usize, vec![4, 5, 0]), (8, vec![4, 6])] {
+            clone.allocate(job, &gpus);
+            view.allocate(job, &gpus);
+        }
+        assert_eq!(view.free_gpus(), clone.free_gpus());
+        assert_eq!(view.one_job_gpus(), clone.one_job_gpus());
+        assert_eq!(view.free_count(), clone.free_count());
+        assert_eq!(view.one_job_count(), clone.one_job_count());
+        for g in 0..c.total_gpus() {
+            assert_eq!(view.load(g), clone.load(g), "gpu {g}");
+            assert_eq!(view.owner(g), clone.slot(g).jobs.first().copied(), "gpu {g}");
+        }
+        // The base cluster is untouched.
+        drop(view);
+        assert_eq!(c.free_count(), 12);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn hypothetical_release_matches_a_mutated_clone() {
+        let c = base();
+        let mut clone = c.clone();
+        let pool = OverlayPool::default();
+        let mut view = pool.acquire(&c);
+        clone.release(1);
+        view.release(1);
+        // Also release a job granted inside the plan.
+        clone.allocate(9, &[0, 1]);
+        view.allocate(9, &[0, 1]);
+        clone.release(9);
+        view.release(9);
+        assert_eq!(view.free_gpus(), clone.free_gpus());
+        assert_eq!(view.one_job_gpus(), clone.one_job_gpus());
+        for g in 0..c.total_gpus() {
+            assert_eq!(view.load(g), clone.load(g), "gpu {g}");
+            assert_eq!(view.owner(g), clone.slot(g).jobs.first().copied(), "gpu {g}");
+        }
+    }
+
+    #[test]
+    fn pool_recycles_buffers_clean() {
+        let c = base();
+        let pool = OverlayPool::default();
+        {
+            let mut view = pool.acquire(&c);
+            view.allocate(42, &[8, 9]);
+            view.release(1);
+        }
+        // Second acquisition must see a pristine view of the base.
+        let view = pool.acquire(&c);
+        assert_eq!(view.load(8), 0);
+        assert_eq!(view.owner(0), Some(1));
+        assert_eq!(view.free_count(), c.free_count());
+        assert_eq!(view.one_job_count(), c.one_job_count());
+    }
+
+    #[test]
+    #[should_panic(expected = "over-shared in plan")]
+    fn plan_respects_share_cap() {
+        let c = base();
+        let pool = OverlayPool::default();
+        let mut view = pool.acquire(&c);
+        view.allocate(7, &[2]); // GPU 2 already holds jobs 1 and 2
+    }
+}

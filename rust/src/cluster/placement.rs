@@ -2,66 +2,115 @@
 //!
 //! Alg. 1 line 7 — "select the top-G_k GPUs in G_free to make them as
 //! consolidated on the nodes as possible". Consolidation minimizes the
-//! number of servers spanned (fewer inter-node all-reduce hops).
+//! number of servers spanned — and, on a topology with a fast intra-node
+//! tier, keeps the gang's all-reduce on the fast links
+//! ([`crate::perf::GangSpan`]).
+//!
+//! Both strategies are generic over [`AllocView`], so they run unchanged
+//! against the live [`crate::cluster::Cluster`] and a policy's
+//! [`crate::cluster::ClusterOverlay`] plan, and both are assembled by the
+//! same server-ordered [`take_free`] walk — consolidated ranks servers
+//! with the shared [`server_score`], first-fit takes them in index order.
+//! The `*_mem` variants additionally skip GPUs whose per-type memory
+//! budget cannot hold `mem_gb` (a no-op on uniform topologies, where
+//! every GPU has the reference budget).
 
-use super::{Cluster, GpuId};
+use super::{AllocView, GpuId};
+
+/// The shared span score of a candidate server for hosting (part of) a
+/// `need`-GPU gang: exact fits first (a server whose eligible free count
+/// equals `need` avoids fragmenting a bigger block), then fullest-first
+/// (fewest servers spanned), then server index for determinism. Lower
+/// sorts earlier.
+pub fn server_score(eligible_free: usize, need: usize, server: usize) -> (usize, usize, usize) {
+    (usize::from(eligible_free != need), usize::MAX - eligible_free, server)
+}
+
+/// Eligible free GPUs on a server: its free count if the server's GPU
+/// type can hold `mem_gb`, else 0 (servers are internally homogeneous).
+fn eligible_free<V: AllocView>(view: &V, server: usize, mem_gb: f64) -> usize {
+    if view.topology().server(server).gpu.mem_gb + 1e-9 >= mem_gb {
+        view.server_free(server)
+    } else {
+        0
+    }
+}
+
+/// Shared gang assembly: walk `servers` in the given order, scanning each
+/// server's GPU range ascending, taking free GPUs whose memory budget
+/// holds `mem_gb`, until `need` are collected.
+fn take_free<V: AllocView>(
+    view: &V,
+    need: usize,
+    servers: impl Iterator<Item = usize>,
+    mem_gb: f64,
+) -> Option<Vec<GpuId>> {
+    let mut out = Vec::with_capacity(need);
+    if need == 0 {
+        return Some(out);
+    }
+    for s in servers {
+        if eligible_free(view, s, mem_gb) == 0 {
+            continue;
+        }
+        for g in view.topology().server_range(s) {
+            if view.load(g) == 0 {
+                out.push(g);
+                if out.len() == need {
+                    return Some(out);
+                }
+            }
+        }
+    }
+    None
+}
 
 /// Choose `need` free GPUs, preferring servers with the most free GPUs so
 /// gangs span as few nodes as possible; within a server, lowest index first.
 /// Returns `None` if not enough free GPUs exist.
-pub fn consolidated_free(cluster: &Cluster, need: usize) -> Option<Vec<GpuId>> {
-    let free = cluster.free_gpus();
-    if free.len() < need {
-        return None;
-    }
-    // Bucket free GPUs per server.
-    let mut per_server: Vec<Vec<GpuId>> = vec![Vec::new(); cluster.config.servers];
-    for g in free {
-        per_server[cluster.server_of(g)].push(g);
-    }
-    // Exact fit first: a server whose free count equals `need` avoids
-    // fragmenting a bigger block. Then fullest-first.
-    let mut order: Vec<usize> = (0..per_server.len()).collect();
-    order.sort_by_key(|&s| {
-        let n = per_server[s].len();
-        let exact = n == need;
-        // exact fits first, then descending size, then server index
-        (if exact { 0usize } else { 1 }, usize::MAX - n, s)
-    });
-    let mut out = Vec::with_capacity(need);
-    for s in order {
-        for &g in &per_server[s] {
-            if out.len() == need {
-                return Some(out);
-            }
-            out.push(g);
-        }
-        if out.len() == need {
-            return Some(out);
-        }
-    }
-    if out.len() == need {
-        Some(out)
-    } else {
-        None
-    }
+pub fn consolidated_free<V: AllocView>(view: &V, need: usize) -> Option<Vec<GpuId>> {
+    consolidated_free_mem(view, need, 0.0)
 }
 
-/// First-fit over free GPUs in index order (the FIFO/Tiresias default and
-/// the baseline the consolidation tests compare against).
-pub fn first_fit_free(cluster: &Cluster, need: usize) -> Option<Vec<GpuId>> {
-    let free = cluster.free_gpus();
-    if free.len() < need {
-        None
-    } else {
-        Some(free[..need].to_vec())
+/// [`consolidated_free`] restricted to GPUs whose memory budget holds
+/// `mem_gb` (the job's solo footprint) — the heterogeneity-safe variant
+/// every policy uses for exclusive starts.
+pub fn consolidated_free_mem<V: AllocView>(
+    view: &V,
+    need: usize,
+    mem_gb: f64,
+) -> Option<Vec<GpuId>> {
+    let n_servers = view.topology().n_servers();
+    let total: usize = (0..n_servers).map(|s| eligible_free(view, s, mem_gb)).sum();
+    if total < need {
+        return None;
     }
+    let mut order: Vec<usize> = (0..n_servers).collect();
+    order.sort_by_key(|&s| server_score(eligible_free(view, s, mem_gb), need, s));
+    take_free(view, need, order.into_iter(), mem_gb)
+}
+
+/// First-fit over free GPUs in index order (the baseline the consolidation
+/// tests compare against).
+pub fn first_fit_free<V: AllocView>(view: &V, need: usize) -> Option<Vec<GpuId>> {
+    first_fit_free_mem(view, need, 0.0)
+}
+
+/// [`first_fit_free`] restricted to GPUs whose memory budget holds `mem_gb`.
+/// No eligibility precheck: the natural-order [`take_free`] walk already
+/// returns `None` in exactly the insufficient cases.
+pub fn first_fit_free_mem<V: AllocView>(
+    view: &V,
+    need: usize,
+    mem_gb: f64,
+) -> Option<Vec<GpuId>> {
+    take_free(view, need, 0..view.topology().n_servers(), mem_gb)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cluster::ClusterConfig;
+    use crate::cluster::{topology, Cluster, ClusterConfig};
 
     #[test]
     fn consolidates_on_one_server_when_possible() {
@@ -106,5 +155,47 @@ mod tests {
         let mut c = Cluster::new(ClusterConfig::physical());
         c.allocate(9, &[0]);
         assert_eq!(first_fit_free(&c, 3).unwrap(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn mem_filter_skips_small_gpu_servers() {
+        // hetero-16x4-2tier: servers 0..8 carry 11 GB GPUs, 8..16 carry
+        // 22 GB. A 15 GB job can only land on the big-memory half.
+        let c = Cluster::with_topology(topology::by_name("hetero-16x4-2tier").unwrap());
+        let got = consolidated_free_mem(&c, 4, 15.0).unwrap();
+        assert!(got.iter().all(|&g| c.mem_gb(g) >= 15.0), "got {got:?}");
+        assert_eq!(c.servers_spanned(&got), 1);
+        let ff = first_fit_free_mem(&c, 2, 15.0).unwrap();
+        assert_eq!(ff, vec![32, 33], "first fit starts at the first 22 GB GPU");
+        // Asking for more big GPUs than exist fails even though small
+        // ones are free.
+        assert!(consolidated_free_mem(&c, 33, 15.0).is_none());
+        // With no memory requirement the whole cluster is eligible.
+        assert!(consolidated_free_mem(&c, 33, 0.0).is_some());
+    }
+
+    #[test]
+    fn mem_filter_is_a_noop_on_uniform_topologies() {
+        let mut c = Cluster::new(ClusterConfig::physical());
+        c.allocate(9, &[0, 1]);
+        for need in [1usize, 2, 4, 6] {
+            assert_eq!(
+                consolidated_free(&c, need),
+                consolidated_free_mem(&c, need, 10.9),
+                "need {need}"
+            );
+            assert_eq!(
+                first_fit_free(&c, need),
+                first_fit_free_mem(&c, need, 10.9),
+                "need {need}"
+            );
+        }
+    }
+
+    #[test]
+    fn gang_span_reports_topology_tier() {
+        let c = Cluster::with_topology(topology::by_name("uniform-16x4-nvlink").unwrap());
+        assert_eq!(c.span_of(&[0, 1, 2, 3]).bandwidth_gbps, 100.0);
+        assert_eq!(c.span_of(&[0, 4]).bandwidth_gbps, 10.0);
     }
 }

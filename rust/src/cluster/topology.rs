@@ -1,0 +1,354 @@
+//! Cluster topology: which servers exist, what GPUs they carry, and how
+//! they are linked.
+//!
+//! The paper models `|S|` identical servers behind a sufficient-bandwidth
+//! switch, so its Eq. 2/4 comm cost ignores where a gang actually lands.
+//! Real multi-tenant clusters are neither flat nor homogeneous (Jeon et
+//! al.; Gao & Hu et al.): locality and GPU generation dominate JCT. A
+//! [`Topology`] describes servers with a per-server [`GpuType`] (memory +
+//! compute scale) and two [`LinkTier`]s — intra-node and inter-node — and
+//! derives a [`GangSpan`] from any concrete placement, which the perf
+//! layer turns into locality-true Eq. 2/4/7 times.
+//!
+//! **Uniform-topology equivalence guarantee**: a topology built by
+//! [`Topology::from_config`] / [`Topology::uniform`] uses the reference
+//! GPU (11 GB, scale 1.0) and the reference link on *both* tiers, so every
+//! span it produces reproduces the paper's placement-agnostic arithmetic
+//! bit-for-bit — simulations over such a topology are byte-identical to
+//! the pre-topology model (pinned by `rust/tests/topology.rs`).
+
+use crate::perf::GangSpan;
+
+use super::{ClusterConfig, GpuId};
+
+/// One link class: all links of a tier share bandwidth and latency.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkTier {
+    pub bandwidth_gbps: f64,
+    /// Per-hop latency, seconds.
+    pub latency_s: f64,
+}
+
+impl LinkTier {
+    /// The paper's baseline link: the 10 Gbps NIC the Eq. 4 coefficients
+    /// are calibrated on, with no modelled hop latency.
+    pub fn reference() -> LinkTier {
+        LinkTier { bandwidth_gbps: GangSpan::REF_BANDWIDTH_GBPS, latency_s: 0.0 }
+    }
+}
+
+/// GPU hardware class of one server (servers are internally homogeneous).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GpuType {
+    /// Device memory budget, GB (Eq. 9's per-GPU capacity).
+    pub mem_gb: f64,
+    /// Compute speed relative to the reference GPU the Eq. 3 coefficients
+    /// were calibrated on (2080 Ti): 1.0 = reference, 2.0 = twice as fast.
+    pub compute_scale: f64,
+}
+
+impl GpuType {
+    /// The paper's testbed GPU: 2080 Ti, 11 GB, the calibration baseline.
+    pub fn reference() -> GpuType {
+        GpuType { mem_gb: 11.0, compute_scale: 1.0 }
+    }
+}
+
+/// One server: a GPU count and the type all its GPUs share.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServerSpec {
+    pub gpus: usize,
+    pub gpu: GpuType,
+}
+
+/// The full cluster shape. GPU ids are flat and dense: server `s` owns the
+/// contiguous range [`Topology::server_range`], in server order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Topology {
+    servers: Vec<ServerSpec>,
+    /// Links between GPUs of the same server (NVLink/PCIe class).
+    pub intra: LinkTier,
+    /// Links between servers (NIC/switch class).
+    pub inter: LinkTier,
+    /// Max co-located jobs per GPU (paper: C = 2).
+    pub max_share: usize,
+    /// `offsets[s]` = first GPU id of server `s`; last entry = total GPUs.
+    offsets: Vec<usize>,
+}
+
+/// Named topology shapes usable on the campaign `topologies` axis and the
+/// CLI `--topology` flag. `uniform-*` shapes keep the paper's flat model;
+/// the `hetero-*` shape mixes GPU generations and link tiers.
+pub const SHAPE_NAMES: [&str; 4] =
+    ["uniform-4x4", "uniform-16x4", "uniform-16x4-nvlink", "hetero-16x4-2tier"];
+
+/// [`by_name`] as a `Result`, with the one canonical unknown-shape error
+/// (listing the known shapes) shared by every call site — CLI flag,
+/// campaign validation and scenario construction alike.
+pub fn by_name_or_err(name: &str) -> anyhow::Result<Topology> {
+    by_name(name).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown topology shape {name:?} (known: {})",
+            SHAPE_NAMES.join(", ")
+        )
+    })
+}
+
+/// Resolve a named shape (see [`SHAPE_NAMES`]).
+pub fn by_name(name: &str) -> Option<Topology> {
+    Some(match name {
+        // The paper's 4-server physical testbed.
+        "uniform-4x4" => Topology::from_config(&ClusterConfig::physical()),
+        // The paper's 16-server simulation cluster.
+        "uniform-16x4" => Topology::from_config(&ClusterConfig::simulation()),
+        // Same shape, but consolidation pays: NVLink-class intra-node
+        // links, reference 10 Gbps between nodes.
+        "uniform-16x4-nvlink" => {
+            let mut t = Topology::from_config(&ClusterConfig::simulation());
+            t.intra = LinkTier { bandwidth_gbps: 100.0, latency_s: 0.0 };
+            t
+        }
+        // Two generations: 8 reference servers plus 8 newer servers with
+        // twice the memory and 1.6x compute, NVLink intra, 10 Gbps inter
+        // with a modelled 20 µs hop latency.
+        "hetero-16x4-2tier" => Topology::new(
+            (0..16)
+                .map(|s| ServerSpec {
+                    gpus: 4,
+                    gpu: if s < 8 {
+                        GpuType::reference()
+                    } else {
+                        GpuType { mem_gb: 22.0, compute_scale: 1.6 }
+                    },
+                })
+                .collect(),
+            LinkTier { bandwidth_gbps: 100.0, latency_s: 0.0 },
+            LinkTier { bandwidth_gbps: 10.0, latency_s: 20e-6 },
+            2,
+        ),
+        _ => return None,
+    })
+}
+
+impl Topology {
+    pub fn new(
+        servers: Vec<ServerSpec>,
+        intra: LinkTier,
+        inter: LinkTier,
+        max_share: usize,
+    ) -> Topology {
+        assert!(!servers.is_empty(), "topology needs at least one server");
+        assert!(
+            servers.iter().all(|s| s.gpus >= 1),
+            "every server must carry at least one GPU"
+        );
+        assert!(
+            servers.iter().all(|s| s.gpu.compute_scale > 0.0 && s.gpu.mem_gb > 0.0),
+            "GPU compute scale and memory must be positive"
+        );
+        assert!(
+            intra.bandwidth_gbps > 0.0 && inter.bandwidth_gbps > 0.0,
+            "link bandwidth must be positive"
+        );
+        assert!(max_share >= 1, "share cap must be at least 1");
+        let mut offsets = Vec::with_capacity(servers.len() + 1);
+        let mut total = 0;
+        for s in &servers {
+            offsets.push(total);
+            total += s.gpus;
+        }
+        offsets.push(total);
+        Topology { servers, intra, inter, max_share, offsets }
+    }
+
+    /// A flat cluster of identical reference-linked servers — the paper's
+    /// model, as a (degenerate) topology.
+    pub fn uniform(servers: usize, gpus_per_server: usize, mem_gb: f64) -> Topology {
+        Topology::new(
+            vec![
+                ServerSpec {
+                    gpus: gpus_per_server,
+                    gpu: GpuType { mem_gb, compute_scale: 1.0 },
+                };
+                servers
+            ],
+            LinkTier::reference(),
+            LinkTier::reference(),
+            2,
+        )
+    }
+
+    /// The uniform topology a flat [`ClusterConfig`] describes. Goes
+    /// through [`Topology::new`] so the construction invariants (positive
+    /// shapes, `max_share >= 1`) hold on this path too.
+    pub fn from_config(cfg: &ClusterConfig) -> Topology {
+        Topology::new(
+            vec![
+                ServerSpec {
+                    gpus: cfg.gpus_per_server,
+                    gpu: GpuType { mem_gb: cfg.gpu_mem_gb, compute_scale: 1.0 },
+                };
+                cfg.servers
+            ],
+            LinkTier::reference(),
+            LinkTier::reference(),
+            cfg.max_share,
+        )
+    }
+
+    /// Flat summary of this topology for call sites that still speak
+    /// [`ClusterConfig`]: exact for uniform topologies; for heterogeneous
+    /// ones `gpus_per_server` is the widest server and `gpu_mem_gb` the
+    /// *smallest* (most conservative) GPU.
+    pub fn summary_config(&self) -> ClusterConfig {
+        ClusterConfig {
+            servers: self.servers.len(),
+            gpus_per_server: self.servers.iter().map(|s| s.gpus).max().unwrap_or(0),
+            gpu_mem_gb: self
+                .servers
+                .iter()
+                .map(|s| s.gpu.mem_gb)
+                .fold(f64::INFINITY, f64::min),
+            max_share: self.max_share,
+        }
+    }
+
+    pub fn n_servers(&self) -> usize {
+        self.servers.len()
+    }
+
+    pub fn total_gpus(&self) -> usize {
+        *self.offsets.last().unwrap()
+    }
+
+    pub fn server(&self, s: usize) -> &ServerSpec {
+        &self.servers[s]
+    }
+
+    /// The contiguous GPU-id range of server `s`.
+    pub fn server_range(&self, s: usize) -> std::ops::Range<GpuId> {
+        self.offsets[s]..self.offsets[s + 1]
+    }
+
+    /// Which server a GPU lives on. O(log servers); exact for ragged
+    /// per-server GPU counts (unlike the old `gpu / gpus_per_server`).
+    pub fn server_of(&self, gpu: GpuId) -> usize {
+        debug_assert!(gpu < self.total_gpus(), "GPU {gpu} out of range");
+        match self.offsets.binary_search(&gpu) {
+            Ok(s) => s,
+            Err(i) => i - 1,
+        }
+    }
+
+    /// Memory budget of one GPU, GB.
+    pub fn mem_gb(&self, gpu: GpuId) -> f64 {
+        self.servers[self.server_of(gpu)].gpu.mem_gb
+    }
+
+    /// Compute scale of one GPU.
+    pub fn compute_scale(&self, gpu: GpuId) -> f64 {
+        self.servers[self.server_of(gpu)].gpu.compute_scale
+    }
+
+    /// Derive the [`GangSpan`] of a concrete placement: distinct servers
+    /// spanned, the bottleneck link tier (inter-node as soon as more than
+    /// one server is involved), and the slowest member GPU's compute
+    /// scale. An empty set yields the reference span.
+    pub fn span_of(&self, gpus: &[GpuId]) -> GangSpan {
+        if gpus.is_empty() {
+            return GangSpan::reference();
+        }
+        let mut nodes: Vec<usize> = gpus.iter().map(|&g| self.server_of(g)).collect();
+        nodes.sort_unstable();
+        nodes.dedup();
+        let tier = if nodes.len() > 1 { &self.inter } else { &self.intra };
+        let compute_scale = nodes
+            .iter()
+            .map(|&s| self.servers[s].gpu.compute_scale)
+            .fold(f64::INFINITY, f64::min);
+        GangSpan {
+            nodes: nodes.len(),
+            bandwidth_gbps: tier.bandwidth_gbps,
+            latency_s: tier.latency_s,
+            compute_scale,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_matches_config_summary_exactly() {
+        let cfg = ClusterConfig::simulation();
+        let t = Topology::from_config(&cfg);
+        assert_eq!(t.n_servers(), 16);
+        assert_eq!(t.total_gpus(), 64);
+        let back = t.summary_config();
+        assert_eq!(back.servers, cfg.servers);
+        assert_eq!(back.gpus_per_server, cfg.gpus_per_server);
+        assert_eq!(back.gpu_mem_gb, cfg.gpu_mem_gb);
+        assert_eq!(back.max_share, cfg.max_share);
+    }
+
+    #[test]
+    fn uniform_span_is_reference_on_both_tiers() {
+        let t = Topology::from_config(&ClusterConfig::physical());
+        for gpus in [vec![0, 1, 2, 3], vec![0, 4, 8, 12], vec![3, 4]] {
+            let span = t.span_of(&gpus);
+            assert_eq!(span.bandwidth_gbps, GangSpan::REF_BANDWIDTH_GBPS);
+            assert_eq!(span.latency_s, 0.0);
+            assert_eq!(span.compute_scale, 1.0);
+        }
+        assert_eq!(t.span_of(&[0, 1, 2, 3]).nodes, 1);
+        assert_eq!(t.span_of(&[0, 4, 8, 12]).nodes, 4);
+        assert_eq!(t.span_of(&[]).nodes, 1);
+    }
+
+    #[test]
+    fn server_of_handles_ragged_servers() {
+        let t = Topology::new(
+            vec![
+                ServerSpec { gpus: 2, gpu: GpuType::reference() },
+                ServerSpec { gpus: 5, gpu: GpuType::reference() },
+                ServerSpec { gpus: 1, gpu: GpuType::reference() },
+            ],
+            LinkTier::reference(),
+            LinkTier::reference(),
+            2,
+        );
+        assert_eq!(t.total_gpus(), 8);
+        let servers: Vec<usize> = (0..8).map(|g| t.server_of(g)).collect();
+        assert_eq!(servers, vec![0, 0, 1, 1, 1, 1, 1, 2]);
+        assert_eq!(t.server_range(1), 2..7);
+    }
+
+    #[test]
+    fn hetero_shape_mixes_tiers_and_types() {
+        let t = by_name("hetero-16x4-2tier").unwrap();
+        assert_eq!(t.total_gpus(), 64);
+        assert_eq!(t.mem_gb(0), 11.0);
+        assert_eq!(t.mem_gb(63), 22.0);
+        // Single fast-tier node: NVLink intra, min compute scale 1.6.
+        let fast = t.span_of(&[32, 33, 34, 35]);
+        assert_eq!(fast.nodes, 1);
+        assert_eq!(fast.bandwidth_gbps, 100.0);
+        assert_eq!(fast.compute_scale, 1.6);
+        // Crossing generations: inter tier, slowest GPU wins.
+        let mixed = t.span_of(&[0, 32]);
+        assert_eq!(mixed.nodes, 2);
+        assert_eq!(mixed.bandwidth_gbps, 10.0);
+        assert_eq!(mixed.latency_s, 20e-6);
+        assert_eq!(mixed.compute_scale, 1.0);
+    }
+
+    #[test]
+    fn every_named_shape_resolves() {
+        for name in SHAPE_NAMES {
+            let t = by_name(name).unwrap_or_else(|| panic!("missing shape {name}"));
+            assert!(t.total_gpus() >= 16, "{name} too small for a 16-gang");
+        }
+        assert!(by_name("bogus").is_none());
+    }
+}

@@ -41,8 +41,9 @@ pub mod sched_core;
 pub mod sim;
 pub mod util;
 
-pub use cluster::{Cluster, ClusterConfig};
+pub use cluster::{AllocView, Cluster, ClusterConfig, ClusterOverlay, Topology};
 pub use jobs::{JobRecord, JobSpec, JobState};
 pub use perf::interference::InterferenceModel;
+pub use perf::GangSpan;
 pub use sched_core::{Event, Policy, SchedContext, Txn};
 pub use sim::engine::run as simulate;

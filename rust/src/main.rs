@@ -20,7 +20,7 @@ use std::path::PathBuf;
 use anyhow::{bail, Context, Result};
 
 use wise_share::campaign::{self, CampaignSpec};
-use wise_share::cluster::ClusterConfig;
+use wise_share::cluster::{topology, Cluster, ClusterConfig};
 use wise_share::coordinator::{run_physical, write_loss_csv, PhysicalConfig};
 use wise_share::jobs::trace::{self, TraceConfig};
 use wise_share::perf::fit::{fit_comp, Sample};
@@ -35,14 +35,19 @@ wise-share — SJF-BSBF scheduling reproduction
 
 USAGE:
   wise-share simulate  [--policy NAME|all] [--jobs N] [--seed S] [--trace F]
-                       [--cluster physical|simulation] [--xi X] [--load L]
+                       [--cluster physical|simulation | --topology SHAPE]
+                       [--xi X] [--load L]
   wise-share campaign  (--spec FILE | --preset paper) [--threads N]
                        [--csv F]
   wise-share physical  [--policy NAME] [--jobs N] [--seed S]
                        [--iter-scale F] [--compress F] [--loss-csv F]
                        [--artifacts DIR]
-  wise-share trace-gen --out F [--jobs N] [--seed S] [--preset simulation|physical]
+  wise-share trace-gen --out F [--jobs N] [--seed S] [--preset physical|simulation]
   wise-share fit       [--model NAME]
+
+Topology SHAPEs (named cluster shapes, also usable on the campaign
+`topologies` axis): uniform-4x4, uniform-16x4, uniform-16x4-nvlink,
+hetero-16x4-2tier.
 ";
 
 /// Tiny `--key value` flag parser.
@@ -79,16 +84,58 @@ impl Args {
     }
 }
 
-fn cluster_by_name(name: &str) -> Result<ClusterConfig> {
+/// One preset = a cluster shape plus the matching trace-generator shape.
+/// The single name → preset table shared by every subcommand that takes a
+/// preset (`simulate --cluster`, `trace-gen --preset`), so the names and
+/// the error message cannot drift apart again; cluster and trace halves
+/// are derived independently, so no caller has to fabricate trace
+/// parameters just to look up a cluster.
+#[derive(Clone, Copy)]
+enum Preset {
+    Physical,
+    Simulation,
+}
+
+impl Preset {
+    fn cluster(self) -> ClusterConfig {
+        match self {
+            Preset::Physical => ClusterConfig::physical(),
+            Preset::Simulation => ClusterConfig::simulation(),
+        }
+    }
+
+    fn trace(self, jobs: usize, seed: u64) -> TraceConfig {
+        match self {
+            Preset::Physical => TraceConfig::physical(seed),
+            Preset::Simulation => TraceConfig::simulation(jobs, seed),
+        }
+    }
+}
+
+fn preset_by_name(name: &str) -> Result<Preset> {
     Ok(match name {
-        "physical" => ClusterConfig::physical(),
-        "simulation" => ClusterConfig::simulation(),
-        _ => bail!("unknown cluster preset {name} (physical|simulation)"),
+        "physical" => Preset::Physical,
+        "simulation" => Preset::Simulation,
+        _ => bail!("unknown cluster preset {name:?} (known: physical, simulation)"),
     })
 }
 
+/// Resolve `--cluster` (flat preset) / `--topology` (named shape) into a
+/// concrete cluster; the flags are mutually exclusive.
+fn resolve_cluster(args: &Args) -> Result<Cluster> {
+    match (args.get("topology"), args.get("cluster")) {
+        (Some(_), Some(_)) => bail!("--topology and --cluster are mutually exclusive"),
+        (Some(shape), None) => {
+            Ok(Cluster::with_topology(topology::by_name_or_err(shape)?))
+        }
+        (None, name) => {
+            Ok(Cluster::new(preset_by_name(name.unwrap_or("simulation"))?.cluster()))
+        }
+    }
+}
+
 fn cmd_simulate(args: &Args) -> Result<()> {
-    let cluster = cluster_by_name(args.get("cluster").unwrap_or("simulation"))?;
+    let cluster = resolve_cluster(args)?;
     let jobs: usize = args.parse_or("jobs", 240)?;
     let seed: u64 = args.parse_or("seed", 1)?;
     let load: f64 = args.parse_or("load", 1.0)?;
@@ -114,7 +161,13 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     for name in &names {
         let mut p =
             sched::by_name(name).with_context(|| format!("unknown policy {name}"))?;
-        let out = engine::run(cluster, &jobs_list, xi_model.clone(), p.as_mut())?;
+        let out = engine::run_cluster(
+            cluster.clone(),
+            &jobs_list,
+            xi_model.clone(),
+            p.as_mut(),
+            engine::EngineConfig::default(),
+        )?;
         let s = metrics::summarize(name, &out.jobs, out.makespan_s);
         println!(
             "{name}: makespan {:.0}s, avg JCT {:.1}s, {} preemptions, {} policy calls",
@@ -196,12 +249,8 @@ fn cmd_physical(args: &Args) -> Result<()> {
 fn cmd_trace_gen(args: &Args) -> Result<()> {
     let out = PathBuf::from(args.get("out").context("--out is required")?);
     let seed: u64 = args.parse_or("seed", 1)?;
-    let cfg = match args.get("preset").unwrap_or("simulation") {
-        "physical" => TraceConfig::physical(seed),
-        "simulation" => TraceConfig::simulation(args.parse_or("jobs", 240)?, seed),
-        p => bail!("unknown preset {p}"),
-    };
-    let jobs_list = trace::generate(&cfg);
+    let preset = preset_by_name(args.get("preset").unwrap_or("simulation"))?;
+    let jobs_list = trace::generate(&preset.trace(args.parse_or("jobs", 240)?, seed));
     trace::save(&jobs_list, &out)?;
     println!("wrote {} jobs to {}", jobs_list.len(), out.display());
     Ok(())

@@ -14,6 +14,7 @@
 
 use crate::jobs::JobRecord;
 use crate::perf::interference::InterferenceModel;
+use crate::perf::GangSpan;
 
 /// Inputs describing one side of a (running, new) pair on a GPU set.
 #[derive(Debug, Clone, Copy)]
@@ -133,6 +134,36 @@ pub fn batch_size_scaling_opts(
     xi: &InterferenceModel,
     sweep_batches: bool,
 ) -> Option<SharingConfig> {
+    batch_size_scaling_placed(
+        new_job,
+        running,
+        gang,
+        gpu_mem_gb,
+        xi,
+        sweep_batches,
+        &GangSpan::reference(),
+        &GangSpan::reference(),
+    )
+}
+
+/// Locality-true Algorithm 2: both sides' Eq. 7 iteration times are
+/// evaluated on the spans their gangs actually occupy — `new_span` for
+/// the candidate shared GPU set the new job would land on, `run_span`
+/// for the running job's own placement — so the Theorem-1 comparison
+/// (and therefore SJF-BSBF's benefit ranking) sees consolidation and
+/// heterogeneity instead of assuming the flat reference switch.
+/// Reference spans reproduce [`batch_size_scaling_opts`] bit-for-bit.
+#[allow(clippy::too_many_arguments)]
+pub fn batch_size_scaling_placed(
+    new_job: &JobRecord,
+    running: &JobRecord,
+    gang: usize,
+    gpu_mem_gb: f64,
+    xi: &InterferenceModel,
+    sweep_batches: bool,
+    new_span: &GangSpan,
+    run_span: &GangSpan,
+) -> Option<SharingConfig> {
     let new_prof = new_job.spec.profile();
     let run_prof = running.spec.profile();
     let run_mem =
@@ -140,11 +171,13 @@ pub fn batch_size_scaling_opts(
     let budget = gpu_mem_gb - run_mem;
     let (xi_new, xi_run) = xi.pair(new_job.spec.model, running.spec.model);
 
-    // Running job's solo iteration time on its own gang, at its own accum.
-    let run_side_iter = run_prof.perf.iter_time(
+    // Running job's solo iteration time on its own gang and placement, at
+    // its own accumulation step.
+    let run_side_iter = run_prof.perf.iter_time_placed(
         running.spec.batch as f64,
         running.accum_step,
         running.spec.gpus,
+        run_span,
     );
 
     let mut best: Option<SharingConfig> = None;
@@ -153,7 +186,12 @@ pub fn batch_size_scaling_opts(
         let s = (new_job.spec.batch as f64 / b as f64).ceil() as u32;
         if new_prof.mem.mem_gb(b as f64) <= budget {
             let new_side = PairSide {
-                iter_time: new_prof.perf.iter_time(new_job.spec.batch as f64, s, gang),
+                iter_time: new_prof.perf.iter_time_placed(
+                    new_job.spec.batch as f64,
+                    s,
+                    gang,
+                    new_span,
+                ),
                 iters: new_job.remaining_iters,
                 xi: xi_new,
             };
@@ -343,6 +381,51 @@ mod tests {
         let xi = InterferenceModel::new();
         let cfg = batch_size_scaling(&new, &run, 4, 11.0, &xi).unwrap();
         assert!(!cfg.share, "{cfg:?}");
+    }
+
+    #[test]
+    fn alg2_placed_reference_span_matches_agnostic_path() {
+        let new = record(ModelKind::Ncf, 4, 1000, 4096);
+        let run = record(ModelKind::Cifar10, 4, 1000, 128);
+        let xi = InterferenceModel::new();
+        let a = batch_size_scaling(&new, &run, 4, 11.0, &xi).unwrap();
+        let r = GangSpan::reference();
+        let b = batch_size_scaling_placed(&new, &run, 4, 11.0, &xi, true, &r, &r).unwrap();
+        assert_eq!(a.pair_jct.to_bits(), b.pair_jct.to_bits());
+        assert_eq!(a.share, b.share);
+        assert_eq!(a.sub_batch, b.sub_batch);
+    }
+
+    #[test]
+    fn alg2_consolidated_span_improves_pair_jct() {
+        // Same pair, same gang width: landing on one NVLink node must
+        // yield a strictly better pair JCT than spanning four 10 Gbps
+        // nodes (comm shrinks for both sides).
+        let new = record(ModelKind::Ncf, 4, 1000, 4096);
+        let run = record(ModelKind::ImageNet, 4, 1000, 32);
+        let xi = InterferenceModel::new();
+        let nvlink = GangSpan {
+            nodes: 1,
+            bandwidth_gbps: 100.0,
+            latency_s: 0.0,
+            compute_scale: 1.0,
+        };
+        let spread = GangSpan {
+            nodes: 4,
+            bandwidth_gbps: 10.0,
+            latency_s: 20e-6,
+            compute_scale: 1.0,
+        };
+        let close = batch_size_scaling_placed(&new, &run, 4, 11.0, &xi, true, &nvlink, &nvlink)
+            .unwrap();
+        let far = batch_size_scaling_placed(&new, &run, 4, 11.0, &xi, true, &spread, &spread)
+            .unwrap();
+        assert!(
+            close.pair_jct < far.pair_jct,
+            "consolidated {:.1}s must beat spread {:.1}s",
+            close.pair_jct,
+            far.pair_jct
+        );
     }
 
     #[test]

@@ -15,6 +15,45 @@ pub mod interference;
 pub mod profiles;
 
 
+/// Placement summary of a gang, derived from where it actually landed on
+/// the cluster topology: how many servers it spans, the bottleneck link of
+/// its all-reduce path, and the slowest member GPU's compute scale.
+///
+/// [`GangSpan::reference`] describes the paper's baseline assumption — a
+/// sufficient-bandwidth switch (every link at the reference 10 Gbps, zero
+/// extra hop latency) over identical reference GPUs — and reproduces the
+/// placement-agnostic Eq. 2/4 arithmetic bit-for-bit, which is what keeps
+/// uniform-topology simulations byte-identical to the pre-topology model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GangSpan {
+    /// Distinct servers spanned (`S(J_k)` in Table I).
+    pub nodes: usize,
+    /// Bandwidth of the slowest link on the all-reduce path, Gbps.
+    pub bandwidth_gbps: f64,
+    /// Per-hop latency of that link, seconds.
+    pub latency_s: f64,
+    /// Compute scale of the slowest member GPU (1.0 = the reference GPU
+    /// the Eq. 3 coefficients were calibrated on; 2.0 = twice as fast).
+    pub compute_scale: f64,
+}
+
+impl GangSpan {
+    /// The link bandwidth the Eq. 4 `β_comm` coefficients are calibrated
+    /// against (the paper's 10 Gbps testbed NIC).
+    pub const REF_BANDWIDTH_GBPS: f64 = 10.0;
+
+    /// The paper's placement-agnostic baseline: one node behind a
+    /// reference-bandwidth switch, reference GPUs.
+    pub fn reference() -> GangSpan {
+        GangSpan {
+            nodes: 1,
+            bandwidth_gbps: Self::REF_BANDWIDTH_GBPS,
+            latency_s: 0.0,
+            compute_scale: 1.0,
+        }
+    }
+}
+
 /// Affine GPU-compute model, Eq. 3.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct CompModel {
@@ -42,13 +81,25 @@ pub struct CommModel {
 
 impl CommModel {
     /// `t_comm` for `msg_mb` MB across `n` workers (ring all-reduce transfers
-    /// `2(n-1)/n · M` on the bottleneck link; `n = 1` means no comm at all).
+    /// `2(n-1)/n · M` on the bottleneck link; `n = 1` means no comm at all),
+    /// under the placement-agnostic reference span (paper Eq. 2/4).
     pub fn t_comm(&self, msg_mb: f64, n: usize) -> f64 {
+        self.t_comm_placed(msg_mb, n, &GangSpan::reference())
+    }
+
+    /// Locality-true `t_comm`: the payload term is rescaled by the
+    /// bottleneck link of the gang's actual span (`β_comm` is calibrated
+    /// at [`GangSpan::REF_BANDWIDTH_GBPS`]), and each node boundary on the
+    /// ring adds one hop of link latency. A reference span reproduces
+    /// [`CommModel::t_comm`]'s arithmetic exactly.
+    pub fn t_comm_placed(&self, msg_mb: f64, n: usize, span: &GangSpan) -> f64 {
         if n <= 1 {
             return 0.0;
         }
         let ring = 2.0 * (n as f64 - 1.0) / n as f64;
-        self.alpha * (n as f64).log2() + self.beta * msg_mb * ring
+        self.alpha * (n as f64).log2()
+            + span.latency_s * span.nodes.saturating_sub(1) as f64
+            + self.beta * msg_mb * ring * (GangSpan::REF_BANDWIDTH_GBPS / span.bandwidth_gbps)
     }
 }
 
@@ -66,15 +117,30 @@ pub struct PerfModel {
 
 impl PerfModel {
     /// Iteration time (seconds) with user batch `batch` per GPU, accumulation
-    /// step `s` (sub-batch `batch/s`), over `n_workers` data-parallel GPUs.
+    /// step `s` (sub-batch `batch/s`), over `n_workers` data-parallel GPUs,
+    /// under the placement-agnostic reference span.
     ///
     /// Eq. 7: `(s-1)` sub-batch passes back-to-back, the final one overlapped
     /// with the all-reduce to degree δ.
     pub fn iter_time(&self, batch: f64, s: u32, n_workers: usize) -> f64 {
+        self.iter_time_placed(batch, s, n_workers, &GangSpan::reference())
+    }
+
+    /// Locality-true Eq. 7: compute is scaled by the slowest member GPU,
+    /// the all-reduce by the gang's bottleneck link (see
+    /// [`CommModel::t_comm_placed`]). A reference span reproduces
+    /// [`PerfModel::iter_time`] bit-for-bit.
+    pub fn iter_time_placed(
+        &self,
+        batch: f64,
+        s: u32,
+        n_workers: usize,
+        span: &GangSpan,
+    ) -> f64 {
         assert!(s >= 1, "accumulation step must be >= 1");
         let sub = batch / s as f64;
-        let tc = self.comp.t_comp(sub);
-        let tm = self.comm.t_comm(self.msg_mb, n_workers);
+        let tc = self.comp.t_comp(sub) / span.compute_scale;
+        let tm = self.comm.t_comm_placed(self.msg_mb, n_workers, span);
         let overlapped = if tm == 0.0 {
             tc
         } else {
@@ -223,6 +289,66 @@ mod tests {
         let m = pm();
         let s8 = m.speedup(8.0, 8);
         assert!(s8 > 1.0 && s8 < 8.0, "comm must make speedup sublinear: {s8}");
+    }
+
+    #[test]
+    fn reference_span_is_bitwise_identical_to_agnostic_path() {
+        // The uniform-topology equivalence guarantee rests on this: the
+        // placed path under a reference span must reproduce the paper's
+        // placement-agnostic arithmetic exactly, not approximately.
+        let m = pm();
+        let span = GangSpan::reference();
+        for n in [1usize, 2, 4, 8, 16] {
+            for s in [1u32, 2, 4] {
+                let a = m.iter_time(24.0, s, n);
+                let b = m.iter_time_placed(24.0, s, n, &span);
+                assert_eq!(a.to_bits(), b.to_bits(), "n={n} s={s}");
+            }
+            assert_eq!(
+                m.comm.t_comm(m.msg_mb, n).to_bits(),
+                m.comm.t_comm_placed(m.msg_mb, n, &span).to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn faster_bottleneck_link_shrinks_comm() {
+        let m = pm();
+        let nvlink = GangSpan {
+            nodes: 1,
+            bandwidth_gbps: 100.0,
+            latency_s: 0.0,
+            compute_scale: 1.0,
+        };
+        let fast = m.comm.t_comm_placed(m.msg_mb, 8, &nvlink);
+        let slow = m.comm.t_comm(m.msg_mb, 8);
+        assert!(fast < slow, "100 Gbps must beat the 10 Gbps reference");
+        // The latency term (alpha) stays; only the payload term scales.
+        let payload = slow - m.comm.alpha * 8f64.log2();
+        assert!((fast - (slow - 0.9 * payload)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn node_crossings_add_link_latency() {
+        let m = pm();
+        let tier = |nodes| GangSpan {
+            nodes,
+            bandwidth_gbps: 10.0,
+            latency_s: 2e-4,
+            compute_scale: 1.0,
+        };
+        let one = m.comm.t_comm_placed(m.msg_mb, 8, &tier(1));
+        let four = m.comm.t_comm_placed(m.msg_mb, 8, &tier(4));
+        assert!((four - one - 3.0 * 2e-4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn compute_scale_speeds_up_compute_only() {
+        let m = pm();
+        let fast_gpu = GangSpan { compute_scale: 2.0, ..GangSpan::reference() };
+        let t = m.iter_time_placed(8.0, 1, 1, &fast_gpu);
+        // n = 1: no comm, so the iteration is exactly halved.
+        assert!((t - m.iter_time(8.0, 1, 1) / 2.0).abs() < 1e-12);
     }
 
     #[test]

@@ -73,17 +73,29 @@ impl WorkloadProfile {
         //  base GB, GB/sample, default batch, gpu, net)
         let row = match kind {
             // Large model, big messages, compute-bound per sample.
-            ModelKind::Bert => (0.020, 0.0300, 0.004, 0.00085, 420.0, 1.6, 4.2, 0.38, 16, 0.95, 0.60),
+            ModelKind::Bert => {
+                (0.020, 0.0300, 0.004, 0.00085, 420.0, 1.6, 4.2, 0.38, 16, 0.95, 0.60)
+            }
             // Small convnet: fast iterations, small messages.
-            ModelKind::Cifar10 => (0.004, 0.0012, 0.001, 0.00080, 14.0, 1.8, 1.1, 0.025, 128, 0.55, 0.15),
+            ModelKind::Cifar10 => {
+                (0.004, 0.0012, 0.001, 0.00080, 14.0, 1.8, 1.1, 0.025, 128, 0.55, 0.15)
+            }
             // RNN: long compute, moderate payload.
-            ModelKind::DeepSpeech2 => (0.030, 0.0160, 0.003, 0.00085, 230.0, 1.4, 3.0, 0.30, 20, 0.80, 0.45),
+            ModelKind::DeepSpeech2 => {
+                (0.030, 0.0160, 0.003, 0.00085, 230.0, 1.4, 3.0, 0.30, 20, 0.80, 0.45)
+            }
             // ResNet-50-class: bandwidth-heavy, batch-efficient compute.
-            ModelKind::ImageNet => (0.012, 0.0048, 0.002, 0.00090, 98.0, 2.2, 2.6, 0.115, 32, 0.85, 0.70),
+            ModelKind::ImageNet => {
+                (0.012, 0.0048, 0.002, 0.00090, 98.0, 2.2, 2.6, 0.115, 32, 0.85, 0.70)
+            }
             // Embedding model: latency-bound, tiny compute per sample.
-            ModelKind::Ncf => (0.002, 0.000012, 0.001, 0.00080, 8.0, 1.2, 0.9, 0.0006, 4096, 0.30, 0.10),
+            ModelKind::Ncf => {
+                (0.002, 0.000012, 0.001, 0.00080, 8.0, 1.2, 0.9, 0.0006, 4096, 0.30, 0.10)
+            }
             // Detector: saturates ~batch 16, network-bottlenecked ≥ 12 GPUs.
-            ModelKind::YoloV3 => (0.018, 0.0125, 0.005, 0.00110, 236.0, 1.3, 3.4, 0.42, 16, 0.90, 0.85),
+            ModelKind::YoloV3 => {
+                (0.018, 0.0125, 0.005, 0.00110, 236.0, 1.3, 3.4, 0.42, 16, 0.90, 0.85)
+            }
         };
         WorkloadProfile {
             kind,

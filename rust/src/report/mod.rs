@@ -85,7 +85,13 @@ mod tests {
     use crate::sim::metrics::Aggregate;
 
     fn summary(policy: &str, jct: f64) -> Summary {
-        let agg = Aggregate { n: 10, avg_jct_s: jct, avg_queue_s: jct / 3.0, p50_jct_s: jct, p90_jct_s: jct };
+        let agg = Aggregate {
+            n: 10,
+            avg_jct_s: jct,
+            avg_queue_s: jct / 3.0,
+            p50_jct_s: jct,
+            p90_jct_s: jct,
+        };
         Summary { policy: policy.into(), makespan_s: 2.0 * jct, all: agg, large: agg, small: agg }
     }
 

@@ -188,7 +188,10 @@ impl ArtifactSet {
         self.cache.borrow().len()
     }
 
-    pub fn grad_step_exe(&self, micro_batch: u32) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+    pub fn grad_step_exe(
+        &self,
+        micro_batch: u32,
+    ) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
         if !self.meta.micro_batches.contains(&micro_batch) {
             bail!("no grad_step artifact for micro-batch {micro_batch}");
         }

@@ -102,7 +102,7 @@ impl Policy for Elastic {
         let plan = self.plan(ctx, &active, ctx.cluster.total_gpus());
 
         let mut txn = Txn::new();
-        let mut cluster = ctx.cluster.clone();
+        let mut view = ctx.overlay();
         // Phase 1: preempt running jobs whose allocation changes enough
         // (or drops to zero).
         for (i, &id) in active.iter().enumerate() {
@@ -113,7 +113,7 @@ impl Policy for Elastic {
             let want = plan[i];
             let delta = held.abs_diff(want);
             if want == 0 || delta > self.min_delta {
-                cluster.release(id);
+                view.release(id);
                 txn.preempt(id);
             }
         }
@@ -126,8 +126,10 @@ impl Policy for Elastic {
             if want == 0 {
                 continue;
             }
-            if let Some(gpus) = placement::consolidated_free(&cluster, want) {
-                cluster.allocate(id, &gpus);
+            let spec = &ctx.jobs[id].spec;
+            let solo_gb = spec.profile().mem.mem_gb(spec.batch as f64);
+            if let Some(gpus) = placement::consolidated_free_mem(&view, want, solo_gb) {
+                view.allocate(id, &gpus);
                 txn.start(id, gpus, 1);
             }
         }
@@ -177,8 +179,9 @@ mod tests {
 
     #[test]
     fn all_jobs_finish_under_churn() {
-        let trace: Vec<JobSpec> =
-            (0..10).map(|i| job(i, 1 + (i % 4) * 2, 300 + 100 * i as u64, i as f64 * 20.0)).collect();
+        let trace: Vec<JobSpec> = (0..10)
+            .map(|i| job(i, 1 + (i % 4) * 2, 300 + 100 * i as u64, i as f64 * 20.0))
+            .collect();
         let out = engine::run(
             ClusterConfig::physical(),
             &trace,

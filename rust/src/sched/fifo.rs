@@ -26,12 +26,14 @@ impl Policy for Fifo {
                 .total_cmp(&ctx.jobs[b].spec.arrival_s)
                 .then(a.cmp(&b))
         });
-        let mut cluster = ctx.cluster.clone();
+        let mut plan = ctx.overlay();
         let mut txn = Txn::new();
         for id in pending {
-            match placement::consolidated_free(&cluster, ctx.jobs[id].spec.gpus) {
+            let spec = &ctx.jobs[id].spec;
+            let solo_gb = spec.profile().mem.mem_gb(spec.batch as f64);
+            match placement::consolidated_free_mem(&plan, spec.gpus, solo_gb) {
                 Some(gpus) => {
-                    cluster.allocate(id, &gpus);
+                    plan.allocate(id, &gpus);
                     txn.start(id, gpus, 1);
                 }
                 None => break, // HOL blocking

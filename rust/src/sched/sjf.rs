@@ -32,13 +32,15 @@ impl Policy for Sjf {
     }
 
     fn on_event(&mut self, ctx: &SchedContext, _ev: Event) -> Txn {
-        let mut cluster = ctx.cluster.clone();
+        let mut plan = ctx.overlay();
         let mut txn = Txn::new();
         for id in pending_by_runtime(ctx) {
+            let spec = &ctx.jobs[id].spec;
+            let solo_gb = spec.profile().mem.mem_gb(spec.batch as f64);
             if let Some(gpus) =
-                placement::consolidated_free(&cluster, ctx.jobs[id].spec.gpus)
+                placement::consolidated_free_mem(&plan, spec.gpus, solo_gb)
             {
-                cluster.allocate(id, &gpus);
+                plan.allocate(id, &gpus);
                 txn.start(id, gpus, 1);
             }
         }

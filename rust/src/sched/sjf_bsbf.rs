@@ -17,11 +17,11 @@
 //! The new job's accumulation step is the *most conservative* (largest s)
 //! among the chosen partners so memory fits everywhere.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 
-use crate::cluster::{placement, GpuId};
+use crate::cluster::{placement, AllocView, GpuId};
 use crate::jobs::JobId;
-use crate::pair::{batch_size_scaling_opts, SharingConfig};
+use crate::pair::{batch_size_scaling_placed, SharingConfig};
 use crate::sched_core::{Event, Policy, SchedContext, Txn};
 
 use super::sjf::pending_by_runtime;
@@ -59,47 +59,74 @@ impl Policy for SjfBsbf {
 
     fn on_event(&mut self, ctx: &SchedContext, _ev: Event) -> Txn {
         let t0 = std::time::Instant::now();
-        let mut cluster = ctx.cluster.clone();
+        let mut plan = ctx.overlay();
         let mut txn = Txn::new();
-        // Accumulation steps chosen for jobs started in this batch (their
-        // memory footprint matters for later candidates in the same pass).
-        let mut started_accum: HashMap<JobId, u32> = HashMap::new();
+        // Accumulation step + planned gang of jobs started in this batch
+        // (their memory footprint and placement matter for later
+        // candidates in the same pass).
+        let mut started: HashMap<JobId, (u32, Vec<GpuId>)> = HashMap::new();
 
         for id in pending_by_runtime(ctx) {
             let need = ctx.jobs[id].spec.gpus;
+            let prof = ctx.jobs[id].spec.profile();
+            let solo_gb = prof.mem.mem_gb(ctx.jobs[id].spec.batch as f64);
             // --- lines 6-7: exclusive start on free GPUs
-            if let Some(gpus) = placement::consolidated_free(&cluster, need) {
-                cluster.allocate(id, &gpus);
-                started_accum.insert(id, 1);
+            if let Some(gpus) = placement::consolidated_free_mem(&plan, need, solo_gb) {
+                plan.allocate(id, &gpus);
+                started.insert(id, (1, gpus.clone()));
                 txn.start(id, gpus, 1);
                 continue;
             }
             // --- line 9 gate: free + one-job GPUs must cover the request
-            let one_job = cluster.one_job_gpus();
-            let free = cluster.free_gpus();
-            if one_job.len() + free.len() < need {
+            if plan.one_job_count() + plan.free_count() < need {
                 continue;
             }
+            let one_job = plan.one_job_gpus();
+            let free = plan.free_gpus();
             // --- lines 10-13: Algorithm 2 per distinct running owner
-            let mut owners: HashMap<JobId, Vec<GpuId>> = HashMap::new();
+            // (BTreeMap: owner iteration order — the tiebreak when pair
+            // JCTs are equal or the benefit sort is ablated off — is
+            // deterministic instead of hash-seeded).
+            let mut owners: BTreeMap<JobId, Vec<GpuId>> = BTreeMap::new();
             for &g in &one_job {
-                owners.entry(cluster.slot(g).jobs[0]).or_default().push(g);
+                let owner = plan.owner(g).expect("one-job GPU has an owner");
+                owners.entry(owner).or_default().push(g);
             }
             let mut candidates: Vec<(JobId, Vec<GpuId>, SharingConfig)> = Vec::new();
             for (owner, gpus) in owners {
                 // A job we just started this pass has a hypothetical accum
-                // step; respect it for memory math.
+                // step and placement; respect both.
                 let mut orec = ctx.jobs[owner].clone();
-                if let Some(&a) = started_accum.get(&owner) {
-                    orec.accum_step = a;
-                }
-                let Some(cfg) = batch_size_scaling_opts(
+                let run_gpus: &[GpuId] = match started.get(&owner) {
+                    Some((a, held)) => {
+                        orec.accum_step = *a;
+                        held
+                    }
+                    None => &ctx.jobs[owner].gpus_held,
+                };
+                // Locality-true Eq. 2/4/7: the gang-assembly below takes
+                // at most the first `need` GPUs of each partner, so that
+                // prefix — not the owner's whole one-job set — is the
+                // placement this candidate is scored on (a multi-owner
+                // assembly is still estimated pairwise, as Theorem 1 is);
+                // the owner stays where it is. The tightest per-type
+                // budget among the shared GPUs bounds the joint footprint.
+                let shared = &gpus[..need.min(gpus.len())];
+                let new_span = plan.span_of(shared);
+                let run_span = plan.span_of(run_gpus);
+                let budget = shared
+                    .iter()
+                    .map(|&g| plan.mem_gb(g))
+                    .fold(f64::INFINITY, f64::min);
+                let Some(cfg) = batch_size_scaling_placed(
                     &ctx.jobs[id],
                     &orec,
                     need,
-                    ctx.cluster.config.gpu_mem_gb,
+                    budget,
                     &ctx.xi,
                     self.sweep_batches,
+                    &new_span,
+                    &run_span,
                 ) else {
                     continue;
                 };
@@ -129,18 +156,23 @@ impl Policy for SjfBsbf {
             if chosen.is_empty() {
                 continue; // best benefit is to wait (SF = False everywhere)
             }
-            // Top up from free GPUs only if sharing alone cannot cover.
+            // Top up from free GPUs only if sharing alone cannot cover —
+            // skipping GPUs whose per-type budget cannot hold the chosen
+            // sub-batch (a no-op on uniform topologies).
+            let sub_gb = prof.mem.mem_gb(ctx.jobs[id].spec.batch as f64 / accum as f64);
             for &g in &free {
                 if chosen.len() == need {
                     break;
                 }
-                chosen.push(g);
+                if plan.mem_gb(g) + 1e-9 >= sub_gb {
+                    chosen.push(g);
+                }
             }
             if chosen.len() < need {
                 continue;
             }
-            cluster.allocate(id, &chosen);
-            started_accum.insert(id, accum);
+            plan.allocate(id, &chosen);
+            started.insert(id, (accum, chosen.clone()));
             txn.start(id, chosen, accum);
         }
         self.op_latencies_s.push(t0.elapsed().as_secs_f64());
@@ -157,7 +189,14 @@ mod tests {
     use crate::perf::profiles::ModelKind;
     use crate::sim::{engine, metrics};
 
-    fn job(id: usize, model: ModelKind, gpus: usize, iters: u64, batch: u32, arrival: f64) -> JobSpec {
+    fn job(
+        id: usize,
+        model: ModelKind,
+        gpus: usize,
+        iters: u64,
+        batch: u32,
+        arrival: f64,
+    ) -> JobSpec {
         JobSpec { id, model, gpus, iterations: iters, batch, arrival_s: arrival }
     }
 

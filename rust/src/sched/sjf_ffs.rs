@@ -9,7 +9,7 @@
 
 use std::collections::HashMap;
 
-use crate::cluster::placement;
+use crate::cluster::{placement, AllocView};
 use crate::jobs::JobId;
 use crate::sched_core::{Event, Policy, SchedContext, Txn};
 
@@ -24,7 +24,7 @@ impl Policy for SjfFfs {
     }
 
     fn on_event(&mut self, ctx: &SchedContext, _ev: Event) -> Txn {
-        let mut cluster = ctx.cluster.clone();
+        let mut plan = ctx.overlay();
         let mut txn = Txn::new();
         // Track hypothetical accumulation choices for memory math of jobs
         // we start within this same batch of decisions.
@@ -32,30 +32,31 @@ impl Policy for SjfFfs {
 
         for id in pending_by_runtime(ctx) {
             let need = ctx.jobs[id].spec.gpus;
+            let prof = ctx.jobs[id].spec.profile();
+            let solo_gb = prof.mem.mem_gb(ctx.jobs[id].spec.batch as f64);
             // 1) plain SJF on free GPUs
-            if let Some(gpus) = placement::consolidated_free(&cluster, need) {
-                cluster.allocate(id, &gpus);
+            if let Some(gpus) = placement::consolidated_free_mem(&plan, need, solo_gb) {
+                plan.allocate(id, &gpus);
                 started_accum.insert(id, 1);
                 txn.start(id, gpus, 1);
                 continue;
             }
             // 2) first-fit over one-job GPUs, memory-checked only.
-            let one_job = cluster.one_job_gpus();
-            let free = cluster.free_gpus();
-            if one_job.len() + free.len() < need {
+            if plan.one_job_count() + plan.free_count() < need {
                 continue;
             }
-            let prof = ctx.jobs[id].spec.profile();
-            let budget = ctx.cluster.config.gpu_mem_gb;
-            // Largest sub-batch that fits next to the heaviest co-runner we
-            // would take (first-fit scan, conservative single pass).
+            let one_job = plan.one_job_gpus();
+            let free = plan.free_gpus();
+            // Tightest per-GPU headroom across the GPUs we take (each GPU
+            // has its own per-type budget under heterogeneity); the
+            // sub-batch must fit next to the heaviest co-runner.
             let mut chosen: Vec<usize> = Vec::new();
-            let mut worst_resident = 0.0f64;
+            let mut min_headroom = f64::INFINITY;
             for &g in &one_job {
                 if chosen.len() == need {
                     break;
                 }
-                let other = cluster.slot(g).jobs[0];
+                let other = plan.owner(g).expect("one-job GPU has an owner");
                 let orec = &ctx.jobs[other];
                 let o_accum =
                     started_accum.get(&other).copied().unwrap_or(orec.accum_step);
@@ -64,30 +65,36 @@ impl Policy for SjfFfs {
                     .profile()
                     .mem
                     .mem_gb(orec.spec.batch as f64 / o_accum as f64);
+                let headroom = plan.mem_gb(g) - resident;
                 // Feasible at all? (even sub-batch 1 must fit)
-                if prof.mem.mem_gb(1.0) <= budget - resident {
+                if prof.mem.mem_gb(1.0) <= headroom {
                     chosen.push(g);
-                    worst_resident = worst_resident.max(resident);
+                    min_headroom = min_headroom.min(headroom);
                 }
             }
-            // Fill the remainder with free GPUs.
+            // Fill the remainder with free GPUs (their whole budget is
+            // headroom) — skipping GPUs that cannot hold even sub-batch 1,
+            // which would otherwise poison the headroom minimum (a no-op
+            // on uniform topologies).
             for &g in &free {
                 if chosen.len() == need {
                     break;
                 }
-                chosen.push(g);
+                let budget = plan.mem_gb(g);
+                if prof.mem.mem_gb(1.0) <= budget {
+                    chosen.push(g);
+                    min_headroom = min_headroom.min(budget);
+                }
             }
             if chosen.len() < need || chosen.is_empty() {
                 continue;
             }
-            let Some(sub) = prof
-                .mem
-                .max_sub_batch(ctx.jobs[id].spec.batch, budget - worst_resident)
+            let Some(sub) = prof.mem.max_sub_batch(ctx.jobs[id].spec.batch, min_headroom)
             else {
                 continue;
             };
             let accum = (ctx.jobs[id].spec.batch / sub).max(1);
-            cluster.allocate(id, &chosen);
+            plan.allocate(id, &chosen);
             started_accum.insert(id, accum);
             txn.start(id, chosen, accum);
         }
@@ -104,7 +111,14 @@ mod tests {
     use crate::perf::profiles::ModelKind;
     use crate::sim::engine;
 
-    fn job(id: usize, model: ModelKind, gpus: usize, iters: u64, batch: u32, arrival: f64) -> JobSpec {
+    fn job(
+        id: usize,
+        model: ModelKind,
+        gpus: usize,
+        iters: u64,
+        batch: u32,
+        arrival: f64,
+    ) -> JobSpec {
         JobSpec { id, model, gpus, iterations: iters, batch, arrival_s: arrival }
     }
 

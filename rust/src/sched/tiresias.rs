@@ -76,11 +76,11 @@ impl Policy for Tiresias {
         }
 
         let mut txn = Txn::new();
-        let mut cluster = ctx.cluster.clone();
+        let mut plan = ctx.overlay();
         // Preempt running jobs that lost their slot.
         for &id in ctx.running() {
             if !should_run.contains(&id) {
-                cluster.release(id);
+                plan.release(id);
                 txn.preempt(id);
             }
         }
@@ -89,10 +89,12 @@ impl Policy for Tiresias {
             if ctx.jobs[id].state == crate::jobs::JobState::Running {
                 continue;
             }
+            let spec = &ctx.jobs[id].spec;
+            let solo_gb = spec.profile().mem.mem_gb(spec.batch as f64);
             if let Some(gpus) =
-                placement::consolidated_free(&cluster, ctx.jobs[id].spec.gpus)
+                placement::consolidated_free_mem(&plan, spec.gpus, solo_gb)
             {
-                cluster.allocate(id, &gpus);
+                plan.allocate(id, &gpus);
                 txn.start(id, gpus, 1);
             }
         }

@@ -12,7 +12,8 @@ use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 use std::ops::Deref;
 
-use crate::cluster::Cluster;
+use crate::cluster::overlay::OverlayPool;
+use crate::cluster::{Cluster, ClusterOverlay};
 use crate::jobs::{JobId, JobRecord, JobState};
 use crate::perf::interference::InterferenceModel;
 use crate::sim::SimState;
@@ -99,6 +100,13 @@ pub struct SchedContext {
     /// projections are simulated-time quantities, meaningless against
     /// the wall clock, and the coordinator never consults them.
     pub(super) project_finishes: bool,
+    /// Placement-resolved effective iteration time per job, memoized as
+    /// `(rate epoch at computation, seconds)`; a stale epoch means
+    /// invalid. Start/preempt/finish and co-runner changes bump
+    /// `rate_epoch`, so invalidation rides the existing plumbing.
+    iter_cache: Vec<(u64, f64)>,
+    /// Scratch-buffer pool for [`SchedContext::overlay`] planning views.
+    overlay_pool: OverlayPool,
 }
 
 impl Deref for SchedContext {
@@ -139,6 +147,8 @@ impl SchedContext {
             rate_epoch: vec![0; n],
             finished: 0,
             project_finishes: true,
+            iter_cache: vec![(u64::MAX, 0.0); n],
+            overlay_pool: OverlayPool::default(),
         }
     }
 
@@ -160,6 +170,8 @@ impl SchedContext {
             rate_epoch: vec![0; n],
             finished: 0,
             project_finishes: true,
+            iter_cache: vec![(u64::MAX, 0.0); n],
+            overlay_pool: OverlayPool::default(),
         };
         let now = ctx.state.now;
         for id in 0..n {
@@ -220,6 +232,34 @@ impl SchedContext {
     /// Arrived jobs accruing queueing delay (eligible or penalty-held).
     pub fn waiting(&self) -> &[JobId] {
         &self.waiting
+    }
+
+    /// Borrow a hypothetical-allocation planning view over the cluster.
+    ///
+    /// This is what a full-pass policy uses instead of
+    /// `ctx.cluster.clone()`: reads fall through to the live occupancy,
+    /// tentative `allocate`/`release` calls are recorded as deltas, and
+    /// the scratch buffers are pooled on the context so steady-state
+    /// acquisition allocates nothing (`plan-view/*` in
+    /// `cargo bench --bench sched_overhead`).
+    pub fn overlay(&self) -> ClusterOverlay<'_> {
+        self.overlay_pool.acquire(&self.state.cluster)
+    }
+
+    /// Placement-resolved effective iteration time of a *running* job
+    /// ([`SimState::effective_iter_time`]), memoized per rate epoch: the
+    /// O(cluster) co-runner/span derivation runs once per rate change
+    /// (start, preempt, finish, co-runner change) instead of once per
+    /// event.
+    pub fn cached_iter_time(&mut self, id: JobId) -> f64 {
+        let epoch = self.rate_epoch[id];
+        let (cached_epoch, cached) = self.iter_cache[id];
+        if cached_epoch == epoch {
+            return cached;
+        }
+        let t = self.state.effective_iter_time(id);
+        self.iter_cache[id] = (epoch, t);
+        t
     }
 
     pub fn all_finished(&self) -> bool {
@@ -289,7 +329,7 @@ impl SchedContext {
             let running = std::mem::take(&mut self.running);
             for &id in &running {
                 if integrate {
-                    let it = self.state.effective_iter_time(id);
+                    let it = self.cached_iter_time(id);
                     let rec = &mut self.state.jobs[id];
                     rec.remaining_iters = (rec.remaining_iters - dt / it).max(0.0);
                 }
@@ -371,8 +411,7 @@ impl SchedContext {
             let Some(&std::cmp::Reverse((_, id, _))) = self.finish_heap.peek() else {
                 break;
             };
-            let rem_t = self.state.jobs[id].remaining_iters
-                * self.state.effective_iter_time(id);
+            let rem_t = self.state.jobs[id].remaining_iters * self.cached_iter_time(id);
             if self.state.now + rem_t > self.state.now {
                 self.reproject(id);
             } else {
@@ -414,13 +453,14 @@ impl SchedContext {
 
     // ------------------------------------------------ cache plumbing
 
-    /// Invalidate `id`'s finish projection and, if it is running, push a
-    /// fresh one at the current rate.
+    /// Invalidate `id`'s finish projection (and its cached iteration
+    /// time, via the epoch bump) and, if it is running, push a fresh
+    /// projection at the current rate.
     pub(super) fn reproject(&mut self, id: JobId) {
         self.rate_epoch[id] += 1;
         if self.project_finishes && self.state.jobs[id].state == JobState::Running {
             let t = self.state.now
-                + self.state.jobs[id].remaining_iters * self.state.effective_iter_time(id);
+                + self.state.jobs[id].remaining_iters * self.cached_iter_time(id);
             self.finish_heap.push(Reverse((OrdF64(t), id, self.rate_epoch[id])));
         }
     }

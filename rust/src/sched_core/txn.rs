@@ -166,7 +166,10 @@ impl SchedContext {
             // reject anything else outright.
             bail!("Start({job}): invalid accumulation step {accum_step}");
         }
-        // Memory feasibility on every granted GPU (Eq. 9 + footprint).
+        // Memory feasibility on every granted GPU (Eq. 9 + footprint),
+        // against the *per-type* budget of that specific GPU — on a
+        // heterogeneous topology different gang members may have
+        // different capacities.
         let my_mem =
             rec.spec.profile().mem.mem_gb(rec.spec.batch as f64 / accum_step as f64);
         for &g in gpus {
@@ -179,7 +182,7 @@ impl SchedContext {
                     .mem
                     .mem_gb(o.spec.batch as f64 / o.accum_step as f64);
             }
-            if used > self.state.cluster.config.gpu_mem_gb + 1e-9 {
+            if used > self.state.cluster.mem_gb(g) + 1e-9 {
                 bail!("Start({job}): GPU {g} memory over budget ({used:.2} GB)");
             }
         }

@@ -43,8 +43,9 @@ pub struct SimOutcome {
     pub preemptions: u64,
 }
 
-/// Run `policy` over `trace` on a cluster of `cluster_cfg` with interference
-/// model `xi`. Jobs must be pre-sorted by arrival (trace::generate is).
+/// Run `policy` over `trace` on a uniform cluster of `cluster_cfg` with
+/// interference model `xi`. Jobs must be pre-sorted by arrival
+/// (trace::generate is).
 pub fn run(
     cluster_cfg: ClusterConfig,
     trace: &[JobSpec],
@@ -61,13 +62,46 @@ pub fn run_with(
     policy: &mut dyn Policy,
     engine_cfg: EngineConfig,
 ) -> Result<SimOutcome> {
+    run_cluster(Cluster::new(cluster_cfg), trace, xi, policy, engine_cfg)
+}
+
+/// Run over an explicit (possibly heterogeneous, topology-built)
+/// [`Cluster`] — the entry point for named topology shapes
+/// (`cluster::topology::by_name`) and the campaign `topologies` axis.
+/// `run`/`run_with` are thin uniform-topology wrappers over this.
+pub fn run_cluster(
+    cluster: Cluster,
+    trace: &[JobSpec],
+    xi: InterferenceModel,
+    policy: &mut dyn Policy,
+    engine_cfg: EngineConfig,
+) -> Result<SimOutcome> {
     for j in trace {
-        if j.gpus > cluster_cfg.total_gpus() {
-            bail!("job {} requests {} GPUs > cluster {}", j.id, j.gpus, cluster_cfg.total_gpus());
+        if j.gpus > cluster.total_gpus() {
+            bail!("job {} requests {} GPUs > cluster {}", j.id, j.gpus, cluster.total_gpus());
+        }
+        // Memory-aware placement silently skips infeasible jobs per pass,
+        // so reject up front any job that can *never* run: even sub-batch
+        // 1 (the deepest gradient accumulation) must fit on enough GPUs
+        // to host its gang. Otherwise the run would stall quietly instead
+        // of diagnosing the trace.
+        let floor_gb = j.profile().mem.mem_gb(1.0);
+        let hosts = (0..cluster.total_gpus())
+            .filter(|&g| cluster.mem_gb(g) + 1e-9 >= floor_gb)
+            .count();
+        if hosts < j.gpus {
+            bail!(
+                "job {} needs {:.1} GB per GPU even at sub-batch 1, but only {hosts} of \
+                 {} GPUs can hold that (gang of {})",
+                j.id,
+                floor_gb,
+                cluster.total_gpus(),
+                j.gpus
+            );
         }
     }
     let mut ctx = SchedContext::new(
-        Cluster::new(cluster_cfg),
+        cluster,
         trace.iter().cloned().map(JobRecord::new).collect(),
         xi,
     );
@@ -100,8 +134,34 @@ pub fn run_with(
             if ctx.all_finished() {
                 break;
             }
+            // Memory-aware placement skips (rather than proposes) jobs an
+            // exclusive full-batch start cannot host, so diagnose that
+            // case explicitly instead of leaving a bare "deadlock".
+            let max_mem = (0..ctx.cluster.total_gpus())
+                .map(|g| ctx.cluster.mem_gb(g))
+                .fold(0.0f64, f64::max);
+            let full_batch_infeasible: Vec<usize> = ctx
+                .jobs
+                .iter()
+                .enumerate()
+                .filter(|(_, j)| {
+                    j.state != crate::jobs::JobState::Finished
+                        && j.spec.profile().mem.mem_gb(j.spec.batch as f64) > max_mem + 1e-9
+                })
+                .map(|(id, _)| id)
+                .collect();
+            let hint = if full_batch_infeasible.is_empty() {
+                String::new()
+            } else {
+                format!(
+                    "; jobs {full_batch_infeasible:?} cannot fit their full batch on any \
+                     GPU — exclusive placement is memory-infeasible for them, only \
+                     accumulation-based sharing could run them"
+                )
+            };
             bail!(
-                "deadlock: {} unfinished jobs but no future events (policy never scheduled them?)",
+                "deadlock: {} unfinished jobs but no future events (policy never \
+                 scheduled them?){hint}",
                 ctx.unfinished()
             );
         }
@@ -181,12 +241,12 @@ mod tests {
             pending.sort_by(|&a, &b| {
                 ctx.jobs[a].spec.arrival_s.total_cmp(&ctx.jobs[b].spec.arrival_s)
             });
-            let mut cluster = ctx.cluster.clone();
+            let mut plan = ctx.overlay();
             let mut txn = Txn::new();
             for id in pending {
                 let need = ctx.jobs[id].spec.gpus;
-                if let Some(gpus) = placement::consolidated_free(&cluster, need) {
-                    cluster.allocate(id, &gpus);
+                if let Some(gpus) = placement::consolidated_free(&plan, need) {
+                    plan.allocate(id, &gpus);
                     txn.start(id, gpus, 1);
                 } else {
                     break; // strict FIFO HOL blocking
@@ -320,12 +380,12 @@ mod tests {
                 self.seen.push(ev);
                 let mut txn = Txn::new();
                 // Exclusive FIFO so the run terminates.
-                let mut cluster = ctx.cluster.clone();
+                let mut plan = ctx.overlay();
                 for &id in ctx.pending() {
                     if let Some(gpus) =
-                        placement::consolidated_free(&cluster, ctx.jobs[id].spec.gpus)
+                        placement::consolidated_free(&plan, ctx.jobs[id].spec.gpus)
                     {
-                        cluster.allocate(id, &gpus);
+                        plan.allocate(id, &gpus);
                         txn.start(id, gpus, 1);
                     }
                 }
@@ -378,12 +438,12 @@ mod tests {
                     }
                     _ => {}
                 }
-                let mut cluster = ctx.cluster.clone();
+                let mut plan = ctx.overlay();
                 for &id in ctx.pending() {
                     if let Some(gpus) =
-                        placement::consolidated_free(&cluster, ctx.jobs[id].spec.gpus)
+                        placement::consolidated_free(&plan, ctx.jobs[id].spec.gpus)
                     {
-                        cluster.allocate(id, &gpus);
+                        plan.allocate(id, &gpus);
                         txn.start(id, gpus, 1);
                     }
                 }
@@ -430,12 +490,12 @@ mod tests {
                     }
                     _ => {}
                 }
-                let mut cluster = ctx.cluster.clone();
+                let mut plan = ctx.overlay();
                 for &id in ctx.pending() {
                     if let Some(gpus) =
-                        placement::consolidated_free(&cluster, ctx.jobs[id].spec.gpus)
+                        placement::consolidated_free(&plan, ctx.jobs[id].spec.gpus)
                     {
-                        cluster.allocate(id, &gpus);
+                        plan.allocate(id, &gpus);
                         txn.start(id, gpus, 1);
                     }
                 }

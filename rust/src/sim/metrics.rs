@@ -119,7 +119,14 @@ mod tests {
     use super::*;
     use crate::jobs::{JobSpec, JobState};
 
-    fn finished(id: usize, gpus: usize, model: ModelKind, arrival: f64, start: f64, finish: f64) -> JobRecord {
+    fn finished(
+        id: usize,
+        gpus: usize,
+        model: ModelKind,
+        arrival: f64,
+        start: f64,
+        finish: f64,
+    ) -> JobRecord {
         let mut r = JobRecord::new(JobSpec {
             id,
             model,

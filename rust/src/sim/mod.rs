@@ -75,22 +75,30 @@ impl SimState {
     }
 
     /// Effective seconds per *requested-configuration iteration* of a
-    /// running job: Eq. 7 on its actual gang width, inflated by the worst
-    /// co-runner ξ (Eqs. 5/6), and rescaled for elastic width changes.
+    /// running job: Eq. 7 on its actual gang width *and placement* (the
+    /// [`crate::perf::GangSpan`] of the GPUs it holds — bottleneck link,
+    /// slowest member GPU), inflated by the worst co-runner ξ (Eqs. 5/6),
+    /// and rescaled for elastic width changes.
     ///
     /// Width rescaling (weak scaling): one data-parallel iteration on `w`
     /// workers processes `w·B` samples, so against the job's requested
     /// `G_k`-GPU configuration it completes `w/G_k` "requested iterations".
     /// For gang-faithful policies `w = G_k` and the factor is 1; the
     /// elastic (Pollux-like) baseline is the only policy that changes `w`.
+    ///
+    /// O(cluster) per call (co-runner scan + span derivation); the
+    /// engine reads it through [`SchedContext::cached_iter_time`], which
+    /// memoizes per rate epoch.
     pub fn effective_iter_time(&self, id: JobId) -> f64 {
         let rec = &self.jobs[id];
         debug_assert_eq!(rec.state, JobState::Running);
         let workers = rec.gpus_held.len().max(1);
-        let solo = rec.spec.profile().perf.iter_time(
+        let span = self.cluster.span_of(&rec.gpus_held);
+        let solo = rec.spec.profile().perf.iter_time_placed(
             rec.spec.batch as f64,
             rec.accum_step,
             workers,
+            &span,
         );
         let width_scale = workers as f64 / rec.spec.gpus as f64;
         let xi = self

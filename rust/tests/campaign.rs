@@ -25,6 +25,7 @@ fn small_spec(policies: &[&str], job_counts: Vec<usize>, seeds: Vec<u64>) -> Cam
         load_factors: vec![1.0],
         job_counts,
         gpu_counts: Vec::new(),
+        topologies: Vec::new(),
         seeds,
         jobs_scale_load_baseline: None,
     };
@@ -204,6 +205,69 @@ fn spec_validation_rejects_bad_inputs() {
       "axes": {"job_counts": [16], "seeds": [1], "scale_load_with_jobs": "240"}
     }"#;
     assert!(CampaignSpec::from_json(&Json::parse(text).unwrap()).is_err());
+}
+
+#[test]
+fn topology_axis_produces_per_shape_cells() {
+    // Two named shapes, one small trace: the campaign must expand one
+    // cell per (topology, policy), run both end to end, and report them
+    // as separate rows/blocks in every emitter.
+    let mut spec = small_spec(&["SJF"], vec![16], vec![1]);
+    spec.axes.topologies =
+        vec!["uniform-4x4".to_string(), "hetero-16x4-2tier".to_string()];
+    let res = campaign::execute(&spec, 0).unwrap();
+    assert_eq!(res.n_runs, 2);
+    assert_eq!(res.n_failures, 0, "{:?}", res.cells.iter().map(|c| &c.errors).collect::<Vec<_>>());
+    assert_eq!(res.cells.len(), 2);
+    assert_eq!(res.cells[0].key.topology, "uniform-4x4");
+    assert_eq!(res.cells[0].key.total_gpus, 16);
+    assert_eq!(res.cells[1].key.topology, "hetero-16x4-2tier");
+    assert_eq!(res.cells[1].key.total_gpus, 64);
+    let md = campaign::emit::markdown(&spec.name, &res.cells);
+    assert!(md.contains("### test: uniform-4x4, 16 GPUs"), "{md}");
+    assert!(md.contains("### test: hetero-16x4-2tier, 64 GPUs"), "{md}");
+    let csv = campaign::emit::long_csv(&spec.name, &res.cells);
+    assert!(csv.lines().any(|l| l.starts_with("test,hetero-16x4-2tier,64,16,1,SJF,")), "{csv}");
+}
+
+#[test]
+fn topologies_axis_parses_from_json_and_rejects_unknown_shapes() {
+    let text = r#"{
+      "name": "shapes",
+      "policies": ["FIFO"],
+      "axes": {
+        "job_counts": [16],
+        "seeds": [1],
+        "topologies": ["uniform-16x4", "uniform-16x4-nvlink"]
+      }
+    }"#;
+    let spec = CampaignSpec::from_json(&Json::parse(text).unwrap()).unwrap();
+    assert_eq!(spec.axes.topologies.len(), 2);
+    let pts = campaign::expand(&spec).unwrap();
+    assert_eq!(pts.len(), 2);
+    assert_eq!(pts[0].cell.topology, "uniform-16x4");
+    assert_eq!(pts[1].cell.topology, "uniform-16x4-nvlink");
+
+    let bad = r#"{
+      "policies": ["FIFO"],
+      "axes": {"job_counts": [16], "seeds": [1], "topologies": ["atlantis"]}
+    }"#;
+    let err = CampaignSpec::from_json(&Json::parse(bad).unwrap())
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("unknown topology shape"), "{err}");
+
+    // An explicit cluster block would be silently ignored by a topology
+    // axis, so the combination is rejected.
+    let conflict = r#"{
+      "policies": ["FIFO"],
+      "cluster": {"servers": 16, "gpus_per_server": 4, "max_share": 1},
+      "axes": {"job_counts": [16], "seeds": [1], "topologies": ["uniform-16x4"]}
+    }"#;
+    let err = CampaignSpec::from_json(&Json::parse(conflict).unwrap())
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("mutually exclusive"), "{err}");
 }
 
 #[test]

@@ -151,8 +151,11 @@ fn trace_load_save_roundtrip_through_simulation() {
     let loaded = trace::load(&path).unwrap();
     let mut p1 = sched::by_name("SJF-BSBF").unwrap();
     let mut p2 = sched::by_name("SJF-BSBF").unwrap();
-    let a = engine::run(ClusterConfig::simulation(), &jobs, InterferenceModel::new(), p1.as_mut()).unwrap();
-    let b = engine::run(ClusterConfig::simulation(), &loaded, InterferenceModel::new(), p2.as_mut()).unwrap();
+    let a = engine::run(ClusterConfig::simulation(), &jobs, InterferenceModel::new(), p1.as_mut())
+        .unwrap();
+    let b =
+        engine::run(ClusterConfig::simulation(), &loaded, InterferenceModel::new(), p2.as_mut())
+            .unwrap();
     assert_eq!(a.makespan_s, b.makespan_s, "simulation must be reproducible through JSON I/O");
     std::fs::remove_dir_all(&dir).ok();
 }

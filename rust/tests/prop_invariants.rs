@@ -248,7 +248,12 @@ fn prop_trace_generator_wellformed() {
             prev = j.arrival_s;
             prop_assert!(j.gpus >= 1 && j.gpus <= 16, "bad gang width {}", j.gpus);
             let mem = j.profile().mem.mem_gb(j.batch as f64);
-            prop_assert!(mem <= 11.0, "{:?} batch {} solo-infeasible: {mem:.1} GB", j.model, j.batch);
+            prop_assert!(
+                mem <= 11.0,
+                "{:?} batch {} solo-infeasible: {mem:.1} GB",
+                j.model,
+                j.batch
+            );
         }
         Ok(())
     });

@@ -1,0 +1,319 @@
+//! Cluster-v2 back-compat and placement properties.
+//!
+//! * **Uniform-topology golden test**: a `Topology` built from the flat
+//!   `ClusterConfig::simulation()` must yield *byte-identical*
+//!   `SimOutcome`s to the flat-config path for all six policies on the
+//!   240-job paper trace — the refactor's equivalence guarantee (the
+//!   placed Eq. 2/4/7 arithmetic reproduces the placement-agnostic
+//!   formulas bit-for-bit under reference tiers, and the overlay planning
+//!   view reproduces the old clone-based policy passes exactly).
+//! * **Placement properties**: a gang never spans more servers than
+//!   necessary when one server can host it; the incrementally maintained
+//!   free/one-job occupancy classes stay disjoint and agree with a
+//!   from-scratch rescan under random allocate/release churn; the overlay
+//!   planning view agrees with a mutated clone under random plan ops.
+//! * **Heterogeneity**: gang span measurably changes pair-JCT estimates,
+//!   and heterogeneous campaign cells simulate end to end.
+
+use wise_share::cluster::topology::{self, Topology};
+use wise_share::cluster::{placement, AllocView, Cluster, ClusterConfig};
+use wise_share::jobs::trace::{self, TraceConfig};
+use wise_share::jobs::JobState;
+use wise_share::pair::batch_size_scaling_placed;
+use wise_share::perf::interference::InterferenceModel;
+use wise_share::perf::profiles::ModelKind;
+use wise_share::prop_assert;
+use wise_share::sched::{self, POLICY_NAMES};
+use wise_share::sim::engine::{self, EngineConfig, SimOutcome};
+use wise_share::util::prop::forall;
+
+/// Every observable of an outcome, with f64s captured as raw bits so the
+/// comparison is byte-exact, not epsilon-close.
+fn fingerprint(out: &SimOutcome) -> Vec<(u64, u64, u64, u64, u32, Vec<usize>, u8)> {
+    out.jobs
+        .iter()
+        .map(|j| {
+            (
+                j.finish_s.unwrap_or(f64::NAN).to_bits(),
+                j.first_start_s.unwrap_or(f64::NAN).to_bits(),
+                j.queued_s.to_bits(),
+                j.remaining_iters.to_bits(),
+                j.accum_step,
+                j.gpus_held.clone(),
+                match j.state {
+                    JobState::Pending => 0,
+                    JobState::Running => 1,
+                    JobState::Preempted => 2,
+                    JobState::Finished => 3,
+                },
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn golden_uniform_topology_is_byte_identical_for_all_policies() {
+    let jobs = trace::generate(&TraceConfig::simulation(240, 1));
+    for name in POLICY_NAMES {
+        let mut p1 = sched::by_name(name).unwrap();
+        let flat = engine::run(
+            ClusterConfig::simulation(),
+            &jobs,
+            InterferenceModel::new(),
+            p1.as_mut(),
+        )
+        .unwrap();
+        let mut p2 = sched::by_name(name).unwrap();
+        let topo = engine::run_cluster(
+            Cluster::with_topology(Topology::uniform(16, 4, 11.0)),
+            &jobs,
+            InterferenceModel::new(),
+            p2.as_mut(),
+            EngineConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(
+            flat.makespan_s.to_bits(),
+            topo.makespan_s.to_bits(),
+            "{name}: makespan diverged"
+        );
+        assert_eq!(flat.policy_calls, topo.policy_calls, "{name}: policy calls");
+        assert_eq!(flat.preemptions, topo.preemptions, "{name}: preemptions");
+        assert_eq!(fingerprint(&flat), fingerprint(&topo), "{name}: job records diverged");
+    }
+}
+
+#[test]
+fn named_uniform_shape_matches_flat_config_too() {
+    // The registry's "uniform-16x4" is the same topology `from_config`
+    // builds — one 60-job spot check through SJF-BSBF.
+    let jobs = trace::generate(&TraceConfig::simulation(60, 7));
+    let mut p1 = sched::by_name("SJF-BSBF").unwrap();
+    let flat = engine::run(
+        ClusterConfig::simulation(),
+        &jobs,
+        InterferenceModel::new(),
+        p1.as_mut(),
+    )
+    .unwrap();
+    let mut p2 = sched::by_name("SJF-BSBF").unwrap();
+    let named = engine::run_cluster(
+        Cluster::with_topology(topology::by_name("uniform-16x4").unwrap()),
+        &jobs,
+        InterferenceModel::new(),
+        p2.as_mut(),
+        EngineConfig::default(),
+    )
+    .unwrap();
+    assert_eq!(fingerprint(&flat), fingerprint(&named));
+}
+
+#[test]
+fn hetero_topology_simulates_end_to_end() {
+    // Every policy completes the trace on the heterogeneous 2-tier shape
+    // (per-type memory budgets + spans threaded through perf and apply).
+    let jobs = trace::generate(&TraceConfig::simulation(40, 3));
+    for name in POLICY_NAMES {
+        let mut p = sched::by_name(name).unwrap();
+        let out = engine::run_cluster(
+            Cluster::with_topology(topology::by_name("hetero-16x4-2tier").unwrap()),
+            &jobs,
+            InterferenceModel::new(),
+            p.as_mut(),
+            EngineConfig::default(),
+        )
+        .unwrap_or_else(|e| panic!("{name} on hetero topology: {e:#}"));
+        for j in &out.jobs {
+            assert_eq!(j.state, JobState::Finished, "{name}: job {} unfinished", j.spec.id);
+        }
+    }
+}
+
+#[test]
+fn gang_span_changes_pair_jct_estimates() {
+    let topo = topology::by_name("hetero-16x4-2tier").unwrap();
+    let mk = |id, model, batch| {
+        wise_share::jobs::JobRecord::new(wise_share::jobs::JobSpec {
+            id,
+            model,
+            gpus: 4,
+            iterations: 2000,
+            batch,
+            arrival_s: 0.0,
+        })
+    };
+    let running = mk(0, ModelKind::ImageNet, 32);
+    let newcomer = mk(1, ModelKind::Ncf, 4096);
+    let xi = InterferenceModel::new();
+    let consolidated = topo.span_of(&[0, 1, 2, 3]);
+    let scattered = topo.span_of(&[0, 4, 8, 12]);
+    assert_eq!(consolidated.nodes, 1);
+    assert_eq!(scattered.nodes, 4);
+    let close = batch_size_scaling_placed(
+        &newcomer, &running, 4, 11.0, &xi, true, &consolidated, &consolidated,
+    )
+    .unwrap();
+    let far = batch_size_scaling_placed(
+        &newcomer, &running, 4, 11.0, &xi, true, &scattered, &scattered,
+    )
+    .unwrap();
+    assert!(
+        close.pair_jct < far.pair_jct,
+        "consolidated estimate {:.1}s must beat scattered {:.1}s",
+        close.pair_jct,
+        far.pair_jct
+    );
+}
+
+#[test]
+fn prop_gang_never_spans_more_servers_than_necessary() {
+    forall("placement-minimal-span", 0x705, 128, |rng| {
+        // Random occupancy on a random uniform shape.
+        let servers = 2 + rng.index(6);
+        let per = 2 + rng.index(4);
+        let mut cluster =
+            Cluster::with_topology(Topology::uniform(servers, per, 11.0));
+        let mut job = 0usize;
+        for g in 0..cluster.total_gpus() {
+            if rng.f64() < 0.45 {
+                cluster.allocate(1000 + job, &[g]);
+                job += 1;
+            }
+        }
+        let need = 1 + rng.index(per);
+        let single_fits =
+            (0..servers).any(|s| cluster.server_free(s) >= need);
+        match placement::consolidated_free(&cluster, need) {
+            Some(gpus) => {
+                prop_assert!(gpus.len() == need, "wrong gang size");
+                if single_fits {
+                    prop_assert!(
+                        cluster.servers_spanned(&gpus) == 1,
+                        "gang {gpus:?} spans {} servers although one server \
+                         has {need} free GPUs",
+                        cluster.servers_spanned(&gpus)
+                    );
+                }
+            }
+            None => {
+                prop_assert!(
+                    cluster.free_count() < need,
+                    "placement failed with {} >= {need} free GPUs",
+                    cluster.free_count()
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_occupancy_classes_match_rescan_under_churn() {
+    forall("occupancy-incremental", 0x0CC, 96, |rng| {
+        let topo = if rng.f64() < 0.5 {
+            Topology::uniform(4, 4, 11.0)
+        } else {
+            topology::by_name("hetero-16x4-2tier").unwrap()
+        };
+        let mut cluster = Cluster::with_topology(topo);
+        let mut live: Vec<usize> = Vec::new();
+        for op in 0..60 {
+            if !live.is_empty() && rng.f64() < 0.4 {
+                let job = live.swap_remove(rng.index(live.len()));
+                cluster.release(job);
+            } else {
+                let want = 1 + rng.index(4);
+                let candidates: Vec<usize> = (0..cluster.total_gpus())
+                    .filter(|&g| cluster.load(g) < 2)
+                    .collect();
+                if candidates.len() < want {
+                    continue;
+                }
+                let job = 1000 + op;
+                cluster.allocate(job, &candidates[..want]);
+                live.push(job);
+            }
+            // The incremental counts must agree with a from-scratch
+            // rescan, and the classes must be disjoint.
+            cluster.check_invariants().map_err(|e| format!("op {op}: {e}"))?;
+            let free = cluster.free_gpus();
+            let one_job = cluster.one_job_gpus();
+            prop_assert!(
+                cluster.free_count() == free.len()
+                    && cluster.one_job_count() == one_job.len(),
+                "op {op}: counts diverged from rescan"
+            );
+            prop_assert!(
+                free.iter().all(|g| !one_job.contains(g)),
+                "op {op}: free and one-job sets overlap"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_overlay_plan_matches_mutated_clone() {
+    forall("overlay-vs-clone", 0x0E1, 64, |rng| {
+        let mut base = Cluster::new(ClusterConfig::physical());
+        for (job, g) in (0..cluster_prefill(rng)).zip(0..16) {
+            base.allocate(500 + job, &[g]);
+        }
+        let state = wise_share::sim::SimState {
+            now: 0.0,
+            cluster: base,
+            jobs: Vec::new(),
+            xi: InterferenceModel::new(),
+            not_before: Vec::new(),
+            service_gpu_s: Vec::new(),
+        };
+        let ctx = wise_share::sched_core::SchedContext::from_state(state);
+        let mut clone = ctx.cluster.clone();
+        let mut plan = ctx.overlay();
+        for op in 0..24 {
+            if rng.f64() < 0.3 {
+                // Release a random known job (base-held or plan-held).
+                let job = if rng.f64() < 0.5 { 500 + rng.index(16) } else { 2000 + op };
+                clone.release(job);
+                plan.release(job);
+            } else {
+                let want = 1 + rng.index(3);
+                let candidates: Vec<usize> =
+                    (0..clone.total_gpus()).filter(|&g| clone.load(g) < 2).collect();
+                if candidates.len() < want {
+                    continue;
+                }
+                let job = 2000 + op;
+                clone.allocate(job, &candidates[..want]);
+                plan.allocate(job, &candidates[..want]);
+            }
+            for g in 0..clone.total_gpus() {
+                prop_assert!(
+                    plan.load(g) == clone.load(g),
+                    "op {op}: load(gpu {g}) {} != clone {}",
+                    plan.load(g),
+                    clone.load(g)
+                );
+                prop_assert!(
+                    plan.owner(g) == clone.slot(g).jobs.first().copied(),
+                    "op {op}: owner(gpu {g}) diverged"
+                );
+            }
+            prop_assert!(
+                plan.free_count() == clone.free_count()
+                    && plan.one_job_count() == clone.one_job_count(),
+                "op {op}: counts diverged"
+            );
+            prop_assert!(
+                plan.free_gpus() == clone.free_gpus()
+                    && plan.one_job_gpus() == clone.one_job_gpus(),
+                "op {op}: class lists diverged"
+            );
+        }
+        Ok(())
+    });
+}
+
+fn cluster_prefill(rng: &mut wise_share::util::rng::Rng) -> usize {
+    rng.index(10)
+}
