@@ -24,6 +24,8 @@ fn main() -> anyhow::Result<()> {
         job_counts: vec![240, 480], // Table III, Table IV
         gpu_counts: Vec::new(),     // the 16×4 simulation cluster
         topologies: Vec::new(),
+        workloads: Vec::new(),      // philly-sim, the paper trace shape
+        estimators: Vec::new(),     // oracle durations, as the paper assumes
         seeds: vec![1, 2, 3],
         jobs_scale_load_baseline: Some(240), // 480 jobs ⇒ 2× density
     };

@@ -58,6 +58,7 @@ fn main() -> anyhow::Result<()> {
         iterations: 4000,
         batch: 128,
         arrival_s: 0.0,
+        est_factor: 1.0,
     });
     let newcomer = JobRecord::new(wise_share::jobs::JobSpec {
         id: 1,
@@ -66,6 +67,7 @@ fn main() -> anyhow::Result<()> {
         iterations: 800,
         batch: 16,
         arrival_s: 100.0,
+        est_factor: 1.0,
     });
     let xi = InterferenceModel::new();
     let cfg = batch_size_scaling(&newcomer, &running, 4, 11.0, &xi)

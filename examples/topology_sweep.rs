@@ -31,6 +31,7 @@ fn main() -> anyhow::Result<()> {
         iterations: 4000,
         batch: 32,
         arrival_s: 0.0,
+        est_factor: 1.0,
     });
     let newcomer = JobRecord::new(JobSpec {
         id: 1,
@@ -39,6 +40,7 @@ fn main() -> anyhow::Result<()> {
         iterations: 3000,
         batch: 4096,
         arrival_s: 10.0,
+        est_factor: 1.0,
     });
     let xi = InterferenceModel::new();
     let consolidated = topo.span_of(&[0, 1, 2, 3]); // one reference node
@@ -81,6 +83,8 @@ fn main() -> anyhow::Result<()> {
             "uniform-16x4-nvlink".to_string(),
             "hetero-16x4-2tier".to_string(),
         ],
+        workloads: Vec::new(),
+        estimators: Vec::new(),
         seeds: vec![1, 2],
         jobs_scale_load_baseline: None,
     };

@@ -17,6 +17,8 @@ fn main() {
         job_counts: vec![120],
         gpu_counts: Vec::new(),
         topologies: Vec::new(),
+        workloads: Vec::new(),
+        estimators: Vec::new(),
         seeds: (1..=6).collect(),
         jobs_scale_load_baseline: None,
     };

@@ -12,7 +12,10 @@
 //! the context's finish-time min-heap instead of rescanning every running
 //! job; the `event-select/*` cases quantify that heap-vs-rescan speedup on
 //! a 2048-running-job context, and `engine/event-loop/2048-jobs` records
-//! the resulting end-to-end event-loop throughput on a large trace.
+//! the resulting end-to-end event-loop throughput on a large trace. The
+//! `estimate/*` cases compare the workload-v2 cached estimate table (the
+//! SJF-family sort key) against recomputing the key through the workload
+//! profile on every read.
 
 use wise_share::cluster::{AllocView, Cluster, ClusterConfig};
 use wise_share::jobs::trace::{self, TraceConfig};
@@ -76,6 +79,7 @@ fn main() {
         iterations: 2000,
         batch: 16,
         arrival_s: 0.0,
+        est_factor: 1.0,
     });
     let run = JobRecord::new(wise_share::jobs::JobSpec {
         id: 1,
@@ -84,6 +88,7 @@ fn main() {
         iterations: 8000,
         batch: 128,
         arrival_s: 0.0,
+        est_factor: 1.0,
     });
     let xi = InterferenceModel::new();
     bench("algorithm2/batch-size-scaling", 10_000, || {
@@ -147,6 +152,35 @@ fn main() {
          O(running) rescan at {} running jobs",
         rescan.mean_s / heap.mean_s.max(1e-12),
         n_running
+    );
+
+    // ---- estimate cache vs recompute: the SJF-family sort key -------------
+    // Every SJF-family pass reads the estimated remaining runtime O(n log n)
+    // times. The context caches the per-iteration factor
+    // (iter_time(accum) × est_factor), so the key is one multiply; the
+    // recompute case walks the workload profile on every read — what a
+    // cache-less policy would pay.
+    let ids: Vec<usize> = ctx.running().to_vec();
+    let cached = bench("estimate/cached/2048-running", 2_000, || {
+        let mut acc = 0.0;
+        for &id in &ids {
+            acc += ctx.estimated_remaining(id);
+        }
+        std::hint::black_box(acc);
+    });
+    let recompute = bench("estimate/recompute/2048-running", 200, || {
+        let mut acc = 0.0;
+        for &id in &ids {
+            let j = &ctx.jobs[id];
+            acc += j.spec.estimated_iter_time(j.accum_step) * j.remaining_iters;
+        }
+        std::hint::black_box(acc);
+    });
+    println!(
+        "estimate-key speedup: the cached table is {:.0}x cheaper than the \
+         per-read profile walk at {} running jobs",
+        recompute.mean_s / cached.mean_s.max(1e-12),
+        ids.len()
     );
 
     // ---- clone vs overlay: the policy planning view at 2048 GPUs ----------

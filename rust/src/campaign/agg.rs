@@ -218,6 +218,8 @@ mod tests {
     fn key(policy: &str) -> CellKey {
         CellKey {
             topology: "uniform-16x4".to_string(),
+            workload: "philly-sim".to_string(),
+            estimator: "oracle".to_string(),
             total_gpus: 64,
             n_jobs: 240,
             load_milli: 1000,

@@ -10,19 +10,29 @@ use crate::sim::metrics::Summary;
 
 use super::agg::{CellAgg, Stream};
 
+/// CSV schema version comment, emitted as the file's first line. The
+/// column set has changed twice (topology in the cluster-v2 PR,
+/// workload/estimator in workload v2), so consumers pin on this instead
+/// of guessing from the column count; bump it whenever columns change.
+pub const CSV_SCHEMA: &str = "# schema: v2";
+
 /// Long-format CSV header.
-pub const CSV_HEADER: &str =
-    "campaign,topology,gpus,jobs,load,policy,slice,metric,seeds,mean,std,min,max,ci95";
+pub const CSV_HEADER: &str = "campaign,topology,workload,estimator,gpus,jobs,load,\
+                              policy,slice,metric,seeds,mean,std,min,max,ci95";
 
 /// One `(slice, metric)` CSV row per statistic of every cell, in cell
-/// (expansion) order. All values in seconds.
+/// (expansion) order. All values in seconds. The first line is the
+/// [`CSV_SCHEMA`] comment (pandas: `read_csv(..., comment='#')`).
 pub fn long_csv(campaign: &str, cells: &[CellAgg]) -> String {
     let mut out = String::new();
+    writeln!(out, "{CSV_SCHEMA}").unwrap();
     writeln!(out, "{CSV_HEADER}").unwrap();
     for c in cells {
         let base = format!(
-            "{campaign},{},{},{},{},{}",
+            "{campaign},{},{},{},{},{},{},{}",
             c.key.topology,
+            c.key.workload,
+            c.key.estimator,
             c.key.total_gpus,
             c.key.n_jobs,
             c.key.load_factor(),
@@ -52,11 +62,11 @@ pub fn long_csv(campaign: &str, cells: &[CellAgg]) -> String {
     out
 }
 
-/// Markdown report: cells grouped per scenario (topology × GPUs × jobs ×
-/// load), each group rendered as a seed-averaged Table III/IV block
-/// followed by a 95% CI table, with any per-run failures listed
-/// underneath — a topology-axis campaign therefore reports one block per
-/// cluster shape.
+/// Markdown report: cells grouped per scenario (topology × workload ×
+/// estimator × GPUs × jobs × load), each group rendered as a
+/// seed-averaged Table III/IV block followed by a 95% CI table, with any
+/// per-run failures listed underneath — a topology/workload/estimator-
+/// axis campaign therefore reports one block per swept shape.
 pub fn markdown(campaign: &str, cells: &[CellAgg]) -> String {
     let mut out = String::new();
     let mut i = 0;
@@ -74,11 +84,14 @@ pub fn markdown(campaign: &str, cells: &[CellAgg]) -> String {
         let seeds = group.iter().map(CellAgg::seeds).max().unwrap_or(0);
         writeln!(
             out,
-            "### {campaign}: {}, {} GPUs, {} jobs, load x{} ({seeds} seed(s))\n",
+            "### {campaign}: {}, {} GPUs, {} jobs, load x{}, {} workload, \
+             {} estimates ({seeds} seed(s))\n",
             k.topology,
             k.total_gpus,
             k.n_jobs,
             k.load_factor(),
+            k.workload,
+            k.estimator,
         )
         .unwrap();
         // Cells with zero successful runs would render as a (winning!)
@@ -150,6 +163,8 @@ mod tests {
                     ordinal: ord * 2 + seed as usize - 1,
                     cell: CellKey {
                         topology: "uniform-16x4".to_string(),
+                        workload: "philly-sim".to_string(),
+                        estimator: "oracle".to_string(),
                         total_gpus: 64,
                         n_jobs: 240,
                         load_milli: 1500,
@@ -173,17 +188,23 @@ mod tests {
     fn csv_is_long_format_with_header() {
         let csv = long_csv("demo", &cells());
         let lines: Vec<&str> = csv.lines().collect();
-        assert_eq!(lines[0], CSV_HEADER);
+        assert_eq!(lines[0], CSV_SCHEMA, "schema comment must be the first line");
+        assert_eq!(lines[1], CSV_HEADER);
         // 2 cells x (3 slices x 4 metrics + makespan) = 26 data rows.
-        assert_eq!(lines.len(), 1 + 2 * 13);
-        assert!(lines[1].starts_with("demo,uniform-16x4,64,240,1.5,FIFO,all,avg_jct_s,2,"));
+        assert_eq!(lines.len(), 2 + 2 * 13);
+        assert!(lines[2].starts_with(
+            "demo,uniform-16x4,philly-sim,oracle,64,240,1.5,FIFO,all,avg_jct_s,2,"
+        ));
         assert!(csv.contains("SJF-BSBF,all,makespan_s"));
     }
 
     #[test]
     fn markdown_groups_and_reports_ci() {
         let md = markdown("demo", &cells());
-        assert!(md.contains("### demo: uniform-16x4, 64 GPUs, 240 jobs, load x1.5 (2 seed(s))"));
+        assert!(md.contains(
+            "### demo: uniform-16x4, 64 GPUs, 240 jobs, load x1.5, philly-sim \
+             workload, oracle estimates (2 seed(s))"
+        ));
         // One table34 block: both policies appear in the JCT rows.
         assert!(md.contains("| Average JCT | FIFO |"));
         assert!(md.contains("| Average JCT | SJF-BSBF |"));
@@ -200,6 +221,8 @@ mod tests {
             ordinal: 4,
             cell: CellKey {
                 topology: "uniform-16x4".to_string(),
+                workload: "philly-sim".to_string(),
+                estimator: "oracle".to_string(),
                 total_gpus: 64,
                 n_jobs: 120,
                 load_milli: 500,

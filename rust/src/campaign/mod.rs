@@ -7,8 +7,10 @@
 //!
 //! 1. **Spec** ([`spec`]) — a declarative [`CampaignSpec`] (cluster, trace
 //!    shape, interference model, engine limits, policy list, sweep axes —
-//!    including a `topologies` axis of named cluster shapes, DESIGN.md
-//!    §10), loadable from JSON via the first-party parser.
+//!    including a `topologies` axis of named cluster shapes (DESIGN.md
+//!    §10) and `workloads` / `estimators` axes of named workload presets
+//!    and duration-estimator specs (DESIGN.md §11)), loadable from JSON
+//!    via the first-party parser.
 //! 2. **Sweep** ([`sweep`]) — cartesian expansion into a deterministic,
 //!    ordered run matrix of self-contained [`ScenarioSpec`]s.
 //! 3. **Runner** ([`runner`]) — a `std::thread` worker pool; runs are

@@ -101,6 +101,8 @@ mod tests {
             job_counts: vec![10],
             gpu_counts: Vec::new(),
             topologies: Vec::new(),
+            workloads: Vec::new(),
+            estimators: Vec::new(),
             seeds: vec![1, 2, 3, 4],
             jobs_scale_load_baseline: None,
         };

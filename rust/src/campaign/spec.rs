@@ -5,14 +5,17 @@
 //! A [`CampaignSpec`] describes a whole sweep; the expander
 //! ([`super::sweep::expand`]) resolves it into an ordered list of
 //! [`ScenarioSpec`]s, each one a fully-determined single simulation run
-//! (policy × cluster size × job count × load factor × seed).
+//! (policy × cluster shape × workload preset × estimator × job count ×
+//! load factor × seed).
 
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
 use crate::cluster::{topology, Cluster, ClusterConfig};
+use crate::jobs::estimate::EstimateModel;
 use crate::jobs::trace::{self, TraceConfig};
+use crate::jobs::workload;
 use crate::perf::interference::InterferenceModel;
 use crate::sched;
 use crate::sim::metrics::{self, Summary};
@@ -34,6 +37,16 @@ pub struct Axes {
     /// the uniform base cluster. A topology fixes the whole cluster shape,
     /// so this axis is mutually exclusive with `gpu_counts`.
     pub topologies: Vec<String>,
+    /// Named workload presets ([`workload::PRESET_NAMES`]) to sweep;
+    /// empty ⇒ `philly-sim` (the paper shape). A preset fixes the whole
+    /// trace shape (arrival process, GPU mix, iteration tail), so a
+    /// non-empty axis supersedes the spec's `mean_interarrival_s` /
+    /// `iter_range` (JSON specs reject the combination outright).
+    pub workloads: Vec<String>,
+    /// Duration-estimator specs ([`EstimateModel::parse`]: `oracle`,
+    /// `noisy:SIGMA[:SEED]`, `percentile:PCT`) to sweep; empty ⇒ the
+    /// oracle. Cell keys carry the canonical spec string.
+    pub estimators: Vec<String>,
     /// Trace seeds; aggregation (mean/std/CI) runs across this axis.
     pub seeds: Vec<u64>,
     /// If `Some(baseline)`, each run's effective load factor is further
@@ -83,6 +96,8 @@ impl CampaignSpec {
                 job_counts: vec![240],
                 gpu_counts: Vec::new(),
                 topologies: Vec::new(),
+                workloads: Vec::new(),
+                estimators: Vec::new(),
                 seeds: vec![1],
                 jobs_scale_load_baseline: None,
             },
@@ -101,6 +116,8 @@ impl CampaignSpec {
             job_counts: vec![120, 240, 360, 480],
             gpu_counts: Vec::new(),
             topologies: Vec::new(),
+            workloads: Vec::new(),
+            estimators: Vec::new(),
             seeds: vec![1, 2, 3],
             jobs_scale_load_baseline: Some(240),
         };
@@ -155,6 +172,8 @@ impl CampaignSpec {
             job_counts: usize_list(axes, "job_counts", vec![240])?,
             gpu_counts: usize_list(axes, "gpu_counts", Vec::new())?,
             topologies: str_list(axes, "topologies", Vec::new())?,
+            workloads: str_list(axes, "workloads", Vec::new())?,
+            estimators: str_list(axes, "estimators", Vec::new())?,
             seeds: u64_list(axes, "seeds", vec![1])?,
             jobs_scale_load_baseline: opt_usize(axes, "scale_load_with_jobs")?,
         };
@@ -168,6 +187,18 @@ impl CampaignSpec {
             bail!(
                 "campaign {:?}: the cluster block and the topologies axis are \
                  mutually exclusive (a named topology fixes the whole cluster shape)",
+                spec.name
+            );
+        }
+        // Same policy for workloads: a preset fixes the whole trace shape
+        // (arrival process, GPU mix, iteration tail), so an explicit
+        // trace block alongside would be silently ignored.
+        if !matches!(doc.get("trace"), None | Some(Json::Null))
+            && !spec.axes.workloads.is_empty()
+        {
+            bail!(
+                "campaign {:?}: the trace block and the workloads axis are \
+                 mutually exclusive (a workload preset fixes the whole trace shape)",
                 spec.name
             );
         }
@@ -225,10 +256,31 @@ impl CampaignSpec {
         if self.cluster.max_share == 0 {
             bail!("campaign {:?}: max_share must be >= 1", self.name);
         }
-        // The simulation trace mix requests gangs of up to 16 GPUs; every
-        // swept cluster shape must be able to host them (the engine
-        // rejects oversized jobs outright).
-        let min_gpus = 16;
+        for name in &self.axes.workloads {
+            workload::by_name_or_err(name)
+                .with_context(|| format!("campaign {:?}", self.name))?;
+        }
+        for spec in &self.axes.estimators {
+            EstimateModel::parse(spec).with_context(|| {
+                format!("campaign {:?}: estimator {spec:?}", self.name)
+            })?;
+        }
+        // Every swept cluster shape must be able to host the largest gang
+        // any swept workload mix can request (the engine rejects
+        // oversized jobs outright). The default philly-sim mix goes up
+        // to 16 GPUs; a small-job preset relaxes the floor.
+        let min_gpus = if self.axes.workloads.is_empty() {
+            16
+        } else {
+            self.axes
+                .workloads
+                .iter()
+                .map(|name| {
+                    workload::by_name(name).expect("validated above").max_gang()
+                })
+                .max()
+                .unwrap_or(16)
+        };
         if !a.topologies.is_empty() {
             // A named topology fixes the whole shape — rescaling it by a
             // GPU count has no defined meaning.
@@ -449,6 +501,28 @@ mod tests {
         spec.axes.topologies = vec!["uniform-16x4".to_string()];
         spec.axes.gpu_counts = vec![64];
         assert!(spec.validate().is_err());
+    }
+
+    #[test]
+    fn validate_workloads_and_estimators_axes() {
+        let mut spec = CampaignSpec::new("x");
+        spec.policies = vec!["FIFO".to_string()];
+        spec.axes.workloads = vec!["small-job-flood".to_string()];
+        spec.axes.estimators = vec!["noisy:0.5".to_string(), "percentile:90".to_string()];
+        spec.validate().unwrap();
+        // A small-job preset (max gang 4) relaxes the 16-GPU floor.
+        spec.axes.gpu_counts = vec![8];
+        spec.validate().unwrap();
+        spec.axes.gpu_counts.clear();
+        // Unknown names/specs are rejected with the known lists.
+        spec.axes.workloads = vec!["no-such-workload".to_string()];
+        let err = spec.validate().unwrap_err().to_string();
+        assert!(err.contains("unknown workload preset"), "{err}");
+        assert!(err.contains("philly-sim"), "{err}");
+        spec.axes.workloads = vec!["philly-sim".to_string()];
+        spec.axes.estimators = vec!["noisy".to_string()];
+        let err = spec.validate().unwrap_err().to_string();
+        assert!(err.contains("noisy estimator needs a sigma"), "{err}");
     }
 
     #[test]

@@ -2,16 +2,19 @@
 //! deterministic run matrix.
 //!
 //! Axis nesting order (outer → inner): cluster shape (topology or GPU
-//! count) → job count → load factor → policy → seed. The order is part of
-//! the subsystem's contract — run ordinals are stable across processes,
-//! results are reported in expansion order regardless of which worker
-//! finished first, and cells (everything but the seed) appear in
-//! first-occurrence order in every emitter.
+//! count) → workload preset → estimator → job count → load factor →
+//! policy → seed. The order is part of the subsystem's contract — run
+//! ordinals are stable across processes, results are reported in
+//! expansion order regardless of which worker finished first, and cells
+//! (everything but the seed) appear in first-occurrence order in every
+//! emitter.
 
 use anyhow::{bail, Result};
 
 use crate::cluster::{topology, ClusterConfig};
+use crate::jobs::estimate::EstimateModel;
 use crate::jobs::trace::TraceConfig;
+use crate::jobs::workload;
 
 use super::spec::{CampaignSpec, ScenarioSpec};
 
@@ -24,6 +27,10 @@ pub struct CellKey {
     /// Cluster shape name: a named topology from the `topologies` axis,
     /// or `uniform-{servers}x{gpus_per_server}` for flat-config cells.
     pub topology: String,
+    /// Workload preset name (`philly-sim` when the axis is unset).
+    pub workload: String,
+    /// Canonical estimator spec string (`oracle` when the axis is unset).
+    pub estimator: String,
     pub total_gpus: usize,
     pub n_jobs: usize,
     /// Effective load factor × 1000.
@@ -37,8 +44,15 @@ impl CellKey {
     }
 
     /// The non-policy coordinates — emitters group cells on this.
-    pub fn scenario_coords(&self) -> (&str, usize, usize, u64) {
-        (&self.topology, self.total_gpus, self.n_jobs, self.load_milli)
+    pub fn scenario_coords(&self) -> (&str, &str, &str, usize, usize, u64) {
+        (
+            &self.topology,
+            &self.workload,
+            &self.estimator,
+            self.total_gpus,
+            self.n_jobs,
+            self.load_milli,
+        )
     }
 }
 
@@ -107,63 +121,129 @@ pub fn expand(spec: &CampaignSpec) -> Result<Vec<RunPoint>> {
             })
             .collect()
     };
+    // Workload axis: resolved presets (default = the paper shape). A
+    // non-empty axis supersedes the spec-level trace overrides — the
+    // preset *is* the trace shape.
+    let explicit_workloads = !spec.axes.workloads.is_empty();
+    let presets: Vec<workload::WorkloadPreset> = if explicit_workloads {
+        spec.axes
+            .workloads
+            .iter()
+            .map(|name| workload::by_name_or_err(name))
+            .collect::<Result<_>>()?
+    } else {
+        vec![workload::by_name("philly-sim").expect("registry preset")]
+    };
+    // Estimator axis: parsed once, keyed by the canonical spec string so
+    // differently-spelled equal specs land in the same cell.
+    let estimators: Vec<(String, EstimateModel)> = if spec.axes.estimators.is_empty() {
+        vec![("oracle".to_string(), EstimateModel::Oracle)]
+    } else {
+        let parsed: Vec<(String, EstimateModel)> = spec
+            .axes
+            .estimators
+            .iter()
+            .map(|s| EstimateModel::parse(s).map(|m| (m.spec_string(), m)))
+            .collect::<Result<_>>()?;
+        // Distinct spellings that canonicalize to the same estimator
+        // would silently merge into one cell with an inflated seed count
+        // (deflating the CIs) — same policy as the load-quantization
+        // collision check below. Literal duplicates stay legal, like
+        // duplicated seeds.
+        for i in 0..parsed.len() {
+            for j in 0..i {
+                if parsed[i].0 == parsed[j].0
+                    && spec.axes.estimators[i] != spec.axes.estimators[j]
+                {
+                    bail!(
+                        "campaign {:?}: estimators {:?} and {:?} both canonicalize \
+                         to {:?} — they would merge into one cell",
+                        spec.name,
+                        spec.axes.estimators[j],
+                        spec.axes.estimators[i],
+                        parsed[i].0
+                    );
+                }
+            }
+        }
+        parsed
+    };
+    // Quantize the load axis once per job count — the result (and the
+    // distinctness validation: distinct axis values must stay distinct
+    // after quantization, or two cells would silently merge, shrinking
+    // the CIs) is identical for every shape/workload/estimator cell.
+    let mut load_grid: Vec<Vec<u64>> = Vec::with_capacity(spec.axes.job_counts.len());
+    for &n_jobs in &spec.axes.job_counts {
+        let mut seen_millis: Vec<(u64, f64)> = Vec::new();
+        for &load in &spec.axes.load_factors {
+            let effective = match spec.axes.jobs_scale_load_baseline {
+                Some(base) => load * n_jobs as f64 / base as f64,
+                None => load,
+            };
+            let load_milli = (effective * 1000.0).round() as u64;
+            if load_milli == 0 {
+                bail!(
+                    "campaign {:?}: effective load factor {effective} at {n_jobs} jobs \
+                     quantizes to 0 (minimum representable is 0.001)",
+                    spec.name
+                );
+            }
+            if let Some((_, prev)) =
+                seen_millis.iter().find(|(m, p)| *m == load_milli && *p != load)
+            {
+                bail!(
+                    "campaign {:?}: load factors {prev} and {load} both quantize to \
+                     {} (1/1000 resolution)",
+                    spec.name,
+                    load_milli as f64 / 1000.0
+                );
+            }
+            seen_millis.push((load_milli, load));
+        }
+        load_grid.push(seen_millis.into_iter().map(|(m, _)| m).collect());
+    }
     let mut points = Vec::new();
     for variant in &variants {
         let cluster = variant.cluster;
-        for &n_jobs in &spec.axes.job_counts {
-            // Distinct axis values must stay distinct after quantization,
-            // or two cells would silently merge (shrinking the CIs).
-            let mut seen_millis: Vec<(u64, f64)> = Vec::new();
-            for &load in &spec.axes.load_factors {
-                let effective = match spec.axes.jobs_scale_load_baseline {
-                    Some(base) => load * n_jobs as f64 / base as f64,
-                    None => load,
-                };
-                let load_milli = (effective * 1000.0).round() as u64;
-                if load_milli == 0 {
-                    bail!(
-                        "campaign {:?}: effective load factor {effective} at {n_jobs} jobs \
-                         quantizes to 0 (minimum representable is 0.001)",
-                        spec.name
-                    );
-                }
-                if let Some((_, prev)) =
-                    seen_millis.iter().find(|(m, p)| *m == load_milli && *p != load)
-                {
-                    bail!(
-                        "campaign {:?}: load factors {prev} and {load} both quantize to \
-                         {} (1/1000 resolution)",
-                        spec.name,
-                        load_milli as f64 / 1000.0
-                    );
-                }
-                seen_millis.push((load_milli, load));
-                let quantized = load_milli as f64 / 1000.0;
-                for policy in &spec.policies {
-                    let cell = CellKey {
-                        topology: variant.name.clone(),
-                        total_gpus: variant.total_gpus,
-                        n_jobs,
-                        load_milli,
-                        policy: policy.clone(),
-                    };
-                    for &seed in &spec.axes.seeds {
-                        let mut trace = TraceConfig::simulation(n_jobs, seed);
-                        trace.mean_interarrival_s = spec.mean_interarrival_s;
-                        trace.iter_range = spec.iter_range;
-                        trace.load_factor = quantized;
-                        points.push(RunPoint {
-                            ordinal: points.len(),
-                            cell: cell.clone(),
-                            scenario: ScenarioSpec {
+        for preset in &presets {
+            for (est_name, est_model) in &estimators {
+                for (ji, &n_jobs) in spec.axes.job_counts.iter().enumerate() {
+                    for &load_milli in &load_grid[ji] {
+                        let quantized = load_milli as f64 / 1000.0;
+                        for policy in &spec.policies {
+                            let cell = CellKey {
+                                topology: variant.name.clone(),
+                                workload: preset.name.to_string(),
+                                estimator: est_name.clone(),
+                                total_gpus: variant.total_gpus,
+                                n_jobs,
+                                load_milli,
                                 policy: policy.clone(),
-                                cluster,
-                                topology: variant.topology.clone(),
-                                trace,
-                                xi_global: spec.xi_global,
-                                max_sim_s: spec.max_sim_s,
-                            },
-                        });
+                            };
+                            for &seed in &spec.axes.seeds {
+                                let mut trace = TraceConfig::from_preset(preset, n_jobs, seed);
+                                if !explicit_workloads {
+                                    // Back-compat: spec-level trace knobs
+                                    // apply on the default preset only.
+                                    trace.mean_interarrival_s = spec.mean_interarrival_s;
+                                    trace.iter_range = spec.iter_range;
+                                }
+                                trace.estimator = est_model.clone();
+                                trace.load_factor = quantized;
+                                points.push(RunPoint {
+                                    ordinal: points.len(),
+                                    cell: cell.clone(),
+                                    scenario: ScenarioSpec {
+                                        policy: policy.clone(),
+                                        cluster,
+                                        topology: variant.topology.clone(),
+                                        trace,
+                                        xi_global: spec.xi_global,
+                                        max_sim_s: spec.max_sim_s,
+                                    },
+                                });
+                            }
+                        }
                     }
                 }
             }
@@ -185,6 +265,8 @@ mod tests {
             job_counts: vec![30, 60],
             gpu_counts: vec![32, 64],
             topologies: Vec::new(),
+            workloads: Vec::new(),
+            estimators: Vec::new(),
             seeds: vec![1, 2, 3],
             jobs_scale_load_baseline: None,
         };
@@ -238,6 +320,60 @@ mod tests {
         assert!(pts.iter().all(|p| p.cell.total_gpus == 64));
         // The summary cluster is conservative for the hetero shape.
         assert_eq!(last.scenario.cluster.gpu_mem_gb, 11.0);
+    }
+
+    #[test]
+    fn default_axes_use_paper_workload_and_oracle() {
+        let pts = expand(&spec()).unwrap();
+        assert!(pts.iter().all(|p| p.cell.workload == "philly-sim"));
+        assert!(pts.iter().all(|p| p.cell.estimator == "oracle"));
+        assert!(pts
+            .iter()
+            .all(|p| p.scenario.trace.estimator
+                == crate::jobs::estimate::EstimateModel::Oracle));
+    }
+
+    #[test]
+    fn workload_and_estimator_axes_expand() {
+        let mut s = spec();
+        s.axes.gpu_counts = Vec::new();
+        s.axes.workloads = vec!["philly-sim".to_string(), "small-job-flood".to_string()];
+        // Non-canonical spelling must still land in the canonical cell.
+        s.axes.estimators = vec!["oracle".to_string(), "noisy:0.50".to_string()];
+        let pts = expand(&s).unwrap();
+        // 2 workloads x 2 estimators x 2 jobs x 2 loads x 2 policies x 3 seeds.
+        assert_eq!(pts.len(), 2 * 2 * 2 * 2 * 2 * 3);
+        assert_eq!(pts[0].cell.workload, "philly-sim");
+        assert_eq!(pts[0].cell.estimator, "oracle");
+        let last = &pts[pts.len() - 1];
+        assert_eq!(last.cell.workload, "small-job-flood");
+        assert_eq!(last.cell.estimator, "noisy:0.5");
+        // The preset shapes the trace: flood arrives every 8 s in bursts,
+        // with its own demand mix — not the spec-level overrides.
+        assert_eq!(last.scenario.trace.mean_interarrival_s, 8.0);
+        assert_eq!(last.scenario.trace.iter_range, (100, 5_000));
+        assert!(matches!(
+            last.scenario.trace.arrival,
+            crate::jobs::workload::ArrivalProcess::Bursty { .. }
+        ));
+        assert_eq!(
+            last.scenario.trace.estimator,
+            crate::jobs::estimate::EstimateModel::Noisy { factor_sigma: 0.5, seed: 0 }
+        );
+        // Workload is outer to estimator: the first half of the matrix is
+        // all philly-sim.
+        assert!(pts[..pts.len() / 2].iter().all(|p| p.cell.workload == "philly-sim"));
+    }
+
+    #[test]
+    fn estimator_spellings_that_merge_cells_are_rejected() {
+        let mut s = spec();
+        s.axes.estimators = vec!["noisy:0.5".to_string(), "noisy:0.50".to_string()];
+        let err = expand(&s).unwrap_err().to_string();
+        assert!(err.contains("canonicalize"), "{err}");
+        // Literal duplicates stay legal (like duplicated seeds).
+        s.axes.estimators = vec!["noisy:0.5".to_string(), "noisy:0.5".to_string()];
+        assert!(expand(&s).is_ok());
     }
 
     #[test]

@@ -1,0 +1,290 @@
+//! Duration-estimator layer: what the scheduler *believes* a job's
+//! runtime is.
+//!
+//! Every SJF-family policy in the paper ranks on the oracle remaining
+//! solo runtime `L_k`, but production schedulers only ever see
+//! *estimates* (Tiresias runs without any; Helios/3Sigma-style systems
+//! predict from history). An [`EstimateModel`] is materialized per job at
+//! trace time into [`JobSpec::est_factor`] — the scheduler-visible
+//! duration as a multiple of the truth — and the policies rank on
+//! `estimate = truth × est_factor` via
+//! [`SchedContext::estimated_remaining`](crate::sched_core::SchedContext::estimated_remaining),
+//! while the simulation engine keeps completing jobs on their *true*
+//! iteration counts. `Oracle` (factor exactly 1.0) reproduces the
+//! pre-estimator behavior bit-for-bit.
+
+use anyhow::{bail, Context, Result};
+
+use super::JobSpec;
+use crate::util::rng::Rng;
+
+/// Stream-splitting constant: the noisy estimator draws from its own RNG
+/// stream so materializing estimates never perturbs the arrival/body
+/// draws of the trace itself.
+const EST_STREAM_SALT: u64 = 0xE571_AA7E_0DD5_EEDD;
+
+/// How per-job duration estimates are produced.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub enum EstimateModel {
+    /// Perfect information: `est_factor = 1.0` exactly (the paper's
+    /// setting; golden-parity guaranteed).
+    #[default]
+    Oracle,
+    /// Multiplicative log-normal error: `est_factor = exp(σ·N(0,1))` per
+    /// job, σ = `factor_sigma`. `seed` offsets the error stream so two
+    /// campaigns can draw independent errors over the same trace.
+    Noisy { factor_sigma: f64, seed: u64 },
+    /// History-based predictor à la Tiresias/Helios: a job's estimate is
+    /// the `pct`-th percentile of the true durations of *previously
+    /// arrived* jobs with the same model kind (falling back to the
+    /// all-models history, and to the oracle for the cold-start job with
+    /// no history at all).
+    Percentile { pct: f64 },
+}
+
+impl EstimateModel {
+    /// Parse a CLI/campaign estimator spec:
+    /// `oracle` | `noisy:SIGMA[:SEED]` | `percentile:PCT`.
+    pub fn parse(spec: &str) -> Result<EstimateModel> {
+        let mut parts = spec.split(':');
+        let kind = parts.next().unwrap_or("");
+        let model = match kind {
+            "oracle" => EstimateModel::Oracle,
+            "noisy" => {
+                let sigma: f64 = parts
+                    .next()
+                    .context("noisy estimator needs a sigma: noisy:SIGMA[:SEED]")?
+                    .parse()
+                    .context("noisy sigma must be a number")?;
+                let seed: u64 = match parts.next() {
+                    None => 0,
+                    Some(s) => s.parse().context("noisy seed must be an integer")?,
+                };
+                EstimateModel::Noisy { factor_sigma: sigma, seed }
+            }
+            "percentile" => {
+                let pct: f64 = parts
+                    .next()
+                    .context("percentile estimator needs a percentile: percentile:PCT")?
+                    .parse()
+                    .context("percentile must be a number")?;
+                EstimateModel::Percentile { pct }
+            }
+            other => bail!(
+                "unknown estimator {other:?} (known: oracle, noisy:SIGMA[:SEED], \
+                 percentile:PCT)"
+            ),
+        };
+        if let Some(extra) = parts.next() {
+            bail!("trailing estimator component {extra:?} in {spec:?}");
+        }
+        model.validate()?;
+        Ok(model)
+    }
+
+    /// Canonical spec string — the inverse of [`EstimateModel::parse`].
+    /// Campaign cell keys and CSV rows use this, so `noisy:0.50` and
+    /// `noisy:0.5` land in the same cell.
+    pub fn spec_string(&self) -> String {
+        match self {
+            EstimateModel::Oracle => "oracle".to_string(),
+            EstimateModel::Noisy { factor_sigma, seed: 0 } => {
+                format!("noisy:{factor_sigma}")
+            }
+            EstimateModel::Noisy { factor_sigma, seed } => {
+                format!("noisy:{factor_sigma}:{seed}")
+            }
+            EstimateModel::Percentile { pct } => format!("percentile:{pct}"),
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        match *self {
+            EstimateModel::Oracle => Ok(()),
+            EstimateModel::Noisy { factor_sigma, .. } => {
+                if factor_sigma < 0.0 || !factor_sigma.is_finite() {
+                    bail!("noisy sigma {factor_sigma} must be finite and >= 0");
+                }
+                Ok(())
+            }
+            EstimateModel::Percentile { pct } => {
+                if !(0.0..=100.0).contains(&pct) {
+                    bail!("percentile {pct} must be in [0, 100]");
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+/// Materialize per-job estimate factors in place. Jobs must be in
+/// arrival order (the percentile predictor's "history" is every job that
+/// arrived before). Deterministic per `(model, trace_seed)`; the noisy
+/// stream is salted so it is independent of the generator's own draws.
+pub fn materialize(jobs: &mut [JobSpec], model: &EstimateModel, trace_seed: u64) {
+    match *model {
+        EstimateModel::Oracle => {
+            // Explicit reset: re-materializing a loaded noisy trace with
+            // the oracle must restore perfect information.
+            for j in jobs {
+                j.est_factor = 1.0;
+            }
+        }
+        EstimateModel::Noisy { factor_sigma, seed } => {
+            let mut rng = Rng::seed_from_u64(trace_seed ^ seed.rotate_left(32) ^ EST_STREAM_SALT);
+            for j in jobs {
+                j.est_factor = rng.lognormal(0.0, factor_sigma);
+            }
+        }
+        EstimateModel::Percentile { pct } => {
+            // Sorted histories maintained incrementally (one per model
+            // kind + a global fallback): each job is a binary-search
+            // insert and an O(1) percentile read, instead of
+            // re-filtering and re-sorting the whole past per job.
+            let mut by_model: Vec<(crate::perf::profiles::ModelKind, Vec<f64>)> =
+                Vec::new();
+            let mut global: Vec<f64> = Vec::with_capacity(jobs.len());
+            for j in jobs.iter_mut() {
+                let truth = j.solo_runtime(1);
+                let mi = by_model.iter().position(|(m, _)| *m == j.model);
+                let hist: &Vec<f64> = match mi {
+                    Some(i) if !by_model[i].1.is_empty() => &by_model[i].1,
+                    _ => &global,
+                };
+                if hist.is_empty() {
+                    j.est_factor = 1.0; // cold start: no history at all
+                } else {
+                    let idx = (pct / 100.0 * (hist.len() - 1) as f64).round() as usize;
+                    j.est_factor = hist[idx] / truth;
+                }
+                let mi = mi.unwrap_or_else(|| {
+                    by_model.push((j.model, Vec::new()));
+                    by_model.len() - 1
+                });
+                let slot = &mut by_model[mi].1;
+                slot.insert(slot.partition_point(|&x| x < truth), truth);
+                global.insert(global.partition_point(|&x| x < truth), truth);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perf::profiles::ModelKind;
+
+    fn spec(id: usize, model: ModelKind, iters: u64) -> JobSpec {
+        JobSpec {
+            id,
+            model,
+            gpus: 4,
+            iterations: iters,
+            batch: 32,
+            arrival_s: id as f64,
+            est_factor: 1.0,
+        }
+    }
+
+    #[test]
+    fn parse_roundtrips_canonical_specs() {
+        for s in ["oracle", "noisy:0.5", "noisy:1.5:7", "percentile:50", "percentile:90"] {
+            let m = EstimateModel::parse(s).unwrap();
+            assert_eq!(m.spec_string(), s, "canonical form must roundtrip");
+            assert_eq!(EstimateModel::parse(&m.spec_string()).unwrap(), m);
+        }
+        // Non-canonical numerics normalize into the same cell.
+        assert_eq!(
+            EstimateModel::parse("noisy:0.50").unwrap().spec_string(),
+            "noisy:0.5"
+        );
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for s in [
+            "",
+            "magic",
+            "noisy",
+            "noisy:abc",
+            "noisy:-0.5",
+            "noisy:0.5:x",
+            "noisy:0.5:1:2",
+            "percentile",
+            "percentile:101",
+            "percentile:-1",
+        ] {
+            assert!(EstimateModel::parse(s).is_err(), "{s:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn oracle_resets_factors_to_exactly_one() {
+        let mut jobs: Vec<JobSpec> = (0..10).map(|i| spec(i, ModelKind::Cifar10, 1000)).collect();
+        materialize(&mut jobs, &EstimateModel::Noisy { factor_sigma: 1.0, seed: 0 }, 3);
+        assert!(jobs.iter().any(|j| j.est_factor != 1.0));
+        materialize(&mut jobs, &EstimateModel::Oracle, 3);
+        assert!(jobs.iter().all(|j| j.est_factor.to_bits() == 1.0f64.to_bits()));
+    }
+
+    #[test]
+    fn noisy_is_deterministic_and_seed_sensitive() {
+        let fresh = || (0..50).map(|i| spec(i, ModelKind::Bert, 500)).collect::<Vec<_>>();
+        let run = |est_seed: u64, trace_seed: u64| {
+            let mut jobs = fresh();
+            materialize(
+                &mut jobs,
+                &EstimateModel::Noisy { factor_sigma: 0.7, seed: est_seed },
+                trace_seed,
+            );
+            jobs.iter().map(|j| j.est_factor).collect::<Vec<_>>()
+        };
+        assert_eq!(run(0, 1), run(0, 1));
+        assert_ne!(run(0, 1), run(1, 1), "estimator seed must shift the error stream");
+        assert_ne!(run(0, 1), run(0, 2), "trace seed must shift the error stream");
+        assert!(run(0, 1).iter().all(|&f| f > 0.0 && f.is_finite()));
+    }
+
+    #[test]
+    fn noisy_error_grows_with_sigma() {
+        let mean_abs_log = |sigma: f64| {
+            let mut jobs: Vec<JobSpec> = (0..2000).map(|i| spec(i, ModelKind::Ncf, 100)).collect();
+            materialize(&mut jobs, &EstimateModel::Noisy { factor_sigma: sigma, seed: 0 }, 9);
+            jobs.iter().map(|j| j.est_factor.ln().abs()).sum::<f64>() / jobs.len() as f64
+        };
+        let (a, b, c) = (mean_abs_log(0.25), mean_abs_log(0.5), mean_abs_log(1.0));
+        assert!(a < b && b < c, "error must grow with sigma: {a} {b} {c}");
+        // σ = 0 is the oracle, exactly.
+        assert_eq!(mean_abs_log(0.0), 0.0);
+    }
+
+    #[test]
+    fn percentile_predicts_from_same_model_history() {
+        // Three CIFAR jobs with known runtimes, then a fourth: its p50
+        // estimate must be the median of the first three true durations.
+        let mut jobs = vec![
+            spec(0, ModelKind::Cifar10, 1000),
+            spec(1, ModelKind::Cifar10, 3000),
+            spec(2, ModelKind::Cifar10, 2000),
+            spec(3, ModelKind::Cifar10, 500),
+        ];
+        let truths: Vec<f64> = jobs.iter().map(|j| j.solo_runtime(1)).collect();
+        materialize(&mut jobs, &EstimateModel::Percentile { pct: 50.0 }, 1);
+        assert_eq!(jobs[0].est_factor, 1.0, "cold start is the oracle");
+        // Job 3's history median is the 2000-iteration job's duration.
+        let expect = truths[2] / truths[3];
+        assert!((jobs[3].est_factor - expect).abs() < 1e-12, "{}", jobs[3].est_factor);
+    }
+
+    #[test]
+    fn percentile_falls_back_to_global_history() {
+        let mut jobs = vec![
+            spec(0, ModelKind::Cifar10, 1000),
+            spec(1, ModelKind::Bert, 500), // no BERT history: global fallback
+        ];
+        let truths: Vec<f64> = jobs.iter().map(|j| j.solo_runtime(1)).collect();
+        materialize(&mut jobs, &EstimateModel::Percentile { pct: 50.0 }, 1);
+        let expect = truths[0] / truths[1];
+        assert!((jobs[1].est_factor - expect).abs() < 1e-12);
+    }
+}

@@ -6,8 +6,9 @@
 //! scheduling: all `G_k` GPUs start together and are held until completion
 //! (non-preemptive policies) or until the policy explicitly preempts.
 
+pub mod estimate;
 pub mod trace;
-
+pub mod workload;
 
 use crate::perf::profiles::{ModelKind, WorkloadProfile};
 
@@ -29,6 +30,12 @@ pub struct JobSpec {
     pub batch: u32,
     /// Arrival time `a_k`, seconds from horizon start.
     pub arrival_s: f64,
+    /// Scheduler-visible duration estimate as a multiple of the true solo
+    /// runtime, materialized at trace time by a
+    /// [`estimate::EstimateModel`]. `1.0` is the oracle (the paper's
+    /// setting); policies rank on `truth × est_factor`, the engine always
+    /// completes jobs on the truth.
+    pub est_factor: f64,
 }
 
 impl JobSpec {
@@ -44,6 +51,13 @@ impl JobSpec {
     /// Total solo execution time `L_k = t_iter · I_k` at accumulation `s`.
     pub fn solo_runtime(&self, s: u32) -> f64 {
         self.iter_time(s) * self.iterations as f64
+    }
+
+    /// The solo iteration time the *scheduler believes in*:
+    /// `t_iter · est_factor`. Bit-identical to [`JobSpec::iter_time`]
+    /// under the oracle (`× 1.0` is IEEE-exact).
+    pub fn estimated_iter_time(&self, s: u32) -> f64 {
+        self.iter_time(s) * self.est_factor
     }
 
     /// Paper §VI job-size taxonomy: jobs requesting more than 4 GPUs are
@@ -100,9 +114,26 @@ impl JobRecord {
         }
     }
 
-    /// Expected remaining solo runtime `L_k` — the SJF priority key.
+    /// True remaining solo runtime `L_k` — the oracle SJF priority key
+    /// (what the pre-estimator policies ranked on; kept as the reference
+    /// the estimate caches are integrity-checked against).
     pub fn remaining_solo_runtime(&self) -> f64 {
         self.spec.iter_time(self.accum_step) * self.remaining_iters
+    }
+
+    /// Remaining iterations as the scheduler *estimates* them —
+    /// Algorithm 2's pair-JCT inputs under misprediction. Equal to the
+    /// truth bit-for-bit under the oracle.
+    pub fn estimated_remaining_iters(&self) -> f64 {
+        self.remaining_iters * self.spec.est_factor
+    }
+
+    /// Estimated remaining solo runtime — the SJF-family priority key
+    /// (`estimated_iter_time · remaining_iters`). Policies should prefer
+    /// the cached
+    /// [`SchedContext::estimated_remaining`](crate::sched_core::SchedContext::estimated_remaining).
+    pub fn estimated_remaining_runtime(&self) -> f64 {
+        self.spec.estimated_iter_time(self.accum_step) * self.remaining_iters
     }
 
     /// Job completion time `T_k - a_k` (requires finished).
@@ -128,6 +159,7 @@ mod tests {
             iterations: 1000,
             batch: 128,
             arrival_s: 10.0,
+            est_factor: 1.0,
         }
     }
 
@@ -153,6 +185,29 @@ mod tests {
         assert!(s.is_large());
         s.gpus = 5;
         assert!(s.is_large());
+    }
+
+    #[test]
+    fn oracle_estimates_are_bit_identical_to_truth() {
+        let mut r = JobRecord::new(spec());
+        r.remaining_iters = 437.5;
+        r.accum_step = 2;
+        assert_eq!(
+            r.estimated_remaining_runtime().to_bits(),
+            r.remaining_solo_runtime().to_bits()
+        );
+        assert_eq!(r.estimated_remaining_iters().to_bits(), r.remaining_iters.to_bits());
+    }
+
+    #[test]
+    fn est_factor_scales_the_estimate_not_the_truth() {
+        let mut s = spec();
+        s.est_factor = 2.0;
+        let r = JobRecord::new(s);
+        assert!((r.estimated_remaining_runtime() - 2.0 * r.remaining_solo_runtime()).abs() < 1e-9);
+        assert!((r.estimated_remaining_iters() - 2.0 * r.remaining_iters).abs() < 1e-9);
+        // The truth is untouched: the engine completes on real iterations.
+        assert_eq!(r.remaining_iters, 1000.0);
     }
 
     #[test]

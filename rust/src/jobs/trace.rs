@@ -1,5 +1,5 @@
-//! Workload traces (paper §VI-A): Philly-like synthetic generation plus
-//! JSON load/store.
+//! Workload traces (paper §VI-A): synthetic generation from named
+//! [`workload`] presets plus JSON load/store.
 //!
 //! The paper scales the Microsoft trace [Jeon et al.] to two settings we
 //! reproduce:
@@ -9,63 +9,96 @@
 //! * **simulation**: 240 jobs (and 480 / load-scaled variants) sampled from
 //!   the busiest period, annotated with the six Pollux task profiles.
 //!
+//! Since workload v2 the generator is preset-driven: a
+//! [`workload::WorkloadPreset`] composes the arrival process (Poisson /
+//! diurnal / bursty), the GPU-demand buckets and the iteration tail, and
+//! an [`estimate::EstimateModel`] materializes per-job duration-estimate
+//! factors after the trace body is drawn (from a separate RNG stream, so
+//! the estimator never perturbs the trace itself). The old constructors
+//! are thin preset calls: `TraceConfig::simulation` ≡ `philly-sim` with
+//! the oracle estimator, byte-identical to the pre-v2 generator.
+//!
 //! Generation is fully deterministic per seed (splitmix64).
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
+use super::estimate::{self, EstimateModel};
+use super::workload::{ArrivalProcess, ArrivalSampler, WorkloadPreset};
 use super::JobSpec;
 use crate::perf::profiles::{ModelKind, WorkloadProfile};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
-/// Parameters of the Philly-like generator.
+/// Parameters of the preset-driven generator.
 #[derive(Debug, Clone)]
 pub struct TraceConfig {
     pub n_jobs: usize,
     pub seed: u64,
-    /// Mean inter-arrival gap in seconds (Poisson arrivals ⇒ Exp gaps).
+    /// Mean inter-arrival gap in seconds at load factor 1.
     pub mean_interarrival_s: f64,
+    /// Arrival process shaping how that mean rate is spread over time.
+    pub arrival: ArrivalProcess,
     /// GPU-demand buckets `(gpus, weight)` — defaults mirror the Philly mix.
     pub gpu_buckets: Vec<(usize, f64)>,
     /// Iteration count range (heavy-tailed), paper: [100, 5000].
     pub iter_range: (u64, u64),
-    /// Load multiplier for the Fig. 6a sweep: scales arrival *frequency*.
+    /// σ of the log-normal iteration tail (1.2 = the Philly shape).
+    pub iter_sigma: f64,
+    /// Load multiplier for the Fig. 6a sweep. Scales arrival *frequency
+    /// only*: job bodies (model, gpus, iterations, batch, est_factor)
+    /// are untouched at any load — the same jobs arrive denser, pinned
+    /// for every preset by `load_factor_leaves_job_bodies_invariant`.
+    /// Under `Poisson` every inter-arrival gap shrinks by exactly
+    /// `1/load_factor`; under `Diurnal`/`Bursty` the *instantaneous
+    /// rate* scales while the diurnal period and burst phase durations
+    /// stay wall-clock (a denser trace crosses fewer cycles — arrival
+    /// machinery therefore runs on its own RNG stream, see
+    /// [`ArrivalSampler`]).
     pub load_factor: f64,
+    /// Duration-estimate model materialized into [`JobSpec::est_factor`]
+    /// after generation (the oracle leaves every factor at exactly 1.0).
+    pub estimator: EstimateModel,
 }
 
 impl TraceConfig {
-    /// 240-job simulation default (busiest-period density: ~2 arrivals/min).
-    pub fn simulation(n_jobs: usize, seed: u64) -> Self {
+    /// Build a trace config from a named workload preset with the oracle
+    /// estimator (override `estimator` / `load_factor` afterwards).
+    pub fn from_preset(preset: &WorkloadPreset, n_jobs: usize, seed: u64) -> Self {
         TraceConfig {
             n_jobs,
             seed,
-            mean_interarrival_s: 30.0,
-            gpu_buckets: vec![
-                (1, 0.30),
-                (2, 0.25),
-                (4, 0.19),
-                (8, 0.14),
-                (12, 0.06),
-                (16, 0.06),
-            ],
-            // Pollux-scale jobs: median ~5k iterations (tens of minutes),
-            // heavy tail to 50k — the busiest-period overload the paper
-            // simulates (Tables III/IV report JCTs of 1-7.5 *hours*).
-            iter_range: (500, 50_000),
+            mean_interarrival_s: preset.mean_interarrival_s,
+            arrival: preset.arrival.clone(),
+            gpu_buckets: preset.gpu_buckets.clone(),
+            iter_range: preset.iter_range,
+            iter_sigma: preset.iter_sigma,
             load_factor: 1.0,
+            estimator: EstimateModel::Oracle,
         }
     }
 
-    /// The 30-job physical workload (20 small ≤ 8 GPUs, 10 large 12/16).
-    pub fn physical(seed: u64) -> Self {
-        TraceConfig {
-            n_jobs: 30,
+    /// 240-job simulation default (busiest-period density: ~2 arrivals/min)
+    /// — a thin call to the `philly-sim` preset.
+    ///
+    /// Pollux-scale jobs: median ~5k iterations (tens of minutes), heavy
+    /// tail to 50k — the busiest-period overload the paper simulates
+    /// (Tables III/IV report JCTs of 1-7.5 *hours*).
+    pub fn simulation(n_jobs: usize, seed: u64) -> Self {
+        Self::from_preset(
+            &super::workload::by_name("philly-sim").expect("registry preset"),
+            n_jobs,
             seed,
-            mean_interarrival_s: 60.0,
-            gpu_buckets: vec![], // physical uses the explicit 20/10 split
-            iter_range: (100, 5000),
-            load_factor: 1.0,
-        }
+        )
+    }
+
+    /// The 30-job physical workload (20 small ≤ 8 GPUs, 10 large 12/16)
+    /// — a thin call to the `philly-physical` preset.
+    pub fn physical(seed: u64) -> Self {
+        Self::from_preset(
+            &super::workload::by_name("philly-physical").expect("registry preset"),
+            30,
+            seed,
+        )
     }
 }
 
@@ -73,19 +106,25 @@ impl TraceConfig {
 pub fn generate(cfg: &TraceConfig) -> Vec<JobSpec> {
     let mut rng = Rng::seed_from_u64(cfg.seed);
     let rate = cfg.load_factor / cfg.mean_interarrival_s.max(1e-9);
-    // Heavy-tailed iteration counts clipped to the paper's range: most jobs
-    // are short, a long tail runs to the cap (Philly's signature shape).
+    let mut arrivals = ArrivalSampler::new(cfg.arrival.clone(), cfg.seed);
+    // Heavy-tailed iteration counts clipped to the preset's range: most
+    // jobs are short, a long tail runs to the cap (Philly's signature
+    // shape).
     let (lo, hi) = cfg.iter_range;
     let mu = ((lo * 10) as f64).ln();
-    let sigma = 1.2;
+    let sigma = cfg.iter_sigma;
 
-    let mut t = 0.0f64;
     let mut jobs = Vec::with_capacity(cfg.n_jobs);
     for id in 0..cfg.n_jobs {
-        t += rng.exp(rate);
+        let t = arrivals.next_arrival(&mut rng, rate);
         let gpus = if cfg.gpu_buckets.is_empty() {
-            // physical split: ids 0..20 small, 20..30 large
-            if id < 20 {
+            // Physical split, scaled proportionally: the first 2/3 of
+            // jobs are small (≤ 8 GPUs), the rest large (12/16) — at the
+            // paper's 30 jobs that is exactly the documented 20/10 mix
+            // (ids 0..20 small, 20..30 large, byte-identical to the
+            // pre-preset generator); other sizes keep the 2:1 ratio
+            // instead of silently flooding the tail with large gangs.
+            if id < cfg.n_jobs * 2 / 3 {
                 *rng.choose(&[1usize, 2, 4, 8])
             } else {
                 *rng.choose(&[12usize, 16])
@@ -96,8 +135,19 @@ pub fn generate(cfg: &TraceConfig) -> Vec<JobSpec> {
         let model = *rng.choose(&ModelKind::ALL);
         let iterations = (rng.lognormal(mu, sigma) as u64).clamp(lo, hi);
         let batch = sample_batch(model, &mut rng);
-        jobs.push(JobSpec { id, model, gpus, iterations, batch, arrival_s: t });
+        jobs.push(JobSpec {
+            id,
+            model,
+            gpus,
+            iterations,
+            batch,
+            arrival_s: t,
+            est_factor: 1.0,
+        });
     }
+    // Estimates draw from their own salted stream (or none at all), so
+    // the trace body above is estimator-invariant.
+    estimate::materialize(&mut jobs, &cfg.estimator, cfg.seed);
     jobs
 }
 
@@ -138,11 +188,20 @@ fn spec_to_json(j: &JobSpec) -> Json {
     m.insert("iterations".into(), Json::Num(j.iterations as f64));
     m.insert("batch".into(), Json::Num(j.batch as f64));
     m.insert("arrival_s".into(), Json::Num(j.arrival_s));
+    // Oracle traces serialize exactly as before workload v2; only a
+    // materialized estimate error adds the field.
+    if j.est_factor != 1.0 {
+        m.insert("est_factor".into(), Json::Num(j.est_factor));
+    }
     Json::Obj(m)
 }
 
 fn spec_from_json(j: &Json) -> Result<JobSpec> {
     let name = j.req("model")?.as_str().context("model must be a string")?;
+    let est_factor = match j.get("est_factor") {
+        None | Some(Json::Null) => 1.0,
+        Some(v) => v.as_f64().context("est_factor")?,
+    };
     Ok(JobSpec {
         id: j.req("id")?.as_usize().context("id")?,
         model: ModelKind::from_name(name)
@@ -151,6 +210,7 @@ fn spec_from_json(j: &Json) -> Result<JobSpec> {
         iterations: j.req("iterations")?.as_f64().context("iterations")? as u64,
         batch: j.req("batch")?.as_f64().context("batch")? as u32,
         arrival_s: j.req("arrival_s")?.as_f64().context("arrival_s")?,
+        est_factor,
     })
 }
 
@@ -160,15 +220,55 @@ pub fn save(jobs: &[JobSpec], path: &std::path::Path) -> Result<()> {
     std::fs::write(path, doc.to_string()).context("writing trace")
 }
 
-/// Load a trace from JSON.
+/// Load a trace from JSON, rejecting traces the simulator would silently
+/// mis-handle: arrivals must be monotone non-decreasing in file order,
+/// and every job needs at least one iteration, one GPU, a positive batch
+/// and a positive finite estimate factor. Errors name the offending job.
 pub fn load(path: &std::path::Path) -> Result<Vec<JobSpec>> {
     let text = std::fs::read_to_string(path).context("reading trace")?;
     let doc = Json::parse(&text)?;
-    doc.as_arr()
+    let jobs: Vec<JobSpec> = doc
+        .as_arr()
         .context("trace must be a JSON array")?
         .iter()
         .map(spec_from_json)
-        .collect()
+        .collect::<Result<_>>()?;
+    let mut prev: Option<&JobSpec> = None;
+    for j in &jobs {
+        if j.iterations == 0 {
+            bail!("job {}: zero iterations (the job would never finish)", j.id);
+        }
+        if j.gpus == 0 {
+            bail!("job {}: zero GPU demand (an empty gang is unschedulable)", j.id);
+        }
+        if j.batch == 0 {
+            bail!("job {}: zero batch size", j.id);
+        }
+        if !j.arrival_s.is_finite() || j.arrival_s < 0.0 {
+            bail!("job {}: arrival {} must be finite and >= 0", j.id, j.arrival_s);
+        }
+        if !j.est_factor.is_finite() || j.est_factor <= 0.0 {
+            bail!(
+                "job {}: est_factor {} must be finite and > 0",
+                j.id,
+                j.est_factor
+            );
+        }
+        if let Some(p) = prev {
+            if j.arrival_s < p.arrival_s {
+                bail!(
+                    "job {} arrives at {} before its predecessor job {} at {} — \
+                     traces must be sorted by arrival",
+                    j.id,
+                    j.arrival_s,
+                    p.id,
+                    p.arrival_s
+                );
+            }
+        }
+        prev = Some(j);
+    }
+    Ok(jobs)
 }
 
 #[cfg(test)]
@@ -179,13 +279,14 @@ mod tests {
         jobs.iter()
             .map(|j| {
                 format!(
-                    "{}:{}:{}:{}:{}:{:.3}",
+                    "{}:{}:{}:{}:{}:{:.3}:{}",
                     j.id,
                     j.model.name(),
                     j.gpus,
                     j.iterations,
                     j.batch,
-                    j.arrival_s
+                    j.arrival_s,
+                    j.est_factor
                 )
             })
             .collect::<Vec<_>>()
@@ -215,6 +316,7 @@ mod tests {
             prev = j.arrival_s;
             assert!((500..=50_000).contains(&j.iterations));
             assert!(j.gpus >= 1 && j.gpus <= 16);
+            assert_eq!(j.est_factor, 1.0, "default estimator is the oracle");
         }
     }
 
@@ -225,6 +327,57 @@ mod tests {
         let large = jobs.iter().filter(|j| j.gpus >= 12).count();
         assert_eq!(large, 10, "paper: 10 jobs at 12 or 16 GPUs");
         assert!(jobs.iter().take(20).all(|j| j.gpus <= 8));
+    }
+
+    #[test]
+    fn physical_split_scales_proportionally_with_job_count() {
+        // The 20/10 paper mix generalizes as a 2:1 small:large ratio, so
+        // `--workload philly-physical --jobs 240` keeps the documented
+        // shape instead of flooding the tail with 12/16-GPU gangs.
+        let cfg = TraceConfig::from_preset(
+            &crate::jobs::workload::by_name("philly-physical").unwrap(),
+            60,
+            7,
+        );
+        let jobs = generate(&cfg);
+        let large = jobs.iter().filter(|j| j.gpus >= 12).count();
+        assert_eq!(large, 20, "2:1 ratio at 60 jobs = 40 small / 20 large");
+        assert!(jobs.iter().take(40).all(|j| j.gpus <= 8));
+    }
+
+    #[test]
+    fn preset_constructors_are_thin_preset_calls() {
+        let via_ctor = generate(&TraceConfig::simulation(40, 5));
+        let via_preset = generate(&TraceConfig::from_preset(
+            &crate::jobs::workload::by_name("philly-sim").unwrap(),
+            40,
+            5,
+        ));
+        assert_eq!(fingerprint(&via_ctor), fingerprint(&via_preset));
+        let phys_ctor = generate(&TraceConfig::physical(5));
+        let phys_preset = generate(&TraceConfig::from_preset(
+            &crate::jobs::workload::by_name("philly-physical").unwrap(),
+            30,
+            5,
+        ));
+        assert_eq!(fingerprint(&phys_ctor), fingerprint(&phys_preset));
+    }
+
+    #[test]
+    fn every_preset_generates_runnable_traces() {
+        for name in crate::jobs::workload::PRESET_NAMES {
+            let preset = crate::jobs::workload::by_name(name).unwrap();
+            let cfg = TraceConfig::from_preset(&preset, 60, 3);
+            let jobs = generate(&cfg);
+            assert_eq!(jobs.len(), 60, "{name}");
+            let mut prev = 0.0;
+            for j in &jobs {
+                assert!(j.arrival_s >= prev, "{name}: arrivals must be monotone");
+                prev = j.arrival_s;
+                assert!(j.iterations >= 1 && j.gpus >= 1 && j.batch >= 1, "{name}");
+                assert!(j.gpus <= preset.max_gang(), "{name}");
+            }
+        }
     }
 
     #[test]
@@ -256,17 +409,53 @@ mod tests {
         // rounding.
         let ratio = spans[0] / spans[2];
         assert!((ratio - 4.0).abs() < 1e-9, "span must scale as 1/load, got {ratio}");
-        // Only arrival times move: the rest of the trace is load-invariant.
-        let mut dense = TraceConfig::simulation(64, 17);
-        dense.load_factor = 4.0;
-        let a = generate(&TraceConfig::simulation(64, 17));
-        let b = generate(&dense);
-        for (x, y) in a.iter().zip(&b) {
-            assert_eq!(x.model, y.model);
-            assert_eq!(x.gpus, y.gpus);
-            assert_eq!(x.iterations, y.iterations);
-            assert_eq!(x.batch, y.batch);
+    }
+
+    #[test]
+    fn load_factor_leaves_job_bodies_invariant() {
+        // The satellite pin: `load_factor` scales arrival *frequency*
+        // only. Job bodies — model, gpus, iterations, batch, est_factor
+        // — must be identical at any load, for every preset (the sampler
+        // may consume extra draws for thinning/phases, but the same
+        // draws at every load).
+        for name in crate::jobs::workload::PRESET_NAMES {
+            let preset = crate::jobs::workload::by_name(name).unwrap();
+            let mut base = TraceConfig::from_preset(&preset, 48, 17);
+            base.estimator = EstimateModel::Noisy { factor_sigma: 0.5, seed: 0 };
+            let mut dense = base.clone();
+            dense.load_factor = 4.0;
+            let a = generate(&base);
+            let b = generate(&dense);
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.model, y.model, "{name}");
+                assert_eq!(x.gpus, y.gpus, "{name}");
+                assert_eq!(x.iterations, y.iterations, "{name}");
+                assert_eq!(x.batch, y.batch, "{name}");
+                assert_eq!(
+                    x.est_factor.to_bits(),
+                    y.est_factor.to_bits(),
+                    "{name}: estimates must be load-invariant"
+                );
+            }
         }
+    }
+
+    #[test]
+    fn estimator_leaves_trace_body_invariant() {
+        // Materializing estimates must not perturb arrivals or bodies:
+        // the noisy stream is salted away from the generator's.
+        let mut cfg = TraceConfig::simulation(50, 9);
+        let oracle = generate(&cfg);
+        cfg.estimator = EstimateModel::Noisy { factor_sigma: 1.0, seed: 3 };
+        let noisy = generate(&cfg);
+        for (a, b) in oracle.iter().zip(&noisy) {
+            assert_eq!(a.arrival_s.to_bits(), b.arrival_s.to_bits());
+            assert_eq!(a.model, b.model);
+            assert_eq!(a.gpus, b.gpus);
+            assert_eq!(a.iterations, b.iterations);
+            assert_eq!(a.batch, b.batch);
+        }
+        assert!(noisy.iter().any(|j| j.est_factor != 1.0));
     }
 
     #[test]
@@ -279,5 +468,63 @@ mod tests {
         let back = load(&path).unwrap();
         assert_eq!(fingerprint(&jobs), fingerprint(&back));
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_estimates() {
+        let dir = std::env::temp_dir().join(format!("wise-share-est-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.json");
+        let mut cfg = TraceConfig::simulation(20, 9);
+        cfg.estimator = EstimateModel::Noisy { factor_sigma: 0.8, seed: 1 };
+        let jobs = generate(&cfg);
+        save(&jobs, &path).unwrap();
+        let back = load(&path).unwrap();
+        for (a, b) in jobs.iter().zip(&back) {
+            assert_eq!(a.est_factor.to_bits(), b.est_factor.to_bits());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    fn write_trace(doc: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "wise-share-load-test-{}-{}",
+            std::process::id(),
+            doc.len()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.json");
+        std::fs::write(&path, doc).unwrap();
+        path
+    }
+
+    #[test]
+    fn load_rejects_malformed_traces_with_named_job() {
+        let job = |id: usize, iters: u64, gpus: usize, arrival: f64| {
+            format!(
+                r#"{{"id": {id}, "model": "CIFAR10", "gpus": {gpus},
+                    "iterations": {iters}, "batch": 32, "arrival_s": {arrival}}}"#
+            )
+        };
+        // Non-monotone arrivals: the error must name both jobs.
+        let p = write_trace(&format!("[{}, {}]", job(0, 100, 1, 50.0), job(1, 100, 1, 10.0)));
+        let err = load(&p).unwrap_err().to_string();
+        assert!(err.contains("job 1") && err.contains("job 0"), "{err}");
+        assert!(err.contains("sorted by arrival"), "{err}");
+        // Zero iterations.
+        let p = write_trace(&format!("[{}]", job(3, 0, 1, 0.0)));
+        let err = load(&p).unwrap_err().to_string();
+        assert!(err.contains("job 3") && err.contains("zero iterations"), "{err}");
+        // Zero GPU demand.
+        let p = write_trace(&format!("[{}]", job(4, 100, 0, 0.0)));
+        let err = load(&p).unwrap_err().to_string();
+        assert!(err.contains("job 4") && err.contains("zero GPU demand"), "{err}");
+        // Degenerate estimate factor.
+        let p = write_trace(
+            r#"[{"id": 5, "model": "CIFAR10", "gpus": 1, "iterations": 10,
+                 "batch": 32, "arrival_s": 0.0, "est_factor": 0.0}]"#,
+        );
+        let err = load(&p).unwrap_err().to_string();
+        assert!(err.contains("job 5") && err.contains("est_factor"), "{err}");
     }
 }

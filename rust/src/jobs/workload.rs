@@ -1,0 +1,457 @@
+//! Workload v2: pluggable arrival processes and named job-mix presets.
+//!
+//! The paper evaluates SJF-BSBF on one Philly-scaled Poisson trace, but
+//! real multi-tenant clusters exhibit diurnal and bursty arrival patterns
+//! (Jeon et al., "Analysis of Large-Scale Multi-Tenant GPU Clusters"; Hu
+//! et al., "Characterization and Prediction of Deep Learning Workloads").
+//! This module factors the arrival process out of the generator:
+//!
+//! * [`ArrivalProcess`] — how inter-arrival gaps are drawn: `Poisson`
+//!   (homogeneous, the paper's setting), `Diurnal` (sinusoid-modulated
+//!   rate, sampled by Lewis thinning) or `Bursty` (on/off MMPP: the rate
+//!   switches between a hot and a cold level at exponentially distributed
+//!   phase changes).
+//! * [`ArrivalSampler`] — the stateful sampler driving one trace. The
+//!   `Poisson` arm consumes exactly one exponential draw per arrival
+//!   from the caller's [`Rng`] stream — byte-identical to the pre-v2
+//!   generator; the inhomogeneous arms run on their own salted stream
+//!   (their draw count varies with the load factor, and leaking that
+//!   into the shared stream would make job bodies load-dependent).
+//! * [`WorkloadPreset`] — a named composition of arrival process ×
+//!   GPU-demand buckets × iteration tail ([`PRESET_NAMES`]). The
+//!   `philly-sim` / `philly-physical` presets reproduce the old
+//!   `TraceConfig::simulation` / `::physical` shapes exactly.
+
+use anyhow::{bail, Result};
+
+use crate::util::rng::Rng;
+
+/// How inter-arrival gaps are drawn. All variants share the same *mean*
+/// rate knob (the trace's `load_factor / mean_interarrival_s`); the
+/// process shapes how that rate is spread over time.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalProcess {
+    /// Homogeneous Poisson arrivals (exponential gaps) — today's paper
+    /// setting. Exactly one RNG draw per arrival.
+    Poisson,
+    /// Inhomogeneous Poisson with rate `λ(t) = λ·(1 + a·sin(2πt/T))`,
+    /// sampled by Lewis thinning against the peak rate `λ·(1 + a)`. The
+    /// long-run mean rate is exactly `λ` (the sinusoid integrates to 0).
+    Diurnal { period_s: f64, amplitude: f64 },
+    /// On/off Markov-modulated Poisson process: the rate alternates
+    /// between `λ·on_factor` (hot) and `λ·off_factor` (cold) phases with
+    /// exponentially distributed durations. Long-run mean rate is
+    /// `λ·(mean_on_s·on_factor + mean_off_s·off_factor) /
+    /// (mean_on_s + mean_off_s)`.
+    Bursty { mean_on_s: f64, mean_off_s: f64, on_factor: f64, off_factor: f64 },
+}
+
+impl ArrivalProcess {
+    /// Reject degenerate parameterizations up front (a zero-rate process
+    /// would stall the sampler; an amplitude ≥ 1 makes the thinning rate
+    /// negative).
+    pub fn validate(&self) -> Result<()> {
+        match *self {
+            ArrivalProcess::Poisson => Ok(()),
+            ArrivalProcess::Diurnal { period_s, amplitude } => {
+                if period_s <= 0.0 || !period_s.is_finite() {
+                    bail!("diurnal period {period_s} must be finite and > 0");
+                }
+                if !(0.0..1.0).contains(&amplitude) {
+                    bail!("diurnal amplitude {amplitude} must be in [0, 1)");
+                }
+                Ok(())
+            }
+            ArrivalProcess::Bursty { mean_on_s, mean_off_s, on_factor, off_factor } => {
+                for (name, v) in [("mean_on_s", mean_on_s), ("mean_off_s", mean_off_s)] {
+                    if v <= 0.0 || !v.is_finite() {
+                        bail!("bursty {name} {v} must be finite and > 0");
+                    }
+                }
+                for (name, v) in [("on_factor", on_factor), ("off_factor", off_factor)] {
+                    if v < 0.0 || !v.is_finite() {
+                        bail!("bursty {name} {v} must be finite and >= 0");
+                    }
+                }
+                if on_factor == 0.0 && off_factor == 0.0 {
+                    bail!("bursty process with both factors 0 never produces arrivals");
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Long-run mean arrival rate as a multiple of the base rate λ
+    /// (1.0 for `Poisson` and `Diurnal`; the phase-weighted factor mean
+    /// for `Bursty`). The statistical property tests pin the empirical
+    /// mean inter-arrival gap against `1 / (λ · mean_rate_factor())`.
+    pub fn mean_rate_factor(&self) -> f64 {
+        match *self {
+            ArrivalProcess::Poisson | ArrivalProcess::Diurnal { .. } => 1.0,
+            ArrivalProcess::Bursty { mean_on_s, mean_off_s, on_factor, off_factor } => {
+                (mean_on_s * on_factor + mean_off_s * off_factor)
+                    / (mean_on_s + mean_off_s)
+            }
+        }
+    }
+}
+
+/// Stream-splitting constant for the inhomogeneous arrival machinery:
+/// thinning rejections and phase flips consume a *variable* number of
+/// draws, so they run on their own salted stream — the caller's stream
+/// then sees a fixed draw pattern per job and trace bodies stay
+/// invariant under `load_factor` for every process.
+const ARRIVAL_STREAM_SALT: u64 = 0xA221_7A15_5EED_5000;
+
+/// Stateful arrival-time sampler for one trace. Returns *absolute*
+/// arrival times, strictly advancing from 0. Deterministic per seed; the
+/// bursty phase machine and the diurnal thinning loop keep all their
+/// state here, so the sampler is the single owner of "where we are on
+/// the arrival timeline".
+///
+/// RNG discipline: the `Poisson` arm draws exactly one exponential from
+/// the *caller's* stream per arrival — byte-identical to the pre-v2
+/// generator. `Diurnal`/`Bursty` draw a load-dependent number of values
+/// (thinning rejections, phase boundaries), so they use the sampler's
+/// own salted stream instead; the caller's stream never observes them.
+#[derive(Debug, Clone)]
+pub struct ArrivalSampler {
+    process: ArrivalProcess,
+    t: f64,
+    /// Bursty phase state: currently in the hot phase? (initialized on
+    /// the first draw so construction stays RNG-free).
+    on: bool,
+    phase_end: Option<f64>,
+    /// Dedicated salted stream for the inhomogeneous arms; `None` for
+    /// `Poisson`, which stays on the caller's stream (byte parity).
+    own_rng: Option<Rng>,
+}
+
+impl ArrivalSampler {
+    /// Build a sampler for one trace. `seed` should be the trace seed;
+    /// it feeds the salted private stream of the inhomogeneous arms.
+    ///
+    /// Panics on a degenerate process (zero-rate bursty, amplitude ≥ 1)
+    /// — `generate` is an infallible API, and spinning forever would be
+    /// the alternative; the campaign/CLI layers reject such configs with
+    /// proper errors before ever getting here.
+    pub fn new(process: ArrivalProcess, seed: u64) -> Self {
+        process.validate().expect("invalid arrival process");
+        let own_rng = match process {
+            ArrivalProcess::Poisson => None,
+            _ => Some(Rng::seed_from_u64(seed ^ ARRIVAL_STREAM_SALT)),
+        };
+        ArrivalSampler { process, t: 0.0, on: true, phase_end: None, own_rng }
+    }
+
+    /// Draw the next arrival time at base rate `rate` (arrivals/second —
+    /// already includes the trace's load factor). `rng` is the caller's
+    /// stream; only the `Poisson` arm consumes from it.
+    ///
+    /// Panics on a non-positive rate — the Poisson arm would panic in
+    /// `Rng::exp` anyway (the pre-v2 behavior), and the bursty arm would
+    /// otherwise flip phases forever without producing an arrival.
+    pub fn next_arrival(&mut self, rng: &mut Rng, rate: f64) -> f64 {
+        assert!(rate > 0.0, "arrival rate must be > 0, got {rate}");
+        match self.process {
+            ArrivalProcess::Poisson => {
+                self.t += rng.exp(rate);
+                self.t
+            }
+            ArrivalProcess::Diurnal { period_s, amplitude } => {
+                let rng = self.own_rng.as_mut().expect("diurnal sampler owns a stream");
+                // Lewis thinning against the peak rate: candidate gaps at
+                // λ_max, accepted with probability λ(t)/λ_max.
+                let rate_max = rate * (1.0 + amplitude);
+                loop {
+                    self.t += rng.exp(rate_max);
+                    let phase = self.t / period_s * std::f64::consts::TAU;
+                    let rate_t = rate * (1.0 + amplitude * phase.sin());
+                    if rng.f64() * rate_max <= rate_t {
+                        return self.t;
+                    }
+                }
+            }
+            ArrivalProcess::Bursty { mean_on_s, mean_off_s, on_factor, off_factor } => {
+                let rng = self.own_rng.as_mut().expect("bursty sampler owns a stream");
+                let mut phase_end = match self.phase_end {
+                    Some(end) => end,
+                    None => self.t + rng.exp(1.0 / mean_on_s),
+                };
+                loop {
+                    let rate_now = rate * if self.on { on_factor } else { off_factor };
+                    if rate_now > 0.0 {
+                        let dt = rng.exp(rate_now);
+                        if self.t + dt <= phase_end {
+                            self.t += dt;
+                            self.phase_end = Some(phase_end);
+                            return self.t;
+                        }
+                    }
+                    // No arrival before the phase flips; jump to the
+                    // boundary (valid by memorylessness) and re-draw in
+                    // the next phase.
+                    self.t = phase_end;
+                    self.on = !self.on;
+                    let mean = if self.on { mean_on_s } else { mean_off_s };
+                    phase_end = self.t + rng.exp(1.0 / mean);
+                }
+            }
+        }
+    }
+}
+
+/// A named workload shape: arrival process × GPU-demand buckets ×
+/// iteration tail. [`crate::jobs::trace::TraceConfig::from_preset`]
+/// turns one into a runnable trace config.
+#[derive(Debug, Clone)]
+pub struct WorkloadPreset {
+    pub name: &'static str,
+    pub arrival: ArrivalProcess,
+    /// Mean inter-arrival gap at load factor 1, seconds.
+    pub mean_interarrival_s: f64,
+    /// GPU-demand buckets `(gpus, weight)`; empty ⇒ the physical 2:1
+    /// small:large split (exactly the paper's 20/10 mix at 30 jobs).
+    pub gpu_buckets: Vec<(usize, f64)>,
+    /// Iteration-count clip range of the log-normal tail.
+    pub iter_range: (u64, u64),
+    /// σ of the underlying normal of the iteration tail (the μ is tied
+    /// to the range floor, see `trace::generate`).
+    pub iter_sigma: f64,
+}
+
+impl WorkloadPreset {
+    /// Largest gang the preset's demand mix can request — what a cluster
+    /// must be able to host for every generated trace to be runnable.
+    pub fn max_gang(&self) -> usize {
+        self.gpu_buckets.iter().map(|b| b.0).max().unwrap_or(16)
+    }
+}
+
+/// Preset names, CLI/campaign-facing, in registry order.
+pub const PRESET_NAMES: [&str; 4] =
+    ["philly-sim", "philly-physical", "helios-heavy-tail", "small-job-flood"];
+
+/// Look up a workload preset by name.
+///
+/// * `philly-sim` — the paper's 240-job simulation shape: Poisson
+///   arrivals every 30 s, the Philly GPU mix, iterations 500–50k
+///   (σ = 1.2). Byte-identical to the pre-v2 `TraceConfig::simulation`.
+/// * `philly-physical` — the 30-job testbed shape: Poisson every 60 s,
+///   the 20-small/10-large split (a 2:1 ratio at other job counts),
+///   iterations 100–5000.
+/// * `helios-heavy-tail` — Helios-style datacenter: diurnal arrivals
+///   (24 h period, 0.8 amplitude), demand skewed to single-node jobs
+///   with a fatter iteration tail (σ = 1.8, cap 200k).
+/// * `small-job-flood` — bursty hyperparameter-sweep traffic: on/off
+///   MMPP (hot 30 min at 2.5×, cold 60 min at 0.25×, mean rate exactly
+///   1×), 1–4 GPU jobs only, short iterations.
+pub fn by_name(name: &str) -> Option<WorkloadPreset> {
+    Some(match name {
+        "philly-sim" => WorkloadPreset {
+            name: "philly-sim",
+            arrival: ArrivalProcess::Poisson,
+            mean_interarrival_s: 30.0,
+            gpu_buckets: vec![
+                (1, 0.30),
+                (2, 0.25),
+                (4, 0.19),
+                (8, 0.14),
+                (12, 0.06),
+                (16, 0.06),
+            ],
+            iter_range: (500, 50_000),
+            iter_sigma: 1.2,
+        },
+        "philly-physical" => WorkloadPreset {
+            name: "philly-physical",
+            arrival: ArrivalProcess::Poisson,
+            mean_interarrival_s: 60.0,
+            gpu_buckets: Vec::new(), // explicit 20/10 split in the generator
+            iter_range: (100, 5000),
+            iter_sigma: 1.2,
+        },
+        "helios-heavy-tail" => WorkloadPreset {
+            name: "helios-heavy-tail",
+            arrival: ArrivalProcess::Diurnal { period_s: 86_400.0, amplitude: 0.8 },
+            mean_interarrival_s: 30.0,
+            gpu_buckets: vec![
+                (1, 0.45),
+                (2, 0.20),
+                (4, 0.15),
+                (8, 0.10),
+                (12, 0.05),
+                (16, 0.05),
+            ],
+            iter_range: (500, 200_000),
+            iter_sigma: 1.8,
+        },
+        "small-job-flood" => WorkloadPreset {
+            name: "small-job-flood",
+            arrival: ArrivalProcess::Bursty {
+                mean_on_s: 1800.0,
+                mean_off_s: 3600.0,
+                on_factor: 2.5,
+                off_factor: 0.25,
+            },
+            mean_interarrival_s: 8.0,
+            gpu_buckets: vec![(1, 0.60), (2, 0.30), (4, 0.10)],
+            iter_range: (100, 5_000),
+            iter_sigma: 0.9,
+        },
+        _ => return None,
+    })
+}
+
+/// [`by_name`] with the unified unknown-preset error (same discipline as
+/// `topology::by_name_or_err`): every CLI/campaign/test site reports the
+/// same message with the known names listed.
+pub fn by_name_or_err(name: &str) -> Result<WorkloadPreset> {
+    by_name(name).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown workload preset {name:?} (known: {})",
+            PRESET_NAMES.join(", ")
+        )
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_preset_name_resolves_and_validates() {
+        for name in PRESET_NAMES {
+            let p = by_name(name).unwrap_or_else(|| panic!("missing preset {name}"));
+            assert_eq!(p.name, name);
+            p.arrival.validate().unwrap();
+            assert!(p.mean_interarrival_s > 0.0);
+            assert!(p.iter_range.0 >= 1 && p.iter_range.1 > p.iter_range.0);
+            assert!(p.iter_sigma > 0.0);
+        }
+        assert!(by_name("bogus").is_none());
+        let err = by_name_or_err("bogus").unwrap_err().to_string();
+        assert!(err.contains("unknown workload preset"), "{err}");
+        assert!(err.contains("philly-sim"), "{err}");
+    }
+
+    #[test]
+    fn small_job_flood_mean_rate_factor_is_one() {
+        // Hot/cold factors are weighted to a mean of exactly 1× so the
+        // preset's nominal mean inter-arrival gap is honest.
+        let p = by_name("small-job-flood").unwrap();
+        assert!((p.arrival.mean_rate_factor() - 1.0).abs() < 1e-12);
+        assert_eq!(p.max_gang(), 4);
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_processes() {
+        assert!(ArrivalProcess::Diurnal { period_s: 0.0, amplitude: 0.5 }
+            .validate()
+            .is_err());
+        assert!(ArrivalProcess::Diurnal { period_s: 100.0, amplitude: 1.0 }
+            .validate()
+            .is_err());
+        assert!(ArrivalProcess::Bursty {
+            mean_on_s: 10.0,
+            mean_off_s: 10.0,
+            on_factor: 0.0,
+            off_factor: 0.0
+        }
+        .validate()
+        .is_err());
+        assert!(ArrivalProcess::Bursty {
+            mean_on_s: -1.0,
+            mean_off_s: 10.0,
+            on_factor: 1.0,
+            off_factor: 0.0
+        }
+        .validate()
+        .is_err());
+        assert!(ArrivalProcess::Poisson.validate().is_ok());
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid arrival process")]
+    fn sampler_rejects_degenerate_process_instead_of_spinning() {
+        // generate() is infallible, so a zero-rate bursty config must
+        // panic with the validation message at sampler construction —
+        // the alternative is an infinite phase-flip loop.
+        let _ = ArrivalSampler::new(
+            ArrivalProcess::Bursty {
+                mean_on_s: 10.0,
+                mean_off_s: 10.0,
+                on_factor: 0.0,
+                off_factor: 0.0,
+            },
+            1,
+        );
+    }
+
+    #[test]
+    fn inhomogeneous_sampler_leaves_caller_stream_untouched() {
+        // Diurnal/bursty arms draw a load-dependent number of values, so
+        // they must run on their own salted stream: the caller's stream
+        // position after n arrivals is identical to never sampling at
+        // all — which is what keeps trace bodies load-invariant.
+        for process in [
+            ArrivalProcess::Diurnal { period_s: 1000.0, amplitude: 0.8 },
+            ArrivalProcess::Bursty {
+                mean_on_s: 50.0,
+                mean_off_s: 200.0,
+                on_factor: 4.0,
+                off_factor: 0.25,
+            },
+        ] {
+            let mut rng = Rng::seed_from_u64(9);
+            let mut s = ArrivalSampler::new(process, 9);
+            for _ in 0..50 {
+                s.next_arrival(&mut rng, 0.1);
+            }
+            let mut untouched = Rng::seed_from_u64(9);
+            assert_eq!(rng.next_u64(), untouched.next_u64());
+        }
+    }
+
+    #[test]
+    fn poisson_sampler_consumes_one_draw_per_arrival() {
+        // The byte-parity contract: the Poisson arm must reproduce the
+        // pre-v2 generator's single `rng.exp(rate)` per arrival exactly.
+        let mut rng_a = Rng::seed_from_u64(42);
+        let mut rng_b = Rng::seed_from_u64(42);
+        let mut sampler = ArrivalSampler::new(ArrivalProcess::Poisson, 42);
+        let mut t = 0.0;
+        for _ in 0..100 {
+            t += rng_b.exp(1.0 / 30.0);
+            let got = sampler.next_arrival(&mut rng_a, 1.0 / 30.0);
+            assert_eq!(got.to_bits(), t.to_bits());
+        }
+    }
+
+    #[test]
+    fn samplers_are_deterministic_and_strictly_increasing() {
+        for process in [
+            ArrivalProcess::Poisson,
+            ArrivalProcess::Diurnal { period_s: 1000.0, amplitude: 0.8 },
+            ArrivalProcess::Bursty {
+                mean_on_s: 50.0,
+                mean_off_s: 200.0,
+                on_factor: 4.0,
+                off_factor: 0.25,
+            },
+        ] {
+            let sample = |seed: u64| {
+                let mut rng = Rng::seed_from_u64(seed);
+                let mut s = ArrivalSampler::new(process.clone(), seed);
+                (0..200).map(|_| s.next_arrival(&mut rng, 0.1)).collect::<Vec<f64>>()
+            };
+            let a = sample(7);
+            let b = sample(7);
+            assert_eq!(a, b, "{process:?} must be deterministic per seed");
+            assert_ne!(a, sample(8), "{process:?} must vary across seeds");
+            for w in a.windows(2) {
+                assert!(w[1] > w[0], "{process:?} arrivals must strictly increase");
+            }
+        }
+    }
+}

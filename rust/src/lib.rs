@@ -12,7 +12,9 @@
 //! * **L3 (this crate)** — cluster substrate, the shared event-driven
 //!   scheduling core ([`sched_core`]: typed events, cached scheduling
 //!   context, validated transaction layer), discrete-event simulator, six
-//!   scheduling policies, Philly-like trace generation, metrics/reporting,
+//!   scheduling policies, preset-driven workload generation (pluggable
+//!   arrival processes + duration estimators, [`jobs::workload`] /
+//!   [`jobs::estimate`]), metrics/reporting,
 //!   a declarative parallel scenario-sweep engine ([`campaign`]), and a
 //!   physical-mode coordinator that *actually executes* every job's
 //!   training iterations via AOT-compiled XLA programs through PJRT

@@ -22,7 +22,9 @@ use anyhow::{bail, Context, Result};
 use wise_share::campaign::{self, CampaignSpec};
 use wise_share::cluster::{topology, Cluster, ClusterConfig};
 use wise_share::coordinator::{run_physical, write_loss_csv, PhysicalConfig};
+use wise_share::jobs::estimate::{self, EstimateModel};
 use wise_share::jobs::trace::{self, TraceConfig};
+use wise_share::jobs::workload;
 use wise_share::perf::fit::{fit_comp, Sample};
 use wise_share::perf::interference::InterferenceModel;
 use wise_share::perf::profiles::{ModelKind, WorkloadProfile};
@@ -36,6 +38,7 @@ wise-share — SJF-BSBF scheduling reproduction
 USAGE:
   wise-share simulate  [--policy NAME|all] [--jobs N] [--seed S] [--trace F]
                        [--cluster physical|simulation | --topology SHAPE]
+                       [--workload PRESET] [--estimator SPEC]
                        [--xi X] [--load L]
   wise-share campaign  (--spec FILE | --preset paper) [--threads N]
                        [--csv F]
@@ -43,11 +46,19 @@ USAGE:
                        [--iter-scale F] [--compress F] [--loss-csv F]
                        [--artifacts DIR]
   wise-share trace-gen --out F [--jobs N] [--seed S] [--preset physical|simulation]
+                       [--workload PRESET] [--estimator SPEC]
   wise-share fit       [--model NAME]
 
 Topology SHAPEs (named cluster shapes, also usable on the campaign
 `topologies` axis): uniform-4x4, uniform-16x4, uniform-16x4-nvlink,
 hetero-16x4-2tier.
+
+Workload PRESETs (arrival process x job mix x iteration tail, also usable
+on the campaign `workloads` axis): philly-sim, philly-physical,
+helios-heavy-tail, small-job-flood.
+
+Estimator SPECs (scheduler-visible duration estimates, also usable on the
+campaign `estimators` axis): oracle | noisy:SIGMA[:SEED] | percentile:PCT.
 ";
 
 /// Tiny `--key value` flag parser.
@@ -139,10 +150,26 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let jobs: usize = args.parse_or("jobs", 240)?;
     let seed: u64 = args.parse_or("seed", 1)?;
     let load: f64 = args.parse_or("load", 1.0)?;
+    if load <= 0.0 || !load.is_finite() {
+        bail!("--load {load} must be finite and > 0");
+    }
     let jobs_list = match args.get("trace") {
-        Some(p) => trace::load(std::path::Path::new(p)).context("loading trace")?,
+        Some(p) => {
+            if args.get("workload").is_some() {
+                bail!("--trace and --workload are mutually exclusive");
+            }
+            let mut loaded = trace::load(std::path::Path::new(p)).context("loading trace")?;
+            // Only an explicit --estimator overrides whatever factors the
+            // trace file carries.
+            if let Some(spec) = args.get("estimator") {
+                estimate::materialize(&mut loaded, &EstimateModel::parse(spec)?, seed);
+            }
+            loaded
+        }
         None => {
-            let mut cfg = TraceConfig::simulation(jobs, seed);
+            let preset = workload::by_name_or_err(args.get("workload").unwrap_or("philly-sim"))?;
+            let mut cfg = TraceConfig::from_preset(&preset, jobs, seed);
+            cfg.estimator = EstimateModel::parse(args.get("estimator").unwrap_or("oracle"))?;
             cfg.load_factor = load;
             trace::generate(&cfg)
         }
@@ -249,8 +276,16 @@ fn cmd_physical(args: &Args) -> Result<()> {
 fn cmd_trace_gen(args: &Args) -> Result<()> {
     let out = PathBuf::from(args.get("out").context("--out is required")?);
     let seed: u64 = args.parse_or("seed", 1)?;
-    let preset = preset_by_name(args.get("preset").unwrap_or("simulation"))?;
-    let jobs_list = trace::generate(&preset.trace(args.parse_or("jobs", 240)?, seed));
+    let jobs: usize = args.parse_or("jobs", 240)?;
+    let mut cfg = match (args.get("workload"), args.get("preset")) {
+        (Some(_), Some(_)) => bail!("--workload and --preset are mutually exclusive"),
+        (Some(w), None) => TraceConfig::from_preset(&workload::by_name_or_err(w)?, jobs, seed),
+        (None, p) => preset_by_name(p.unwrap_or("simulation"))?.trace(jobs, seed),
+    };
+    // Estimates are trace-time artifacts: baking them in here lets a
+    // saved trace replay the exact same mispredictions everywhere.
+    cfg.estimator = EstimateModel::parse(args.get("estimator").unwrap_or("oracle"))?;
+    let jobs_list = trace::generate(&cfg);
     trace::save(&jobs_list, &out)?;
     println!("wrote {} jobs to {}", jobs_list.len(), out.display());
     Ok(())

@@ -153,6 +153,13 @@ pub fn batch_size_scaling_opts(
 /// (and therefore SJF-BSBF's benefit ranking) sees consolidation and
 /// heterogeneity instead of assuming the flat reference switch.
 /// Reference spans reproduce [`batch_size_scaling_opts`] bit-for-bit.
+///
+/// Both sides' iteration counts enter as the scheduler's *estimates*
+/// ([`JobRecord::estimated_remaining_iters`]): the pair-JCT ranking and
+/// the share-or-wait verdict are decisions, and decisions only ever see
+/// estimated durations. Under the oracle (`est_factor == 1.0`) the
+/// inputs — and therefore every verdict — are bit-identical to the
+/// perfect-information paper setting.
 #[allow(clippy::too_many_arguments)]
 pub fn batch_size_scaling_placed(
     new_job: &JobRecord,
@@ -192,12 +199,12 @@ pub fn batch_size_scaling_placed(
                     gang,
                     new_span,
                 ),
-                iters: new_job.remaining_iters,
+                iters: new_job.estimated_remaining_iters(),
                 xi: xi_new,
             };
             let run_side = PairSide {
                 iter_time: run_side_iter,
-                iters: running.remaining_iters,
+                iters: running.estimated_remaining_iters(),
                 xi: xi_run,
             };
             let sched = best_pair_schedule(new_side, run_side);
@@ -320,7 +327,15 @@ mod tests {
     }
 
     fn record(model: ModelKind, gpus: usize, iters: u64, batch: u32) -> JobRecord {
-        JobRecord::new(JobSpec { id: 0, model, gpus, iterations: iters, batch, arrival_s: 0.0 })
+        JobRecord::new(JobSpec {
+            id: 0,
+            model,
+            gpus,
+            iterations: iters,
+            batch,
+            arrival_s: 0.0,
+            est_factor: 1.0,
+        })
     }
 
     #[test]
@@ -425,6 +440,28 @@ mod tests {
             "consolidated {:.1}s must beat spread {:.1}s",
             close.pair_jct,
             far.pair_jct
+        );
+    }
+
+    #[test]
+    fn alg2_ranks_on_estimated_durations() {
+        // A mispredicted newcomer changes the pair-JCT ranking input:
+        // the same pair looks 4x costlier when the new job's estimate is
+        // inflated 4x — that is exactly how SJF-BSBF's benefit sort (and
+        // potentially its share-or-wait verdict) degrade under
+        // misprediction, while the engine still runs the true durations.
+        let new = record(ModelKind::Ncf, 2, 1000, 4096);
+        let mut inflated = new.clone();
+        inflated.spec.est_factor = 4.0;
+        let run = record(ModelKind::Cifar10, 2, 1000, 128);
+        let xi = InterferenceModel::new();
+        let honest = batch_size_scaling(&new, &run, 2, 11.0, &xi).unwrap();
+        let skewed = batch_size_scaling(&inflated, &run, 2, 11.0, &xi).unwrap();
+        assert!(
+            skewed.pair_jct > honest.pair_jct,
+            "inflated estimate must raise the pair JCT: {} vs {}",
+            skewed.pair_jct,
+            honest.pair_jct
         );
     }
 

@@ -59,9 +59,11 @@ impl Elastic {
                     perf.throughput(b, 1, alloc[i])
                 };
                 let nxt = perf.throughput(b, 1, alloc[i] + 1);
-                // Normalize by remaining work so short jobs are favoured
-                // (goodput-weighted fairness surrogate).
-                let weight = 1.0 / ctx.jobs[id].remaining_solo_runtime().max(1.0);
+                // Normalize by (estimated) remaining work so short jobs
+                // are favoured (goodput-weighted fairness surrogate);
+                // like the SJF family, the elastic planner only sees the
+                // scheduler-visible duration estimate.
+                let weight = 1.0 / ctx.estimated_remaining(id).max(1.0);
                 let gain = (nxt - cur) * weight;
                 if best.map(|(_, g)| gain > g).unwrap_or(true) {
                     best = Some((i, gain));
@@ -154,6 +156,7 @@ mod tests {
             iterations: iters,
             batch: 32,
             arrival_s: arrival,
+            est_factor: 1.0,
         }
     }
 

@@ -3,9 +3,12 @@
 //! prioritizing short-term jobs to overcome HOL blocking. It is impractical
 //! as it requires perfect job information").
 //!
-//! Priority key is the expected remaining solo runtime `L_k = t_iter · I_k`
-//! (Alg. 1 line 1 uses the same key). Shorter jobs may start ahead of a
-//! blocked longer job whenever they fit.
+//! Priority key is the *estimated* remaining solo runtime
+//! `L̂_k = t_iter · I_k · est_factor` (Alg. 1 line 1 uses the same key)
+//! — with the oracle estimator this is the paper's perfect-information
+//! `L_k` exactly; with a `Noisy`/`Percentile` estimator the policy
+//! mis-ranks the way a production scheduler would. Shorter(-looking)
+//! jobs may start ahead of a blocked longer job whenever they fit.
 
 use crate::cluster::placement;
 use crate::sched_core::{Event, Policy, SchedContext, Txn};
@@ -13,14 +16,15 @@ use crate::sched_core::{Event, Policy, SchedContext, Txn};
 #[derive(Debug, Default)]
 pub struct Sjf;
 
-/// Pending ids sorted by remaining solo runtime (the SJF key), ties by id.
-/// Reads the context's incrementally maintained pending cache.
+/// Pending ids sorted by estimated remaining solo runtime (the shared
+/// SJF-family key — SJF, SJF-FFS and SJF-BSBF all rank on this), ties by
+/// id. Reads the context's incrementally maintained pending cache and
+/// its O(1) estimate table.
 pub(crate) fn pending_by_runtime(ctx: &SchedContext) -> Vec<usize> {
     let mut pending: Vec<usize> = ctx.pending().to_vec();
     pending.sort_by(|&a, &b| {
-        ctx.jobs[a]
-            .remaining_solo_runtime()
-            .total_cmp(&ctx.jobs[b].remaining_solo_runtime())
+        ctx.estimated_remaining(a)
+            .total_cmp(&ctx.estimated_remaining(b))
             .then(a.cmp(&b))
     });
     pending
@@ -65,6 +69,7 @@ mod tests {
             iterations: iters,
             batch: 128,
             arrival_s: arrival,
+            est_factor: 1.0,
         }
     }
 

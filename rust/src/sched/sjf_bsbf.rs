@@ -16,6 +16,14 @@
 //!
 //! The new job's accumulation step is the *most conservative* (largest s)
 //! among the chosen partners so memory fits everywhere.
+//!
+//! Since workload v2 every decision input is *estimated*: the line-1 SJF
+//! order ranks on `SchedContext::estimated_remaining` and Algorithm 2's
+//! pair-JCT inputs are the estimated remaining iterations of both sides
+//! — with the oracle estimator both are bit-identical to the paper's
+//! perfect-information setting, while `simulate --estimator noisy:σ`
+//! answers the robustness question (does the sharing benefit survive
+//! misprediction?) the paper leaves open.
 
 use std::collections::{BTreeMap, HashMap};
 
@@ -197,7 +205,7 @@ mod tests {
         batch: u32,
         arrival: f64,
     ) -> JobSpec {
-        JobSpec { id, model, gpus, iterations: iters, batch, arrival_s: arrival }
+        JobSpec { id, model, gpus, iterations: iters, batch, arrival_s: arrival, est_factor: 1.0 }
     }
 
     fn run(trace: &[JobSpec]) -> engine::SimOutcome {

@@ -6,6 +6,9 @@
 //! job in a first fit manner if the free GPUs are not sufficient". It
 //! always shares when memory allows (κ = 0 unconditionally), picking the
 //! largest memory-feasible sub-batch — no Theorem 1, no interference check.
+//! Like the whole SJF family it ranks its queue on the *estimated*
+//! remaining runtime (`pending_by_runtime`); since it never consults
+//! durations beyond that sort, it is less estimate-sensitive than BSBF.
 
 use std::collections::HashMap;
 
@@ -119,7 +122,7 @@ mod tests {
         batch: u32,
         arrival: f64,
     ) -> JobSpec {
-        JobSpec { id, model, gpus, iterations: iters, batch, arrival_s: arrival }
+        JobSpec { id, model, gpus, iterations: iters, batch, arrival_s: arrival, est_factor: 1.0 }
     }
 
     #[test]

@@ -119,6 +119,7 @@ mod tests {
             iterations: iters,
             batch: 128,
             arrival_s: arrival,
+            est_factor: 1.0,
         }
     }
 

@@ -56,6 +56,14 @@ pub(super) fn set_remove(v: &mut Vec<JobId>, id: JobId) {
     }
 }
 
+/// Estimated solo seconds per iteration of a job at its current
+/// accumulation step — the cached factor of
+/// [`SchedContext::estimated_remaining`]. Bit-identical to the plain
+/// iteration time under the oracle (`est_factor == 1.0`).
+pub(super) fn est_rate_of(rec: &JobRecord) -> f64 {
+    rec.spec.estimated_iter_time(rec.accum_step)
+}
+
 /// Sort an arrival queue by (arrival, id) descending, so the next arrival
 /// pops from the back and simultaneous arrivals pop in ascending id order.
 fn sort_arrivals_desc(state: &SimState, ids: &mut [JobId]) {
@@ -105,6 +113,14 @@ pub struct SchedContext {
     /// invalid. Start/preempt/finish and co-runner changes bump
     /// `rate_epoch`, so invalidation rides the existing plumbing.
     iter_cache: Vec<(u64, f64)>,
+    /// Estimated solo seconds/iteration per job at its current
+    /// accumulation step (`iter_time(accum) × est_factor`), maintained
+    /// eagerly: it only changes when a `Start` sets a new accumulation
+    /// step, so `estimated_remaining` — the SJF-family sort key, read
+    /// O(n log n) times per event — is a single multiply instead of a
+    /// profile walk (`estimate/*` in `cargo bench --bench
+    /// sched_overhead`).
+    pub(super) est_rate: Vec<f64>,
     /// Scratch-buffer pool for [`SchedContext::overlay`] planning views.
     overlay_pool: OverlayPool,
 }
@@ -136,6 +152,7 @@ impl SchedContext {
         };
         let mut future_arrivals: Vec<JobId> = (0..n).collect();
         sort_arrivals_desc(&state, &mut future_arrivals);
+        let est_rate = state.jobs.iter().map(est_rate_of).collect();
         SchedContext {
             state,
             pending: Vec::new(),
@@ -148,6 +165,7 @@ impl SchedContext {
             finished: 0,
             project_finishes: true,
             iter_cache: vec![(u64::MAX, 0.0); n],
+            est_rate,
             overlay_pool: OverlayPool::default(),
         }
     }
@@ -159,6 +177,7 @@ impl SchedContext {
     /// fire for them.
     pub fn from_state(state: SimState) -> Self {
         let n = state.jobs.len();
+        let est_rate = state.jobs.iter().map(est_rate_of).collect();
         let mut ctx = SchedContext {
             state,
             pending: Vec::new(),
@@ -171,6 +190,7 @@ impl SchedContext {
             finished: 0,
             project_finishes: true,
             iter_cache: vec![(u64::MAX, 0.0); n],
+            est_rate,
             overlay_pool: OverlayPool::default(),
         };
         let now = ctx.state.now;
@@ -260,6 +280,20 @@ impl SchedContext {
         let t = self.state.effective_iter_time(id);
         self.iter_cache[id] = (epoch, t);
         t
+    }
+
+    /// The scheduler's *belief* about `id`'s remaining solo runtime:
+    /// `iter_time(accum) × est_factor × remaining_iters` — the
+    /// SJF-family priority key under the duration-estimator layer.
+    /// Under the oracle (`est_factor == 1.0`) this is bit-identical to
+    /// [`JobRecord::remaining_solo_runtime`]; under `Noisy`/`Percentile`
+    /// estimators it is what the policies mis-rank on while the engine
+    /// keeps completing jobs on their true iteration counts.
+    ///
+    /// O(1): the per-iteration factor is cached on the context and only
+    /// changes when a `Start` sets a new accumulation step.
+    pub fn estimated_remaining(&self, id: JobId) -> f64 {
+        self.est_rate[id] * self.state.jobs[id].remaining_iters
     }
 
     pub fn all_finished(&self) -> bool {
@@ -503,6 +537,15 @@ impl SchedContext {
             self.state.jobs.iter().filter(|j| j.state == JobState::Finished).count();
         if finished != self.finished {
             return Err(format!("finished {} != scan {finished}", self.finished));
+        }
+        for (id, rec) in self.state.jobs.iter().enumerate() {
+            let fresh = est_rate_of(rec);
+            if self.est_rate[id].to_bits() != fresh.to_bits() {
+                return Err(format!(
+                    "est_rate cache for job {id} is {} but recomputes to {fresh}",
+                    self.est_rate[id]
+                ));
+            }
         }
         Ok(())
     }

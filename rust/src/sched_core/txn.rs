@@ -191,6 +191,9 @@ impl SchedContext {
         rec.state = JobState::Running;
         rec.accum_step = accum_step;
         rec.gpus_held = gpus.to_vec();
+        // The estimated per-iteration rate depends on the accumulation
+        // step; a Start is the only place that changes it.
+        self.est_rate[job] = super::context::est_rate_of(rec);
         if rec.first_start_s.is_none() {
             rec.first_start_s = Some(now);
         }

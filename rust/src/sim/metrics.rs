@@ -134,6 +134,7 @@ mod tests {
             iterations: 100,
             batch: 8,
             arrival_s: arrival,
+            est_factor: 1.0,
         });
         r.state = JobState::Finished;
         r.first_start_s = Some(start);

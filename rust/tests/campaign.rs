@@ -26,6 +26,8 @@ fn small_spec(policies: &[&str], job_counts: Vec<usize>, seeds: Vec<u64>) -> Cam
         job_counts,
         gpu_counts: Vec::new(),
         topologies: Vec::new(),
+        workloads: Vec::new(),
+        estimators: Vec::new(),
         seeds,
         jobs_scale_load_baseline: None,
     };
@@ -227,7 +229,11 @@ fn topology_axis_produces_per_shape_cells() {
     assert!(md.contains("### test: uniform-4x4, 16 GPUs"), "{md}");
     assert!(md.contains("### test: hetero-16x4-2tier, 64 GPUs"), "{md}");
     let csv = campaign::emit::long_csv(&spec.name, &res.cells);
-    assert!(csv.lines().any(|l| l.starts_with("test,hetero-16x4-2tier,64,16,1,SJF,")), "{csv}");
+    assert!(
+        csv.lines()
+            .any(|l| l.starts_with("test,hetero-16x4-2tier,philly-sim,oracle,64,16,1,SJF,")),
+        "{csv}"
+    );
 }
 
 #[test]
@@ -263,6 +269,104 @@ fn topologies_axis_parses_from_json_and_rejects_unknown_shapes() {
       "policies": ["FIFO"],
       "cluster": {"servers": 16, "gpus_per_server": 4, "max_share": 1},
       "axes": {"job_counts": [16], "seeds": [1], "topologies": ["uniform-16x4"]}
+    }"#;
+    let err = CampaignSpec::from_json(&Json::parse(conflict).unwrap())
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("mutually exclusive"), "{err}");
+}
+
+#[test]
+fn csv_carries_schema_v2_header() {
+    // The column set has changed twice (topology, then workload/estimator)
+    // — downstream consumers pin on the schema comment, so its presence
+    // and position are part of the emitter's contract.
+    let spec = small_spec(&["FIFO"], vec![12], vec![1]);
+    let res = campaign::execute(&spec, 0).unwrap();
+    let csv = campaign::emit::long_csv(&spec.name, &res.cells);
+    let mut lines = csv.lines();
+    assert_eq!(lines.next(), Some("# schema: v2"));
+    assert_eq!(lines.next(), Some(campaign::emit::CSV_HEADER));
+    assert!(campaign::emit::CSV_HEADER.starts_with("campaign,topology,workload,estimator,"));
+}
+
+#[test]
+fn workloads_and_estimators_axes_run_end_to_end() {
+    // A bursty small-job preset under a noisy estimator: the campaign
+    // must expand one cell per (workload, estimator), run end to end on
+    // the 16-GPU cluster (flood gangs are ≤ 4 GPUs) and report the new
+    // coordinates in every emitter.
+    let mut spec = small_spec(&["SJF-BSBF"], vec![24], vec![1]);
+    spec.axes.workloads = vec!["small-job-flood".to_string()];
+    spec.axes.estimators = vec!["oracle".to_string(), "noisy:1.0".to_string()];
+    let res = campaign::execute(&spec, 0).unwrap();
+    assert_eq!(res.n_runs, 2);
+    assert_eq!(
+        res.n_failures,
+        0,
+        "{:?}",
+        res.cells.iter().map(|c| &c.errors).collect::<Vec<_>>()
+    );
+    assert_eq!(res.cells.len(), 2);
+    assert_eq!(res.cells[0].key.workload, "small-job-flood");
+    assert_eq!(res.cells[0].key.estimator, "oracle");
+    assert_eq!(res.cells[1].key.estimator, "noisy:1");
+    let md = campaign::emit::markdown(&spec.name, &res.cells);
+    assert!(md.contains("small-job-flood workload"), "{md}");
+    assert!(md.contains("oracle estimates"), "{md}");
+    assert!(md.contains("noisy:1 estimates"), "{md}");
+    let csv = campaign::emit::long_csv(&spec.name, &res.cells);
+    assert!(
+        csv.lines()
+            .any(|l| l.starts_with("test,uniform-4x4,small-job-flood,noisy:1,16,24,1,SJF-BSBF,")),
+        "{csv}"
+    );
+}
+
+#[test]
+fn workloads_axis_parses_from_json_and_rejects_conflicts() {
+    let text = r#"{
+      "name": "mix",
+      "policies": ["FIFO"],
+      "axes": {
+        "job_counts": [16],
+        "seeds": [1],
+        "workloads": ["philly-sim", "helios-heavy-tail"],
+        "estimators": ["oracle", "percentile:50"]
+      }
+    }"#;
+    let spec = CampaignSpec::from_json(&Json::parse(text).unwrap()).unwrap();
+    assert_eq!(spec.axes.workloads.len(), 2);
+    assert_eq!(spec.axes.estimators.len(), 2);
+    let pts = campaign::expand(&spec).unwrap();
+    assert_eq!(pts.len(), 2 * 2);
+    assert_eq!(pts[0].cell.workload, "philly-sim");
+    assert_eq!(pts[3].cell.workload, "helios-heavy-tail");
+    assert_eq!(pts[3].cell.estimator, "percentile:50");
+
+    // Unknown preset names are rejected with the known list.
+    let bad = r#"{
+      "policies": ["FIFO"],
+      "axes": {"job_counts": [16], "seeds": [1], "workloads": ["atlantis"]}
+    }"#;
+    let err = CampaignSpec::from_json(&Json::parse(bad).unwrap())
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("unknown workload preset"), "{err}");
+
+    // Malformed estimator specs are rejected at parse time.
+    let bad_est = r#"{
+      "policies": ["FIFO"],
+      "axes": {"job_counts": [16], "seeds": [1], "estimators": ["noisy:x"]}
+    }"#;
+    assert!(CampaignSpec::from_json(&Json::parse(bad_est).unwrap()).is_err());
+
+    // A trace block would be silently ignored by a workloads axis, so
+    // the combination is rejected (same policy as cluster/topologies).
+    let conflict = r#"{
+      "policies": ["FIFO"],
+      "trace": {"mean_interarrival_s": 10.0},
+      "axes": {"job_counts": [16], "seeds": [1], "workloads": ["philly-sim"]}
     }"#;
     let err = CampaignSpec::from_json(&Json::parse(conflict).unwrap())
         .unwrap_err()

@@ -21,7 +21,7 @@ use wise_share::util::prop::forall;
 use wise_share::util::rng::Rng;
 
 fn spec(id: usize, model: ModelKind, iters: u64, batch: u32, arrival: f64) -> JobSpec {
-    JobSpec { id, model, gpus: 1, iterations: iters, batch, arrival_s: arrival }
+    JobSpec { id, model, gpus: 1, iterations: iters, batch, arrival_s: arrival, est_factor: 1.0 }
 }
 
 /// The conformance workload (16-GPU physical cluster):

@@ -117,6 +117,7 @@ fn prop_alg2_configuration_always_memory_feasible() {
                 iterations: 100 + rng.index(5000) as u64,
                 batch,
                 arrival_s: 0.0,
+                est_factor: 1.0,
             })
         };
         let new = mk(new_kind, new_batch);

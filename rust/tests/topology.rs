@@ -140,6 +140,7 @@ fn gang_span_changes_pair_jct_estimates() {
             iterations: 2000,
             batch,
             arrival_s: 0.0,
+            est_factor: 1.0,
         })
     };
     let running = mk(0, ModelKind::ImageNet, 32);
