@@ -1,70 +1,9 @@
-//! `cargo bench --bench ablations` — ablations over SJF-BSBF's three design
-//! choices (DESIGN.md per-experiment index):
-//!
-//! 1. **Theorem-1 gate** off → accept every memory-feasible share
-//!    (isolates the share-or-wait decision from the batch scaling).
-//! 2. **Batch-size sweep** off → no gradient accumulation; sharing only
-//!    when the full batches jointly fit (isolates Algorithm 2's memory
-//!    relief).
-//! 3. **Benefit sorting** off → arbitrary partner order (isolates Alg. 1
-//!    line 14).
-//!
-//! Run on the contended 240-job workload; reports avg JCT per variant.
+//! `cargo bench --bench ablations` — thin wrapper over the registered
+//! `ablations` suite (SJF-BSBF design-choice ablations); the body lives
+//! in `wise_share::perfkit::suites::ablations` so `wise-share bench`
+//! records the same cases machine-readably. Perfkit flags pass through:
+//! `cargo bench --bench ablations -- --profile quick`.
 
-use wise_share::cluster::ClusterConfig;
-use wise_share::jobs::trace::{self, TraceConfig};
-use wise_share::perf::interference::InterferenceModel;
-use wise_share::sched::SjfBsbf;
-use wise_share::sim::{engine, metrics, Policy};
-
-fn variant(name: &str, mut policy: SjfBsbf, jobs: &[wise_share::jobs::JobSpec]) -> f64 {
-    let out = engine::run(
-        ClusterConfig::simulation(),
-        jobs,
-        InterferenceModel::new(),
-        &mut policy as &mut dyn Policy,
-    )
-    .expect("simulation failed");
-    let s = metrics::summarize(name, &out.jobs, out.makespan_s);
-    println!(
-        "{name:<28} avg JCT {:>7.3} hrs   queue {:>6.3} hrs   makespan {:>7.2} hrs",
-        s.all.avg_jct_s / 3600.0,
-        s.all.avg_queue_s / 3600.0,
-        s.makespan_s / 3600.0
-    );
-    s.all.avg_jct_s
-}
-
-fn main() {
-    let mut tcfg = TraceConfig::simulation(240, 1);
-    tcfg.load_factor = 1.5; // contended: sharing decisions matter
-    let jobs = trace::generate(&tcfg);
-
-    println!("SJF-BSBF ablations, 240 jobs @ 1.5x density, 64 GPUs:\n");
-    let full = variant("full (paper)", SjfBsbf::default(), &jobs);
-    let no_gate = variant(
-        "no theorem-1 gate",
-        SjfBsbf { theorem1_gate: false, ..SjfBsbf::default() },
-        &jobs,
-    );
-    let no_sweep = variant(
-        "no batch-size sweep",
-        SjfBsbf { sweep_batches: false, ..SjfBsbf::default() },
-        &jobs,
-    );
-    let no_sort = variant(
-        "no benefit sorting",
-        SjfBsbf { sort_by_benefit: false, ..SjfBsbf::default() },
-        &jobs,
-    );
-
-    println!("\ndeltas vs full: gate {:+.1}%, sweep {:+.1}%, sort {:+.1}%",
-        (no_gate / full - 1.0) * 100.0,
-        (no_sweep / full - 1.0) * 100.0,
-        (no_sort / full - 1.0) * 100.0
-    );
-    assert!(
-        no_gate >= full * 0.98,
-        "removing the Theorem-1 gate should not improve BSBF materially"
-    );
+fn main() -> anyhow::Result<()> {
+    wise_share::perfkit::bench_main("ablations")
 }

@@ -1,47 +1,10 @@
-//! `cargo bench --bench campaign_throughput` — parallel scenario-sweep
-//! throughput: the campaign worker-pool runner vs the old serial loop on
-//! the multi-seed policy matrix shape every table/figure sweep uses.
-//!
-//! The matrix is embarrassingly parallel (fresh trace + policy + cluster
-//! state per run), so on an N-core box the pooled runner should approach
-//! min(N, runs)× the serial wall-clock; the exact speedup is printed.
+//! `cargo bench --bench campaign_throughput` — thin wrapper over the
+//! registered `campaign_throughput` suite (trace-sharing + worker-pool
+//! speedups on the sweep matrix); the body lives in
+//! `wise_share::perfkit::suites::campaign_throughput` so `wise-share
+//! bench` records the same cases machine-readably. Perfkit flags pass
+//! through: `cargo bench --bench campaign_throughput -- --profile quick`.
 
-use wise_share::campaign::{self, Axes, CampaignSpec};
-use wise_share::util::bench::bench;
-
-fn main() {
-    let mut spec = CampaignSpec::new("bench");
-    spec.policies = vec!["SJF".to_string(), "SJF-BSBF".to_string()];
-    spec.axes = Axes {
-        load_factors: vec![1.0],
-        job_counts: vec![120],
-        gpu_counts: Vec::new(),
-        topologies: Vec::new(),
-        workloads: Vec::new(),
-        estimators: Vec::new(),
-        seeds: (1..=6).collect(),
-        jobs_scale_load_baseline: None,
-    };
-    let points = campaign::expand(&spec).expect("valid spec");
-    let threads = campaign::default_threads();
-    println!(
-        "matrix: {} runs (2 policies x 6 seeds, 120 jobs), {} worker thread(s)",
-        points.len(),
-        threads
-    );
-
-    let serial = bench("campaign/serial-reference", 3, || {
-        let out = campaign::run_serial(&points);
-        assert!(out.iter().all(|o| o.summary.is_ok()));
-    });
-    let parallel = bench("campaign/parallel-pool", 3, || {
-        let out = campaign::run_parallel(&points, threads);
-        assert!(out.iter().all(|o| o.summary.is_ok()));
-    });
-    println!(
-        "parallel speedup: {:.2}x (serial mean {:.3}s -> parallel mean {:.3}s)",
-        serial.mean_s / parallel.mean_s,
-        serial.mean_s,
-        parallel.mean_s
-    );
+fn main() -> anyhow::Result<()> {
+    wise_share::perfkit::bench_main("campaign_throughput")
 }

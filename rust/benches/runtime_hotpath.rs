@@ -1,47 +1,10 @@
-//! `cargo bench --bench runtime_hotpath` — the PJRT execution hot path the
-//! physical coordinator drives: artifact compile time (one-off), grad_step
-//! latency per micro-batch variant, the accum fold, the apply update, and
-//! the full gradient-accumulation iteration at several (batch, s) settings.
-//!
-//! This is the L3-side profile used in the §Perf pass (EXPERIMENTS.md).
-//! Requires `make artifacts`.
-
-use wise_share::runtime::executor::{TrainExecutor, TrainState};
-use wise_share::runtime::ArtifactSet;
-use wise_share::util::bench::bench;
+//! `cargo bench --bench runtime_hotpath` — thin wrapper over the
+//! registered `runtime_hotpath` suite (the PJRT train-step hot path;
+//! requires `make artifacts`, self-skips offline); the body lives in
+//! `wise_share::perfkit::suites::runtime_hotpath` so `wise-share bench`
+//! records the same cases machine-readably. Perfkit flags pass through:
+//! `cargo bench --bench runtime_hotpath -- --profile quick`.
 
 fn main() -> anyhow::Result<()> {
-    let t0 = std::time::Instant::now();
-    let set = ArtifactSet::load(ArtifactSet::default_dir())?;
-    println!(
-        "artifact load+compile (7 executables): {:.2}s (one-off per worker)",
-        t0.elapsed().as_secs_f64()
-    );
-    println!(
-        "model: {} params, vocab {}, seq {}",
-        set.meta.model.n_params, set.meta.model.vocab, set.meta.model.seq_len
-    );
-
-    let mut exec = TrainExecutor::new(&set, 1, 0.1);
-    let mut state: TrainState = exec.init_state()?;
-
-    // grad_step latency per compiled micro-batch variant.
-    for &mb in &set.meta.micro_batches.clone() {
-        let mut st = exec.init_state()?;
-        bench(&format!("train_step/batch{mb}/s1"), 20, || {
-            exec.train_step(&mut st, mb, 1).unwrap();
-        });
-    }
-
-    // Full gradient-accumulation iterations: batch 8 at s = 1, 2, 4, 8.
-    for &s in &[1u32, 2, 4, 8] {
-        bench(&format!("train_step/batch8/s{s}"), 15, || {
-            exec.train_step(&mut state, 8, s).unwrap();
-        });
-    }
-    println!(
-        "\nnote: s>1 pays (s-1) extra grad_step+accum executions — the Eq. 7\n\
-         (s-1)*t_comp(B/s) term the scheduler trades against memory."
-    );
-    Ok(())
+    wise_share::perfkit::bench_main("runtime_hotpath")
 }

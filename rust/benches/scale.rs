@@ -1,0 +1,10 @@
+//! `cargo bench --bench scale` — thin wrapper over the registered `scale`
+//! suite (10k-20k-job Helios/flood traces on up to 4096-GPU hetero
+//! topologies; the quick profile is CI's smoke tier); the body lives in
+//! `wise_share::perfkit::suites::scale` so `wise-share bench` records the
+//! same cases machine-readably. Perfkit flags pass through:
+//! `cargo bench --bench scale -- --profile quick --out BENCH_scale.json`.
+
+fn main() -> anyhow::Result<()> {
+    wise_share::perfkit::bench_main("scale")
+}

@@ -1,71 +1,9 @@
-//! `cargo bench --bench tables` — regenerates every *table* in the paper's
-//! evaluation (§VI):
-//!
-//! * **Table II**  — 30-job physical workload on 4x4 GPUs (simulated here;
-//!   the PJRT-executing variant is `examples/physical_cluster.rs`):
-//!   makespan + average JCT per policy.
-//! * **Table III** — 240-job simulation: all/large/small JCT + queueing.
-//! * **Table IV**  — 480-job simulation at 2x arrival density.
-//!
-//! Each row also reports the wall-clock cost of producing it (the bench
-//! half), so regressions in simulator performance are visible.
-
-use wise_share::cluster::ClusterConfig;
-use wise_share::jobs::trace::{self, TraceConfig};
-use wise_share::perf::interference::InterferenceModel;
-use wise_share::report;
-use wise_share::sched::{self, POLICY_NAMES};
-use wise_share::sim::{engine, metrics};
-use wise_share::util::bench::bench;
-
-fn table(
-    label: &str,
-    cluster: ClusterConfig,
-    tcfg: &TraceConfig,
-    table2_style: bool,
-) -> anyhow::Result<()> {
-    let jobs = trace::generate(tcfg);
-    let mut rows = Vec::new();
-    for name in POLICY_NAMES {
-        // Physical cluster (16 GPUs) cannot host jobs > 16 GPUs; the trace
-        // generator respects the preset, so no clamping needed here.
-        let mut summary = None;
-        bench(&format!("{label}/{name}"), 3, || {
-            let mut p = sched::by_name(name).unwrap();
-            let out = engine::run(cluster, &jobs, InterferenceModel::new(), p.as_mut())
-                .expect("simulation failed");
-            summary = Some(metrics::summarize(name, &out.jobs, out.makespan_s));
-        });
-        rows.push(summary.unwrap());
-    }
-    println!("\n=== {label} ===");
-    if table2_style {
-        println!("{}", report::table2(&rows));
-    } else {
-        println!("{}", report::table34(&rows));
-    }
-    Ok(())
-}
+//! `cargo bench --bench tables` — thin wrapper over the registered
+//! `tables` suite (paper Tables II-IV); the body lives in
+//! `wise_share::perfkit::suites::tables` so `wise-share bench` records
+//! the same cases machine-readably. Perfkit flags pass through:
+//! `cargo bench --bench tables -- --profile quick --out BENCH_tables.json`.
 
 fn main() -> anyhow::Result<()> {
-    // Table II: the physical 30-job mix (simulated; see EXPERIMENTS.md for
-    // the recorded PJRT-executing run).
-    table(
-        "table2/physical-30-jobs",
-        ClusterConfig::physical(),
-        &TraceConfig::physical(1),
-        true,
-    )?;
-    // Table III: 240 jobs, baseline density.
-    table(
-        "table3/sim-240-jobs",
-        ClusterConfig::simulation(),
-        &TraceConfig::simulation(240, 1),
-        false,
-    )?;
-    // Table IV: 480 jobs at double density (same busiest window).
-    let mut t4 = TraceConfig::simulation(480, 1);
-    t4.load_factor = 2.0;
-    table("table4/sim-480-jobs-2x", ClusterConfig::simulation(), &t4, false)?;
-    Ok(())
+    wise_share::perfkit::bench_main("tables")
 }

@@ -12,10 +12,14 @@
 //!    and duration-estimator specs (DESIGN.md §11)), loadable from JSON
 //!    via the first-party parser.
 //! 2. **Sweep** ([`sweep`]) — cartesian expansion into a deterministic,
-//!    ordered run matrix of self-contained [`ScenarioSpec`]s.
+//!    ordered run matrix of self-contained [`ScenarioSpec`]s, each point
+//!    carrying its cell group's lazily-generated [`SharedTrace`] (one
+//!    trace generation per (cell, seed) group, reused across the whole
+//!    policy axis).
 //! 3. **Runner** ([`runner`]) — a `std::thread` worker pool; runs are
-//!    embarrassingly parallel (fresh trace + policy + cluster per run) and
-//!    outcomes return in expansion order regardless of completion order.
+//!    embarrassingly parallel (fresh policy + cluster per run, shared
+//!    immutable trace) and outcomes return in expansion order regardless
+//!    of completion order.
 //! 4. **Aggregation** ([`agg`]) — streaming Welford statistics per sweep
 //!    cell over the seed axis: mean/std/min/max + normal-approx 95% CIs
 //!    for avg/p50/p90 JCT, queueing delay and makespan.
@@ -35,7 +39,7 @@ pub mod sweep;
 pub use agg::{Aggregator, CellAgg, SliceAgg, Stream};
 pub use runner::{default_threads, resolved_threads, run_parallel, run_serial, RunOutcome};
 pub use spec::{Axes, CampaignSpec, ScenarioSpec};
-pub use sweep::{expand, CellKey, RunPoint};
+pub use sweep::{expand, CellKey, RunPoint, SharedTrace};
 
 use anyhow::Result;
 

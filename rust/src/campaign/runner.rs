@@ -1,12 +1,17 @@
 //! Parallel campaign runner: fan the run matrix out over a `std::thread`
 //! worker pool.
 //!
-//! Every [`RunPoint`] is self-contained (fresh trace, fresh policy, own
-//! cluster state), so runs are embarrassingly parallel. Workers pull the
-//! next un-started point from a shared atomic cursor and write the outcome
-//! into that point's dedicated slot — results therefore come back **in
-//! expansion order regardless of completion order**, which is what makes
-//! parallel output byte-identical to a serial run of the same matrix.
+//! Every [`RunPoint`] runs independently (fresh policy, own cluster
+//! state), so runs are embarrassingly parallel. The trace is the one
+//! shared input: points that differ only on the policy axis read the
+//! same lazily-generated [`super::sweep::SharedTrace`] — one generation
+//! per (cell, seed) group instead of one per run, and since generation
+//! is a pure function of the config the shared bytes are identical no
+//! matter which worker generates first. Workers pull the next un-started
+//! point from a shared atomic cursor and write the outcome into that
+//! point's dedicated slot — results therefore come back **in expansion
+//! order regardless of completion order**, which is what makes parallel
+//! output byte-identical to a serial run of the same matrix.
 //!
 //! Failures (a policy refusing to schedule, a livelocked run hitting
 //! `max_sim_s`) are captured per-run as strings instead of aborting the
@@ -33,7 +38,10 @@ fn run_one(point: &RunPoint) -> RunOutcome {
         ordinal: point.ordinal,
         cell: point.cell.clone(),
         seed: point.scenario.trace.seed,
-        summary: point.scenario.run().map_err(|e| e.to_string()),
+        summary: point
+            .scenario
+            .run_with_trace(point.trace.jobs())
+            .map_err(|e| e.to_string()),
     }
 }
 

@@ -16,6 +16,7 @@ use crate::cluster::{topology, Cluster, ClusterConfig};
 use crate::jobs::estimate::EstimateModel;
 use crate::jobs::trace::{self, TraceConfig};
 use crate::jobs::workload;
+use crate::jobs::JobSpec;
 use crate::perf::interference::InterferenceModel;
 use crate::sched;
 use crate::sim::metrics::{self, Summary};
@@ -355,7 +356,17 @@ impl ScenarioSpec {
 
     /// Generate the trace, construct a fresh policy, and simulate.
     pub fn run(&self) -> Result<Summary> {
-        let jobs = trace::generate(&self.trace);
+        self.run_with_trace(&trace::generate(&self.trace))
+    }
+
+    /// [`ScenarioSpec::run`] over a pre-generated trace — the campaign
+    /// runner's hot path, where one generation is shared across the
+    /// policy axis ([`super::sweep::SharedTrace`]). `jobs` must equal
+    /// `trace::generate(&self.trace)`: sharing is pure memoization, so
+    /// the campaign's parallel == serial byte-identity guarantee (and
+    /// every golden test) is unaffected. Policy and cluster are still
+    /// constructed fresh per run.
+    pub fn run_with_trace(&self, jobs: &[JobSpec]) -> Result<Summary> {
         let mut policy = sched::by_name(&self.policy)
             .with_context(|| format!("unknown policy {:?}", self.policy))?;
         let xi = match self.xi_global {
@@ -364,7 +375,7 @@ impl ScenarioSpec {
         };
         let engine_cfg = EngineConfig { max_sim_s: self.max_sim_s, ..EngineConfig::default() };
         let cluster = self.build_cluster()?;
-        let out = engine::run_cluster(cluster, &jobs, xi, policy.as_mut(), engine_cfg)
+        let out = engine::run_cluster(cluster, jobs, xi, policy.as_mut(), engine_cfg)
             .with_context(|| {
                 format!(
                     "policy {} on {} jobs (seed {}, load x{})",

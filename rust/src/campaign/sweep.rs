@@ -9,12 +9,15 @@
 //! (everything but the seed) appear in first-occurrence order in every
 //! emitter.
 
+use std::sync::{Arc, OnceLock};
+
 use anyhow::{bail, Result};
 
 use crate::cluster::{topology, ClusterConfig};
 use crate::jobs::estimate::EstimateModel;
-use crate::jobs::trace::TraceConfig;
+use crate::jobs::trace::{self, TraceConfig};
 use crate::jobs::workload;
+use crate::jobs::JobSpec;
 
 use super::spec::{CampaignSpec, ScenarioSpec};
 
@@ -61,6 +64,54 @@ pub fn uniform_shape_name(cluster: &ClusterConfig) -> String {
     format!("uniform-{}x{}", cluster.servers, cluster.gpus_per_server)
 }
 
+/// A lazily-generated trace shared by every run point of one cell group
+/// — the points that differ only on the policy axis (same shape,
+/// workload, estimator, job count, load and seed all see the exact same
+/// jobs). Before this existed the runner regenerated the identical trace
+/// once per policy in every cell: the campaign's single biggest
+/// redundant cost (`campaign/per-run-generation` vs
+/// `campaign/shared-trace-serial` in `cargo bench --bench
+/// campaign_throughput`).
+///
+/// Generation is deferred to first use, so [`expand`] stays a cheap
+/// metadata pass. `trace::generate` is a pure function of the config, so
+/// whichever worker wins the `OnceLock` race produces identical bytes —
+/// the parallel == serial byte-identity guarantee is unaffected.
+///
+/// Memory trade-off, deliberate: generated traces stay resident until
+/// the run matrix itself drops (a `OnceLock` cannot be emptied through
+/// shared refs), where the old per-run generation peaked at O(workers)
+/// live traces. A `JobSpec` is ~100 bytes, so even a hundred 20k-job
+/// cell groups hold ~200 MB — acceptable for the sweeps this subsystem
+/// targets; revisit with a countdown-and-free scheme if campaigns ever
+/// sweep thousands of distinct datacenter-scale trace groups.
+#[derive(Debug)]
+pub struct SharedTrace {
+    cfg: TraceConfig,
+    jobs: OnceLock<Vec<JobSpec>>,
+}
+
+impl SharedTrace {
+    pub fn new(cfg: TraceConfig) -> SharedTrace {
+        SharedTrace { cfg, jobs: OnceLock::new() }
+    }
+
+    /// The generated trace; the first caller generates, everyone after
+    /// reuses.
+    pub fn jobs(&self) -> &[JobSpec] {
+        self.jobs.get_or_init(|| trace::generate(&self.cfg))
+    }
+
+    pub fn config(&self) -> &TraceConfig {
+        &self.cfg
+    }
+
+    /// Whether any caller has forced generation yet (expansion must not).
+    pub fn is_generated(&self) -> bool {
+        self.jobs.get().is_some()
+    }
+}
+
 /// One entry of the expanded run matrix.
 #[derive(Debug, Clone)]
 pub struct RunPoint {
@@ -68,6 +119,11 @@ pub struct RunPoint {
     pub ordinal: usize,
     pub cell: CellKey,
     pub scenario: ScenarioSpec,
+    /// The cell group's shared trace (see [`SharedTrace`]); identical to
+    /// `trace::generate(&scenario.trace)`, generated at most once per
+    /// group. The runner reads this; `scenario` stays self-contained for
+    /// standalone [`ScenarioSpec::run`] callers.
+    pub trace: Arc<SharedTrace>,
 }
 
 /// One resolved point of the cluster-shape axis.
@@ -210,6 +266,26 @@ pub fn expand(spec: &CampaignSpec) -> Result<Vec<RunPoint>> {
                 for (ji, &n_jobs) in spec.axes.job_counts.iter().enumerate() {
                     for &load_milli in &load_grid[ji] {
                         let quantized = load_milli as f64 / 1000.0;
+                        // The trace is policy-invariant: build one config
+                        // (and one lazily-shared generation) per seed,
+                        // reused across the whole policy axis below.
+                        let seed_traces: Vec<Arc<SharedTrace>> = spec
+                            .axes
+                            .seeds
+                            .iter()
+                            .map(|&seed| {
+                                let mut trace = TraceConfig::from_preset(preset, n_jobs, seed);
+                                if !explicit_workloads {
+                                    // Back-compat: spec-level trace knobs
+                                    // apply on the default preset only.
+                                    trace.mean_interarrival_s = spec.mean_interarrival_s;
+                                    trace.iter_range = spec.iter_range;
+                                }
+                                trace.estimator = est_model.clone();
+                                trace.load_factor = quantized;
+                                Arc::new(SharedTrace::new(trace))
+                            })
+                            .collect();
                         for policy in &spec.policies {
                             let cell = CellKey {
                                 topology: variant.name.clone(),
@@ -220,16 +296,7 @@ pub fn expand(spec: &CampaignSpec) -> Result<Vec<RunPoint>> {
                                 load_milli,
                                 policy: policy.clone(),
                             };
-                            for &seed in &spec.axes.seeds {
-                                let mut trace = TraceConfig::from_preset(preset, n_jobs, seed);
-                                if !explicit_workloads {
-                                    // Back-compat: spec-level trace knobs
-                                    // apply on the default preset only.
-                                    trace.mean_interarrival_s = spec.mean_interarrival_s;
-                                    trace.iter_range = spec.iter_range;
-                                }
-                                trace.estimator = est_model.clone();
-                                trace.load_factor = quantized;
+                            for shared in &seed_traces {
                                 points.push(RunPoint {
                                     ordinal: points.len(),
                                     cell: cell.clone(),
@@ -237,10 +304,11 @@ pub fn expand(spec: &CampaignSpec) -> Result<Vec<RunPoint>> {
                                         policy: policy.clone(),
                                         cluster,
                                         topology: variant.topology.clone(),
-                                        trace,
+                                        trace: shared.config().clone(),
                                         xi_global: spec.xi_global,
                                         max_sim_s: spec.max_sim_s,
                                     },
+                                    trace: shared.clone(),
                                 });
                             }
                         }
@@ -388,6 +456,37 @@ mod tests {
         assert_eq!(l30.cell.load_factor(), 0.5);
         assert_eq!(l60.cell.load_factor(), 1.0);
         assert_eq!(l30.scenario.trace.load_factor, 0.5);
+    }
+
+    #[test]
+    fn policy_axis_shares_one_lazy_trace_per_seed() {
+        let pts = expand(&spec()).unwrap();
+        // Expansion stays a cheap metadata pass: nothing generated yet.
+        assert!(pts.iter().all(|p| !p.trace.is_generated()));
+        // Innermost nesting is policy -> seed (2 policies x 3 seeds): the
+        // same (cell group, seed) recurs at a stride of 3 and must carry
+        // the same Arc; different seeds and different loads must not.
+        assert!(Arc::ptr_eq(&pts[0].trace, &pts[3].trace));
+        assert!(!Arc::ptr_eq(&pts[0].trace, &pts[1].trace));
+        assert!(!Arc::ptr_eq(&pts[0].trace, &pts[6].trace));
+        // The shared config is exactly the scenario's own trace config.
+        assert_eq!(pts[0].trace.config().seed, pts[0].scenario.trace.seed);
+        assert_eq!(
+            pts[0].trace.config().load_factor,
+            pts[0].scenario.trace.load_factor
+        );
+        // First use generates; the bytes match an independent generation
+        // of the scenario config (sharing is pure memoization).
+        let shared = pts[0].trace.jobs();
+        assert!(pts[0].trace.is_generated());
+        assert!(!pts[1].trace.is_generated());
+        let fresh = trace::generate(&pts[0].scenario.trace);
+        assert_eq!(shared.len(), fresh.len());
+        for (a, b) in shared.iter().zip(&fresh) {
+            assert_eq!(a.arrival_s.to_bits(), b.arrival_s.to_bits());
+            assert_eq!(a.iterations, b.iterations);
+            assert_eq!(a.gpus, b.gpus);
+        }
     }
 
     #[test]

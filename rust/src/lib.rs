@@ -15,7 +15,9 @@
 //!   scheduling policies, preset-driven workload generation (pluggable
 //!   arrival processes + duration estimators, [`jobs::workload`] /
 //!   [`jobs::estimate`]), metrics/reporting,
-//!   a declarative parallel scenario-sweep engine ([`campaign`]), and a
+//!   a declarative parallel scenario-sweep engine ([`campaign`]), a
+//!   machine-readable bench suite registry with JSON perf reports and
+//!   baseline regression gates ([`perfkit`]), and a
 //!   physical-mode coordinator that *actually executes* every job's
 //!   training iterations via AOT-compiled XLA programs through PJRT
 //!   ([`runtime`], [`coordinator`]) — through the *same* `sched_core`
@@ -36,6 +38,7 @@ pub mod coordinator;
 pub mod jobs;
 pub mod pair;
 pub mod perf;
+pub mod perfkit;
 pub mod report;
 pub mod runtime;
 pub mod sched;

@@ -6,6 +6,10 @@
 //! * `campaign`   — run a declarative scenario sweep (policy × load × jobs
 //!                  × GPUs × seeds) on a parallel worker pool; prints
 //!                  seed-averaged tables with CIs and writes a long CSV.
+//! * `bench`      — run the registered perfkit suites (the `cargo bench`
+//!                  bodies), emit a schema-versioned JSON report, and
+//!                  optionally gate against a recorded baseline (nonzero
+//!                  exit on regression). CI's `bench-smoke` entry point.
 //! * `physical`   — run the physical-mode coordinator: real PJRT training
 //!                  steps on emulated GPUs (requires `make artifacts`).
 //! * `trace-gen`  — generate and save a Philly-like trace as JSON.
@@ -28,6 +32,7 @@ use wise_share::jobs::workload;
 use wise_share::perf::fit::{fit_comp, Sample};
 use wise_share::perf::interference::InterferenceModel;
 use wise_share::perf::profiles::{ModelKind, WorkloadProfile};
+use wise_share::perfkit;
 use wise_share::report;
 use wise_share::sched::{self, POLICY_NAMES};
 use wise_share::sim::{engine, metrics};
@@ -42,6 +47,8 @@ USAGE:
                        [--xi X] [--load L]
   wise-share campaign  (--spec FILE | --preset paper) [--threads N]
                        [--csv F]
+  wise-share bench     [--suite NAMES] [--profile quick|full] [--out F]
+                       [--baseline F] [--max-regress PCT] | [--check F]
   wise-share physical  [--policy NAME] [--jobs N] [--seed S]
                        [--iter-scale F] [--compress F] [--loss-csv F]
                        [--artifacts DIR]
@@ -59,6 +66,12 @@ helios-heavy-tail, small-job-flood.
 
 Estimator SPECs (scheduler-visible duration estimates, also usable on the
 campaign `estimators` axis): oracle | noisy:SIGMA[:SEED] | percentile:PCT.
+
+Bench SUITE names (comma-separated for --suite; default = all): tables,
+figures, ablations, sched_overhead, runtime_hotpath, campaign_throughput,
+scale. `--out` writes the schema-versioned JSON perf report; `--baseline`
++ `--max-regress` (default 10) gate on a recorded report with a nonzero
+exit on regression; `--check F` only validates an emitted report.
 ";
 
 /// Tiny `--key value` flag parser.
@@ -240,6 +253,39 @@ fn cmd_campaign(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_bench(args: &Args) -> Result<()> {
+    if let Some(path) = args.get("check") {
+        if args.0.len() > 1 {
+            bail!("--check validates an existing report and takes no other flags");
+        }
+        return perfkit::check_file(std::path::Path::new(path));
+    }
+    // A silently-dropped typo (`--basline F`) would disable the gate and
+    // exit 0 — reject anything but the known flags, like bench_main does.
+    for key in args.0.keys() {
+        if !["suite", "profile", "out", "baseline", "max-regress"].contains(&key.as_str()) {
+            bail!(
+                "unknown bench flag --{key} (known: --suite, --profile, --out, \
+                 --baseline, --max-regress, --check)"
+            );
+        }
+    }
+    let cfg = perfkit::RunConfig {
+        suites: args
+            .get("suite")
+            .map(|s| s.split(',').map(str::to_string).collect())
+            .unwrap_or_default(),
+        profile: perfkit::Profile::parse(args.get("profile").unwrap_or("full"))?,
+        out: args.get("out").map(PathBuf::from),
+        baseline: args.get("baseline").map(PathBuf::from),
+        max_regress_pct: args.parse_or("max-regress", perfkit::DEFAULT_MAX_REGRESS_PCT)?,
+    };
+    if cfg.max_regress_pct.is_nan() || cfg.max_regress_pct < 0.0 {
+        bail!("--max-regress {} must be a non-negative percentage", cfg.max_regress_pct);
+    }
+    perfkit::run(&cfg).map(|_| ())
+}
+
 fn cmd_physical(args: &Args) -> Result<()> {
     let policy = args.get("policy").unwrap_or("SJF-BSBF").to_string();
     let mut p =
@@ -324,6 +370,7 @@ fn main() -> Result<()> {
     match cmd.as_str() {
         "simulate" => cmd_simulate(&args),
         "campaign" => cmd_campaign(&args),
+        "bench" => cmd_bench(&args),
         "physical" => cmd_physical(&args),
         "trace-gen" => cmd_trace_gen(&args),
         "fit" => cmd_fit(&args),

@@ -1,0 +1,363 @@
+//! Baseline comparison: the regression gate behind
+//! `wise-share bench --baseline FILE --max-regress PCT`.
+//!
+//! The gate metric is **`min_s`** — of the four recorded statistics the
+//! minimum is the least sensitive to scheduler noise on shared runners
+//! (mean and the upper quantiles absorb every descheduling blip), so it
+//! is the fairest single number to gate on. Per-case tolerances recorded
+//! in the *baseline* override the CLI default, so a recorded baseline
+//! pins its own noise allowances (DESIGN.md §12).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use anyhow::{bail, Result};
+
+use super::report::BenchReport;
+
+/// Outcome of one case's comparison.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Verdict {
+    /// Within tolerance (`delta_pct` may be negative — an improvement).
+    Pass { delta_pct: f64 },
+    /// `min_s` grew past the tolerance.
+    Regress { delta_pct: f64, limit_pct: f64 },
+    /// Measured now, absent from the baseline (new case).
+    New,
+    /// In the baseline, not measured now. Does not fail the gate — quick
+    /// and full share no cases and renames surface as Missing+New pairs —
+    /// but it is rendered loudly: a silently vanished case would
+    /// otherwise pass forever.
+    Missing,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct CaseVerdict {
+    pub suite: String,
+    pub name: String,
+    pub verdict: Verdict,
+}
+
+/// The full comparison, in current-report case order (Missing rows last).
+#[derive(Debug, Clone)]
+pub struct Comparison {
+    pub rows: Vec<CaseVerdict>,
+    pub n_passed: usize,
+    pub n_regressed: usize,
+    pub n_new: usize,
+    pub n_missing: usize,
+}
+
+/// Compare `current` against `baseline` case-by-case on `min_s`.
+///
+/// Tolerance per case: the baseline entry's `max_regress_pct` when
+/// recorded, else `default_pct`. Suites skipped on either side are
+/// excluded from New/Missing accounting (a skip is an environment gap,
+/// not a perf change). Profiles must match — quick and full measure
+/// different case sets and sizes.
+pub fn compare(
+    current: &BenchReport,
+    baseline: &BenchReport,
+    default_pct: f64,
+) -> Result<Comparison> {
+    if default_pct.is_nan() || default_pct < 0.0 {
+        bail!("--max-regress {default_pct} must be a non-negative percentage");
+    }
+    if current.env.profile != baseline.env.profile {
+        bail!(
+            "bench profile mismatch: this run is {:?} but the baseline was recorded \
+             at {:?} — the profiles measure different case sets",
+            current.env.profile,
+            baseline.env.profile
+        );
+    }
+    let index = |rep: &BenchReport| -> BTreeMap<(String, String), (f64, Option<f64>)> {
+        rep.suites
+            .iter()
+            .filter(|s| s.skipped.is_none())
+            .flat_map(|s| {
+                s.cases.iter().map(move |c| {
+                    (
+                        (s.suite.clone(), c.stats.name.clone()),
+                        (c.stats.min_s, c.max_regress_pct),
+                    )
+                })
+            })
+            .collect()
+    };
+    let base = index(baseline);
+    let cur = index(current);
+    let cur_skipped: Vec<&str> = current
+        .suites
+        .iter()
+        .filter(|s| s.skipped.is_some())
+        .map(|s| s.suite.as_str())
+        .collect();
+    let base_skipped: Vec<&str> = baseline
+        .suites
+        .iter()
+        .filter(|s| s.skipped.is_some())
+        .map(|s| s.suite.as_str())
+        .collect();
+
+    let mut rows = Vec::new();
+    for s in current.suites.iter().filter(|s| s.skipped.is_none()) {
+        for c in &s.cases {
+            let verdict = match base.get(&(s.suite.clone(), c.stats.name.clone())) {
+                None if base_skipped.contains(&s.suite.as_str()) => continue,
+                None => Verdict::New,
+                Some(&(base_min, base_tol)) => {
+                    if base_min <= 0.0 {
+                        // A zero-time baseline cannot regress meaningfully
+                        // (clock-resolution artifact); pass it.
+                        Verdict::Pass { delta_pct: 0.0 }
+                    } else {
+                        let delta_pct = (c.stats.min_s / base_min - 1.0) * 100.0;
+                        let limit_pct = base_tol.unwrap_or(default_pct);
+                        if delta_pct > limit_pct {
+                            Verdict::Regress { delta_pct, limit_pct }
+                        } else {
+                            Verdict::Pass { delta_pct }
+                        }
+                    }
+                }
+            };
+            rows.push(CaseVerdict {
+                suite: s.suite.clone(),
+                name: c.stats.name.clone(),
+                verdict,
+            });
+        }
+    }
+    for (suite, name) in base.keys() {
+        if !cur.contains_key(&(suite.clone(), name.clone()))
+            && !cur_skipped.contains(&suite.as_str())
+        {
+            rows.push(CaseVerdict {
+                suite: suite.clone(),
+                name: name.clone(),
+                verdict: Verdict::Missing,
+            });
+        }
+    }
+    let count = |f: fn(&Verdict) -> bool| rows.iter().filter(|r| f(&r.verdict)).count();
+    Ok(Comparison {
+        n_passed: count(|v| matches!(v, Verdict::Pass { .. })),
+        n_regressed: count(|v| matches!(v, Verdict::Regress { .. })),
+        n_new: count(|v| matches!(v, Verdict::New)),
+        n_missing: count(|v| matches!(v, Verdict::Missing)),
+        rows,
+    })
+}
+
+impl Comparison {
+    /// One line per case plus a summary line.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for r in &self.rows {
+            match &r.verdict {
+                Verdict::Pass { delta_pct } => writeln!(
+                    out,
+                    "  PASS    {}/{} ({delta_pct:+.1}% min)",
+                    r.suite, r.name
+                )
+                .unwrap(),
+                Verdict::Regress { delta_pct, limit_pct } => writeln!(
+                    out,
+                    "  REGRESS {}/{} ({delta_pct:+.1}% min > +{limit_pct:.1}% allowed)",
+                    r.suite, r.name
+                )
+                .unwrap(),
+                Verdict::New => {
+                    writeln!(out, "  NEW     {}/{} (no baseline entry)", r.suite, r.name)
+                        .unwrap()
+                }
+                Verdict::Missing => writeln!(
+                    out,
+                    "  MISSING {}/{} (in baseline, not measured now)",
+                    r.suite, r.name
+                )
+                .unwrap(),
+            }
+        }
+        writeln!(
+            out,
+            "baseline compare: {} passed, {} regressed, {} new, {} missing",
+            self.n_passed, self.n_regressed, self.n_new, self.n_missing
+        )
+        .unwrap();
+        out
+    }
+
+    /// `Err` (⇒ nonzero process exit) when any case regressed.
+    pub fn gate(&self) -> Result<()> {
+        if self.n_regressed == 0 {
+            return Ok(());
+        }
+        let offenders: Vec<String> = self
+            .rows
+            .iter()
+            .filter_map(|r| match r.verdict {
+                Verdict::Regress { delta_pct, limit_pct } => Some(format!(
+                    "{}/{} ({delta_pct:+.1}% > +{limit_pct:.1}%)",
+                    r.suite, r.name
+                )),
+                _ => None,
+            })
+            .collect();
+        bail!(
+            "{} bench case(s) regressed past the gate: {}",
+            self.n_regressed,
+            offenders.join(", ")
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfkit::registry::{CaseStats, SuiteReport};
+    use crate::perfkit::report::EnvInfo;
+    use crate::util::bench::BenchStats;
+
+    fn case(name: &str, min_s: f64, tol: Option<f64>) -> CaseStats {
+        CaseStats {
+            stats: BenchStats {
+                name: name.to_string(),
+                iters: 3,
+                mean_s: min_s * 1.1,
+                min_s,
+                p50_s: min_s * 1.05,
+                p95_s: min_s * 1.2,
+            },
+            max_regress_pct: tol,
+        }
+    }
+
+    fn report(profile: &str, suites: Vec<SuiteReport>) -> BenchReport {
+        BenchReport {
+            env: EnvInfo {
+                profile: profile.to_string(),
+                threads: 4,
+                git_sha: None,
+                os: "linux".to_string(),
+            },
+            suites,
+        }
+    }
+
+    fn suite(name: &str, cases: Vec<CaseStats>) -> SuiteReport {
+        SuiteReport { suite: name.to_string(), skipped: None, cases }
+    }
+
+    #[test]
+    fn pass_regress_new_missing_verdicts() {
+        let baseline = report(
+            "quick",
+            vec![suite(
+                "s",
+                vec![
+                    case("a", 1.0, None),
+                    case("b", 1.0, Some(50.0)),
+                    case("gone", 1.0, None),
+                ],
+            )],
+        );
+        let current = report(
+            "quick",
+            vec![suite(
+                "s",
+                vec![
+                    case("a", 1.05, None),  // +5% <= 10% default: pass
+                    case("b", 1.4, None),   // +40% <= per-case 50%: pass
+                    case("fresh", 0.5, None), // new
+                ],
+            )],
+        );
+        let cmp = compare(&current, &baseline, 10.0).unwrap();
+        assert_eq!(cmp.n_passed, 2);
+        assert_eq!(cmp.n_regressed, 0);
+        assert_eq!(cmp.n_new, 1);
+        assert_eq!(cmp.n_missing, 1);
+        cmp.gate().unwrap();
+        let rendered = cmp.render();
+        assert!(rendered.contains("NEW     s/fresh"), "{rendered}");
+        assert!(rendered.contains("MISSING s/gone"), "{rendered}");
+
+        // Now regress case `a` past the default and `b` past its own cap.
+        let current = report(
+            "quick",
+            vec![suite("s", vec![case("a", 1.2, None), case("b", 1.6, None)])],
+        );
+        let cmp = compare(&current, &baseline, 10.0).unwrap();
+        assert_eq!(cmp.n_regressed, 2);
+        let err = cmp.gate().unwrap_err().to_string();
+        assert!(err.contains("s/a"), "{err}");
+        assert!(err.contains("s/b"), "{err}");
+        assert!(err.contains("+20.0%"), "{err}");
+    }
+
+    #[test]
+    fn improvements_pass_with_negative_delta() {
+        let baseline = report("full", vec![suite("s", vec![case("a", 2.0, None)])]);
+        let current = report("full", vec![suite("s", vec![case("a", 1.0, None)])]);
+        let cmp = compare(&current, &baseline, 0.0).unwrap();
+        assert_eq!(cmp.n_passed, 1);
+        assert!(matches!(
+            cmp.rows[0].verdict,
+            Verdict::Pass { delta_pct } if delta_pct < -49.0
+        ));
+        cmp.gate().unwrap();
+    }
+
+    #[test]
+    fn profile_mismatch_is_rejected() {
+        let baseline = report("full", vec![suite("s", vec![case("a", 1.0, None)])]);
+        let current = report("quick", vec![suite("s", vec![case("a", 1.0, None)])]);
+        let err = compare(&current, &baseline, 10.0).unwrap_err().to_string();
+        assert!(err.contains("profile mismatch"), "{err}");
+    }
+
+    #[test]
+    fn skipped_suites_do_not_count_as_new_or_missing() {
+        let skipped = SuiteReport {
+            suite: "runtime_hotpath".to_string(),
+            skipped: Some("no artifacts".to_string()),
+            cases: Vec::new(),
+        };
+        // Baseline measured the suite; current skipped it: not Missing.
+        let baseline = report(
+            "quick",
+            vec![suite("runtime_hotpath", vec![case("a", 1.0, None)])],
+        );
+        let current = report("quick", vec![skipped.clone()]);
+        let cmp = compare(&current, &baseline, 10.0).unwrap();
+        assert_eq!(cmp.n_missing, 0);
+        // Baseline skipped it; current measured it: not New.
+        let cmp = compare(
+            &report("quick", vec![suite("runtime_hotpath", vec![case("a", 1.0, None)])]),
+            &report("quick", vec![skipped]),
+            10.0,
+        )
+        .unwrap();
+        assert_eq!(cmp.n_new, 0);
+        assert_eq!(cmp.rows.len(), 0);
+    }
+
+    #[test]
+    fn zero_time_baseline_cannot_regress() {
+        let baseline = report("quick", vec![suite("s", vec![case("a", 0.0, None)])]);
+        let current = report("quick", vec![suite("s", vec![case("a", 5.0, None)])]);
+        let cmp = compare(&current, &baseline, 10.0).unwrap();
+        assert_eq!(cmp.n_regressed, 0);
+        assert_eq!(cmp.n_passed, 1);
+    }
+
+    #[test]
+    fn degenerate_default_tolerance_is_rejected() {
+        let rep = report("quick", vec![suite("s", vec![case("a", 1.0, None)])]);
+        assert!(compare(&rep, &rep, -1.0).is_err());
+        assert!(compare(&rep, &rep, f64::NAN).is_err());
+        assert!(compare(&rep, &rep, 0.0).is_ok());
+    }
+}

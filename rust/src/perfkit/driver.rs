@@ -1,0 +1,185 @@
+//! The shared bench driver: the `wise-share bench` subcommand and every
+//! thin `cargo bench` wrapper funnel through [`run`], so a suite measures
+//! and records identically no matter which entry point launched it.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::compare::compare;
+use super::registry::{self, Profile, Suite};
+use super::report::{BenchReport, EnvInfo};
+
+/// Default `--max-regress` gate, percent growth of a case's `min_s`.
+pub const DEFAULT_MAX_REGRESS_PCT: f64 = 10.0;
+
+/// One bench invocation, CLI-shaped.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Suites to run; empty ⇒ all registered suites.
+    pub suites: Vec<String>,
+    pub profile: Profile,
+    /// Write the schema-versioned JSON report here.
+    pub out: Option<PathBuf>,
+    /// Compare against this previously-recorded report and gate.
+    pub baseline: Option<PathBuf>,
+    pub max_regress_pct: f64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            suites: Vec::new(),
+            profile: Profile::Full,
+            out: None,
+            baseline: None,
+            max_regress_pct: DEFAULT_MAX_REGRESS_PCT,
+        }
+    }
+}
+
+/// Run the selected suites, emit the report, gate against the baseline.
+///
+/// Ordering matters for CI forensics: the JSON artifact is written
+/// *before* the emptiness check and the regression gate run, so a failing
+/// job still uploads what it measured.
+pub fn run(cfg: &RunConfig) -> Result<BenchReport> {
+    let suites: Vec<Suite> = if cfg.suites.is_empty() {
+        registry::all()
+    } else {
+        for (i, n) in cfg.suites.iter().enumerate() {
+            if cfg.suites[..i].contains(n) {
+                // A doubled selection would record the suite twice and
+                // corrupt baseline lookup (duplicate case names).
+                bail!("suite {n:?} listed more than once");
+            }
+        }
+        cfg.suites
+            .iter()
+            .map(|n| registry::by_name_or_err(n))
+            .collect::<Result<_>>()?
+    };
+    let mut reports = Vec::new();
+    for s in suites {
+        println!("== {} [{}] — {} ==", s.name, cfg.profile.name(), s.description);
+        let rep = (s.run)(cfg.profile);
+        if let Some(reason) = &rep.skipped {
+            println!("SKIPPED {}: {reason}", s.name);
+        }
+        println!();
+        reports.push(rep);
+    }
+    let report = BenchReport { env: EnvInfo::capture(cfg.profile), suites: reports };
+    if let Some(path) = &cfg.out {
+        report.save(path)?;
+        println!(
+            "bench report -> {} ({} cases, profile {}, sha {})",
+            path.display(),
+            report.n_cases(),
+            report.env.profile,
+            report.env.git_sha.as_deref().unwrap_or("unset"),
+        );
+    }
+    if report.suites.iter().all(|s| s.skipped.is_some()) {
+        // An explicitly-selected suite that cannot run here (e.g.
+        // `--suite runtime_hotpath` offline) is a recorded skip, not a
+        // failure. CI's artifact gate (`bench --check`) still rejects an
+        // all-skipped report where measurements are expected.
+        println!("note: every selected suite skipped in this environment — nothing measured");
+    } else {
+        report.check()?;
+    }
+    if let Some(base_path) = &cfg.baseline {
+        let baseline = BenchReport::load(base_path)?;
+        baseline
+            .check()
+            .with_context(|| format!("baseline {} failed validation", base_path.display()))?;
+        let cmp = compare(&report, &baseline, cfg.max_regress_pct)?;
+        print!("{}", cmp.render());
+        cmp.gate()?;
+    }
+    Ok(report)
+}
+
+/// Validate a previously-emitted report file — CI's malformed/empty gate
+/// on the `BENCH_ci.json` artifact.
+pub fn check_file(path: &Path) -> Result<()> {
+    let report = BenchReport::load(path)?;
+    report
+        .check()
+        .with_context(|| format!("bench report {} failed validation", path.display()))?;
+    let skipped = report.suites.iter().filter(|s| s.skipped.is_some()).count();
+    println!(
+        "OK: {} — {} suites ({} skipped), {} cases, profile {}",
+        path.display(),
+        report.suites.len(),
+        skipped,
+        report.n_cases(),
+        report.env.profile,
+    );
+    Ok(())
+}
+
+/// Entry point for the thin `cargo bench` wrapper binaries: run one named
+/// suite with the perfkit flags passed after `--`, e.g.
+/// `cargo bench --bench scale -- --profile quick --out BENCH_scale.json`.
+pub fn bench_main(suite: &'static str) -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut cfg = RunConfig { suites: vec![suite.to_string()], ..RunConfig::default() };
+    let mut it = argv.iter();
+    while let Some(flag) = it.next() {
+        // Tolerate libtest-style flags cargo may forward to bench targets.
+        if flag == "--bench" {
+            continue;
+        }
+        let value = it
+            .next()
+            .with_context(|| format!("bench flag {flag} needs a value"))?;
+        match flag.as_str() {
+            "--profile" => cfg.profile = Profile::parse(value)?,
+            "--out" => cfg.out = Some(PathBuf::from(value)),
+            "--baseline" => cfg.baseline = Some(PathBuf::from(value)),
+            "--max-regress" => {
+                cfg.max_regress_pct = value
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("--max-regress {value:?}: {e}"))?
+            }
+            other => bail!(
+                "unknown bench flag {other:?} (known: --profile, --out, --baseline, \
+                 --max-regress)"
+            ),
+        }
+    }
+    run(&cfg).map(|_| ())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_suite_is_rejected_before_anything_runs() {
+        let cfg = RunConfig { suites: vec!["bogus".to_string()], ..RunConfig::default() };
+        let err = run(&cfg).unwrap_err().to_string();
+        assert!(err.contains("unknown bench suite"), "{err}");
+    }
+
+    #[test]
+    fn duplicate_suite_selection_is_rejected() {
+        let cfg = RunConfig {
+            suites: vec!["scale".to_string(), "scale".to_string()],
+            ..RunConfig::default()
+        };
+        let err = run(&cfg).unwrap_err().to_string();
+        assert!(err.contains("listed more than once"), "{err}");
+    }
+
+    #[test]
+    fn default_config_targets_all_suites_at_full() {
+        let cfg = RunConfig::default();
+        assert!(cfg.suites.is_empty());
+        assert_eq!(cfg.profile, Profile::Full);
+        assert_eq!(cfg.max_regress_pct, DEFAULT_MAX_REGRESS_PCT);
+        assert!(cfg.out.is_none() && cfg.baseline.is_none());
+    }
+}

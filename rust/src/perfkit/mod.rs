@@ -1,0 +1,43 @@
+//! `perfkit` — machine-readable benchmarking: suite registry, environment
+//! capture, schema-versioned JSON reports, and baseline regression gates
+//! (DESIGN.md §12).
+//!
+//! Before this subsystem the six `cargo bench` targets printed one-line
+//! stats to stdout and the numbers died in scrollback — four PRs in, the
+//! repo's perf trajectory was still empty. perfkit turns a bench run into
+//! a recorded, gateable artifact:
+//!
+//! 1. **Registry** ([`registry`]) — each bench target's body lives here as
+//!    a [`Suite`] of recorded cases; the `benches/*.rs` files are thin
+//!    wrappers over [`bench_main`]. Every suite runs at two [`Profile`]s:
+//!    `full` (the paper-scale developer run) and `quick` (the CI smoke
+//!    variant that finishes in seconds).
+//! 2. **Report** ([`report`]) — [`EnvInfo`] capture (threads, profile,
+//!    git SHA from `GITHUB_SHA`/`GIT_SHA`) plus lossless JSON
+//!    (de)serialization of every [`crate::util::bench::BenchStats`] under
+//!    the [`report::SCHEMA`] tag, via the first-party `util::json`.
+//! 3. **Compare** ([`compare`]) — per-case regression verdicts against a
+//!    previously-recorded report, gating on `min_s` with per-case
+//!    tolerances; [`Comparison::gate`] turns regressions into a nonzero
+//!    process exit.
+//! 4. **Driver** ([`driver`]) — the shared `wise-share bench` /
+//!    `cargo bench` entry point: run suites, write `BENCH_<sha>.json`,
+//!    validate (`--check`), and gate (`--baseline --max-regress`).
+//!
+//! CI runs the quick profile on every push (`bench-smoke` job) and
+//! uploads the JSON as a workflow artifact — the perf trajectory the
+//! ROADMAP asks the repo to accumulate.
+
+pub mod compare;
+pub mod driver;
+pub mod registry;
+pub mod report;
+pub mod suites;
+
+pub use compare::{compare, CaseVerdict, Comparison, Verdict};
+pub use driver::{bench_main, check_file, run, RunConfig, DEFAULT_MAX_REGRESS_PCT};
+pub use registry::{
+    all, by_name_or_err, CaseStats, Profile, Recorder, Suite, SuiteReport,
+    SINGLE_SHOT_TOLERANCE_PCT, SUITE_NAMES,
+};
+pub use report::{BenchReport, EnvInfo, SCHEMA};

@@ -1,0 +1,239 @@
+//! The suite registry: every `cargo bench` target registers its cases
+//! here as a [`Suite`], so the `wise-share bench` subcommand (and CI's
+//! `bench-smoke` job) can run the exact same code the bench binaries
+//! wrap and record the results machine-readably.
+
+use anyhow::{bail, Result};
+
+use crate::util::bench::{bench, bench_once, BenchStats};
+
+use super::suites;
+
+/// How big a suite run should be.
+///
+/// `Full` is the developer profile — the paper-scale workloads the bench
+/// binaries have always run. `Quick` is the CI smoke profile: the same
+/// code paths at sizes that finish in seconds, so the perf trajectory
+/// gets a data point on every push without monopolizing a runner.
+/// Case names embed the sizes that differ, so a quick report is never
+/// silently compared against a full baseline case.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Profile {
+    Quick,
+    Full,
+}
+
+impl Profile {
+    pub fn parse(s: &str) -> Result<Profile> {
+        match s {
+            "quick" => Ok(Profile::Quick),
+            "full" => Ok(Profile::Full),
+            other => bail!("unknown bench profile {other:?} (known: quick, full)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Profile::Quick => "quick",
+            Profile::Full => "full",
+        }
+    }
+
+    /// Pick a profile-dependent knob (iteration counts, trace sizes).
+    pub fn pick<T>(self, quick: T, full: T) -> T {
+        match self {
+            Profile::Quick => quick,
+            Profile::Full => full,
+        }
+    }
+}
+
+/// One recorded case: the measured stats plus an optional per-case
+/// regression tolerance. `None` means the gate's `--max-regress` default
+/// applies; suites set an explicit tolerance on wall-clock-noisy cases
+/// (e.g. parallel-pool speedups, which vary with the runner's core count).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CaseStats {
+    pub stats: BenchStats,
+    pub max_regress_pct: Option<f64>,
+}
+
+/// Everything one suite produced in one run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SuiteReport {
+    pub suite: String,
+    /// `Some(reason)` when the suite cannot run in this environment (e.g.
+    /// PJRT artifacts absent); `cases` is empty then. A skip is not a
+    /// failure — the report records it so the gap is visible.
+    pub skipped: Option<String>,
+    pub cases: Vec<CaseStats>,
+}
+
+/// Default regression tolerance stamped on single-sample cases
+/// (`iters <= 1`, i.e. `Recorder::once` and 1-iteration benches): one
+/// wall-clock sample of a seconds-scale end-to-end run on a shared
+/// runner routinely swings past the 10% CLI default, so these cases
+/// record their own headroom in the report instead of flaking every
+/// quick-profile baseline comparison. `Recorder::tolerance` overrides.
+pub const SINGLE_SHOT_TOLERANCE_PCT: f64 = 50.0;
+
+/// Collects [`CaseStats`] as a suite body runs its cases.
+pub struct Recorder {
+    suite: &'static str,
+    cases: Vec<CaseStats>,
+}
+
+impl Recorder {
+    pub fn new(suite: &'static str) -> Recorder {
+        Recorder { suite, cases: Vec::new() }
+    }
+
+    fn push(&mut self, stats: BenchStats) -> BenchStats {
+        let max_regress_pct =
+            if stats.iters <= 1 { Some(SINGLE_SHOT_TOLERANCE_PCT) } else { None };
+        self.cases.push(CaseStats { stats: stats.clone(), max_regress_pct });
+        stats
+    }
+
+    /// Run [`bench`] (warm-up + `iters` timed calls) and record the case.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, iters: usize, f: F) -> BenchStats {
+        let stats = bench(name, iters, f);
+        self.push(stats)
+    }
+
+    /// Run [`bench_once`] (one timed call, no warm-up) and record the case.
+    pub fn once<F: FnOnce()>(&mut self, name: &str, f: F) -> BenchStats {
+        let stats = bench_once(name, f);
+        self.push(stats)
+    }
+
+    /// Set the regression tolerance of the most recently recorded case.
+    pub fn tolerance(&mut self, max_regress_pct: f64) {
+        let case = self
+            .cases
+            .last_mut()
+            .expect("tolerance() must follow a recorded case");
+        case.max_regress_pct = Some(max_regress_pct);
+    }
+
+    /// Abandon the suite with a reason (environment cannot run it).
+    pub fn skip(self, reason: String) -> SuiteReport {
+        SuiteReport { suite: self.suite.to_string(), skipped: Some(reason), cases: Vec::new() }
+    }
+
+    pub fn finish(self) -> SuiteReport {
+        SuiteReport { suite: self.suite.to_string(), skipped: None, cases: self.cases }
+    }
+}
+
+/// One registered benchmark suite. `run` executes every case at the given
+/// profile; suites that cannot run here return a skipped report instead
+/// of failing (see [`Recorder::skip`]).
+pub struct Suite {
+    pub name: &'static str,
+    pub description: &'static str,
+    pub run: fn(Profile) -> SuiteReport,
+}
+
+/// Registered suite names, in registry (execution) order — one per
+/// `cargo bench` target.
+pub const SUITE_NAMES: [&str; 7] = [
+    "tables",
+    "figures",
+    "ablations",
+    "sched_overhead",
+    "runtime_hotpath",
+    "campaign_throughput",
+    "scale",
+];
+
+/// Every registered suite, in [`SUITE_NAMES`] order.
+pub fn all() -> Vec<Suite> {
+    vec![
+        suites::tables::suite(),
+        suites::figures::suite(),
+        suites::ablations::suite(),
+        suites::sched_overhead::suite(),
+        suites::runtime_hotpath::suite(),
+        suites::campaign_throughput::suite(),
+        suites::scale::suite(),
+    ]
+}
+
+/// Look a suite up by name, with the canonical unknown-name error.
+pub fn by_name_or_err(name: &str) -> Result<Suite> {
+    all()
+        .into_iter()
+        .find(|s| s.name == name)
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown bench suite {name:?} (known: {})",
+                SUITE_NAMES.join(", ")
+            )
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_matches_names_and_resolves() {
+        let suites = all();
+        assert_eq!(suites.len(), SUITE_NAMES.len());
+        for (s, name) in suites.iter().zip(SUITE_NAMES) {
+            assert_eq!(s.name, name);
+            assert!(!s.description.is_empty());
+        }
+        for name in SUITE_NAMES {
+            assert!(by_name_or_err(name).is_ok());
+        }
+        let err = by_name_or_err("bogus").unwrap_err().to_string();
+        assert!(err.contains("unknown bench suite"), "{err}");
+        assert!(err.contains("sched_overhead"), "{err}");
+    }
+
+    #[test]
+    fn recorder_collects_cases_and_tolerances() {
+        let mut rec = Recorder::new("demo");
+        rec.bench("demo/a", 4, || {
+            std::hint::black_box(2 + 2);
+        });
+        rec.once("demo/b", || {
+            std::hint::black_box(3 + 3);
+        });
+        rec.tolerance(80.0);
+        rec.bench("demo/c", 1, || {
+            std::hint::black_box(4 + 4);
+        });
+        let rep = rec.finish();
+        assert_eq!(rep.suite, "demo");
+        assert!(rep.skipped.is_none());
+        assert_eq!(rep.cases.len(), 3);
+        assert_eq!(rep.cases[0].stats.name, "demo/a");
+        assert_eq!(rep.cases[0].stats.iters, 4);
+        // Multi-sample micro-benches gate at the CLI default...
+        assert_eq!(rep.cases[0].max_regress_pct, None);
+        // ...an explicit tolerance overrides the single-shot stamp...
+        assert_eq!(rep.cases[1].max_regress_pct, Some(80.0));
+        // ...and single-sample cases carry their own noise headroom.
+        assert_eq!(rep.cases[2].max_regress_pct, Some(SINGLE_SHOT_TOLERANCE_PCT));
+    }
+
+    #[test]
+    fn recorder_skip_produces_empty_report() {
+        let rep = Recorder::new("demo").skip("no artifacts".to_string());
+        assert_eq!(rep.skipped.as_deref(), Some("no artifacts"));
+        assert!(rep.cases.is_empty());
+    }
+
+    #[test]
+    fn profile_parse_and_pick() {
+        assert_eq!(Profile::parse("quick").unwrap(), Profile::Quick);
+        assert_eq!(Profile::parse("full").unwrap(), Profile::Full);
+        assert!(Profile::parse("fast").is_err());
+        assert_eq!(Profile::Quick.pick(1, 3), 1);
+        assert_eq!(Profile::Full.pick(1, 3), 3);
+        assert_eq!(Profile::Full.name(), "full");
+    }
+}

@@ -1,0 +1,394 @@
+//! Machine-readable bench reports: environment capture plus
+//! schema-versioned JSON (de)serialization of every suite's
+//! [`BenchStats`] through the first-party [`Json`] layer.
+//!
+//! The emitted document is the `BENCH_<sha>.json` perf-trajectory
+//! artifact (DESIGN.md §12): CI's `bench-smoke` job uploads one per push,
+//! and `wise-share bench --baseline FILE` gates regressions against one.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::bench::BenchStats;
+use crate::util::json::Json;
+
+use super::registry::{CaseStats, Profile, SuiteReport};
+
+/// Schema tag of the emitted document. Bump on any column/semantics
+/// change — consumers (and [`BenchReport::from_json`]) pin on it instead
+/// of guessing from the field set.
+pub const SCHEMA: &str = "wise-share-bench-v1";
+
+/// Where a report was measured. Captured at run time, recorded verbatim —
+/// comparisons across different environments are the reader's judgment
+/// call, but at least the report says so.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EnvInfo {
+    /// Profile the suites ran at (`quick` / `full`). Comparing across
+    /// profiles is meaningless and [`super::compare`] rejects it.
+    pub profile: String,
+    /// Worker threads available to the process.
+    pub threads: usize,
+    /// Commit under test: `GITHUB_SHA` (Actions) or `GIT_SHA`, if set.
+    pub git_sha: Option<String>,
+    pub os: String,
+}
+
+impl EnvInfo {
+    pub fn capture(profile: Profile) -> EnvInfo {
+        EnvInfo {
+            profile: profile.name().to_string(),
+            threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            git_sha: std::env::var("GITHUB_SHA")
+                .ok()
+                .or_else(|| std::env::var("GIT_SHA").ok())
+                .filter(|s| !s.is_empty()),
+            os: std::env::consts::OS.to_string(),
+        }
+    }
+}
+
+/// A full bench run: environment plus one [`SuiteReport`] per suite.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchReport {
+    pub env: EnvInfo,
+    pub suites: Vec<SuiteReport>,
+}
+
+impl BenchReport {
+    /// Total measured cases across non-skipped suites.
+    pub fn n_cases(&self) -> usize {
+        self.suites.iter().map(|s| s.cases.len()).sum()
+    }
+
+    /// Look a case up by `(suite, case-name)`.
+    pub fn find(&self, suite: &str, case: &str) -> Option<&CaseStats> {
+        self.suites
+            .iter()
+            .find(|s| s.suite == suite)?
+            .cases
+            .iter()
+            .find(|c| c.stats.name == case)
+    }
+
+    /// CI gate on the artifact itself: parseable is not enough — the
+    /// report must contain at least one measured case, every stat must be
+    /// a finite non-negative ordered quantile set, and case names must be
+    /// unique per suite (duplicates would corrupt baseline lookup).
+    pub fn check(&self) -> Result<()> {
+        if self.suites.is_empty() {
+            bail!("bench report has no suites");
+        }
+        if self.n_cases() == 0 {
+            let reasons: Vec<String> = self
+                .suites
+                .iter()
+                .filter_map(|s| s.skipped.as_ref().map(|r| format!("{}: {r}", s.suite)))
+                .collect();
+            bail!(
+                "bench report has no measured cases (skipped suites: {})",
+                if reasons.is_empty() { "none".to_string() } else { reasons.join("; ") }
+            );
+        }
+        let mut suite_names = std::collections::BTreeSet::new();
+        for s in &self.suites {
+            if !suite_names.insert(s.suite.as_str()) {
+                bail!("report records suite {:?} twice", s.suite);
+            }
+            if s.skipped.is_some() && !s.cases.is_empty() {
+                bail!("suite {:?} is both skipped and has recorded cases", s.suite);
+            }
+            let mut seen = std::collections::BTreeSet::new();
+            for c in &s.cases {
+                let st = &c.stats;
+                if st.name.is_empty() {
+                    bail!("suite {:?} has a case with an empty name", s.suite);
+                }
+                if !seen.insert(st.name.as_str()) {
+                    bail!("suite {:?} records case {:?} twice", s.suite, st.name);
+                }
+                let vals = [st.mean_s, st.min_s, st.p50_s, st.p95_s];
+                if st.iters == 0 || vals.iter().any(|v| !v.is_finite() || *v < 0.0) {
+                    bail!("case {:?} has degenerate stats: {st:?}", st.name);
+                }
+                if st.min_s > st.p50_s || st.p50_s > st.p95_s {
+                    bail!("case {:?} has unordered quantiles: {st:?}", st.name);
+                }
+                if let Some(pct) = c.max_regress_pct {
+                    if !pct.is_finite() || pct < 0.0 {
+                        bail!("case {:?} has a degenerate tolerance {pct}", st.name);
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    // ----------------------------------------------------------- JSON
+
+    pub fn to_json(&self) -> Json {
+        let mut doc = BTreeMap::new();
+        doc.insert("schema".to_string(), Json::from(SCHEMA));
+        let mut env = BTreeMap::new();
+        env.insert("profile".to_string(), Json::from(self.env.profile.as_str()));
+        env.insert("threads".to_string(), Json::from(self.env.threads));
+        env.insert(
+            "git_sha".to_string(),
+            match &self.env.git_sha {
+                Some(sha) => Json::from(sha.as_str()),
+                None => Json::Null,
+            },
+        );
+        env.insert("os".to_string(), Json::from(self.env.os.as_str()));
+        doc.insert("env".to_string(), Json::Obj(env));
+        let suites: Vec<Json> = self
+            .suites
+            .iter()
+            .map(|s| {
+                let mut m = BTreeMap::new();
+                m.insert("suite".to_string(), Json::from(s.suite.as_str()));
+                m.insert(
+                    "skipped".to_string(),
+                    match &s.skipped {
+                        Some(r) => Json::from(r.as_str()),
+                        None => Json::Null,
+                    },
+                );
+                let cases: Vec<Json> = s.cases.iter().map(case_to_json).collect();
+                m.insert("cases".to_string(), Json::Arr(cases));
+                Json::Obj(m)
+            })
+            .collect();
+        doc.insert("suites".to_string(), Json::Arr(suites));
+        Json::Obj(doc)
+    }
+
+    pub fn from_json(doc: &Json) -> Result<BenchReport> {
+        let schema = doc.req("schema")?.as_str().context("schema must be a string")?;
+        if schema != SCHEMA {
+            bail!("unsupported bench schema {schema:?} (this build reads {SCHEMA:?})");
+        }
+        let env = doc.req("env")?;
+        let env = EnvInfo {
+            profile: env
+                .req("profile")?
+                .as_str()
+                .context("env.profile must be a string")?
+                .to_string(),
+            threads: env
+                .req("threads")?
+                .as_u64()
+                .context("env.threads must be a non-negative integer")?
+                as usize,
+            git_sha: match env.get("git_sha") {
+                None | Some(Json::Null) => None,
+                Some(v) => Some(
+                    v.as_str().context("env.git_sha must be a string")?.to_string(),
+                ),
+            },
+            os: env.req("os")?.as_str().context("env.os must be a string")?.to_string(),
+        };
+        let suites = doc
+            .req("suites")?
+            .as_arr()
+            .context("suites must be an array")?
+            .iter()
+            .map(suite_from_json)
+            .collect::<Result<Vec<SuiteReport>>>()?;
+        Ok(BenchReport { env, suites })
+    }
+
+    pub fn load(path: &Path) -> Result<BenchReport> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading bench report {}", path.display()))?;
+        let doc = Json::parse(&text)
+            .with_context(|| format!("parsing bench report {}", path.display()))?;
+        Self::from_json(&doc)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+            .with_context(|| format!("writing bench report {}", path.display()))
+    }
+}
+
+fn case_to_json(c: &CaseStats) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("name".to_string(), Json::from(c.stats.name.as_str()));
+    m.insert("iters".to_string(), Json::from(c.stats.iters));
+    m.insert("mean_s".to_string(), Json::Num(c.stats.mean_s));
+    m.insert("min_s".to_string(), Json::Num(c.stats.min_s));
+    m.insert("p50_s".to_string(), Json::Num(c.stats.p50_s));
+    m.insert("p95_s".to_string(), Json::Num(c.stats.p95_s));
+    if let Some(pct) = c.max_regress_pct {
+        m.insert("max_regress_pct".to_string(), Json::Num(pct));
+    }
+    Json::Obj(m)
+}
+
+fn case_from_json(j: &Json) -> Result<CaseStats> {
+    let name = j.req("name")?.as_str().context("case name must be a string")?;
+    let num = |key: &str| -> Result<f64> {
+        j.req(key)?
+            .as_f64()
+            .with_context(|| format!("case {name:?}: {key} must be a number"))
+    };
+    Ok(CaseStats {
+        stats: BenchStats {
+            name: name.to_string(),
+            iters: j
+                .req("iters")?
+                .as_u64()
+                .with_context(|| format!("case {name:?}: iters"))? as usize,
+            mean_s: num("mean_s")?,
+            min_s: num("min_s")?,
+            p50_s: num("p50_s")?,
+            p95_s: num("p95_s")?,
+        },
+        max_regress_pct: match j.get("max_regress_pct") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(
+                v.as_f64()
+                    .with_context(|| format!("case {name:?}: max_regress_pct"))?,
+            ),
+        },
+    })
+}
+
+fn suite_from_json(j: &Json) -> Result<SuiteReport> {
+    let suite = j.req("suite")?.as_str().context("suite name must be a string")?;
+    Ok(SuiteReport {
+        suite: suite.to_string(),
+        skipped: match j.get("skipped") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(
+                v.as_str()
+                    .with_context(|| format!("suite {suite:?}: skipped must be a string"))?
+                    .to_string(),
+            ),
+        },
+        cases: j
+            .req("cases")?
+            .as_arr()
+            .with_context(|| format!("suite {suite:?}: cases must be an array"))?
+            .iter()
+            .map(case_from_json)
+            .collect::<Result<_>>()?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn case(name: &str, min_s: f64) -> CaseStats {
+        CaseStats {
+            stats: BenchStats {
+                name: name.to_string(),
+                iters: 5,
+                mean_s: min_s * 1.1,
+                min_s,
+                p50_s: min_s * 1.05,
+                p95_s: min_s * 1.2,
+            },
+            max_regress_pct: None,
+        }
+    }
+
+    fn report() -> BenchReport {
+        BenchReport {
+            env: EnvInfo {
+                profile: "quick".to_string(),
+                threads: 8,
+                git_sha: Some("abc123".to_string()),
+                os: "linux".to_string(),
+            },
+            suites: vec![
+                SuiteReport {
+                    suite: "tables".to_string(),
+                    skipped: None,
+                    cases: vec![case("table2/physical-30-jobs/FIFO", 0.02), {
+                        let mut c = case("table2/physical-30-jobs/SJF", 0.018);
+                        c.max_regress_pct = Some(25.0);
+                        c
+                    }],
+                },
+                SuiteReport {
+                    suite: "runtime_hotpath".to_string(),
+                    skipped: Some("artifacts not built".to_string()),
+                    cases: Vec::new(),
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_is_lossless() {
+        let rep = report();
+        let text = rep.to_json().to_string();
+        assert!(text.starts_with('{'));
+        let back = BenchReport::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(rep, back);
+        assert_eq!(back.n_cases(), 2);
+        assert!(back.find("tables", "table2/physical-30-jobs/SJF").is_some());
+        assert_eq!(
+            back.find("tables", "table2/physical-30-jobs/SJF")
+                .unwrap()
+                .max_regress_pct,
+            Some(25.0)
+        );
+        assert!(back.find("tables", "nope").is_none());
+        assert!(back.find("runtime_hotpath", "anything").is_none());
+    }
+
+    #[test]
+    fn schema_tag_is_enforced() {
+        let mut doc = report().to_json();
+        if let Json::Obj(m) = &mut doc {
+            m.insert("schema".to_string(), Json::from("wise-share-bench-v999"));
+        }
+        let err = BenchReport::from_json(&doc).unwrap_err().to_string();
+        assert!(err.contains("unsupported bench schema"), "{err}");
+        assert!(err.contains(SCHEMA), "{err}");
+    }
+
+    #[test]
+    fn check_accepts_good_and_rejects_degenerate_reports() {
+        report().check().unwrap();
+        // Empty / all-skipped reports must fail the CI gate.
+        let mut rep = report();
+        rep.suites[0].cases.clear();
+        let err = rep.check().unwrap_err().to_string();
+        assert!(err.contains("no measured cases"), "{err}");
+        assert!(err.contains("artifacts not built"), "{err}");
+        // Duplicate case names corrupt baseline lookup.
+        let mut rep = report();
+        let dup = rep.suites[0].cases[0].clone();
+        rep.suites[0].cases.push(dup);
+        assert!(rep.check().unwrap_err().to_string().contains("twice"));
+        // So do duplicate suite names (e.g. a doubled --suite selection).
+        let mut rep = report();
+        let dup_suite = rep.suites[0].clone();
+        rep.suites.push(dup_suite);
+        let err = rep.check().unwrap_err().to_string();
+        assert!(err.contains("suite \"tables\" twice"), "{err}");
+        // Non-finite stats are malformed.
+        let mut rep = report();
+        rep.suites[0].cases[0].stats.mean_s = f64::NAN;
+        assert!(rep.check().is_err());
+        // Unordered quantiles are malformed.
+        let mut rep = report();
+        rep.suites[0].cases[0].stats.p50_s = rep.suites[0].cases[0].stats.p95_s * 2.0;
+        assert!(rep.check().unwrap_err().to_string().contains("unordered"));
+    }
+
+    #[test]
+    fn env_capture_reports_this_machine() {
+        let env = EnvInfo::capture(Profile::Quick);
+        assert_eq!(env.profile, "quick");
+        assert!(env.threads >= 1);
+        assert!(!env.os.is_empty());
+    }
+}

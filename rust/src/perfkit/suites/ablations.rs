@@ -1,0 +1,100 @@
+//! `ablations` suite — SJF-BSBF's three design choices, each disabled in
+//! isolation on the contended trace (DESIGN.md per-experiment index):
+//!
+//! 1. **Theorem-1 gate** off → accept every memory-feasible share.
+//! 2. **Batch-size sweep** off → no gradient accumulation.
+//! 3. **Benefit sorting** off → arbitrary partner order (Alg. 1 line 14).
+//!
+//! Quick profile runs 120 jobs (named in the cases) and skips the quality
+//! assertion — its 0.98 bound is calibrated on the 240-job trace.
+
+use crate::cluster::ClusterConfig;
+use crate::jobs::trace::{self, TraceConfig};
+use crate::jobs::JobSpec;
+use crate::perf::interference::InterferenceModel;
+use crate::sched::SjfBsbf;
+use crate::sim::{engine, metrics, Policy};
+
+use super::super::registry::{Profile, Recorder, Suite, SuiteReport};
+
+pub fn suite() -> Suite {
+    Suite {
+        name: "ablations",
+        description: "SJF-BSBF design-choice ablations on the contended trace",
+        run,
+    }
+}
+
+fn run(profile: Profile) -> SuiteReport {
+    let mut rec = Recorder::new("ablations");
+    let n = profile.pick(120, 240);
+    let mut tcfg = TraceConfig::simulation(n, 1);
+    tcfg.load_factor = 1.5; // contended: sharing decisions matter
+    let jobs = trace::generate(&tcfg);
+
+    println!("SJF-BSBF ablations, {n} jobs @ 1.5x density, 64 GPUs:\n");
+    let full = variant(&mut rec, n, "full-paper", SjfBsbf::default(), &jobs);
+    let no_gate = variant(
+        &mut rec,
+        n,
+        "no-theorem1-gate",
+        SjfBsbf { theorem1_gate: false, ..SjfBsbf::default() },
+        &jobs,
+    );
+    let no_sweep = variant(
+        &mut rec,
+        n,
+        "no-batch-size-sweep",
+        SjfBsbf { sweep_batches: false, ..SjfBsbf::default() },
+        &jobs,
+    );
+    let no_sort = variant(
+        &mut rec,
+        n,
+        "no-benefit-sorting",
+        SjfBsbf { sort_by_benefit: false, ..SjfBsbf::default() },
+        &jobs,
+    );
+
+    println!(
+        "\ndeltas vs full: gate {:+.1}%, sweep {:+.1}%, sort {:+.1}%",
+        (no_gate / full - 1.0) * 100.0,
+        (no_sweep / full - 1.0) * 100.0,
+        (no_sort / full - 1.0) * 100.0
+    );
+    if profile == Profile::Full {
+        assert!(
+            no_gate >= full * 0.98,
+            "removing the Theorem-1 gate should not improve BSBF materially"
+        );
+    }
+    rec.finish()
+}
+
+fn variant(
+    rec: &mut Recorder,
+    n_jobs: usize,
+    name: &str,
+    mut policy: SjfBsbf,
+    jobs: &[JobSpec],
+) -> f64 {
+    let mut avg_jct = 0.0;
+    rec.once(&format!("ablations/{n_jobs}-jobs/{name}"), || {
+        let out = engine::run(
+            ClusterConfig::simulation(),
+            jobs,
+            InterferenceModel::new(),
+            &mut policy as &mut dyn Policy,
+        )
+        .expect("simulation failed");
+        let s = metrics::summarize(name, &out.jobs, out.makespan_s);
+        println!(
+            "{name:<28} avg JCT {:>7.3} hrs   queue {:>6.3} hrs   makespan {:>7.2} hrs",
+            s.all.avg_jct_s / 3600.0,
+            s.all.avg_queue_s / 3600.0,
+            s.makespan_s / 3600.0
+        );
+        avg_jct = s.all.avg_jct_s;
+    });
+    avg_jct
+}

@@ -1,0 +1,83 @@
+//! `campaign_throughput` suite — scenario-sweep throughput on the
+//! multi-seed policy matrix shape every table/figure sweep uses:
+//!
+//! * **per-run-generation** — every run generates its own trace, the
+//!   pre-perfkit behavior (`ScenarioSpec::run`).
+//! * **shared-trace-serial** — the runner's hot path: one generation per
+//!   (cell, seed) group, shared across the policy axis via `Arc`.
+//! * **parallel-pool** — the same shared-trace matrix over the worker
+//!   pool; on an N-core box this should approach min(N, runs)× serial.
+//!
+//! Each case re-expands the matrix inside the timed closure so every
+//! iteration pays trace generation afresh (shared traces are memoized per
+//! expansion — reusing one expansion would time a warm cache only).
+
+use crate::campaign::{self, Axes, CampaignSpec};
+
+use super::super::registry::{Profile, Recorder, Suite, SuiteReport};
+
+pub fn suite() -> Suite {
+    Suite {
+        name: "campaign_throughput",
+        description: "campaign runner: trace sharing + worker-pool speedup",
+        run,
+    }
+}
+
+fn run(profile: Profile) -> SuiteReport {
+    let mut rec = Recorder::new("campaign_throughput");
+    let (n_jobs, n_seeds): (usize, u64) = profile.pick((30, 2), (120, 6));
+    let mut spec = CampaignSpec::new("bench");
+    spec.policies = vec!["SJF".to_string(), "SJF-BSBF".to_string()];
+    spec.axes = Axes {
+        load_factors: vec![1.0],
+        job_counts: vec![n_jobs],
+        gpu_counts: Vec::new(),
+        topologies: Vec::new(),
+        workloads: Vec::new(),
+        estimators: Vec::new(),
+        seeds: (1..=n_seeds).collect(),
+        jobs_scale_load_baseline: None,
+    };
+    let tag = format!("2pol-{n_seeds}seeds-{n_jobs}jobs");
+    let threads = campaign::default_threads();
+    let n_runs = campaign::expand(&spec).expect("valid spec").len();
+    println!(
+        "matrix: {n_runs} runs (2 policies x {n_seeds} seeds, {n_jobs} jobs), \
+         {threads} worker thread(s)"
+    );
+    let iters = profile.pick(1, 3);
+
+    let per_run = rec.bench(&format!("campaign/per-run-generation/{tag}"), iters, || {
+        let points = campaign::expand(&spec).expect("valid spec");
+        for p in &points {
+            p.scenario.run().expect("run succeeded");
+        }
+    });
+    let serial = rec.bench(&format!("campaign/shared-trace-serial/{tag}"), iters, || {
+        let points = campaign::expand(&spec).expect("valid spec");
+        let out = campaign::run_serial(&points);
+        assert!(out.iter().all(|o| o.summary.is_ok()));
+    });
+    let parallel = rec.bench(&format!("campaign/parallel-pool/{tag}"), iters, || {
+        let points = campaign::expand(&spec).expect("valid spec");
+        let out = campaign::run_parallel(&points, threads);
+        assert!(out.iter().all(|o| o.summary.is_ok()));
+    });
+    // Worker-pool wall time varies with the runner's core count — give
+    // the case headroom so a 2-core CI box doesn't trip the default gate.
+    rec.tolerance(100.0);
+    println!(
+        "trace-sharing speedup: {:.2}x (per-run mean {:.3}s -> shared mean {:.3}s)",
+        per_run.mean_s / serial.mean_s.max(1e-12),
+        per_run.mean_s,
+        serial.mean_s
+    );
+    println!(
+        "parallel speedup: {:.2}x (serial mean {:.3}s -> parallel mean {:.3}s)",
+        serial.mean_s / parallel.mean_s.max(1e-12),
+        serial.mean_s,
+        parallel.mean_s
+    );
+    rec.finish()
+}

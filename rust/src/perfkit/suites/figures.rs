@@ -1,0 +1,180 @@
+//! `figures` suite — regenerates every *figure* in the paper's evaluation
+//! and times each section end-to-end (single timed pass per section —
+//! these are whole-sweep regenerations, long enough to be stable):
+//!
+//! * **Fig. 2** — solo throughput vs (GPUs, batch) + §IV-B fit fidelity.
+//! * **Fig. 3** — paired throughput / ξ landscape vs CIFAR10.
+//! * **Fig. 4a/4b** — physical-workload JCT CDF + queueing by model.
+//! * **Fig. 5a/5b** — simulation JCT CDF + queueing (full profile).
+//! * **Fig. 6a**   — avg JCT vs workload intensity (full profile).
+//! * **Fig. 6b**   — avg JCT vs injected ξ (full profile).
+//!
+//! Output: CSV series (`name,x,y`) ready to plot, plus shape checks.
+
+use crate::cluster::ClusterConfig;
+use crate::jobs::trace::{self, TraceConfig};
+use crate::perf::fit;
+use crate::perf::interference::InterferenceModel;
+use crate::perf::profiles::{ModelKind, WorkloadProfile};
+use crate::report::csv_series;
+use crate::sched::{self, POLICY_NAMES};
+use crate::sim::{engine, metrics};
+
+use super::super::registry::{Profile, Recorder, Suite, SuiteReport};
+
+pub fn suite() -> Suite {
+    Suite {
+        name: "figures",
+        description: "paper Figs. 2-6 as CSV series, timing each regeneration",
+        run,
+    }
+}
+
+fn run(profile: Profile) -> SuiteReport {
+    let mut rec = Recorder::new("figures");
+    rec.once("figures/fig2-solo-throughput", fig2);
+    rec.once("figures/fig3-xi-landscape", fig3);
+    rec.once("figures/fig4-physical-cdf", || {
+        fig45("fig4", ClusterConfig::physical(), &TraceConfig::physical(1));
+    });
+    if profile == Profile::Full {
+        rec.once("figures/fig5-sim-240-cdf", || {
+            fig45("fig5", ClusterConfig::simulation(), &TraceConfig::simulation(240, 1));
+        });
+        rec.once("figures/fig6a-intensity-sweep", fig6a);
+        rec.once("figures/fig6b-xi-sweep", fig6b);
+    }
+    rec.finish()
+}
+
+fn fig2() {
+    println!("# Fig. 2: solo throughput (samples/s) vs batch, per model x GPUs");
+    for kind in ModelKind::ALL {
+        let prof = WorkloadProfile::get(kind);
+        for n in [1usize, 4, 8, 16] {
+            let pts: Vec<(f64, f64)> = [4u32, 8, 16, 32, 64]
+                .iter()
+                .filter(|&&b| prof.mem.mem_gb(b as f64) <= 11.0)
+                .map(|&b| (b as f64, prof.perf.throughput(b as f64, 1, n)))
+                .collect();
+            print!("{}", csv_series(&format!("fig2,{},{}gpu", kind.name(), n), &pts));
+        }
+        // §IV-B fidelity: fit Eq. 3 from the profile's own samples.
+        let samples: Vec<fit::Sample> = [2u32, 4, 8, 16]
+            .iter()
+            .map(|&b| fit::Sample {
+                batch: b as f64,
+                iter_time_s: prof.perf.comp.t_comp(b as f64),
+            })
+            .collect();
+        let fitted = fit::fit_comp(&samples).unwrap();
+        let obs: Vec<(f64, usize, f64)> = [(4.0, 4usize), (8.0, 8), (16.0, 16)]
+            .iter()
+            .map(|&(b, n)| (b, n, prof.perf.iter_time(b, 1, n)))
+            .collect();
+        let err = fit::relative_error(&prof.perf, &obs);
+        println!(
+            "# fit {}: alpha {:.4} beta {:.5} (rel-err vs profile {:.2}%)",
+            kind.name(),
+            fitted.alpha,
+            fitted.beta,
+            err * 100.0
+        );
+    }
+}
+
+fn fig3() {
+    println!("\n# Fig. 3: xi landscape for pairs vs CIFAR10 (and worst-case table)");
+    let xi = InterferenceModel::new();
+    let pts: Vec<(f64, f64)> = ModelKind::ALL
+        .iter()
+        .enumerate()
+        .map(|(i, &kind)| (i as f64, xi.xi(kind, ModelKind::Cifar10)))
+        .collect();
+    print!("{}", csv_series("fig3,vs-cifar10", &pts));
+    let mut worst: f64 = 0.0;
+    for a in ModelKind::ALL {
+        for b in ModelKind::ALL {
+            worst = worst.max(xi.xi(a, b));
+        }
+    }
+    println!("# worst pair xi = {worst:.2} (paper: ratios range up to ~6)");
+}
+
+fn fig45(label: &str, cluster: ClusterConfig, tcfg: &TraceConfig) {
+    println!("\n# {label}: JCT CDF (a) + queueing by model (b)");
+    let jobs = trace::generate(tcfg);
+    for name in POLICY_NAMES {
+        let mut p = sched::by_name(name).unwrap();
+        let out = engine::run(cluster, &jobs, InterferenceModel::new(), p.as_mut())
+            .expect("simulation failed");
+        let cdf = metrics::jct_cdf(&out.jobs);
+        let step = (cdf.len() / 16).max(1);
+        let pts: Vec<(f64, f64)> = cdf.iter().step_by(step).copied().collect();
+        print!("{}", csv_series(&format!("{label}a,{name}"), &pts));
+        let by: Vec<(f64, f64)> = metrics::queueing_by_model(&out.jobs)
+            .iter()
+            .enumerate()
+            .map(|(i, (_, q))| (i as f64, *q))
+            .collect();
+        print!("{}", csv_series(&format!("{label}b,{name}"), &by));
+    }
+}
+
+fn fig6a() {
+    println!("\n# Fig. 6a: avg JCT (hrs) vs workload intensity");
+    for name in POLICY_NAMES {
+        let mut pts = Vec::new();
+        for scale in [0.5, 1.0, 1.5, 2.0] {
+            let n_jobs = (240.0 * scale) as usize;
+            let mut tcfg = TraceConfig::simulation(n_jobs, 1);
+            tcfg.load_factor = scale;
+            let jobs = trace::generate(&tcfg);
+            let mut p = sched::by_name(name).unwrap();
+            let out = engine::run(
+                ClusterConfig::simulation(),
+                &jobs,
+                InterferenceModel::new(),
+                p.as_mut(),
+            )
+            .expect("simulation failed");
+            let s = metrics::summarize(name, &out.jobs, out.makespan_s);
+            pts.push((n_jobs as f64, s.all.avg_jct_s / 3600.0));
+        }
+        print!("{}", csv_series(&format!("fig6a,{name}"), &pts));
+    }
+}
+
+fn fig6b() {
+    println!("\n# Fig. 6b: avg JCT (hrs) vs injected xi, sharing policies");
+    let jobs = trace::generate(&TraceConfig::simulation(240, 1));
+    let mut ffs_at_20 = 0.0;
+    let mut bsbf_at_20 = 0.0;
+    for name in ["SJF-FFS", "SJF-BSBF"] {
+        let mut pts = Vec::new();
+        for xi in [1.0, 1.25, 1.5, 1.75, 2.0] {
+            let mut p = sched::by_name(name).unwrap();
+            let out = engine::run(
+                ClusterConfig::simulation(),
+                &jobs,
+                InterferenceModel::with_global(xi),
+                p.as_mut(),
+            )
+            .expect("simulation failed");
+            let s = metrics::summarize(name, &out.jobs, out.makespan_s);
+            pts.push((xi, s.all.avg_jct_s / 3600.0));
+            if xi == 2.0 {
+                if name == "SJF-FFS" {
+                    ffs_at_20 = s.all.avg_jct_s;
+                } else {
+                    bsbf_at_20 = s.all.avg_jct_s;
+                }
+            }
+        }
+        print!("{}", csv_series(&format!("fig6b,{name}"), &pts));
+    }
+    println!(
+        "# shape check @ xi=2.0: BSBF/FFS = {:.3} (paper: BSBF 8-13% lower)",
+        bsbf_at_20 / ffs_at_20
+    );
+}

@@ -1,0 +1,17 @@
+//! The registered benchmark suites — one module per `cargo bench` target.
+//!
+//! Each module exposes `suite() -> Suite`; the suite body is the code the
+//! corresponding `benches/*.rs` wrapper used to contain, parameterized by
+//! [`super::registry::Profile`] so CI can run a seconds-scale smoke
+//! variant of the exact same cases (`quick`) while developers keep the
+//! paper-scale runs (`full`). Case names embed any size that differs
+//! between profiles, so quick and full reports never alias in a baseline
+//! comparison.
+
+pub mod ablations;
+pub mod campaign_throughput;
+pub mod figures;
+pub mod runtime_hotpath;
+pub mod scale;
+pub mod sched_overhead;
+pub mod tables;

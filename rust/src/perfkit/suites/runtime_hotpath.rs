@@ -1,0 +1,73 @@
+//! `runtime_hotpath` suite — the PJRT execution hot path the physical
+//! coordinator drives: artifact compile time (one-off), grad_step latency
+//! per micro-batch variant, and the full gradient-accumulation iteration
+//! at several (batch, s) settings.
+//!
+//! This is the L3-side profile used in the §Perf pass (EXPERIMENTS.md).
+//! Requires `make artifacts`; when the artifacts are absent or the
+//! vendored `xla` stub cannot bring a PJRT client up (every CI runner,
+//! see DESIGN.md §4), the suite reports itself *skipped* instead of
+//! failing — same policy as the artifact-dependent tests in `runtime/`.
+
+use crate::runtime::executor::{TrainExecutor, TrainState};
+use crate::runtime::ArtifactSet;
+
+use super::super::registry::{Profile, Recorder, Suite, SuiteReport};
+
+pub fn suite() -> Suite {
+    Suite {
+        name: "runtime_hotpath",
+        description: "PJRT train-step hot path (needs `make artifacts`; skips offline)",
+        run,
+    }
+}
+
+fn run(profile: Profile) -> SuiteReport {
+    let mut rec = Recorder::new("runtime_hotpath");
+    let dir = ArtifactSet::default_dir();
+    if !dir.join("meta.json").exists() {
+        return rec.skip("artifacts not built (run `make artifacts`)".to_string());
+    }
+    let t0 = std::time::Instant::now();
+    let set = match ArtifactSet::load(dir) {
+        Ok(set) => set,
+        // The offline stub's PJRT client cannot come up; a corrupt
+        // artifact set surfaces the same way — the skip reason carries
+        // the error so the reader can tell which.
+        Err(e) => return rec.skip(format!("artifact load failed: {e:#}")),
+    };
+    println!(
+        "artifact load+compile (7 executables): {:.2}s (one-off per worker)",
+        t0.elapsed().as_secs_f64()
+    );
+    println!(
+        "model: {} params, vocab {}, seq {}",
+        set.meta.model.n_params, set.meta.model.vocab, set.meta.model.seq_len
+    );
+
+    let mut exec = TrainExecutor::new(&set, 1, 0.1);
+    let mut state: TrainState = match exec.init_state() {
+        Ok(s) => s,
+        Err(e) => return rec.skip(format!("PJRT execution unavailable: {e:#}")),
+    };
+
+    // grad_step latency per compiled micro-batch variant.
+    for &mb in &set.meta.micro_batches.clone() {
+        let mut st = exec.init_state().expect("init_state succeeded once already");
+        rec.bench(&format!("train_step/batch{mb}/s1"), profile.pick(5, 20), || {
+            exec.train_step(&mut st, mb, 1).unwrap();
+        });
+    }
+
+    // Full gradient-accumulation iterations: batch 8 at s = 1, 2, 4, 8.
+    for &s in &[1u32, 2, 4, 8] {
+        rec.bench(&format!("train_step/batch8/s{s}"), profile.pick(4, 15), || {
+            exec.train_step(&mut state, 8, s).unwrap();
+        });
+    }
+    println!(
+        "\nnote: s>1 pays (s-1) extra grad_step+accum executions — the Eq. 7\n\
+         (s-1)*t_comp(B/s) term the scheduler trades against memory."
+    );
+    rec.finish()
+}

@@ -1,0 +1,171 @@
+//! `scale` suite — event-loop throughput at datacenter trace scale.
+//!
+//! The paper's own evaluation stops at 240-480 jobs on 64 GPUs, but the
+//! clusters it cites (Philly, Helios) run thousands of GPUs and tens of
+//! thousands of jobs; the ROADMAP's north star is "as fast as the
+//! hardware allows". This suite drives the simulator across that gap:
+//! `helios-heavy-tail` and `small-job-flood` traces of 10k-20k jobs over
+//! uniform and two-tier heterogeneous topologies up to 4096 GPUs (full
+//! profile), with a seconds-scale smoke variant (1k-2k jobs, 64-256
+//! GPUs) that CI's `bench-smoke` job runs on every push. Single timed
+//! pass per case — the runs are long enough to be stable; trace
+//! generation happens outside the timed region so the numbers isolate
+//! the engine.
+
+use crate::cluster::topology::{self, GpuType, LinkTier, ServerSpec, Topology};
+use crate::cluster::{Cluster, ClusterConfig};
+use crate::jobs::trace::{self, TraceConfig};
+use crate::jobs::workload;
+use crate::perf::interference::InterferenceModel;
+use crate::sched;
+use crate::sim::{engine, EngineConfig};
+
+use super::super::registry::{Profile, Recorder, Suite, SuiteReport};
+
+pub fn suite() -> Suite {
+    Suite {
+        name: "scale",
+        description: "10k-20k-job traces on up to 4096-GPU (hetero) topologies",
+        run,
+    }
+}
+
+/// The `hetero-16x4-2tier` shape scaled out: half reference servers, half
+/// newer-generation (2x memory, 1.6x compute), NVLink-class intra-node
+/// links, 10 Gbps + 20 µs between nodes.
+fn hetero_two_tier(servers: usize) -> Topology {
+    Topology::new(
+        (0..servers)
+            .map(|s| ServerSpec {
+                gpus: 4,
+                gpu: if s < servers / 2 {
+                    GpuType::reference()
+                } else {
+                    GpuType { mem_gb: 22.0, compute_scale: 1.6 }
+                },
+            })
+            .collect(),
+        LinkTier { bandwidth_gbps: 100.0, latency_s: 0.0 },
+        LinkTier { bandwidth_gbps: 10.0, latency_s: 20e-6 },
+        2,
+    )
+}
+
+fn uniform(servers: usize) -> Cluster {
+    Cluster::new(ClusterConfig {
+        servers,
+        gpus_per_server: 4,
+        gpu_mem_gb: 11.0,
+        max_share: 2,
+    })
+}
+
+/// One scale case: generate the preset trace (untimed), run the policy
+/// through the full engine (timed), report events/s.
+fn case(
+    rec: &mut Recorder,
+    policy: &str,
+    shape: &str,
+    cluster: Cluster,
+    preset: &str,
+    n_jobs: usize,
+) {
+    let cfg = TraceConfig::from_preset(
+        &workload::by_name(preset).expect("registry preset"),
+        n_jobs,
+        1,
+    );
+    let jobs = trace::generate(&cfg);
+    let name = format!("scale/{}/{shape}/{n_jobs}-{preset}", policy.to_lowercase());
+    let mut events = 0u64;
+    let stats = rec.once(&name, || {
+        let mut p = sched::by_name(policy).expect("registry policy");
+        let out = engine::run_cluster(
+            cluster,
+            &jobs,
+            InterferenceModel::new(),
+            p.as_mut(),
+            EngineConfig::default(),
+        )
+        .expect("scale run");
+        events = out.policy_calls;
+        std::hint::black_box(out.makespan_s);
+    });
+    println!(
+        "  {name}: {events} events, {:.0} events/s",
+        events as f64 / stats.mean_s.max(1e-12)
+    );
+}
+
+fn run(profile: Profile) -> SuiteReport {
+    let mut rec = Recorder::new("scale");
+    match profile {
+        Profile::Quick => {
+            // The CI smoke tier: same presets and shapes, seconds-scale.
+            case(
+                &mut rec,
+                "SJF",
+                "uniform-16x4",
+                Cluster::new(ClusterConfig::simulation()),
+                "helios-heavy-tail",
+                1_000,
+            );
+            case(
+                &mut rec,
+                "SJF",
+                "hetero-16x4-2tier",
+                Cluster::with_topology(
+                    topology::by_name("hetero-16x4-2tier").expect("named shape"),
+                ),
+                "helios-heavy-tail",
+                1_000,
+            );
+            case(
+                &mut rec,
+                "SJF",
+                "uniform-64x4",
+                uniform(64),
+                "small-job-flood",
+                2_000,
+            );
+        }
+        Profile::Full => {
+            case(
+                &mut rec,
+                "SJF",
+                "uniform-1024x4",
+                uniform(1024),
+                "helios-heavy-tail",
+                10_000,
+            );
+            case(
+                &mut rec,
+                "SJF",
+                "hetero-1024x4-2tier",
+                Cluster::with_topology(hetero_two_tier(1024)),
+                "helios-heavy-tail",
+                10_000,
+            );
+            case(
+                &mut rec,
+                "SJF",
+                "uniform-1024x4",
+                uniform(1024),
+                "small-job-flood",
+                20_000,
+            );
+            // The sharing machinery at scale: BSBF's pairwise search on a
+            // contended flood (bounded size — Alg. 1 is quadratic in the
+            // pending queue).
+            case(
+                &mut rec,
+                "SJF-BSBF",
+                "uniform-64x4",
+                uniform(64),
+                "small-job-flood",
+                2_000,
+            );
+        }
+    }
+    rec.finish()
+}

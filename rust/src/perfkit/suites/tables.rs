@@ -1,0 +1,88 @@
+//! `tables` suite — regenerates every *table* in the paper's evaluation
+//! (§VI), timing each per-policy simulation:
+//!
+//! * **Table II**  — 30-job physical workload on 4x4 GPUs (simulated here;
+//!   the PJRT-executing variant is `examples/physical_cluster.rs`).
+//! * **Table III** — 240-job simulation: all/large/small JCT + queueing
+//!   (120 jobs in the quick profile; the case name carries the size).
+//! * **Table IV**  — 480-job simulation at 2x arrival density (full only).
+
+use crate::cluster::ClusterConfig;
+use crate::jobs::trace::{self, TraceConfig};
+use crate::perf::interference::InterferenceModel;
+use crate::report;
+use crate::sched::{self, POLICY_NAMES};
+use crate::sim::{engine, metrics};
+
+use super::super::registry::{Profile, Recorder, Suite, SuiteReport};
+
+pub fn suite() -> Suite {
+    Suite {
+        name: "tables",
+        description: "paper Tables II-IV, timing each per-policy simulation",
+        run,
+    }
+}
+
+fn run(profile: Profile) -> SuiteReport {
+    let mut rec = Recorder::new("tables");
+    let iters = profile.pick(1, 3);
+    table(
+        &mut rec,
+        iters,
+        "table2/physical-30-jobs",
+        ClusterConfig::physical(),
+        &TraceConfig::physical(1),
+        true,
+    );
+    let n3 = profile.pick(120, 240);
+    table(
+        &mut rec,
+        iters,
+        &format!("table3/sim-{n3}-jobs"),
+        ClusterConfig::simulation(),
+        &TraceConfig::simulation(n3, 1),
+        false,
+    );
+    if profile == Profile::Full {
+        let mut t4 = TraceConfig::simulation(480, 1);
+        t4.load_factor = 2.0;
+        table(
+            &mut rec,
+            iters,
+            "table4/sim-480-jobs-2x",
+            ClusterConfig::simulation(),
+            &t4,
+            false,
+        );
+    }
+    rec.finish()
+}
+
+fn table(
+    rec: &mut Recorder,
+    iters: usize,
+    label: &str,
+    cluster: ClusterConfig,
+    tcfg: &TraceConfig,
+    table2_style: bool,
+) {
+    let jobs = trace::generate(tcfg);
+    let mut rows = Vec::new();
+    for name in POLICY_NAMES {
+        let mut summary = None;
+        rec.bench(&format!("{label}/{name}"), iters, || {
+            let mut p = sched::by_name(name).unwrap();
+            let out = engine::run(cluster, &jobs, InterferenceModel::new(), p.as_mut())
+                .expect("simulation failed");
+            summary = Some(metrics::summarize(name, &out.jobs, out.makespan_s));
+        });
+        rows.push(summary.unwrap());
+    }
+    println!("\n=== {label} ===");
+    if table2_style {
+        println!("{}", report::table2(&rows));
+    } else {
+        println!("{}", report::table34(&rows));
+    }
+}

@@ -123,6 +123,10 @@ pub struct SchedContext {
     pub(super) est_rate: Vec<f64>,
     /// Scratch-buffer pool for [`SchedContext::overlay`] planning views.
     overlay_pool: OverlayPool,
+    /// Pooled id buffer for [`SchedContext::collect_completions`] — with
+    /// the overlay pool and the engine's reused event vecs, this was the
+    /// event loop's last steady-state per-event allocation.
+    completions_scratch: Vec<JobId>,
 }
 
 impl Deref for SchedContext {
@@ -167,6 +171,7 @@ impl SchedContext {
             iter_cache: vec![(u64::MAX, 0.0); n],
             est_rate,
             overlay_pool: OverlayPool::default(),
+            completions_scratch: Vec::new(),
         }
     }
 
@@ -192,6 +197,7 @@ impl SchedContext {
             iter_cache: vec![(u64::MAX, 0.0); n],
             est_rate,
             overlay_pool: OverlayPool::default(),
+            completions_scratch: Vec::new(),
         };
         let now = ctx.state.now;
         for id in 0..n {
@@ -409,18 +415,24 @@ impl SchedContext {
 
     /// Finish every running job whose `remaining_iters <= eps`, firing a
     /// `Completion` event per job (ascending id). Shared by the engine
-    /// (`eps = eps_iters`) and the coordinator (`eps = 0`).
+    /// (`eps = eps_iters`) and the coordinator (`eps = 0`). The id buffer
+    /// is pooled on the context (taken out while `finish_job` mutates the
+    /// sets, put back after), so the steady-state event loop allocates
+    /// nothing here.
     pub fn collect_completions(&mut self, eps: f64, events: &mut Vec<Event>) {
-        let done: Vec<JobId> = self
-            .running
-            .iter()
-            .copied()
-            .filter(|&id| self.state.jobs[id].remaining_iters <= eps)
-            .collect();
-        for id in done {
+        let mut done = std::mem::take(&mut self.completions_scratch);
+        done.clear();
+        done.extend(
+            self.running
+                .iter()
+                .copied()
+                .filter(|&id| self.state.jobs[id].remaining_iters <= eps),
+        );
+        for &id in &done {
             self.finish_job(id);
             events.push(Event::Completion { job: id });
         }
+        self.completions_scratch = done;
     }
 
     /// Engine helper for floating-point finish-projection stalls.

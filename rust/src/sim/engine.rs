@@ -7,6 +7,12 @@
 //! context's sorted arrival queue, next completion from its lazily
 //! invalidated finish-time min-heap, next restart eligibility from its
 //! penalty min-heap — replacing the old per-event O(running + n) rescan.
+//!
+//! The steady-state loop also allocates nothing per event: the two event
+//! vecs below are reused across iterations, the policies' planning views
+//! draw from the context's pooled overlay scratch, and the completion
+//! sweep reuses a pooled id buffer
+//! ([`SchedContext::collect_completions`]).
 
 use anyhow::{bail, Result};
 

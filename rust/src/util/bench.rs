@@ -1,11 +1,15 @@
 //! Micro benchmark harness for the `cargo bench` targets (criterion is not
 //! in the vendored crate set). Reports min/mean/p50/p95 over timed
 //! iterations after a warm-up pass, in criterion-like one-line format.
+//!
+//! The machine-readable side — suite registry, schema-versioned JSON
+//! reports, baseline regression gates — lives in [`crate::perfkit`]; this
+//! module stays the dependency-free timing core both share.
 
 use std::time::Instant;
 
 /// Result of one benchmark case.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct BenchStats {
     pub name: String,
     pub iters: usize,
@@ -39,6 +43,32 @@ fn fmt_s(s: f64) -> String {
     }
 }
 
+/// Percentile of an ascending-sorted sample by *ceiling rank*: the
+/// smallest value whose 1-based rank `r` satisfies `r >= p·n`.
+///
+/// The old `(n as f64 * p) as usize` index truncated toward zero, which
+/// for small samples lands below the requested percentile (n = 20,
+/// p = 0.95 indexed the 20th value — the max — instead of the 19th).
+/// Ceiling rank is exact on quantile boundaries and never overshoots.
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty(), "percentile of an empty sample");
+    assert!((0.0..=1.0).contains(&p), "percentile {p} outside [0, 1]");
+    let rank = (sorted.len() as f64 * p).ceil().max(1.0) as usize;
+    sorted[rank.min(sorted.len()) - 1]
+}
+
+fn stats_of(name: &str, mut times: Vec<f64>) -> BenchStats {
+    times.sort_by(f64::total_cmp);
+    BenchStats {
+        name: name.to_string(),
+        iters: times.len(),
+        mean_s: times.iter().sum::<f64>() / times.len() as f64,
+        min_s: times[0],
+        p50_s: percentile(&times, 0.50),
+        p95_s: percentile(&times, 0.95),
+    }
+}
+
 /// Time `f` for at least `min_iters` iterations (and at least one), after
 /// one warm-up call. Prints and returns the stats.
 pub fn bench<F: FnMut()>(name: &str, min_iters: usize, mut f: F) -> BenchStats {
@@ -49,15 +79,18 @@ pub fn bench<F: FnMut()>(name: &str, min_iters: usize, mut f: F) -> BenchStats {
         f();
         times.push(t0.elapsed().as_secs_f64());
     }
-    times.sort_by(f64::total_cmp);
-    let stats = BenchStats {
-        name: name.to_string(),
-        iters: times.len(),
-        mean_s: times.iter().sum::<f64>() / times.len() as f64,
-        min_s: times[0],
-        p50_s: times[times.len() / 2],
-        p95_s: times[((times.len() as f64 * 0.95) as usize).min(times.len() - 1)],
-    };
+    let stats = stats_of(name, times);
+    println!("{}", stats.report());
+    stats
+}
+
+/// Time a single call of `f` — no warm-up, one timed run. For end-to-end
+/// cases (whole-table regeneration, 10k-job simulations) where a warm-up
+/// pass would double the cost and the run is long enough to be stable.
+pub fn bench_once<F: FnOnce()>(name: &str, f: F) -> BenchStats {
+    let t0 = Instant::now();
+    f();
+    let stats = stats_of(name, vec![t0.elapsed().as_secs_f64()]);
     println!("{}", stats.report());
     stats
 }
@@ -68,9 +101,40 @@ mod tests {
 
     #[test]
     fn stats_ordering() {
-        let s = bench("noop", 16, || { std::hint::black_box(1 + 1); });
+        let s = bench("noop", 16, || {
+            std::hint::black_box(1 + 1);
+        });
         assert!(s.min_s <= s.p50_s && s.p50_s <= s.p95_s);
         assert_eq!(s.iters, 16);
+    }
+
+    #[test]
+    fn bench_once_records_single_iteration() {
+        let s = bench_once("noop-once", || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(s.iters, 1);
+        assert_eq!(s.min_s, s.mean_s);
+        assert_eq!(s.p50_s, s.p95_s);
+    }
+
+    #[test]
+    fn p95_uses_ceiling_rank_on_20_samples() {
+        // The satellite pin: for 1..=20, p95 by ceiling rank is the 19th
+        // value (rank ceil(20 · 0.95) = 19), not the 20th the truncating
+        // index returned.
+        let samples: Vec<f64> = (1..=20).map(|i| i as f64).collect();
+        assert_eq!(percentile(&samples, 0.95), 19.0);
+        assert_eq!(percentile(&samples, 0.50), 10.0);
+        assert_eq!(percentile(&samples, 1.0), 20.0);
+        assert_eq!(percentile(&samples, 0.0), 1.0);
+        // Small-n edges: a single sample is every percentile.
+        assert_eq!(percentile(&[7.0], 0.95), 7.0);
+        assert_eq!(percentile(&[1.0, 2.0], 0.95), 2.0);
+        // Just over a rank boundary rounds *up* to the next value.
+        let ten: Vec<f64> = (1..=10).map(|i| i as f64).collect();
+        assert_eq!(percentile(&ten, 0.95), 10.0);
+        assert_eq!(percentile(&ten, 0.90), 9.0);
     }
 
     #[test]

@@ -8,6 +8,7 @@
 //! * JSON specs parse into the same matrices as programmatic ones.
 
 use std::collections::HashSet;
+use std::sync::Arc;
 
 use wise_share::campaign::{self, Axes, CampaignSpec, RunPoint};
 use wise_share::cluster::ClusterConfig;
@@ -101,6 +102,48 @@ fn parallel_runner_matches_serial_byte_identical() {
         campaign::emit::markdown(&spec.name, &serial.cells),
         campaign::emit::markdown(&spec.name, &parallel.cells),
         "parallel markdown must be byte-identical to serial"
+    );
+}
+
+#[test]
+fn shared_trace_results_byte_identical_to_per_run_generation() {
+    // The trace-sharing hot path (one generation per (cell, seed) group,
+    // reused across the policy axis) must be a pure memoization: every
+    // emitter's output matches running each scenario standalone, where
+    // the trace is regenerated per run.
+    let spec = small_spec(&["FIFO", "SJF", "SJF-BSBF"], vec![20], vec![1, 2]);
+    let pts = campaign::expand(&spec).unwrap();
+    assert_eq!(pts.len(), 6);
+    // Policy-axis neighbours of the same seed share one Arc; seeds don't.
+    assert!(Arc::ptr_eq(&pts[0].trace, &pts[2].trace));
+    assert!(Arc::ptr_eq(&pts[0].trace, &pts[4].trace));
+    assert!(!Arc::ptr_eq(&pts[0].trace, &pts[1].trace));
+    // Expansion must not have generated anything yet.
+    assert!(pts.iter().all(|p| !p.trace.is_generated()));
+
+    let shared = campaign::execute_matrix(&pts, 4);
+    assert_eq!(shared.n_failures, 0);
+    assert!(pts.iter().all(|p| p.trace.is_generated()));
+
+    let mut agg = campaign::Aggregator::new();
+    for p in &pts {
+        agg.push(&campaign::RunOutcome {
+            ordinal: p.ordinal,
+            cell: p.cell.clone(),
+            seed: p.scenario.trace.seed,
+            summary: p.scenario.run().map_err(|e| e.to_string()),
+        });
+    }
+    let per_run = agg.finish();
+    assert_eq!(
+        campaign::emit::long_csv(&spec.name, &shared.cells),
+        campaign::emit::long_csv(&spec.name, &per_run),
+        "shared-trace CSV must be byte-identical to per-run generation"
+    );
+    assert_eq!(
+        campaign::emit::markdown(&spec.name, &shared.cells),
+        campaign::emit::markdown(&spec.name, &per_run),
+        "shared-trace markdown must be byte-identical to per-run generation"
     );
 }
 

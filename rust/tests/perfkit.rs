@@ -1,0 +1,182 @@
+//! perfkit end-to-end: the properties the bench/regression toolkit is
+//! trusted on (DESIGN.md §12):
+//!
+//! * a recorded report survives the JSON file round-trip losslessly and
+//!   passes its own `check()` (the CI artifact gate),
+//! * baseline comparison distinguishes pass / regress / new / missing and
+//!   `gate()` turns regressions into hard errors,
+//! * malformed or wrong-schema report files are rejected at load,
+//! * a real registered suite (the cheap `figures` quick profile) runs end
+//!   to end and produces a valid, serializable report.
+
+use std::path::PathBuf;
+
+use wise_share::perfkit::{self, BenchReport, EnvInfo, Profile, Recorder, SuiteReport};
+use wise_share::util::bench::BenchStats;
+use wise_share::util::json::Json;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("wise-share-perfkit-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+fn case(name: &str, min_s: f64, tol: Option<f64>) -> perfkit::CaseStats {
+    perfkit::CaseStats {
+        stats: BenchStats {
+            name: name.to_string(),
+            iters: 3,
+            mean_s: min_s * 1.1,
+            min_s,
+            p50_s: min_s * 1.05,
+            p95_s: min_s * 1.2,
+        },
+        max_regress_pct: tol,
+    }
+}
+
+fn report(profile: &str, cases: Vec<perfkit::CaseStats>) -> BenchReport {
+    BenchReport {
+        env: EnvInfo {
+            profile: profile.to_string(),
+            threads: 4,
+            git_sha: Some("deadbeef".to_string()),
+            os: "linux".to_string(),
+        },
+        suites: vec![SuiteReport { suite: "s".to_string(), skipped: None, cases }],
+    }
+}
+
+#[test]
+fn recorded_report_roundtrips_through_a_file() {
+    let mut rec = Recorder::new("synthetic");
+    rec.bench("synthetic/noop", 8, || {
+        std::hint::black_box(1 + 1);
+    });
+    rec.once("synthetic/once", || {
+        std::hint::black_box(2 + 2);
+    });
+    rec.tolerance(75.0);
+    let rep = BenchReport {
+        env: EnvInfo::capture(Profile::Quick),
+        suites: vec![
+            rec.finish(),
+            SuiteReport {
+                suite: "absent".to_string(),
+                skipped: Some("environment lacks it".to_string()),
+                cases: Vec::new(),
+            },
+        ],
+    };
+    rep.check().unwrap();
+    let path = tmp("roundtrip.json");
+    rep.save(&path).unwrap();
+    let back = BenchReport::load(&path).unwrap();
+    assert_eq!(rep, back);
+    assert_eq!(back.n_cases(), 2);
+    assert_eq!(
+        back.find("synthetic", "synthetic/once").unwrap().max_regress_pct,
+        Some(75.0)
+    );
+    assert_eq!(back.suites[1].skipped.as_deref(), Some("environment lacks it"));
+    perfkit::check_file(&path).unwrap();
+}
+
+#[test]
+fn baseline_gate_passes_within_and_fails_past_tolerance() {
+    let baseline = report(
+        "full",
+        vec![case("a", 1.0, None), case("noisy", 1.0, Some(60.0)), case("gone", 1.0, None)],
+    );
+    // +5% on the default gate, +50% under a 60% per-case tolerance, one
+    // new case, one missing case: all pass.
+    let current = report(
+        "full",
+        vec![case("a", 1.05, None), case("noisy", 1.5, None), case("fresh", 0.1, None)],
+    );
+    let cmp = perfkit::compare(&current, &baseline, 10.0).unwrap();
+    assert_eq!(
+        (cmp.n_passed, cmp.n_regressed, cmp.n_new, cmp.n_missing),
+        (2, 0, 1, 1)
+    );
+    cmp.gate().unwrap();
+    // +25% against the 10% default: gate errors and names the case.
+    let current = report("full", vec![case("a", 1.25, None)]);
+    let cmp = perfkit::compare(&current, &baseline, 10.0).unwrap();
+    assert_eq!(cmp.n_regressed, 1);
+    let err = cmp.gate().unwrap_err().to_string();
+    assert!(err.contains("s/a"), "{err}");
+    assert!(err.contains("regressed past the gate"), "{err}");
+    // Profiles must match: a quick report cannot gate a full baseline.
+    let quick = report("quick", vec![case("a", 1.0, None)]);
+    assert!(perfkit::compare(&quick, &baseline, 10.0).is_err());
+}
+
+#[test]
+fn malformed_report_files_are_rejected() {
+    // Truncated JSON.
+    let path = tmp("truncated.json");
+    std::fs::write(&path, "{\"schema\": \"wise-share-bench-v1\", \"env\"").unwrap();
+    assert!(BenchReport::load(&path).is_err());
+    assert!(perfkit::check_file(&path).is_err());
+    // Valid JSON, wrong schema tag.
+    let path = tmp("wrong-schema.json");
+    std::fs::write(&path, "{\"schema\": \"somebody-elses-v7\", \"suites\": []}").unwrap();
+    let err = BenchReport::load(&path).unwrap_err().to_string();
+    assert!(err.contains("unsupported bench schema"), "{err}");
+    // Valid schema, no measured cases: loads, but fails the check gate.
+    let empty = BenchReport {
+        env: EnvInfo::capture(Profile::Quick),
+        suites: vec![SuiteReport {
+            suite: "s".to_string(),
+            skipped: Some("nothing ran".to_string()),
+            cases: Vec::new(),
+        }],
+    };
+    let path = tmp("empty.json");
+    empty.save(&path).unwrap();
+    assert!(BenchReport::load(&path).is_ok());
+    // `{:#}` renders the whole anyhow chain — the root cause names the
+    // emptiness, the outer context names the file.
+    let err = format!("{:#}", perfkit::check_file(&path).unwrap_err());
+    assert!(err.contains("no measured cases"), "{err}");
+    assert!(err.contains("failed validation"), "{err}");
+}
+
+#[test]
+fn emitted_json_is_schema_tagged_and_parseable_standalone() {
+    let rep = report("quick", vec![case("a", 0.5, None)]);
+    let text = rep.to_json().to_string();
+    let doc = Json::parse(&text).unwrap();
+    assert_eq!(doc.req("schema").unwrap().as_str(), Some(perfkit::SCHEMA));
+    let suites = doc.req("suites").unwrap().as_arr().unwrap();
+    assert_eq!(suites.len(), 1);
+    let c = &suites[0].req("cases").unwrap().as_arr().unwrap()[0];
+    assert_eq!(c.req("name").unwrap().as_str(), Some("a"));
+    assert_eq!(c.req("min_s").unwrap().as_f64(), Some(0.5));
+}
+
+#[test]
+fn figures_quick_suite_runs_and_records() {
+    // The cheapest real suite: Figs. 2/3 are closed-form, Fig. 4 is the
+    // 30-job physical trace. Proves a registered suite body runs end to
+    // end through the same entry the bench binaries and CI use.
+    let suite = perfkit::by_name_or_err("figures").unwrap();
+    let rep = (suite.run)(Profile::Quick);
+    assert!(rep.skipped.is_none());
+    let names: Vec<&str> = rep.cases.iter().map(|c| c.stats.name.as_str()).collect();
+    assert_eq!(
+        names,
+        vec![
+            "figures/fig2-solo-throughput",
+            "figures/fig3-xi-landscape",
+            "figures/fig4-physical-cdf"
+        ]
+    );
+    let full = BenchReport { env: EnvInfo::capture(Profile::Quick), suites: vec![rep] };
+    full.check().unwrap();
+    // And it is self-comparable: a report gates cleanly against itself.
+    let cmp = perfkit::compare(&full, &full, 0.0).unwrap();
+    assert_eq!(cmp.n_regressed, 0);
+    cmp.gate().unwrap();
+}
