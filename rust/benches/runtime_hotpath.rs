@@ -1,6 +1,6 @@
 //! `cargo bench --bench runtime_hotpath` — thin wrapper over the
-//! registered `runtime_hotpath` suite (the PJRT train-step hot path;
-//! requires `make artifacts`, self-skips offline); the body lives in
+//! registered `runtime_hotpath` suite (obskit overhead, always; the PJRT
+//! train-step hot path when `make artifacts` ran); the body lives in
 //! `wise_share::perfkit::suites::runtime_hotpath` so `wise-share bench`
 //! records the same cases machine-readably. Perfkit flags pass through:
 //! `cargo bench --bench runtime_hotpath -- --profile quick`.

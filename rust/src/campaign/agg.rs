@@ -11,6 +11,7 @@ use std::collections::HashMap;
 use crate::sim::metrics::{Aggregate, Summary};
 
 use super::runner::RunOutcome;
+use super::spec::RunResult;
 use super::sweep::CellKey;
 
 /// Welford online accumulator.
@@ -95,10 +96,17 @@ pub struct SliceAgg {
     pub avg_queue_s: Stream,
     pub p50_jct_s: Stream,
     pub p90_jct_s: Stream,
+    /// Jobs the run left unfinished in this slice (survivorship signal —
+    /// the JCT streams above cover finished jobs only).
+    pub unfinished: Stream,
 }
 
 impl SliceAgg {
     fn push(&mut self, a: &Aggregate) {
+        // The unfinished count is meaningful even when the slice finished
+        // nothing (everything-unfinished is exactly the case it exists to
+        // expose), so it streams unconditionally.
+        self.unfinished.push(a.unfinished as f64);
         // An empty slice (e.g. a seed that drew no large jobs) reports
         // Aggregate::default(); averaging its placeholder zeros in would
         // bias the slice stats, so such seeds are excluded — the stream's
@@ -120,6 +128,7 @@ impl SliceAgg {
             avg_queue_s: self.avg_queue_s.mean(),
             p50_jct_s: self.p50_jct_s.mean(),
             p90_jct_s: self.p90_jct_s.mean(),
+            unfinished: self.unfinished.mean().round() as usize,
         }
     }
 }
@@ -129,6 +138,10 @@ impl SliceAgg {
 pub struct CellAgg {
     pub key: CellKey,
     pub makespan_s: Stream,
+    /// Mean GPU utilization per seed (busy / capacity over the makespan).
+    pub gpu_util: Stream,
+    /// Fraction of busy GPU-time spent co-located, per seed.
+    pub sharing_frac: Stream,
     pub all: SliceAgg,
     pub large: SliceAgg,
     pub small: SliceAgg,
@@ -141,6 +154,8 @@ impl CellAgg {
         CellAgg {
             key,
             makespan_s: Stream::default(),
+            gpu_util: Stream::default(),
+            sharing_frac: Stream::default(),
             all: SliceAgg::default(),
             large: SliceAgg::default(),
             small: SliceAgg::default(),
@@ -153,8 +168,11 @@ impl CellAgg {
         self.makespan_s.n()
     }
 
-    fn push_summary(&mut self, s: &Summary) {
+    fn push_result(&mut self, r: &RunResult) {
+        let s = &r.summary;
         self.makespan_s.push(s.makespan_s);
+        self.gpu_util.push(r.gpu_util);
+        self.sharing_frac.push(r.sharing_frac);
         self.all.push(&s.all);
         self.large.push(&s.large);
         self.small.push(&s.small);
@@ -198,7 +216,7 @@ impl Aggregator {
             }
         };
         match &outcome.summary {
-            Ok(s) => self.cells[i].push_summary(s),
+            Ok(r) => self.cells[i].push_result(r),
             Err(e) => {
                 self.cells[i].errors.push((outcome.ordinal, outcome.seed, e.clone()))
             }
@@ -234,17 +252,22 @@ mod tests {
             avg_queue_s: jct / 4.0,
             p50_jct_s: jct * 0.8,
             p90_jct_s: jct * 2.0,
+            unfinished: 1,
         };
         RunOutcome {
             ordinal: seed as usize,
             cell: key(policy),
             seed,
-            summary: Ok(Summary {
-                policy: policy.into(),
-                makespan_s: 3.0 * jct,
-                all: agg,
-                large: agg,
-                small: agg,
+            summary: Ok(RunResult {
+                summary: Summary {
+                    policy: policy.into(),
+                    makespan_s: 3.0 * jct,
+                    all: agg,
+                    large: agg,
+                    small: agg,
+                },
+                gpu_util: 0.5,
+                sharing_frac: 0.25,
             }),
         }
     }
@@ -300,6 +323,11 @@ mod tests {
         let mean = cells[0].mean_summary();
         assert_eq!(mean.policy, "FIFO");
         assert!((mean.makespan_s - 360.0).abs() < 1e-12);
+        // Run-level utilization figures stream per seed alongside JCT.
+        assert_eq!(cells[0].gpu_util.n(), 2);
+        assert!((cells[0].gpu_util.mean() - 0.5).abs() < 1e-12);
+        assert!((cells[0].sharing_frac.mean() - 0.25).abs() < 1e-12);
+        assert_eq!(mean.all.unfinished, 1);
     }
 
     #[test]

@@ -11,18 +11,21 @@ use crate::sim::metrics::Summary;
 use super::agg::{CellAgg, Stream};
 
 /// CSV schema version comment, emitted as the file's first line. The
-/// column set has changed twice (topology in the cluster-v2 PR,
-/// workload/estimator in workload v2), so consumers pin on this instead
-/// of guessing from the column count; bump it whenever columns change.
-pub const CSV_SCHEMA: &str = "# schema: v2";
+/// row/column set has changed three times (topology in the cluster-v2
+/// PR, workload/estimator in workload v2, the per-cell `gpu_util` /
+/// `sharing_frac` / `unfinished` rows in obskit), so consumers pin on
+/// this instead of guessing from the shape; bump it whenever it changes.
+pub const CSV_SCHEMA: &str = "# schema: v3";
 
 /// Long-format CSV header.
 pub const CSV_HEADER: &str = "campaign,topology,workload,estimator,gpus,jobs,load,\
                               policy,slice,metric,seeds,mean,std,min,max,ci95";
 
 /// One `(slice, metric)` CSV row per statistic of every cell, in cell
-/// (expansion) order. All values in seconds. The first line is the
-/// [`CSV_SCHEMA`] comment (pandas: `read_csv(..., comment='#')`).
+/// (expansion) order. Time metrics are in seconds; `gpu_util`,
+/// `sharing_frac` and `unfinished` are a [0,1] ratio, a [0,1] ratio and
+/// a job count respectively. The first line is the [`CSV_SCHEMA`]
+/// comment (pandas: `read_csv(..., comment='#')`).
 pub fn long_csv(campaign: &str, cells: &[CellAgg]) -> String {
     let mut out = String::new();
     writeln!(out, "{CSV_SCHEMA}").unwrap();
@@ -58,6 +61,9 @@ pub fn long_csv(campaign: &str, cells: &[CellAgg]) -> String {
             row(slice, "avg_queue_s", &agg.avg_queue_s);
         }
         row("all", "makespan_s", &c.makespan_s);
+        row("all", "gpu_util", &c.gpu_util);
+        row("all", "sharing_frac", &c.sharing_frac);
+        row("all", "unfinished", &c.all.unfinished);
     }
     out
 }
@@ -123,6 +129,21 @@ pub fn markdown(campaign: &str, cells: &[CellAgg]) -> String {
                 })
                 .collect();
             out.push_str(&report::markdown_table(&header, &ci_rows));
+            // Survivorship warning: the JCT rows above cover finished
+            // jobs only, so a cell that left jobs unfinished is not
+            // directly comparable and must say so.
+            for c in &ok {
+                let worst = c.all.unfinished.max();
+                if worst > 0.0 {
+                    writeln!(
+                        out,
+                        "\n**{}: up to {worst:.0} job(s) unfinished at \
+                         makespan — JCT averages cover finished jobs only.**",
+                        c.key.policy
+                    )
+                    .unwrap();
+                }
+            }
         }
         for c in group {
             for (ordinal, seed, err) in &c.errors {
@@ -145,10 +166,11 @@ mod tests {
     use super::*;
     use crate::campaign::agg::Aggregator;
     use crate::campaign::runner::RunOutcome;
+    use crate::campaign::spec::RunResult;
     use crate::campaign::sweep::CellKey;
     use crate::sim::metrics::Aggregate;
 
-    fn cells() -> Vec<CellAgg> {
+    fn cells_with_unfinished(unfinished: usize) -> Vec<CellAgg> {
         let mut agg = Aggregator::new();
         for (policy, ord) in [("FIFO", 0usize), ("SJF-BSBF", 1)] {
             for seed in [1u64, 2] {
@@ -158,6 +180,7 @@ mod tests {
                     avg_queue_s: 600.0,
                     p50_jct_s: 3000.0,
                     p90_jct_s: 9000.0,
+                    unfinished,
                 };
                 agg.push(&RunOutcome {
                     ordinal: ord * 2 + seed as usize - 1,
@@ -171,17 +194,25 @@ mod tests {
                         policy: policy.to_string(),
                     },
                     seed,
-                    summary: Ok(Summary {
-                        policy: policy.to_string(),
-                        makespan_s: 7200.0,
-                        all: a,
-                        large: a,
-                        small: a,
+                    summary: Ok(RunResult {
+                        summary: Summary {
+                            policy: policy.to_string(),
+                            makespan_s: 7200.0,
+                            all: a,
+                            large: a,
+                            small: a,
+                        },
+                        gpu_util: 0.8,
+                        sharing_frac: 0.1,
                     }),
                 });
             }
         }
         agg.finish()
+    }
+
+    fn cells() -> Vec<CellAgg> {
+        cells_with_unfinished(0)
     }
 
     #[test]
@@ -190,12 +221,16 @@ mod tests {
         let lines: Vec<&str> = csv.lines().collect();
         assert_eq!(lines[0], CSV_SCHEMA, "schema comment must be the first line");
         assert_eq!(lines[1], CSV_HEADER);
-        // 2 cells x (3 slices x 4 metrics + makespan) = 26 data rows.
-        assert_eq!(lines.len(), 2 + 2 * 13);
+        // 2 cells x (3 slices x 4 metrics + makespan + gpu_util +
+        // sharing_frac + unfinished) = 32 data rows.
+        assert_eq!(lines.len(), 2 + 2 * 16);
         assert!(lines[2].starts_with(
             "demo,uniform-16x4,philly-sim,oracle,64,240,1.5,FIFO,all,avg_jct_s,2,"
         ));
         assert!(csv.contains("SJF-BSBF,all,makespan_s"));
+        assert!(csv.contains("FIFO,all,gpu_util,2,0.800000"));
+        assert!(csv.contains("FIFO,all,sharing_frac,2,0.100000"));
+        assert!(csv.contains("FIFO,all,unfinished,2,0.000000"));
     }
 
     #[test]
@@ -212,6 +247,17 @@ mod tests {
         assert!(md.contains("±95% CI"));
         assert!(md.contains("| FIFO | 2.50 |"));
         assert!(!md.contains("FAILED"));
+        // No unfinished jobs anywhere: no survivorship warning.
+        assert!(!md.contains("unfinished"));
+    }
+
+    #[test]
+    fn markdown_warns_on_unfinished_jobs() {
+        let md = markdown("demo", &cells_with_unfinished(3));
+        assert!(
+            md.contains("FIFO: up to 3 job(s) unfinished at makespan"),
+            "{md}"
+        );
     }
 
     #[test]

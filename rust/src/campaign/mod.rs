@@ -37,8 +37,11 @@ pub mod spec;
 pub mod sweep;
 
 pub use agg::{Aggregator, CellAgg, SliceAgg, Stream};
-pub use runner::{default_threads, resolved_threads, run_parallel, run_serial, RunOutcome};
-pub use spec::{Axes, CampaignSpec, ScenarioSpec};
+pub use runner::{
+    default_threads, resolved_threads, run_parallel, run_parallel_obs, run_serial,
+    run_serial_obs, ObsDirs, RunOutcome,
+};
+pub use spec::{Axes, CampaignSpec, RunResult, ScenarioSpec};
 pub use sweep::{expand, CellKey, RunPoint, SharedTrace};
 
 use anyhow::Result;
@@ -72,8 +75,18 @@ fn aggregate(n_runs: usize, outcomes: Vec<RunOutcome>, wall_s: f64) -> CampaignR
 /// aggregate — for callers that need the [`RunPoint`]s themselves (e.g. to
 /// report the matrix size before the run starts).
 pub fn execute_matrix(points: &[RunPoint], threads: usize) -> CampaignResult {
+    execute_matrix_obs(points, threads, &ObsDirs::default())
+}
+
+/// [`execute_matrix`] with per-run observability artifacts written into
+/// the directories named by `obs_dirs` (one file per matrix ordinal).
+pub fn execute_matrix_obs(
+    points: &[RunPoint],
+    threads: usize,
+    obs_dirs: &ObsDirs,
+) -> CampaignResult {
     let t0 = std::time::Instant::now();
-    let outcomes = run_parallel(points, threads);
+    let outcomes = run_parallel_obs(points, threads, obs_dirs);
     aggregate(points.len(), outcomes, t0.elapsed().as_secs_f64())
 }
 

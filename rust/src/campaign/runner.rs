@@ -17,12 +17,52 @@
 //! `max_sim_s`) are captured per-run as strings instead of aborting the
 //! campaign; the aggregator reports them per cell.
 
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-use crate::sim::metrics::Summary;
+use crate::obskit::{Obs, ObsConfig};
 
+use super::spec::RunResult;
 use super::sweep::{CellKey, RunPoint};
+
+/// Per-run observability artifact directories for a campaign. Each armed
+/// directory receives one file per run, named by the run's matrix
+/// ordinal (`run-00042.trace.json` / `.metrics.json` / `.audit.jsonl`)
+/// so artifacts line up with the expansion order no matter which worker
+/// produced them. All-`None` (the default) arms nothing and the runner
+/// behaves exactly as before.
+#[derive(Debug, Clone, Default)]
+pub struct ObsDirs {
+    pub trace_dir: Option<PathBuf>,
+    pub metrics_dir: Option<PathBuf>,
+    pub audit_dir: Option<PathBuf>,
+    /// Sim-time metrics-sampling cadence, seconds (0 ⇒ obskit default).
+    pub sample_every_s: f64,
+}
+
+impl ObsDirs {
+    pub fn is_enabled(&self) -> bool {
+        self.trace_dir.is_some() || self.metrics_dir.is_some() || self.audit_dir.is_some()
+    }
+
+    /// The per-run sink configuration for matrix position `ordinal`.
+    pub fn for_run(&self, ordinal: usize) -> ObsConfig {
+        let mut cfg = ObsConfig::default();
+        if self.sample_every_s > 0.0 {
+            cfg.sample_every_s = self.sample_every_s;
+        }
+        cfg.trace =
+            self.trace_dir.as_ref().map(|d| d.join(format!("run-{ordinal:05}.trace.json")));
+        cfg.metrics = self
+            .metrics_dir
+            .as_ref()
+            .map(|d| d.join(format!("run-{ordinal:05}.metrics.json")));
+        cfg.audit =
+            self.audit_dir.as_ref().map(|d| d.join(format!("run-{ordinal:05}.audit.jsonl")));
+        cfg
+    }
+}
 
 /// The result of one run, tagged with its matrix position.
 #[derive(Debug, Clone)]
@@ -30,18 +70,28 @@ pub struct RunOutcome {
     pub ordinal: usize,
     pub cell: CellKey,
     pub seed: u64,
-    pub summary: Result<Summary, String>,
+    pub summary: Result<RunResult, String>,
 }
 
-fn run_one(point: &RunPoint) -> RunOutcome {
+fn run_one(point: &RunPoint, obs_dirs: &ObsDirs) -> RunOutcome {
+    let obs = Obs::new(obs_dirs.for_run(point.ordinal));
+    let mut result = point
+        .scenario
+        .run_with_trace_obs(point.trace.jobs(), obs.clone())
+        .map_err(|e| e.to_string());
+    if let Err(e) = obs.finish() {
+        // Artifact I/O failure must not masquerade as a sim failure, but
+        // silently dropping it would defeat the audit trail — surface it
+        // on the run unless the run already failed for a real reason.
+        if result.is_ok() {
+            result = Err(format!("writing observability artifacts: {e:#}"));
+        }
+    }
     RunOutcome {
         ordinal: point.ordinal,
         cell: point.cell.clone(),
         seed: point.scenario.trace.seed,
-        summary: point
-            .scenario
-            .run_with_trace(point.trace.jobs())
-            .map_err(|e| e.to_string()),
+        summary: result,
     }
 }
 
@@ -63,15 +113,32 @@ pub fn resolved_threads(n_points: usize, requested: usize) -> usize {
 /// parallel runner is property-tested against (and benchmarked against in
 /// `benches/campaign_throughput.rs`).
 pub fn run_serial(points: &[RunPoint]) -> Vec<RunOutcome> {
-    points.iter().map(run_one).collect()
+    run_serial_obs(points, &ObsDirs::default())
+}
+
+/// [`run_serial`] with per-run observability artifacts.
+pub fn run_serial_obs(points: &[RunPoint], obs_dirs: &ObsDirs) -> Vec<RunOutcome> {
+    points.iter().map(|p| run_one(p, obs_dirs)).collect()
 }
 
 /// Run the matrix over `threads` workers (0 ⇒ [`default_threads`]).
 /// Returns outcomes in expansion order.
 pub fn run_parallel(points: &[RunPoint], threads: usize) -> Vec<RunOutcome> {
+    run_parallel_obs(points, threads, &ObsDirs::default())
+}
+
+/// [`run_parallel`] with per-run observability artifacts. Each run arms
+/// its own sinks (one set of files per matrix ordinal), so workers never
+/// contend on a shared sink and the parallel == serial byte-identity of
+/// the campaign outputs is unaffected.
+pub fn run_parallel_obs(
+    points: &[RunPoint],
+    threads: usize,
+    obs_dirs: &ObsDirs,
+) -> Vec<RunOutcome> {
     let threads = resolved_threads(points.len(), threads);
     if threads <= 1 {
-        return run_serial(points);
+        return run_serial_obs(points, obs_dirs);
     }
     let cursor = AtomicUsize::new(0);
     let slots: Vec<Mutex<Option<RunOutcome>>> =
@@ -83,7 +150,7 @@ pub fn run_parallel(points: &[RunPoint], threads: usize) -> Vec<RunOutcome> {
                 if i >= points.len() {
                     break;
                 }
-                *slots[i].lock().unwrap() = Some(run_one(&points[i]));
+                *slots[i].lock().unwrap() = Some(run_one(&points[i], obs_dirs));
             });
         }
     });
@@ -134,6 +201,24 @@ mod tests {
         let pts = points();
         let out = run_parallel(&pts, 64);
         assert_eq!(out.len(), pts.len());
+    }
+
+    #[test]
+    fn obs_dirs_name_artifacts_by_ordinal() {
+        let dirs = ObsDirs {
+            trace_dir: Some(PathBuf::from("t")),
+            metrics_dir: Some(PathBuf::from("m")),
+            audit_dir: None,
+            sample_every_s: 0.0,
+        };
+        assert!(dirs.is_enabled());
+        let cfg = dirs.for_run(42);
+        assert_eq!(cfg.trace.unwrap(), PathBuf::from("t/run-00042.trace.json"));
+        assert_eq!(cfg.metrics.unwrap(), PathBuf::from("m/run-00042.metrics.json"));
+        assert!(cfg.audit.is_none());
+        // 0 keeps the obskit default cadence.
+        assert_eq!(cfg.sample_every_s, 60.0);
+        assert!(!ObsDirs::default().is_enabled());
     }
 
     #[test]

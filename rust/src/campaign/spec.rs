@@ -17,6 +17,7 @@ use crate::jobs::estimate::EstimateModel;
 use crate::jobs::trace::{self, TraceConfig};
 use crate::jobs::workload;
 use crate::jobs::JobSpec;
+use crate::obskit::Obs;
 use crate::perf::interference::InterferenceModel;
 use crate::sched;
 use crate::sim::metrics::{self, Summary};
@@ -345,6 +346,20 @@ pub struct ScenarioSpec {
     pub max_sim_s: f64,
 }
 
+/// One run's [`Summary`] plus the run-level utilization figures the
+/// campaign CSV reports (schema v3), both derived from the engine's
+/// always-on busy/shared GPU-second integrals.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub summary: Summary,
+    /// Mean GPU utilization: busy GPU-seconds / (total GPUs × makespan);
+    /// 0 for a degenerate (empty) run.
+    pub gpu_util: f64,
+    /// Fraction of busy GPU-time spent co-located: shared GPU-seconds /
+    /// busy GPU-seconds; 0 when nothing ran.
+    pub sharing_frac: f64,
+}
+
 impl ScenarioSpec {
     /// The cluster this scenario runs on.
     pub fn build_cluster(&self) -> Result<Cluster> {
@@ -367,6 +382,14 @@ impl ScenarioSpec {
     /// every golden test) is unaffected. Policy and cluster are still
     /// constructed fresh per run.
     pub fn run_with_trace(&self, jobs: &[JobSpec]) -> Result<Summary> {
+        Ok(self.run_with_trace_obs(jobs, Obs::disabled())?.summary)
+    }
+
+    /// [`ScenarioSpec::run_with_trace`] with an observability sink
+    /// attached and the run-level utilization figures returned alongside
+    /// the summary. A disabled `obs` is free; the caller owns the handle
+    /// and is responsible for [`Obs::finish`].
+    pub fn run_with_trace_obs(&self, jobs: &[JobSpec], obs: Obs) -> Result<RunResult> {
         let mut policy = sched::by_name(&self.policy)
             .with_context(|| format!("unknown policy {:?}", self.policy))?;
         let xi = match self.xi_global {
@@ -375,14 +398,23 @@ impl ScenarioSpec {
         };
         let engine_cfg = EngineConfig { max_sim_s: self.max_sim_s, ..EngineConfig::default() };
         let cluster = self.build_cluster()?;
-        let out = engine::run_cluster(cluster, jobs, xi, policy.as_mut(), engine_cfg)
-            .with_context(|| {
-                format!(
-                    "policy {} on {} jobs (seed {}, load x{})",
-                    self.policy, self.trace.n_jobs, self.trace.seed, self.trace.load_factor
-                )
-            })?;
-        Ok(metrics::summarize(&self.policy, &out.jobs, out.makespan_s))
+        let out =
+            engine::run_cluster_obs(cluster, jobs, xi, policy.as_mut(), engine_cfg, obs)
+                .with_context(|| {
+                    format!(
+                        "policy {} on {} jobs (seed {}, load x{})",
+                        self.policy, self.trace.n_jobs, self.trace.seed, self.trace.load_factor
+                    )
+                })?;
+        let capacity = out.total_gpus as f64 * out.makespan_s;
+        let gpu_util = if capacity > 0.0 { out.busy_gpu_s / capacity } else { 0.0 };
+        let sharing_frac =
+            if out.busy_gpu_s > 0.0 { out.shared_gpu_s / out.busy_gpu_s } else { 0.0 };
+        Ok(RunResult {
+            summary: metrics::summarize(&self.policy, &out.jobs, out.makespan_s),
+            gpu_util,
+            sharing_frac,
+        })
     }
 }
 
@@ -550,6 +582,32 @@ mod tests {
         assert_eq!(s.policy, "FIFO");
         assert_eq!(s.all.n, 12);
         assert!(s.all.avg_jct_s > 0.0);
+    }
+
+    #[test]
+    fn scenario_obs_run_reports_utilization() {
+        let scenario = ScenarioSpec {
+            policy: "FIFO".to_string(),
+            cluster: ClusterConfig::physical(),
+            topology: None,
+            trace: TraceConfig::simulation(12, 3),
+            xi_global: None,
+            max_sim_s: EngineConfig::default().max_sim_s,
+        };
+        let jobs = trace::generate(&scenario.trace);
+        let r = scenario.run_with_trace_obs(&jobs, Obs::disabled()).unwrap();
+        assert!(r.gpu_util > 0.0 && r.gpu_util <= 1.0, "gpu_util {}", r.gpu_util);
+        assert!(
+            (0.0..=1.0).contains(&r.sharing_frac),
+            "sharing_frac {}",
+            r.sharing_frac
+        );
+        // FIFO never shares GPUs, so every busy GPU-second is exclusive.
+        assert_eq!(r.sharing_frac, 0.0);
+        // The observed summary matches the plain path exactly.
+        let plain = scenario.run_with_trace(&jobs).unwrap();
+        assert_eq!(plain.all.n, r.summary.all.n);
+        assert_eq!(plain.makespan_s, r.summary.makespan_s);
     }
 
     #[test]

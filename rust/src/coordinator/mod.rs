@@ -37,6 +37,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::cluster::{Cluster, ClusterConfig, GpuId};
 use crate::jobs::{JobId, JobRecord, JobSpec};
+use crate::obskit::Obs;
 use crate::perf::interference::InterferenceModel;
 use crate::runtime::executor::{TrainExecutor, TrainState};
 use crate::runtime::ArtifactSet;
@@ -190,6 +191,22 @@ pub fn run_physical(
     xi: InterferenceModel,
     policy: &mut dyn Policy,
 ) -> Result<PhysicalOutcome> {
+    run_physical_obs(cfg, trace, xi, policy, Obs::disabled())
+}
+
+/// [`run_physical`] with an observability sink attached. The same taps the
+/// simulator engine exposes fire here: every delivered event, every applied
+/// (or rejected) transaction, and per-event policy wall latency — so the
+/// §V-4 overhead claim is measurable on the *physical* backend too, where
+/// latency is real wall time, not simulated. The caller owns `obs` and is
+/// responsible for calling [`Obs::finish`] afterwards.
+pub fn run_physical_obs(
+    cfg: PhysicalConfig,
+    trace: &[JobSpec],
+    xi: InterferenceModel,
+    policy: &mut dyn Policy,
+    obs: Obs,
+) -> Result<PhysicalOutcome> {
     let n_gpus = cfg.cluster.total_gpus();
     let board = Arc::new(Mutex::new(Board::default()));
     let stop = Arc::new(AtomicBool::new(false));
@@ -218,6 +235,8 @@ pub fn run_physical(
         })
         .collect();
     let mut ctx = SchedContext::new(Cluster::new(cfg.cluster), records, xi);
+    let obs_enabled = obs.is_enabled();
+    ctx.set_obs(obs.clone());
     // Target iteration counts after scaling.
     let targets: Vec<f64> = ctx.jobs.iter().map(|j| j.remaining_iters).collect();
     let mut executed: Vec<u64> = vec![0; trace.len()];
@@ -277,12 +296,42 @@ pub fn run_physical(
             // job's Completion reaches the policy — the engine's "exactly
             // one Completion per job" guarantee holds in both backends.
             for &ev in &events {
-                let txn = policy.on_event(&ctx, ev);
+                if obs_enabled {
+                    obs.engine_event(ctx.now(), ev);
+                }
+                let txn;
+                if obs_enabled {
+                    let w0 = Instant::now();
+                    txn = policy.on_event(&ctx, ev);
+                    obs.policy_latency(policy.name(), w0.elapsed().as_secs_f64());
+                } else {
+                    txn = policy.on_event(&ctx, ev);
+                }
                 if txn.has_preempt() {
+                    if obs_enabled {
+                        obs.txn_rejected(
+                            ctx.now(),
+                            policy.name(),
+                            &txn,
+                            "physical coordinator supports non-preemptive policies only",
+                        );
+                    }
                     bail!("physical coordinator supports non-preemptive policies only");
                 }
-                ctx.apply(&txn, penalty)
-                    .context("physical coordinator rejected a policy transaction")?;
+                match ctx.apply(&txn, penalty) {
+                    Ok(report) => {
+                        if obs_enabled {
+                            obs.txn_applied(ctx.now(), policy.name(), &txn, &report);
+                        }
+                    }
+                    Err(e) => {
+                        if obs_enabled {
+                            obs.txn_rejected(ctx.now(), policy.name(), &txn, &format!("{e:#}"));
+                        }
+                        return Err(e)
+                            .context("physical coordinator rejected a policy transaction");
+                    }
+                }
                 let mut b = board.lock().unwrap();
                 for d in txn.ops() {
                     if let Decision::Start { job, gpus, accum_step } = d {

@@ -36,6 +36,7 @@ pub mod campaign;
 pub mod cluster;
 pub mod coordinator;
 pub mod jobs;
+pub mod obskit;
 pub mod pair;
 pub mod perf;
 pub mod perfkit;
@@ -49,6 +50,7 @@ pub mod util;
 pub use cluster::{AllocView, Cluster, ClusterConfig, ClusterOverlay, Topology};
 pub use jobs::{JobRecord, JobSpec, JobState};
 pub use perf::interference::InterferenceModel;
+pub use obskit::{Obs, ObsConfig};
 pub use perf::GangSpan;
 pub use sched_core::{Event, Policy, SchedContext, Txn};
 pub use sim::engine::run as simulate;

@@ -25,7 +25,8 @@ use anyhow::{bail, Context, Result};
 
 use wise_share::campaign::{self, CampaignSpec};
 use wise_share::cluster::{topology, Cluster, ClusterConfig};
-use wise_share::coordinator::{run_physical, write_loss_csv, PhysicalConfig};
+use wise_share::coordinator::{run_physical_obs, write_loss_csv, PhysicalConfig};
+use wise_share::obskit::{Obs, ObsConfig};
 use wise_share::jobs::estimate::{self, EstimateModel};
 use wise_share::jobs::trace::{self, TraceConfig};
 use wise_share::jobs::workload;
@@ -45,13 +46,17 @@ USAGE:
                        [--cluster physical|simulation | --topology SHAPE]
                        [--workload PRESET] [--estimator SPEC]
                        [--xi X] [--load L]
+                       [--trace-out F] [--metrics-out F] [--audit-out F]
+                       [--sample-every SECS]
   wise-share campaign  (--spec FILE | --preset paper) [--threads N]
-                       [--csv F]
+                       [--csv F] [--trace-dir D] [--metrics-dir D]
+                       [--audit-dir D] [--sample-every SECS]
   wise-share bench     [--suite NAMES] [--profile quick|full] [--out F]
                        [--baseline F] [--max-regress PCT] | [--check F]
   wise-share physical  [--policy NAME] [--jobs N] [--seed S]
                        [--iter-scale F] [--compress F] [--loss-csv F]
                        [--artifacts DIR]
+                       [--trace-out F] [--metrics-out F] [--audit-out F]
   wise-share trace-gen --out F [--jobs N] [--seed S] [--preset physical|simulation]
                        [--workload PRESET] [--estimator SPEC]
   wise-share fit       [--model NAME]
@@ -66,6 +71,15 @@ helios-heavy-tail, small-job-flood.
 
 Estimator SPECs (scheduler-visible duration estimates, also usable on the
 campaign `estimators` axis): oracle | noisy:SIGMA[:SEED] | percentile:PCT.
+
+Observability (obskit, DESIGN.md §13): --trace-out writes a
+Perfetto-viewable Chrome-trace JSON (plus a sibling .jsonl event stream),
+--metrics-out a runtime-metrics JSON (counters, on_event latency
+histograms, utilization samples every --sample-every sim-seconds,
+default 60), --audit-out a decision-audit JSONL. With `--policy all` the
+policy name is inserted before the file extension. The campaign variants
+take directories and write one artifact set per run ordinal. Sinks off
+(the default) cost nothing and outputs are byte-identical.
 
 Bench SUITE names (comma-separated for --suite; default = all): tables,
 figures, ablations, sched_overhead, runtime_hotpath, campaign_throughput,
@@ -144,6 +158,56 @@ fn preset_by_name(name: &str) -> Result<Preset> {
     })
 }
 
+/// `path` with `policy` slugged in before the final extension
+/// (`out.trace.json` → `out.trace.sjf-bsbf.json`) — how `--policy all`
+/// keeps six runs' artifacts apart. `None` passes the path through.
+fn with_policy_suffix(path: &str, policy: Option<&str>) -> PathBuf {
+    let p = PathBuf::from(path);
+    let Some(name) = policy else { return p };
+    let slug: String = name
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c.to_ascii_lowercase() } else { '-' })
+        .collect();
+    let file = match (p.file_stem().and_then(|s| s.to_str()), p.extension()) {
+        (Some(stem), Some(ext)) => format!("{stem}.{slug}.{}", ext.to_string_lossy()),
+        (Some(stem), None) => format!("{stem}.{slug}"),
+        _ => slug,
+    };
+    p.with_file_name(file)
+}
+
+/// The per-run sink config from `--trace-out` / `--metrics-out` /
+/// `--audit-out` / `--sample-every`; `policy` is `Some` only when several
+/// policies share the flags (`--policy all`).
+fn obs_config(args: &Args, policy: Option<&str>) -> Result<ObsConfig> {
+    let sample_every: f64 = args.parse_or("sample-every", 60.0)?;
+    if sample_every <= 0.0 || !sample_every.is_finite() {
+        bail!("--sample-every {sample_every} must be finite and > 0");
+    }
+    Ok(ObsConfig {
+        trace: args.get("trace-out").map(|p| with_policy_suffix(p, policy)),
+        metrics: args.get("metrics-out").map(|p| with_policy_suffix(p, policy)),
+        audit: args.get("audit-out").map(|p| with_policy_suffix(p, policy)),
+        sample_every_s: sample_every,
+    })
+}
+
+/// Flush `obs` and note each written artifact on stderr, keeping stdout
+/// byte-identical to an obs-off run.
+fn finish_obs(obs: &Obs, cfg: &ObsConfig) -> Result<()> {
+    obs.finish()?;
+    for (what, path) in [
+        ("chrome trace", &cfg.trace),
+        ("runtime metrics", &cfg.metrics),
+        ("decision audit", &cfg.audit),
+    ] {
+        if let Some(p) = path {
+            eprintln!("{what} -> {}", p.display());
+        }
+    }
+    Ok(())
+}
+
 /// Resolve `--cluster` (flat preset) / `--topology` (named shape) into a
 /// concrete cluster; the flags are mutually exclusive.
 fn resolve_cluster(args: &Args) -> Result<Cluster> {
@@ -201,16 +265,25 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     for name in &names {
         let mut p =
             sched::by_name(name).with_context(|| format!("unknown policy {name}"))?;
-        let out = engine::run_cluster(
+        let ocfg = obs_config(args, (names.len() > 1).then_some(name.as_str()))?;
+        let obs = Obs::new(ocfg.clone());
+        let out = engine::run_cluster_obs(
             cluster.clone(),
             &jobs_list,
             xi_model.clone(),
             p.as_mut(),
             engine::EngineConfig::default(),
+            obs.clone(),
         )?;
+        finish_obs(&obs, &ocfg)?;
         let s = metrics::summarize(name, &out.jobs, out.makespan_s);
+        let unfinished = if s.all.unfinished > 0 {
+            format!(", {} UNFINISHED", s.all.unfinished)
+        } else {
+            String::new()
+        };
         println!(
-            "{name}: makespan {:.0}s, avg JCT {:.1}s, {} preemptions, {} policy calls",
+            "{name}: makespan {:.0}s, avg JCT {:.1}s, {} preemptions, {} policy calls{unfinished}",
             out.makespan_s, s.all.avg_jct_s, out.preemptions, out.policy_calls,
         );
         rows.push(s);
@@ -228,6 +301,16 @@ fn cmd_campaign(args: &Args) -> Result<()> {
         (None, None) => bail!("campaign needs --spec FILE or --preset paper\n{USAGE}"),
     };
     let threads: usize = args.parse_or("threads", 0)?;
+    let sample_every: f64 = args.parse_or("sample-every", 60.0)?;
+    if sample_every <= 0.0 || !sample_every.is_finite() {
+        bail!("--sample-every {sample_every} must be finite and > 0");
+    }
+    let obs_dirs = campaign::ObsDirs {
+        trace_dir: args.get("trace-dir").map(PathBuf::from),
+        metrics_dir: args.get("metrics-dir").map(PathBuf::from),
+        audit_dir: args.get("audit-dir").map(PathBuf::from),
+        sample_every_s: sample_every,
+    };
     let points = campaign::expand(&spec)?;
     println!(
         "campaign {:?}: {} runs over {} worker thread(s)",
@@ -235,7 +318,20 @@ fn cmd_campaign(args: &Args) -> Result<()> {
         points.len(),
         campaign::resolved_threads(points.len(), threads),
     );
-    let res = campaign::execute_matrix(&points, threads);
+    let res = campaign::execute_matrix_obs(&points, threads, &obs_dirs);
+    if obs_dirs.is_enabled() {
+        // Artifact notices go to stderr: stdout stays byte-identical to
+        // an obs-off campaign (the determinism gate compares it).
+        for (what, dir) in [
+            ("chrome traces", &obs_dirs.trace_dir),
+            ("runtime metrics", &obs_dirs.metrics_dir),
+            ("decision audits", &obs_dirs.audit_dir),
+        ] {
+            if let Some(d) = dir {
+                eprintln!("{what} ({} per-run files) -> {}", res.n_runs, d.display());
+            }
+        }
+    }
     print!("{}", campaign::emit::markdown(&spec.name, &res.cells));
     let csv_path = PathBuf::from(args.get("csv").unwrap_or("campaign_results.csv"));
     std::fs::write(&csv_path, campaign::emit::long_csv(&spec.name, &res.cells))
@@ -304,7 +400,11 @@ fn cmd_physical(args: &Args) -> Result<()> {
     for j in &mut jobs_list {
         j.gpus = j.gpus.min(cfg.cluster.total_gpus());
     }
-    let out = run_physical(cfg, &jobs_list, InterferenceModel::new(), p.as_mut())?;
+    let ocfg = obs_config(args, None)?;
+    let obs = Obs::new(ocfg.clone());
+    let out =
+        run_physical_obs(cfg, &jobs_list, InterferenceModel::new(), p.as_mut(), obs.clone())?;
+    finish_obs(&obs, &ocfg)?;
     let summary = metrics::summarize(&policy, &out.jobs, out.makespan_s);
     println!(
         "{policy}: makespan {:.1}s wall, avg JCT {:.1}s, {} PJRT iterations executed",

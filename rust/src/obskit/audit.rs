@@ -1,0 +1,162 @@
+//! Decision-audit sink: one JSON object per line (JSONL), covering every
+//! non-empty transaction the backend applied, every transaction
+//! [`SchedContext::apply`] rejected (with the validation cause), every
+//! SJF-BSBF Algorithm-2 candidate evaluation, and free-form policy notes
+//! (HOL blocking, Tiresias demotions, held elastic resizes).
+//!
+//! Line kinds: `"apply"`, `"reject"`, `"alg2"`, `"note"` — each with a
+//! sim-time `t` and enough structure to reconstruct *why* the schedule
+//! looks the way it does without re-running the policy.
+//!
+//! [`SchedContext::apply`]: crate::sched_core::SchedContext::apply
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::sched_core::{ApplyReport, Decision, Txn};
+use crate::util::json::Json;
+
+use super::{obj, write_file, Alg2Audit};
+
+fn ops_json(txn: &Txn) -> Json {
+    Json::Arr(
+        txn.ops()
+            .iter()
+            .map(|d| match d {
+                Decision::Start { job, gpus, accum_step } => obj(vec![
+                    ("op", "start".into()),
+                    ("job", Json::from(*job)),
+                    ("gpus", Json::Arr(gpus.iter().map(|&g| Json::from(g)).collect())),
+                    ("accum_step", Json::from(*accum_step as u64)),
+                ]),
+                Decision::Preempt { job } => {
+                    obj(vec![("op", "preempt".into()), ("job", Json::from(*job))])
+                }
+            })
+            .collect(),
+    )
+}
+
+#[derive(Debug)]
+pub struct AuditSink {
+    path: Option<PathBuf>,
+    lines: Vec<String>,
+}
+
+impl AuditSink {
+    pub fn new(path: Option<PathBuf>) -> Self {
+        AuditSink { path, lines: Vec::new() }
+    }
+
+    fn push(&mut self, j: Json) {
+        self.lines.push(j.to_string());
+    }
+
+    /// An applied transaction. Empty ("no action") transactions are
+    /// skipped — an event-per-line record of inaction would drown the
+    /// actual decisions.
+    pub fn applied(&mut self, t: f64, policy: &str, txn: &Txn, report: &ApplyReport) {
+        if txn.is_empty() {
+            return;
+        }
+        self.push(obj(vec![
+            ("t", Json::Num(t)),
+            ("kind", "apply".into()),
+            ("policy", policy.into()),
+            ("starts", Json::from(report.starts)),
+            ("preemptions", Json::from(report.preemptions)),
+            ("ops", ops_json(txn)),
+        ]));
+    }
+
+    pub fn rejected(&mut self, t: f64, policy: &str, txn: &Txn, cause: &str) {
+        self.push(obj(vec![
+            ("t", Json::Num(t)),
+            ("kind", "reject".into()),
+            ("policy", policy.into()),
+            ("cause", cause.into()),
+            ("ops", ops_json(txn)),
+        ]));
+    }
+
+    pub fn alg2(&mut self, t: f64, a: &Alg2Audit) {
+        self.push(obj(vec![
+            ("t", Json::Num(t)),
+            ("kind", "alg2".into()),
+            ("job", Json::from(a.job)),
+            ("owner", Json::from(a.owner)),
+            ("accepted", Json::from(a.accepted)),
+            ("reason", a.reason.into()),
+            ("accum_step", a.accum_step.map(|s| Json::from(s as u64)).unwrap_or(Json::Null)),
+            ("pair_jct_s", a.pair_jct_s.map(Json::Num).unwrap_or(Json::Null)),
+        ]));
+    }
+
+    pub fn note(&mut self, t: f64, policy: &str, msg: &str) {
+        self.push(obj(vec![
+            ("t", Json::Num(t)),
+            ("kind", "note".into()),
+            ("policy", policy.into()),
+            ("msg", msg.into()),
+        ]));
+    }
+
+    pub fn len(&self) -> usize {
+        self.lines.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lines.is_empty()
+    }
+
+    pub fn finish(&mut self) -> Result<()> {
+        let Some(path) = &self.path else { return Ok(()) };
+        write_file(path, &(self.lines.join("\n") + "\n"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lines_are_parseable_json_and_empty_txns_are_skipped() {
+        let mut a = AuditSink::new(None);
+        a.applied(0.0, "FIFO", &Txn::new(), &ApplyReport::default());
+        assert!(a.is_empty());
+        let mut txn = Txn::new();
+        txn.start(3, vec![0, 1], 2);
+        txn.preempt(7);
+        a.applied(1.5, "Tiresias", &txn, &ApplyReport { starts: 1, preemptions: 1 });
+        a.rejected(2.0, "Tiresias", &txn, "Start(3): job is Running");
+        a.alg2(
+            3.0,
+            &Alg2Audit {
+                job: 5,
+                owner: 3,
+                accepted: false,
+                reason: "memory-infeasible",
+                accum_step: None,
+                pair_jct_s: None,
+            },
+        );
+        a.note(4.0, "FIFO", "HOL blocked on job 9");
+        assert_eq!(a.len(), 4);
+        for line in &a.lines {
+            let j = Json::parse(line).unwrap();
+            assert!(j.get("kind").is_some());
+            assert!(j.get("t").is_some());
+        }
+        let apply = Json::parse(&a.lines[0]).unwrap();
+        assert_eq!(apply.get("kind").unwrap().as_str(), Some("apply"));
+        let ops = apply.get("ops").unwrap().as_arr().unwrap();
+        assert_eq!(ops.len(), 2);
+        assert_eq!(ops[0].get("op").unwrap().as_str(), Some("start"));
+        assert_eq!(ops[0].get("gpus").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(ops[1].get("op").unwrap().as_str(), Some("preempt"));
+        let alg2 = Json::parse(&a.lines[2]).unwrap();
+        assert_eq!(alg2.get("accepted").unwrap().as_bool(), Some(false));
+        assert_eq!(alg2.get("accum_step"), Some(&Json::Null));
+    }
+}

@@ -1,0 +1,224 @@
+//! Runtime-metrics sink: a small first-party registry — monotonic
+//! counters, raw-sample histograms, and a sim-time-cadence utilization
+//! sampler. No external metrics dependency (vendored-only rule); the
+//! artifact is a single schema-versioned JSON document written at
+//! finish.
+//!
+//! Histograms keep the *raw* observation vector (policy passes number in
+//! the thousands, not millions), so percentiles at emit time are exact —
+//! computed with the bench-side ceiling-rank definition from
+//! [`crate::util::stats`].
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::sched_core::{ApplyReport, Event, Txn};
+use crate::util::json::Json;
+use crate::util::stats::percentile_ceiling_rank;
+
+use super::{obj, write_file};
+
+/// Schema tag of the emitted metrics document.
+pub const METRICS_SCHEMA: &str = "wise-share-metrics-v1";
+
+#[derive(Debug, Clone, Copy)]
+struct Sample {
+    t: f64,
+    busy: usize,
+    shared: usize,
+    total: usize,
+    queue_depth: usize,
+    pending: usize,
+}
+
+#[derive(Debug)]
+pub struct MetricsSink {
+    path: Option<PathBuf>,
+    counters: BTreeMap<String, u64>,
+    hists: BTreeMap<String, Vec<f64>>,
+    samples: Vec<Sample>,
+    sample_every_s: f64,
+    next_sample_s: f64,
+}
+
+impl MetricsSink {
+    pub fn new(path: Option<PathBuf>, sample_every_s: f64) -> Self {
+        MetricsSink {
+            path,
+            counters: BTreeMap::new(),
+            hists: BTreeMap::new(),
+            samples: Vec::new(),
+            sample_every_s: if sample_every_s > 0.0 { sample_every_s } else { 60.0 },
+            next_sample_s: 0.0,
+        }
+    }
+
+    pub fn add(&mut self, name: &str, delta: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += delta;
+    }
+
+    pub fn observe(&mut self, name: &str, v: f64) {
+        self.hists.entry(name.to_string()).or_default().push(v);
+    }
+
+    pub fn count_event(&mut self, ev: Event) {
+        let name = match ev {
+            Event::Arrival { .. } => "events/arrival",
+            Event::Completion { .. } => "events/completion",
+            Event::RestartEligible { .. } => "events/restart_eligible",
+            Event::Tick => "events/tick",
+        };
+        self.add(name, 1);
+    }
+
+    pub fn txn_applied(&mut self, txn: &Txn, report: &ApplyReport) {
+        if !txn.is_empty() {
+            self.add("txn/applied", 1);
+        }
+        if report.starts > 0 {
+            self.add("txn/starts", report.starts);
+        }
+        if report.preemptions > 0 {
+            self.add("txn/preemptions", report.preemptions);
+        }
+    }
+
+    pub fn txn_rejected(&mut self) {
+        self.add("txn/rejected", 1);
+    }
+
+    /// Record a utilization sample if the cadence says one is due;
+    /// otherwise drop the call. The next due time is strictly after `t`,
+    /// so a burst of same-instant events yields one sample and a long
+    /// quiet gap is not back-filled.
+    pub fn sample(
+        &mut self,
+        t: f64,
+        busy: usize,
+        shared: usize,
+        total: usize,
+        queue_depth: usize,
+        pending: usize,
+    ) {
+        if t < self.next_sample_s {
+            return;
+        }
+        self.samples.push(Sample { t, busy, shared, total, queue_depth, pending });
+        self.next_sample_s = t + self.sample_every_s;
+    }
+
+    pub fn samples_of(&self, name: &str) -> Option<Vec<f64>> {
+        self.hists.get(name).cloned()
+    }
+
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        self.counters.get(name).copied()
+    }
+
+    fn hist_summary(samples: &[f64]) -> Json {
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(f64::total_cmp);
+        let n = sorted.len();
+        obj(vec![
+            ("n", Json::from(n)),
+            ("mean_s", Json::Num(sorted.iter().sum::<f64>() / n as f64)),
+            ("min_s", Json::Num(sorted[0])),
+            ("p50_s", Json::Num(percentile_ceiling_rank(&sorted, 0.50))),
+            ("p95_s", Json::Num(percentile_ceiling_rank(&sorted, 0.95))),
+            ("max_s", Json::Num(sorted[n - 1])),
+        ])
+    }
+
+    /// The full metrics document: counters, summarized histograms, and
+    /// the utilization time series with derived `gpu_util` /
+    /// `sharing_frac` per sample.
+    pub fn render(&self) -> Json {
+        let counters = Json::Obj(
+            self.counters.iter().map(|(k, &v)| (k.clone(), Json::from(v))).collect(),
+        );
+        let hists = Json::Obj(
+            self.hists
+                .iter()
+                .filter(|(_, v)| !v.is_empty())
+                .map(|(k, v)| (k.clone(), Self::hist_summary(v)))
+                .collect(),
+        );
+        let samples = Json::Arr(
+            self.samples
+                .iter()
+                .map(|s| {
+                    let gpu_util =
+                        if s.total > 0 { s.busy as f64 / s.total as f64 } else { 0.0 };
+                    let sharing_frac =
+                        if s.busy > 0 { s.shared as f64 / s.busy as f64 } else { 0.0 };
+                    obj(vec![
+                        ("t_s", Json::Num(s.t)),
+                        ("busy_gpus", Json::from(s.busy)),
+                        ("shared_gpus", Json::from(s.shared)),
+                        ("total_gpus", Json::from(s.total)),
+                        ("queue_depth", Json::from(s.queue_depth)),
+                        ("pending", Json::from(s.pending)),
+                        ("gpu_util", Json::Num(gpu_util)),
+                        ("sharing_frac", Json::Num(sharing_frac)),
+                    ])
+                })
+                .collect(),
+        );
+        obj(vec![
+            ("schema", METRICS_SCHEMA.into()),
+            ("counters", counters),
+            ("histograms", hists),
+            ("samples", samples),
+        ])
+    }
+
+    pub fn finish(&mut self) -> Result<()> {
+        let Some(path) = &self.path else { return Ok(()) };
+        write_file(path, &self.render().to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_summary_is_exact_on_raw_samples() {
+        let mut m = MetricsSink::new(None, 60.0);
+        for i in 1..=20 {
+            m.observe("on_event_latency/T", i as f64);
+        }
+        let doc = m.render();
+        let h = doc.get("histograms").unwrap().get("on_event_latency/T").unwrap();
+        assert_eq!(h.get("n").unwrap().as_usize(), Some(20));
+        assert_eq!(h.get("min_s").unwrap().as_f64(), Some(1.0));
+        assert_eq!(h.get("max_s").unwrap().as_f64(), Some(20.0));
+        // Ceiling-rank percentiles, same pins as util::bench.
+        assert_eq!(h.get("p50_s").unwrap().as_f64(), Some(10.0));
+        assert_eq!(h.get("p95_s").unwrap().as_f64(), Some(19.0));
+    }
+
+    #[test]
+    fn document_is_schema_tagged_and_roundtrips() {
+        let mut m = MetricsSink::new(None, 60.0);
+        m.add("txn/applied", 2);
+        m.sample(0.0, 1, 0, 4, 2, 2);
+        let text = m.render().to_string();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.get("schema").unwrap().as_str(), Some(METRICS_SCHEMA));
+        assert_eq!(back.get("counters").unwrap().get("txn/applied").unwrap().as_u64(), Some(2));
+        assert_eq!(back.get("samples").unwrap().as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn empty_slice_guards() {
+        let mut m = MetricsSink::new(None, 60.0);
+        m.sample(0.0, 0, 0, 0, 0, 0); // zero-GPU cluster: no division
+        let doc = m.render();
+        let s = &doc.get("samples").unwrap().as_arr().unwrap()[0];
+        assert_eq!(s.get("gpu_util").unwrap().as_f64(), Some(0.0));
+        assert_eq!(s.get("sharing_frac").unwrap().as_f64(), Some(0.0));
+    }
+}

@@ -1,0 +1,424 @@
+//! `obskit` — zero-cost-when-off observability for both scheduling
+//! backends (DESIGN.md §13): an event-timeline trace in Chrome trace
+//! format (Perfetto-viewable) plus a compact JSONL stream, a first-party
+//! runtime-metrics registry (counters / histograms / a sim-time sampler —
+//! no external deps, per the vendored-only rule), and a scheduler
+//! decision-audit log covering every applied or rejected [`Txn`] and
+//! SJF-BSBF's per-candidate Algorithm-2 scoring.
+//!
+//! One [`Obs`] handle threads through `sim::engine` → [`SchedContext`] →
+//! policies → `coordinator` → `campaign`. Disabled ([`Obs::disabled`],
+//! the default) it is a single `Option` branch per call site — no
+//! allocation, no lock, no I/O — and the simulation is bit-identical
+//! with or without the handle (gated by the CI determinism + `obs-smoke`
+//! legs). Enabled, sinks record in memory and write their artifacts only
+//! at [`Obs::finish`]; nothing ever feeds back into the simulation, so
+//! sim *results* are identical with sinks on or off — observation is
+//! strictly one-way.
+//!
+//! [`SchedContext`]: crate::sched_core::SchedContext
+
+pub mod audit;
+pub mod metrics;
+pub mod trace;
+
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::cluster::GpuId;
+use crate::jobs::JobId;
+use crate::sched_core::{ApplyReport, Event, Txn};
+use crate::util::json::Json;
+
+/// Build a JSON object from `(key, value)` pairs — emitter-side sugar
+/// shared by the three sinks.
+pub(crate) fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+/// Write `contents` to `path`, creating parent directories as needed.
+pub(crate) fn write_file(path: &Path, contents: &str) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating {}", parent.display()))?;
+        }
+    }
+    std::fs::write(path, contents).with_context(|| format!("writing {}", path.display()))
+}
+
+/// Where each surface writes, and how often the metrics sampler fires.
+/// A surface with no path is not armed; all-`None` builds a disabled
+/// handle.
+#[derive(Debug, Clone)]
+pub struct ObsConfig {
+    /// Chrome-trace JSON output (a sibling `.jsonl` stream is written
+    /// next to it).
+    pub trace: Option<PathBuf>,
+    /// Runtime-metrics JSON output ([`metrics::METRICS_SCHEMA`]).
+    pub metrics: Option<PathBuf>,
+    /// Decision-audit JSONL output (one JSON object per line).
+    pub audit: Option<PathBuf>,
+    /// Sim-time seconds between metrics samples (default 60).
+    pub sample_every_s: f64,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig { trace: None, metrics: None, audit: None, sample_every_s: 60.0 }
+    }
+}
+
+/// One Algorithm-2 candidate evaluation (the SJF-BSBF audit surface):
+/// pending `job` considered for co-location on `owner`'s GPUs, with the
+/// sweep's verdict.
+#[derive(Debug, Clone)]
+pub struct Alg2Audit {
+    pub job: JobId,
+    pub owner: JobId,
+    pub accepted: bool,
+    /// `"share"` / `"exclusive-preferred"` (Theorem 1 said wait) /
+    /// `"memory-infeasible"` (no sub-batch fits Eq. 9) /
+    /// `"gate-ablated"` (accepted only because the Theorem-1 gate is
+    /// ablated off).
+    pub reason: &'static str,
+    /// Chosen gradient-accumulation step (sub-batch = B / step), when the
+    /// sweep found a feasible configuration.
+    pub accum_step: Option<u32>,
+    /// Benefit score: the Theorem-1 pairwise JCT of the best sub-batch.
+    pub pair_jct_s: Option<f64>,
+}
+
+#[derive(Debug)]
+struct ObsCore {
+    trace: Option<trace::TraceSink>,
+    metrics: Option<metrics::MetricsSink>,
+    audit: Option<audit::AuditSink>,
+}
+
+/// The cloneable sink handle threaded through the backends. Clones share
+/// one core (engine, context and campaign runner all record into the
+/// same sinks); the disabled handle carries no core at all.
+#[derive(Debug, Clone, Default)]
+pub struct Obs {
+    inner: Option<Arc<Mutex<ObsCore>>>,
+}
+
+impl Obs {
+    /// The no-op handle: every record call is a single `None` branch.
+    pub fn disabled() -> Self {
+        Obs { inner: None }
+    }
+
+    /// Arm the sinks named by `cfg`; all-`None` yields a disabled handle.
+    pub fn new(cfg: ObsConfig) -> Self {
+        if cfg.trace.is_none() && cfg.metrics.is_none() && cfg.audit.is_none() {
+            return Obs::disabled();
+        }
+        let core = ObsCore {
+            trace: cfg.trace.map(|p| trace::TraceSink::new(Some(p))),
+            metrics: cfg
+                .metrics
+                .map(|p| metrics::MetricsSink::new(Some(p), cfg.sample_every_s)),
+            audit: cfg.audit.map(|p| audit::AuditSink::new(Some(p))),
+        };
+        Obs { inner: Some(Arc::new(Mutex::new(core))) }
+    }
+
+    /// All three sinks armed with no output paths — recording costs are
+    /// real but [`Obs::finish`] writes nothing. For tests and perfkit's
+    /// obs-overhead / latency-histogram measurement.
+    pub fn in_memory(sample_every_s: f64) -> Self {
+        let core = ObsCore {
+            trace: Some(trace::TraceSink::new(None)),
+            metrics: Some(metrics::MetricsSink::new(None, sample_every_s)),
+            audit: Some(audit::AuditSink::new(None)),
+        };
+        Obs { inner: Some(Arc::new(Mutex::new(core))) }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    fn with_core<F: FnOnce(&mut ObsCore)>(&self, f: F) {
+        if let Some(core) = &self.inner {
+            f(&mut core.lock().unwrap());
+        }
+    }
+
+    // ------------------------------------------------- record: timeline
+
+    /// An engine event delivered to the policy at sim time `t`.
+    pub fn engine_event(&self, t: f64, ev: Event) {
+        self.with_core(|c| {
+            if let Some(m) = &mut c.metrics {
+                m.count_event(ev);
+            }
+            if let Some(tr) = &mut c.trace {
+                tr.engine_event(t, ev);
+            }
+        });
+    }
+
+    /// A job's gang started running (opens its trace span).
+    pub fn job_started(&self, t: f64, job: JobId, gpus: &[GpuId], shared: bool) {
+        self.with_core(|c| {
+            if let Some(tr) = &mut c.trace {
+                tr.job_started(t, job, gpus.len(), shared);
+            }
+        });
+    }
+
+    /// A running job stopped (`reason`: `"finish"` or `"preempt"`);
+    /// closes its trace span.
+    pub fn job_stopped(&self, t: f64, job: JobId, reason: &str) {
+        self.with_core(|c| {
+            if let Some(tr) = &mut c.trace {
+                tr.job_stopped(t, job, reason);
+            }
+        });
+    }
+
+    /// A running job's co-location status flipped (a neighbor started on
+    /// or left its GPUs); re-segments its open trace span so solo vs
+    /// shared intervals are separate, flagged slices.
+    pub fn job_share_changed(&self, t: f64, job: JobId, shared: bool) {
+        self.with_core(|c| {
+            if let Some(tr) = &mut c.trace {
+                tr.job_share_changed(t, job, shared);
+            }
+        });
+    }
+
+    /// Cluster occupancy counters for the trace's counter track
+    /// (change-gated inside the sink).
+    pub fn cluster_counts(&self, t: f64, busy: usize, shared: usize) {
+        self.with_core(|c| {
+            if let Some(tr) = &mut c.trace {
+                tr.counts(t, busy, shared);
+            }
+        });
+    }
+
+    // -------------------------------------------------- record: metrics
+
+    /// One `Policy::on_event` wall-clock latency observation (the §V-4
+    /// overhead claim as a recorded distribution).
+    pub fn policy_latency(&self, policy: &str, secs: f64) {
+        self.with_core(|c| {
+            if let Some(m) = &mut c.metrics {
+                m.observe(&format!("on_event_latency/{policy}"), secs);
+            }
+        });
+    }
+
+    /// Cadence-gated utilization sample (the sink drops calls before the
+    /// next due time).
+    pub fn sample(
+        &self,
+        t: f64,
+        busy: usize,
+        shared: usize,
+        total: usize,
+        queue_depth: usize,
+        pending: usize,
+    ) {
+        self.with_core(|c| {
+            if let Some(m) = &mut c.metrics {
+                m.sample(t, busy, shared, total, queue_depth, pending);
+            }
+        });
+    }
+
+    // ---------------------------------------------------- record: audit
+
+    /// A transaction the backend applied successfully (empty "no action"
+    /// transactions are counted but not audit-logged).
+    pub fn txn_applied(&self, t: f64, policy: &str, txn: &Txn, report: &ApplyReport) {
+        self.with_core(|c| {
+            if let Some(m) = &mut c.metrics {
+                m.txn_applied(txn, report);
+            }
+            if let Some(a) = &mut c.audit {
+                a.applied(t, policy, txn, report);
+            }
+        });
+    }
+
+    /// A transaction [`SchedContext::apply`] rejected, with the
+    /// validation cause (the backend still treats this as fatal).
+    ///
+    /// [`SchedContext::apply`]: crate::sched_core::SchedContext::apply
+    pub fn txn_rejected(&self, t: f64, policy: &str, txn: &Txn, cause: &str) {
+        self.with_core(|c| {
+            if let Some(m) = &mut c.metrics {
+                m.txn_rejected();
+            }
+            if let Some(a) = &mut c.audit {
+                a.rejected(t, policy, txn, cause);
+            }
+        });
+    }
+
+    /// One SJF-BSBF Algorithm-2 candidate-pair evaluation.
+    pub fn alg2_candidate(&self, t: f64, a: &Alg2Audit) {
+        self.with_core(|c| {
+            if let Some(m) = &mut c.metrics {
+                m.add(if a.accepted { "alg2/accepted" } else { "alg2/rejected" }, 1);
+            }
+            if let Some(au) = &mut c.audit {
+                au.alg2(t, a);
+            }
+        });
+    }
+
+    /// Free-form policy-side annotation (HOL blocking, queue demotions,
+    /// held resizes, …). Callers should gate any message formatting on
+    /// [`Obs::is_enabled`] so the disabled path allocates nothing.
+    pub fn policy_note(&self, t: f64, policy: &str, msg: &str) {
+        self.with_core(|c| {
+            if let Some(a) = &mut c.audit {
+                a.note(t, policy, msg);
+            }
+        });
+    }
+
+    // ----------------------------------------------------------- output
+
+    /// Raw observation vector of histogram `name` (e.g.
+    /// `"on_event_latency/FIFO"`), if the metrics sink is armed and saw
+    /// it — perfkit folds these into [`crate::util::bench::BenchStats`].
+    pub fn histogram_samples(&self, name: &str) -> Option<Vec<f64>> {
+        let core = self.inner.as_ref()?;
+        let c = core.lock().unwrap();
+        c.metrics.as_ref().and_then(|m| m.samples_of(name))
+    }
+
+    /// Current value of counter `name`, if the metrics sink is armed and
+    /// the counter was ever incremented.
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        let core = self.inner.as_ref()?;
+        let c = core.lock().unwrap();
+        c.metrics.as_ref().and_then(|m| m.counter(name))
+    }
+
+    /// The metrics document as it would be written, if the sink is armed.
+    pub fn metrics_json(&self) -> Option<Json> {
+        let core = self.inner.as_ref()?;
+        let c = core.lock().unwrap();
+        c.metrics.as_ref().map(|m| m.render())
+    }
+
+    /// Close open trace spans and write every armed sink's artifact (a
+    /// sink with no path skips the write). Called by the *owner* of the
+    /// run — `main.rs` or the campaign runner — never by the engine, so
+    /// one handle can span several runs if a caller wants that.
+    pub fn finish(&self) -> Result<()> {
+        if let Some(core) = &self.inner {
+            let mut c = core.lock().unwrap();
+            if let Some(tr) = &mut c.trace {
+                tr.finish()?;
+            }
+            if let Some(m) = &mut c.metrics {
+                m.finish()?;
+            }
+            if let Some(a) = &mut c.audit {
+                a.finish()?;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_handle_is_inert() {
+        let obs = Obs::disabled();
+        assert!(!obs.is_enabled());
+        obs.engine_event(0.0, Event::Tick);
+        obs.policy_latency("FIFO", 1e-6);
+        obs.sample(0.0, 1, 0, 4, 0, 0);
+        obs.job_started(0.0, 3, &[0, 1], false);
+        assert_eq!(obs.histogram_samples("on_event_latency/FIFO"), None);
+        assert_eq!(obs.counter("events/tick"), None);
+        assert!(obs.metrics_json().is_none());
+        obs.finish().unwrap();
+    }
+
+    #[test]
+    fn default_config_builds_disabled() {
+        assert!(!Obs::new(ObsConfig::default()).is_enabled());
+    }
+
+    #[test]
+    fn in_memory_counts_events_and_latencies() {
+        let obs = Obs::in_memory(60.0);
+        assert!(obs.is_enabled());
+        obs.engine_event(0.0, Event::Tick);
+        obs.engine_event(1.0, Event::Arrival { job: 0 });
+        obs.engine_event(2.0, Event::Completion { job: 0 });
+        obs.policy_latency("FIFO", 2e-6);
+        obs.policy_latency("FIFO", 3e-6);
+        assert_eq!(obs.counter("events/tick"), Some(1));
+        assert_eq!(obs.counter("events/arrival"), Some(1));
+        assert_eq!(obs.counter("events/completion"), Some(1));
+        assert_eq!(obs.histogram_samples("on_event_latency/FIFO").unwrap().len(), 2);
+        obs.finish().unwrap(); // no paths: writes nothing
+    }
+
+    #[test]
+    fn clones_share_one_core() {
+        let obs = Obs::in_memory(60.0);
+        let clone = obs.clone();
+        clone.engine_event(0.0, Event::Tick);
+        assert_eq!(obs.counter("events/tick"), Some(1));
+    }
+
+    #[test]
+    fn sampler_respects_cadence() {
+        let obs = Obs::in_memory(10.0);
+        obs.sample(0.0, 2, 0, 4, 1, 1); // due (first sample)
+        obs.sample(5.0, 2, 0, 4, 1, 1); // early: dropped
+        obs.sample(10.0, 3, 2, 4, 0, 0); // due
+        obs.sample(10.0, 3, 2, 4, 0, 0); // same instant: dropped
+        let doc = obs.metrics_json().unwrap();
+        let samples = doc.get("samples").unwrap().as_arr().unwrap();
+        assert_eq!(samples.len(), 2);
+        let s1 = &samples[1];
+        assert_eq!(s1.get("busy_gpus").unwrap().as_usize(), Some(3));
+        assert!((s1.get("gpu_util").unwrap().as_f64().unwrap() - 0.75).abs() < 1e-12);
+        assert!(
+            (s1.get("sharing_frac").unwrap().as_f64().unwrap() - 2.0 / 3.0).abs() < 1e-12
+        );
+    }
+
+    #[test]
+    fn alg2_and_rejection_reach_the_audit_counters() {
+        let obs = Obs::in_memory(60.0);
+        let mut txn = Txn::new();
+        txn.start(0, vec![0], 1);
+        obs.txn_applied(1.0, "FIFO", &txn, &ApplyReport { starts: 1, preemptions: 0 });
+        obs.txn_rejected(2.0, "FIFO", &txn, "Start(0): job is Running");
+        obs.alg2_candidate(
+            3.0,
+            &Alg2Audit {
+                job: 1,
+                owner: 0,
+                accepted: true,
+                reason: "share",
+                accum_step: Some(2),
+                pair_jct_s: Some(12.5),
+            },
+        );
+        assert_eq!(obs.counter("txn/applied"), Some(1));
+        assert_eq!(obs.counter("txn/rejected"), Some(1));
+        assert_eq!(obs.counter("txn/starts"), Some(1));
+        assert_eq!(obs.counter("alg2/accepted"), Some(1));
+    }
+}

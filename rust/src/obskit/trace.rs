@@ -1,0 +1,289 @@
+//! Event-timeline trace sink: Chrome trace format (the JSON the Perfetto
+//! UI and `chrome://tracing` load directly) plus a compact JSONL stream
+//! for programmatic analysis.
+//!
+//! Track layout: pid 0 is the engine (event instants), pid 1 is jobs —
+//! one thread track per job id, each run rendered as a complete `"X"`
+//! span re-segmented at every co-location change so shared intervals are
+//! separate slices flagged `args.shared = true` — and pid 2 is the
+//! cluster, a `"C"` counter track of busy/shared GPU counts. Timestamps
+//! are sim-seconds scaled to the format's microsecond unit; the event
+//! array is globally timestamp-sorted at [`TraceSink::finish`].
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::jobs::JobId;
+use crate::sched_core::Event;
+use crate::util::json::Json;
+
+use super::{obj, write_file};
+
+/// Chrome trace timestamps are in microseconds; ours are sim-seconds.
+const US: f64 = 1e6;
+
+#[derive(Debug)]
+struct OpenSpan {
+    start_s: f64,
+    shared: bool,
+    gpus: usize,
+}
+
+#[derive(Debug)]
+pub struct TraceSink {
+    path: Option<PathBuf>,
+    /// Completed Chrome events, tagged with sim-seconds for the final
+    /// stable sort (metadata first at t = 0, spans keyed by their start).
+    events: Vec<(f64, Json)>,
+    open: BTreeMap<JobId, OpenSpan>,
+    jsonl: Vec<String>,
+    last_counts: Option<(usize, usize)>,
+    last_t: f64,
+}
+
+impl TraceSink {
+    pub fn new(path: Option<PathBuf>) -> Self {
+        let mut s = TraceSink {
+            path,
+            events: Vec::new(),
+            open: BTreeMap::new(),
+            jsonl: Vec::new(),
+            last_counts: None,
+            last_t: 0.0,
+        };
+        for (pid, name) in [(0u64, "engine"), (1, "jobs"), (2, "cluster")] {
+            s.events.push((
+                0.0,
+                obj(vec![
+                    ("name", "process_name".into()),
+                    ("ph", "M".into()),
+                    ("pid", Json::from(pid)),
+                    ("tid", Json::from(0u64)),
+                    ("args", obj(vec![("name", name.into())])),
+                ]),
+            ));
+        }
+        s
+    }
+
+    fn line(&mut self, j: Json) {
+        self.jsonl.push(j.to_string());
+    }
+
+    pub fn engine_event(&mut self, t: f64, ev: Event) {
+        self.last_t = self.last_t.max(t);
+        let (name, job) = match ev {
+            Event::Arrival { job } => ("Arrival", Some(job)),
+            Event::Completion { job } => ("Completion", Some(job)),
+            Event::RestartEligible { job } => ("RestartEligible", Some(job)),
+            Event::Tick => ("Tick", None),
+        };
+        let mut args = Vec::new();
+        if let Some(j) = job {
+            args.push(("job", Json::from(j)));
+        }
+        self.events.push((
+            t,
+            obj(vec![
+                ("name", name.into()),
+                ("ph", "i".into()),
+                ("ts", Json::Num(t * US)),
+                ("pid", Json::from(0u64)),
+                ("tid", Json::from(0u64)),
+                ("s", "g".into()),
+                ("args", obj(args)),
+            ]),
+        ));
+        let mut line = vec![
+            ("t", Json::Num(t)),
+            ("kind", "event".into()),
+            ("event", name.into()),
+        ];
+        if let Some(j) = job {
+            line.push(("job", Json::from(j)));
+        }
+        self.line(obj(line));
+    }
+
+    pub fn job_started(&mut self, t: f64, job: JobId, gpus: usize, shared: bool) {
+        self.last_t = self.last_t.max(t);
+        self.open.insert(job, OpenSpan { start_s: t, shared, gpus });
+        self.line(obj(vec![
+            ("t", Json::Num(t)),
+            ("kind", "start".into()),
+            ("job", Json::from(job)),
+            ("gpus", Json::from(gpus)),
+            ("shared", Json::from(shared)),
+        ]));
+    }
+
+    fn close_span(&mut self, t: f64, job: JobId, end: &str) {
+        if let Some(span) = self.open.remove(&job) {
+            self.events.push((
+                span.start_s,
+                obj(vec![
+                    ("name", Json::Str(format!("job {job}"))),
+                    ("cat", "job".into()),
+                    ("ph", "X".into()),
+                    ("ts", Json::Num(span.start_s * US)),
+                    ("dur", Json::Num((t - span.start_s).max(0.0) * US)),
+                    ("pid", Json::from(1u64)),
+                    ("tid", Json::from(job)),
+                    (
+                        "args",
+                        obj(vec![
+                            ("gpus", Json::from(span.gpus)),
+                            ("shared", Json::from(span.shared)),
+                            ("end", end.into()),
+                        ]),
+                    ),
+                ]),
+            ));
+        }
+    }
+
+    pub fn job_stopped(&mut self, t: f64, job: JobId, reason: &str) {
+        self.last_t = self.last_t.max(t);
+        self.close_span(t, job, reason);
+        self.line(obj(vec![
+            ("t", Json::Num(t)),
+            ("kind", "stop".into()),
+            ("job", Json::from(job)),
+            ("reason", reason.into()),
+        ]));
+    }
+
+    /// Re-segment `job`'s open span when its co-location flag actually
+    /// flips; no-op otherwise (and for jobs with no open span).
+    pub fn job_share_changed(&mut self, t: f64, job: JobId, shared: bool) {
+        let Some(span) = self.open.get(&job) else { return };
+        if span.shared == shared {
+            return;
+        }
+        self.last_t = self.last_t.max(t);
+        let gpus = span.gpus;
+        self.close_span(t, job, "share-change");
+        self.open.insert(job, OpenSpan { start_s: t, shared, gpus });
+        self.line(obj(vec![
+            ("t", Json::Num(t)),
+            ("kind", "share".into()),
+            ("job", Json::from(job)),
+            ("shared", Json::from(shared)),
+        ]));
+    }
+
+    /// Busy/shared GPU counters, change-gated so a quiet cluster emits
+    /// nothing.
+    pub fn counts(&mut self, t: f64, busy: usize, shared: usize) {
+        if self.last_counts == Some((busy, shared)) {
+            return;
+        }
+        self.last_counts = Some((busy, shared));
+        self.last_t = self.last_t.max(t);
+        self.events.push((
+            t,
+            obj(vec![
+                ("name", "gpu occupancy".into()),
+                ("ph", "C".into()),
+                ("ts", Json::Num(t * US)),
+                ("pid", Json::from(2u64)),
+                ("tid", Json::from(0u64)),
+                (
+                    "args",
+                    obj(vec![("busy", Json::from(busy)), ("shared", Json::from(shared))]),
+                ),
+            ]),
+        ));
+        self.line(obj(vec![
+            ("t", Json::Num(t)),
+            ("kind", "counts".into()),
+            ("busy", Json::from(busy)),
+            ("shared", Json::from(shared)),
+        ]));
+    }
+
+    /// Close still-open spans (truncated runs) at the last seen time,
+    /// globally sort by timestamp, and — if this sink has a path — write
+    /// the Chrome JSON plus the sibling `.jsonl` stream.
+    pub fn finish(&mut self) -> Result<()> {
+        let t_end = self.last_t;
+        let open: Vec<JobId> = self.open.keys().copied().collect();
+        for job in open {
+            self.close_span(t_end, job, "truncated");
+        }
+        self.events.sort_by(|a, b| a.0.total_cmp(&b.0));
+        let Some(path) = self.path.clone() else { return Ok(()) };
+        let doc = obj(vec![
+            (
+                "traceEvents",
+                Json::Arr(self.events.iter().map(|(_, j)| j.clone()).collect()),
+            ),
+            ("displayTimeUnit", "ms".into()),
+        ]);
+        write_file(&path, &doc.to_string())?;
+        write_file(&path.with_extension("jsonl"), &(self.jsonl.join("\n") + "\n"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_segment_on_share_change_and_sort_by_ts() {
+        let mut tr = TraceSink::new(None);
+        tr.engine_event(0.0, Event::Arrival { job: 0 });
+        tr.job_started(0.0, 0, 2, false);
+        tr.job_share_changed(5.0, 0, true); // closes solo slice, opens shared
+        tr.job_share_changed(5.0, 0, true); // same flag: no-op
+        tr.engine_event(9.0, Event::Completion { job: 0 });
+        tr.job_stopped(9.0, 0, "finish");
+        tr.finish().unwrap();
+        // 3 metadata + 1 arrival instant + 2 span slices + 1 completion.
+        assert_eq!(tr.events.len(), 7);
+        let mut spans = tr.events.iter().filter(|(_, j)| {
+            j.get("ph").and_then(|p| p.as_str()) == Some("X")
+        });
+        let solo = spans.next().unwrap();
+        assert_eq!(solo.1.get("args").unwrap().get("shared").unwrap().as_bool(), Some(false));
+        assert_eq!(solo.1.get("dur").unwrap().as_f64(), Some(5.0 * US));
+        let shared = spans.next().unwrap();
+        assert_eq!(shared.1.get("args").unwrap().get("shared").unwrap().as_bool(), Some(true));
+        assert_eq!(shared.1.get("args").unwrap().get("end").unwrap().as_str(), Some("finish"));
+        // Globally ts-ordered after finish().
+        for w in tr.events.windows(2) {
+            assert!(w[0].0 <= w[1].0);
+        }
+    }
+
+    #[test]
+    fn unfinished_span_is_closed_as_truncated() {
+        let mut tr = TraceSink::new(None);
+        tr.job_started(1.0, 4, 1, false);
+        tr.engine_event(20.0, Event::Tick);
+        tr.finish().unwrap();
+        let span = tr
+            .events
+            .iter()
+            .find(|(_, j)| j.get("ph").and_then(|p| p.as_str()) == Some("X"))
+            .unwrap();
+        assert_eq!(span.1.get("args").unwrap().get("end").unwrap().as_str(), Some("truncated"));
+        assert_eq!(span.1.get("dur").unwrap().as_f64(), Some(19.0 * US));
+    }
+
+    #[test]
+    fn counter_track_is_change_gated() {
+        let mut tr = TraceSink::new(None);
+        tr.counts(0.0, 4, 0);
+        tr.counts(1.0, 4, 0); // unchanged: dropped
+        tr.counts(2.0, 6, 2);
+        let counters = tr
+            .events
+            .iter()
+            .filter(|(_, j)| j.get("ph").and_then(|p| p.as_str()) == Some("C"))
+            .count();
+        assert_eq!(counters, 2);
+    }
+}

@@ -107,6 +107,14 @@ impl Recorder {
         self.push(stats)
     }
 
+    /// Record stats the caller measured itself (e.g. a latency histogram
+    /// obskit collected inside an engine run, folded through
+    /// [`crate::util::bench::stats_of`]) as a case. Single-sample stats
+    /// get the same noise headroom as [`Recorder::once`].
+    pub fn record(&mut self, stats: BenchStats) -> BenchStats {
+        self.push(stats)
+    }
+
     /// Set the regression tolerance of the most recently recorded case.
     pub fn tolerance(&mut self, max_regress_pct: f64) {
         let case = self

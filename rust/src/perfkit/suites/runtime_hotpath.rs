@@ -1,40 +1,121 @@
-//! `runtime_hotpath` suite — the PJRT execution hot path the physical
-//! coordinator drives: artifact compile time (one-off), grad_step latency
-//! per micro-batch variant, and the full gradient-accumulation iteration
-//! at several (batch, s) settings.
+//! `runtime_hotpath` suite — the two hot paths a live run pays for:
 //!
-//! This is the L3-side profile used in the §Perf pass (EXPERIMENTS.md).
-//! Requires `make artifacts`; when the artifacts are absent or the
-//! vendored `xla` stub cannot bring a PJRT client up (every CI runner,
-//! see DESIGN.md §4), the suite reports itself *skipped* instead of
-//! failing — same policy as the artifact-dependent tests in `runtime/`.
+//! 1. **Observability overhead** (always measured): the same engine run
+//!    three ways — plain `run_cluster`, `run_cluster_obs` with a disabled
+//!    handle, and with every in-memory sink armed — pinning obskit's
+//!    zero-cost-when-off contract (DESIGN.md §13) as recorded numbers.
+//!    The full profile asserts the disabled handle is free (≤5% of the
+//!    plain path, i.e. one `Option` branch per tap) and armed sinks stay
+//!    under 15% overhead.
+//! 2. **PJRT execution** (artifact-gated): compile time, grad_step
+//!    latency per micro-batch variant, and full gradient-accumulation
+//!    iterations — the L3-side profile used in the §Perf pass
+//!    (EXPERIMENTS.md). Requires `make artifacts`; when the artifacts are
+//!    absent or the vendored `xla` stub cannot bring a PJRT client up
+//!    (every CI runner, see DESIGN.md §4), the PJRT cases are omitted
+//!    with a printed note — the obs cases above still land, so the suite
+//!    is never skipped outright.
 
+use crate::cluster::{Cluster, ClusterConfig};
+use crate::jobs::trace::{self, TraceConfig};
+use crate::obskit::Obs;
+use crate::perf::interference::InterferenceModel;
 use crate::runtime::executor::{TrainExecutor, TrainState};
 use crate::runtime::ArtifactSet;
+use crate::sched;
+use crate::sim::{engine, EngineConfig};
 
 use super::super::registry::{Profile, Recorder, Suite, SuiteReport};
 
 pub fn suite() -> Suite {
     Suite {
         name: "runtime_hotpath",
-        description: "PJRT train-step hot path (needs `make artifacts`; skips offline)",
+        description: "obskit overhead + PJRT train-step hot path (PJRT needs `make artifacts`)",
         run,
     }
 }
 
+/// One full engine run of `trace` under SJF-BSBF (the policy with the
+/// most taps: Algorithm-2 audit lines, share-change trace spans) with the
+/// given obs handle.
+fn obs_run(trace: &[crate::jobs::JobSpec], obs: Obs) -> f64 {
+    let mut p = sched::by_name("SJF-BSBF").expect("registered policy");
+    let out = engine::run_cluster_obs(
+        Cluster::new(ClusterConfig::simulation()),
+        trace,
+        InterferenceModel::new(),
+        p.as_mut(),
+        EngineConfig::default(),
+        obs,
+    )
+    .expect("obs-overhead run");
+    out.makespan_s
+}
+
 fn run(profile: Profile) -> SuiteReport {
     let mut rec = Recorder::new("runtime_hotpath");
+
+    // ---- obskit overhead: off vs disabled handle vs armed sinks -----------
+    let n_jobs = profile.pick(120, 480);
+    let obs_trace = trace::generate(&TraceConfig::simulation(n_jobs, 11));
+    let iters = profile.pick(2, 4);
+    let off = rec.bench(&format!("obs/off/{n_jobs}-jobs"), iters, || {
+        let mut p = sched::by_name("SJF-BSBF").expect("registered policy");
+        let out = engine::run_cluster(
+            Cluster::new(ClusterConfig::simulation()),
+            &obs_trace,
+            InterferenceModel::new(),
+            p.as_mut(),
+            EngineConfig::default(),
+        )
+        .expect("obs-overhead run");
+        std::hint::black_box(out.makespan_s);
+    });
+    rec.tolerance(100.0);
+    let disabled = rec.bench(&format!("obs/disabled-handle/{n_jobs}-jobs"), iters, || {
+        std::hint::black_box(obs_run(&obs_trace, Obs::disabled()));
+    });
+    rec.tolerance(100.0);
+    let on = rec.bench(&format!("obs/on/{n_jobs}-jobs"), iters, || {
+        std::hint::black_box(obs_run(&obs_trace, Obs::in_memory(600.0)));
+    });
+    rec.tolerance(100.0);
+    println!(
+        "obs overhead at {n_jobs} jobs: disabled handle {:+.1}%, armed sinks {:+.1}%",
+        (disabled.mean_s / off.mean_s.max(1e-12) - 1.0) * 100.0,
+        (on.mean_s / off.mean_s.max(1e-12) - 1.0) * 100.0
+    );
+    if profile == Profile::Full {
+        assert!(
+            disabled.mean_s <= off.mean_s * 1.05,
+            "a disabled Obs handle must be free: {:.4}s vs {:.4}s plain",
+            disabled.mean_s,
+            off.mean_s
+        );
+        assert!(
+            on.mean_s <= off.mean_s * 1.15,
+            "armed in-memory sinks must stay under 15% overhead: {:.4}s vs {:.4}s plain",
+            on.mean_s,
+            off.mean_s
+        );
+    }
+
+    // ---- PJRT train-step hot path (artifact-gated) ------------------------
     let dir = ArtifactSet::default_dir();
     if !dir.join("meta.json").exists() {
-        return rec.skip("artifacts not built (run `make artifacts`)".to_string());
+        println!("note: PJRT cases omitted — artifacts not built (run `make artifacts`)");
+        return rec.finish();
     }
     let t0 = std::time::Instant::now();
     let set = match ArtifactSet::load(dir) {
         Ok(set) => set,
         // The offline stub's PJRT client cannot come up; a corrupt
-        // artifact set surfaces the same way — the skip reason carries
-        // the error so the reader can tell which.
-        Err(e) => return rec.skip(format!("artifact load failed: {e:#}")),
+        // artifact set surfaces the same way — the note carries the
+        // error so the reader can tell which.
+        Err(e) => {
+            println!("note: PJRT cases omitted — artifact load failed: {e:#}");
+            return rec.finish();
+        }
     };
     println!(
         "artifact load+compile (7 executables): {:.2}s (one-off per worker)",
@@ -48,7 +129,10 @@ fn run(profile: Profile) -> SuiteReport {
     let mut exec = TrainExecutor::new(&set, 1, 0.1);
     let mut state: TrainState = match exec.init_state() {
         Ok(s) => s,
-        Err(e) => return rec.skip(format!("PJRT execution unavailable: {e:#}")),
+        Err(e) => {
+            println!("note: PJRT cases omitted — PJRT execution unavailable: {e:#}");
+            return rec.finish();
+        }
     };
 
     // grad_step latency per compiled micro-batch variant.

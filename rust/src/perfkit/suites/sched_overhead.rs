@@ -15,11 +15,13 @@
 use crate::cluster::{AllocView, Cluster, ClusterConfig};
 use crate::jobs::trace::{self, TraceConfig};
 use crate::jobs::{JobRecord, JobState};
+use crate::obskit::Obs;
 use crate::pair::{batch_size_scaling, best_pair_schedule, PairSide};
 use crate::perf::interference::InterferenceModel;
 use crate::perf::profiles::ModelKind;
 use crate::sched::{self, SjfBsbf};
-use crate::sim::{engine, Event, Policy, SchedContext, SimState};
+use crate::sim::{engine, EngineConfig, Event, Policy, SchedContext, SimState};
+use crate::util::bench::stats_of;
 
 use super::super::registry::{Profile, Recorder, Suite, SuiteReport};
 
@@ -281,6 +283,40 @@ fn run(profile: Profile) -> SuiteReport {
         calls,
         calls as f64 / full.mean_s.max(1e-12)
     );
+
+    // ---- per-policy on_event latency distributions (obskit) ---------------
+    // The §V-4 overhead claim for *every* policy, not just SJF-BSBF: run
+    // the full engine with an in-memory obs handle and fold the recorded
+    // `on_event_latency/<policy>` histogram — one wall-clock sample per
+    // engine event, exactly what the coordinator would pay live — into a
+    // bench case. Tolerance is generous: these are single-run wall-clock
+    // latencies, not tight micro-bench loops.
+    let n_lat_jobs = profile.pick(60, 240);
+    let lat_trace = trace::generate(&TraceConfig::simulation(n_lat_jobs, 7));
+    for name in sched::POLICY_NAMES {
+        let obs = Obs::in_memory(3600.0);
+        let mut p = sched::by_name(name).expect("registered policy");
+        engine::run_cluster_obs(
+            Cluster::new(ClusterConfig::simulation()),
+            &lat_trace,
+            InterferenceModel::new(),
+            p.as_mut(),
+            EngineConfig::default(),
+            obs.clone(),
+        )
+        .expect("obs-instrumented run");
+        let samples = obs
+            .histogram_samples(&format!("on_event_latency/{name}"))
+            .expect("engine recorded a latency histogram for every policy");
+        assert!(!samples.is_empty(), "{name}: empty on_event latency histogram");
+        let stats = stats_of(
+            &format!("on-event-latency/{name}/{n_lat_jobs}-jobs"),
+            samples,
+        );
+        println!("{}", stats.report());
+        rec.record(stats);
+        rec.tolerance(400.0);
+    }
 
     rec.finish()
 }

@@ -91,6 +91,7 @@ mod tests {
             avg_queue_s: jct / 3.0,
             p50_jct_s: jct,
             p90_jct_s: jct,
+            unfinished: 0,
         };
         Summary { policy: policy.into(), makespan_s: 2.0 * jct, all: agg, large: agg, small: agg }
     }

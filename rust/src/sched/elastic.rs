@@ -117,6 +117,19 @@ impl Policy for Elastic {
             if want == 0 || delta > self.min_delta {
                 view.release(id);
                 txn.preempt(id);
+            } else if delta > 0 && ctx.obs().is_enabled() {
+                // Hysteresis held the resize: the plan wants a different
+                // width but the delta is under min_delta, so we keep the
+                // current allocation to avoid reallocation thrash.
+                ctx.obs().policy_note(
+                    ctx.now(),
+                    self.name(),
+                    &format!(
+                        "holding job {id} at {held} GPUs (plan wants {want}, \
+                         delta {delta} <= min_delta {})",
+                        self.min_delta
+                    ),
+                );
             }
         }
         // Phase 2: start eligible pending jobs at their planned width.

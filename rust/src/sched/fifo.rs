@@ -36,7 +36,18 @@ impl Policy for Fifo {
                     plan.allocate(id, &gpus);
                     txn.start(id, gpus, 1);
                 }
-                None => break, // HOL blocking
+                None => {
+                    // HOL blocking: note which job holds the line (the
+                    // dynamic the sharing policies exist to relieve).
+                    if ctx.obs().is_enabled() {
+                        ctx.obs().policy_note(
+                            ctx.now(),
+                            self.name(),
+                            &format!("HOL blocked at job {id} ({} GPUs)", spec.gpus),
+                        );
+                    }
+                    break;
+                }
             }
         }
         txn

@@ -29,6 +29,7 @@ use std::collections::{BTreeMap, HashMap};
 
 use crate::cluster::{placement, AllocView, GpuId};
 use crate::jobs::JobId;
+use crate::obskit::Alg2Audit;
 use crate::pair::{batch_size_scaling_placed, SharingConfig};
 use crate::sched_core::{Event, Policy, SchedContext, Txn};
 
@@ -136,9 +137,44 @@ impl Policy for SjfBsbf {
                     &new_span,
                     &run_span,
                 ) else {
+                    // Algorithm-2 audit: no sub-batch satisfies Eq. 9 on
+                    // this pair's placement.
+                    if ctx.obs().is_enabled() {
+                        ctx.obs().alg2_candidate(
+                            ctx.now(),
+                            &Alg2Audit {
+                                job: id,
+                                owner,
+                                accepted: false,
+                                reason: "memory-infeasible",
+                                accum_step: None,
+                                pair_jct_s: None,
+                            },
+                        );
+                    }
                     continue;
                 };
-                if cfg.share || !self.theorem1_gate {
+                let accepted = cfg.share || !self.theorem1_gate;
+                if ctx.obs().is_enabled() {
+                    ctx.obs().alg2_candidate(
+                        ctx.now(),
+                        &Alg2Audit {
+                            job: id,
+                            owner,
+                            accepted,
+                            reason: if cfg.share {
+                                "share"
+                            } else if !self.theorem1_gate {
+                                "gate-ablated"
+                            } else {
+                                "exclusive-preferred"
+                            },
+                            accum_step: Some(cfg.accum_step),
+                            pair_jct_s: Some(cfg.pair_jct),
+                        },
+                    );
+                }
+                if accepted {
                     candidates.push((owner, gpus, cfg));
                 }
             }

@@ -90,10 +90,31 @@ impl Policy for SjfFfs {
                 }
             }
             if chosen.len() < need || chosen.is_empty() {
+                if ctx.obs().is_enabled() {
+                    ctx.obs().policy_note(
+                        ctx.now(),
+                        self.name(),
+                        &format!(
+                            "job {id}: first-fit coverage failed \
+                             ({}/{need} memory-feasible GPUs)",
+                            chosen.len()
+                        ),
+                    );
+                }
                 continue;
             }
             let Some(sub) = prof.mem.max_sub_batch(ctx.jobs[id].spec.batch, min_headroom)
             else {
+                if ctx.obs().is_enabled() {
+                    ctx.obs().policy_note(
+                        ctx.now(),
+                        self.name(),
+                        &format!(
+                            "job {id}: no sub-batch fits headroom \
+                             {min_headroom:.2} GB"
+                        ),
+                    );
+                }
                 continue;
             };
             let accum = (ctx.jobs[id].spec.batch / sub).max(1);

@@ -82,6 +82,17 @@ impl Policy for Tiresias {
             if !should_run.contains(&id) {
                 plan.release(id);
                 txn.preempt(id);
+                // Audit the demotion with its 2D-LAS queue: eviction from
+                // queue 1 is the threshold doing its job; from queue 0 it
+                // is pure contention.
+                if ctx.obs().is_enabled() {
+                    let (q, _, _) = self.priority(ctx, id);
+                    ctx.obs().policy_note(
+                        ctx.now(),
+                        self.name(),
+                        &format!("evicting job {id} from queue {q}"),
+                    );
+                }
             }
         }
         // Start admitted pending jobs on the freed/free GPUs.

@@ -15,6 +15,7 @@ use std::ops::Deref;
 use crate::cluster::overlay::OverlayPool;
 use crate::cluster::{Cluster, ClusterOverlay};
 use crate::jobs::{JobId, JobRecord, JobState};
+use crate::obskit::Obs;
 use crate::perf::interference::InterferenceModel;
 use crate::sim::SimState;
 
@@ -127,6 +128,16 @@ pub struct SchedContext {
     /// the overlay pool and the engine's reused event vecs, this was the
     /// event loop's last steady-state per-event allocation.
     completions_scratch: Vec<JobId>,
+    /// Observability handle (disabled by default — a single `None`
+    /// branch per tap; see [`SchedContext::set_obs`]). Recording is
+    /// strictly one-way: it never mutates sim state, RNG, or ordering.
+    pub(super) obs: Obs,
+    /// GPU-seconds with ≥ 1 resident job, integrated in `advance` (two
+    /// O(1) occupancy reads per step, so it is always on) — drives the
+    /// utilization columns in campaign CSV v3 and the obskit sampler.
+    busy_gpu_s: f64,
+    /// GPU-seconds with ≥ 2 resident jobs (co-located intervals).
+    shared_gpu_s: f64,
 }
 
 impl Deref for SchedContext {
@@ -172,6 +183,9 @@ impl SchedContext {
             est_rate,
             overlay_pool: OverlayPool::default(),
             completions_scratch: Vec::new(),
+            obs: Obs::disabled(),
+            busy_gpu_s: 0.0,
+            shared_gpu_s: 0.0,
         }
     }
 
@@ -198,6 +212,9 @@ impl SchedContext {
             est_rate,
             overlay_pool: OverlayPool::default(),
             completions_scratch: Vec::new(),
+            obs: Obs::disabled(),
+            busy_gpu_s: 0.0,
+            shared_gpu_s: 0.0,
         };
         let now = ctx.state.now;
         for id in 0..n {
@@ -233,6 +250,28 @@ impl SchedContext {
     /// Consume the context, returning the final world state.
     pub fn into_state(self) -> SimState {
         self.state
+    }
+
+    /// Attach an observability handle (disabled by default). Clones share
+    /// the handle's sinks with the caller; recording is one-way and never
+    /// affects scheduling, integration, or event ordering.
+    pub fn set_obs(&mut self, obs: Obs) {
+        self.obs = obs;
+    }
+
+    pub fn obs(&self) -> &Obs {
+        &self.obs
+    }
+
+    /// GPU-seconds with at least one resident job, integrated by the
+    /// `advance_*` path over the whole run so far.
+    pub fn busy_gpu_s(&self) -> f64 {
+        self.busy_gpu_s
+    }
+
+    /// GPU-seconds with at least two resident jobs (shared intervals).
+    pub fn shared_gpu_s(&self) -> f64 {
+        self.shared_gpu_s
     }
 
     pub fn state(&self) -> &SimState {
@@ -364,6 +403,13 @@ impl SchedContext {
     fn advance(&mut self, t: f64, integrate: bool, events: &mut Vec<Event>) {
         let dt = t - self.state.now;
         if dt > 0.0 {
+            // Occupancy is piecewise-constant between events, so the
+            // utilization integrals are two O(1) multiplies per step.
+            let total = self.state.cluster.total_gpus();
+            let busy = total - self.state.cluster.free_count();
+            let shared = busy - self.state.cluster.one_job_count();
+            self.busy_gpu_s += busy as f64 * dt;
+            self.shared_gpu_s += shared as f64 * dt;
             // Take the sets out so the loop can mutate `state` freely; the
             // transitions below never touch them mid-loop.
             let running = std::mem::take(&mut self.running);
@@ -478,6 +524,13 @@ impl SchedContext {
         set_remove(&mut self.running, id);
         self.finished += 1;
         self.rate_epoch[id] += 1;
+        if self.obs.is_enabled() {
+            self.obs.job_stopped(self.state.now, id, "finish");
+            for &c in &co {
+                let still_shared = !self.state.cluster.co_runners(c).is_empty();
+                self.obs.job_share_changed(self.state.now, c, still_shared);
+            }
+        }
         for c in co {
             self.reproject(c);
         }

@@ -201,8 +201,17 @@ impl SchedContext {
         set_remove(&mut self.waiting, job);
         set_insert(&mut self.running, job);
         self.reproject(job);
-        for co in self.state.cluster.co_runners(job) {
-            self.reproject(co);
+        let co = self.state.cluster.co_runners(job);
+        if self.obs.is_enabled() {
+            self.obs.job_started(now, job, gpus, !co.is_empty());
+            // Co-residents just gained a neighbor: their sharing
+            // intervals re-segment as shared from here.
+            for &c in &co {
+                self.obs.job_share_changed(now, c, true);
+            }
+        }
+        for c in co {
+            self.reproject(c);
         }
         Ok(())
     }
@@ -237,6 +246,13 @@ impl SchedContext {
         // would report a deadlock on a well-behaved workload.
         self.restart_heap
             .push(std::cmp::Reverse((OrdF64(not_before), job)));
+        if self.obs.is_enabled() {
+            self.obs.job_stopped(self.state.now, job, "preempt");
+            for &c in &co {
+                let still_shared = !self.state.cluster.co_runners(c).is_empty();
+                self.obs.job_share_changed(self.state.now, c, still_shared);
+            }
+        }
         for c in co {
             self.reproject(c);
         }

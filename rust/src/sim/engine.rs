@@ -19,6 +19,7 @@ use anyhow::{bail, Result};
 use super::{Event, Policy, SimState};
 use crate::cluster::{Cluster, ClusterConfig};
 use crate::jobs::{JobRecord, JobSpec};
+use crate::obskit::Obs;
 use crate::perf::interference::InterferenceModel;
 use crate::sched_core::SchedContext;
 
@@ -47,6 +48,14 @@ pub struct SimOutcome {
     pub policy_calls: u64,
     /// Number of preemptions performed.
     pub preemptions: u64,
+    /// GPU-seconds with ≥ 1 resident job over the run (utilization
+    /// integral; divide by `total_gpus × makespan_s` for mean GPU util).
+    pub busy_gpu_s: f64,
+    /// GPU-seconds with ≥ 2 resident jobs (co-located intervals; divide
+    /// by `busy_gpu_s` for the sharing fraction).
+    pub shared_gpu_s: f64,
+    /// Cluster size the integrals are against.
+    pub total_gpus: usize,
 }
 
 /// Run `policy` over `trace` on a uniform cluster of `cluster_cfg` with
@@ -82,6 +91,23 @@ pub fn run_cluster(
     policy: &mut dyn Policy,
     engine_cfg: EngineConfig,
 ) -> Result<SimOutcome> {
+    run_cluster_obs(cluster, trace, xi, policy, engine_cfg, Obs::disabled())
+}
+
+/// [`run_cluster`] with an observability handle threaded through the
+/// engine and the context. With `Obs::disabled()` this *is*
+/// `run_cluster` — one `Option` branch per tap, no timing, no
+/// allocation; with sinks armed the sim results are still bit-identical
+/// (observation is one-way) and the caller owns flushing via
+/// [`Obs::finish`].
+pub fn run_cluster_obs(
+    cluster: Cluster,
+    trace: &[JobSpec],
+    xi: InterferenceModel,
+    policy: &mut dyn Policy,
+    engine_cfg: EngineConfig,
+    obs: Obs,
+) -> Result<SimOutcome> {
     for j in trace {
         if j.gpus > cluster.total_gpus() {
             bail!("job {} requests {} GPUs > cluster {}", j.id, j.gpus, cluster.total_gpus());
@@ -111,6 +137,8 @@ pub fn run_cluster(
         trace.iter().cloned().map(JobRecord::new).collect(),
         xi,
     );
+    let obs_enabled = obs.is_enabled();
+    ctx.set_obs(obs.clone());
     let penalty = policy.preemption_penalty();
     let mut next_tick = policy.tick_interval();
     let mut policy_calls = 0u64;
@@ -202,10 +230,42 @@ pub fn run_cluster(
 
         // ---- deliver each event; apply through the shared txn layer -------
         for &ev in &events {
-            let txn = policy.on_event(&ctx, ev);
+            if obs_enabled {
+                obs.engine_event(ctx.now(), ev);
+            }
+            let txn;
+            if obs_enabled {
+                // Wall-clock the policy pass only when someone is
+                // listening: the disabled path must not pay for
+                // `Instant::now` syscalls it will never report.
+                let t0 = std::time::Instant::now();
+                txn = policy.on_event(&ctx, ev);
+                obs.policy_latency(policy.name(), t0.elapsed().as_secs_f64());
+            } else {
+                txn = policy.on_event(&ctx, ev);
+            }
             policy_calls += 1;
-            let report = ctx.apply(&txn, penalty)?;
-            preemptions += report.preemptions;
+            match ctx.apply(&txn, penalty) {
+                Ok(report) => {
+                    if obs_enabled {
+                        obs.txn_applied(ctx.now(), policy.name(), &txn, &report);
+                    }
+                    preemptions += report.preemptions;
+                }
+                Err(e) => {
+                    if obs_enabled {
+                        obs.txn_rejected(ctx.now(), policy.name(), &txn, &format!("{e:#}"));
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        if obs_enabled {
+            let total = ctx.cluster.total_gpus();
+            let busy = total - ctx.cluster.free_count();
+            let shared = busy - ctx.cluster.one_job_count();
+            obs.cluster_counts(ctx.now(), busy, shared);
+            obs.sample(ctx.now(), busy, shared, total, ctx.waiting().len(), ctx.pending().len());
         }
 
         if ctx.all_finished() {
@@ -214,17 +274,22 @@ pub fn run_cluster(
     }
 
     let first_arrival = trace.iter().map(|j| j.arrival_s).fold(f64::INFINITY, f64::min);
+    let (busy_gpu_s, shared_gpu_s) = (ctx.busy_gpu_s(), ctx.shared_gpu_s());
     let state: SimState = ctx.into_state();
     let last_finish = state
         .jobs
         .iter()
         .filter_map(|j| j.finish_s)
         .fold(0.0f64, f64::max);
+    let total_gpus = state.cluster.total_gpus();
     Ok(SimOutcome {
         jobs: state.jobs,
         makespan_s: (last_finish - first_arrival.min(last_finish)).max(0.0),
         policy_calls,
         preemptions,
+        busy_gpu_s,
+        shared_gpu_s,
+        total_gpus,
     })
 }
 

@@ -6,9 +6,15 @@ use crate::jobs::JobRecord;
 use crate::perf::profiles::ModelKind;
 
 /// Aggregate over one job population slice.
+///
+/// `n` counts *finished* jobs only — all JCT/queueing statistics are over
+/// that population. `unfinished` counts the jobs the slice contained that
+/// never reached `Finished` (truncated or saturated runs); a non-zero value
+/// means the JCT columns describe a survivor-biased subset.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct Aggregate {
     pub n: usize,
+    pub unfinished: usize,
     pub avg_jct_s: f64,
     pub avg_queue_s: f64,
     pub p50_jct_s: f64,
@@ -25,30 +31,34 @@ pub struct Summary {
     pub small: Aggregate,
 }
 
+// Nearest-rank percentile (0.0 on empty) — the definition the paper-table
+// goldens were recorded against; delegated to `util::stats`, which pins the
+// semantics. Do not swap for the bench-side ceiling-rank variant: the
+// Tables II–IV p50/p90 columns depend on nearest-rank for byte parity.
 fn percentile(sorted: &[f64], p: f64) -> f64 {
-    if sorted.is_empty() {
-        return 0.0;
-    }
-    let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
-    sorted[idx.min(sorted.len() - 1)]
+    crate::util::stats::percentile_nearest_rank(sorted, p)
 }
 
 fn aggregate<'a>(jobs: impl Iterator<Item = &'a JobRecord>) -> Aggregate {
     let mut jcts = Vec::new();
     let mut queues = Vec::new();
+    let mut unfinished = 0usize;
     for j in jobs {
         if let Some(jct) = j.jct() {
             jcts.push(jct);
             queues.push(j.queued_s);
+        } else {
+            unfinished += 1;
         }
     }
     jcts.sort_by(f64::total_cmp);
     let n = jcts.len();
     if n == 0 {
-        return Aggregate::default();
+        return Aggregate { unfinished, ..Aggregate::default() };
     }
     Aggregate {
         n,
+        unfinished,
         avg_jct_s: jcts.iter().sum::<f64>() / n as f64,
         avg_queue_s: queues.iter().sum::<f64>() / n as f64,
         p50_jct_s: percentile(&jcts, 0.5),
@@ -198,7 +208,43 @@ mod tests {
     fn empty_population_safe() {
         let s = summarize("none", &[], 0.0);
         assert_eq!(s.all.n, 0);
+        assert_eq!(s.all.unfinished, 0);
         assert_eq!(jct_cdf(&[]).len(), 0);
         assert_eq!(fraction_below(&[], 10.0), 0.0);
+    }
+
+    #[test]
+    fn half_finished_population_counts_unfinished() {
+        // A truncated run: half the jobs never finished. The JCT stats must
+        // cover the survivors only, and the dropped half must be *counted*,
+        // not silently vanish (the pre-fix behavior).
+        let mut jobs: Vec<JobRecord> = (0..4)
+            .map(|i| finished(i, 2, ModelKind::Bert, 0.0, 0.0, (i + 1) as f64 * 100.0))
+            .collect();
+        for i in 4..8 {
+            // Still running at truncation: arrived, started, never finished.
+            let mut r = JobRecord::new(JobSpec {
+                id: i,
+                model: ModelKind::YoloV3,
+                gpus: 8,
+                iterations: 100,
+                batch: 8,
+                arrival_s: 0.0,
+                est_factor: 1.0,
+            });
+            r.first_start_s = Some(10.0);
+            jobs.push(r);
+        }
+        let s = summarize("truncated", &jobs, 400.0);
+        assert_eq!(s.all.n, 4);
+        assert_eq!(s.all.unfinished, 4);
+        assert_eq!(s.small.n, 4);
+        assert_eq!(s.small.unfinished, 0);
+        // The large slice is entirely unfinished: zero stats, full count.
+        assert_eq!(s.large.n, 0);
+        assert_eq!(s.large.unfinished, 4);
+        assert_eq!(s.large.avg_jct_s, 0.0);
+        // Survivor stats unchanged by the unfinished population.
+        assert!((s.all.avg_jct_s - 250.0).abs() < 1e-9);
     }
 }

@@ -50,14 +50,16 @@ fn fmt_s(s: f64) -> String {
 /// for small samples lands below the requested percentile (n = 20,
 /// p = 0.95 indexed the 20th value — the max — instead of the 19th).
 /// Ceiling rank is exact on quantile boundaries and never overshoots.
+/// The shared implementation lives in [`crate::util::stats`].
 pub fn percentile(sorted: &[f64], p: f64) -> f64 {
-    assert!(!sorted.is_empty(), "percentile of an empty sample");
-    assert!((0.0..=1.0).contains(&p), "percentile {p} outside [0, 1]");
-    let rank = (sorted.len() as f64 * p).ceil().max(1.0) as usize;
-    sorted[rank.min(sorted.len()) - 1]
+    super::stats::percentile_ceiling_rank(sorted, p)
 }
 
-fn stats_of(name: &str, mut times: Vec<f64>) -> BenchStats {
+/// Sort `times` and fold them into a [`BenchStats`]. Public so callers
+/// that collect their own timing samples (e.g. obskit's per-policy
+/// `on_event` latency histograms feeding perfkit) can reuse the exact
+/// bench-side summary semantics.
+pub fn stats_of(name: &str, mut times: Vec<f64>) -> BenchStats {
     times.sort_by(f64::total_cmp);
     BenchStats {
         name: name.to_string(),

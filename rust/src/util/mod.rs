@@ -7,3 +7,4 @@ pub mod bench;
 pub mod json;
 pub mod prop;
 pub mod rng;
+pub mod stats;

@@ -1,0 +1,83 @@
+//! Shared percentile/quantile primitives.
+//!
+//! The repo grew three percentile implementations with *different* —
+//! deliberately different — semantics: `sim/metrics.rs` used nearest-rank
+//! interpolation on the (n−1)-scaled index (what the paper-table pins were
+//! recorded against), `util/bench.rs` used ceiling rank (exact on quantile
+//! boundaries for timing samples), and the campaign aggregator summarized
+//! via Welford streams with no percentile at all. This module is the single
+//! home for both sample-percentile definitions; callers delegate here and
+//! pick the semantics they were pinned against. Neither function is a
+//! drop-in for the other — see `nearest_vs_ceiling_divergence` below for
+//! the smallest sample on which they disagree.
+
+/// Percentile by *nearest rank on the (n−1)-scaled index*:
+/// `sorted[round((n-1)·p)]`. Returns 0.0 for an empty sample.
+///
+/// This is the historical `sim::metrics` definition. The paper-table
+/// goldens (Tables II–IV p50/p90 JCT columns) were recorded against it, so
+/// its behavior — including the 0.0-on-empty convention — is pinned for
+/// byte parity and must not be "fixed" to another definition.
+pub fn percentile_nearest_rank(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Percentile by *ceiling rank*: the smallest value whose 1-based rank `r`
+/// satisfies `r >= p·n`. Panics on an empty sample or `p` outside [0, 1].
+///
+/// This is the `util::bench` definition used for timing distributions: it
+/// is exact on quantile boundaries and never overshoots (n = 20, p = 0.95
+/// picks the 19th value, not the max).
+pub fn percentile_ceiling_rank(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty(), "percentile of an empty sample");
+    assert!((0.0..=1.0).contains(&p), "percentile {p} outside [0, 1]");
+    let rank = (sorted.len() as f64 * p).ceil().max(1.0) as usize;
+    sorted[rank.min(sorted.len()) - 1]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nearest_rank_pins() {
+        // The historical sim::metrics behavior, pinned.
+        let ten: Vec<f64> = (1..=10).map(|i| i as f64).collect();
+        assert_eq!(percentile_nearest_rank(&ten, 0.5), 6.0); // round(9·0.5)=5 -> 6.0
+        assert_eq!(percentile_nearest_rank(&ten, 0.9), 9.0); // round(9·0.9)=8 -> 9.0
+        assert_eq!(percentile_nearest_rank(&ten, 0.0), 1.0);
+        assert_eq!(percentile_nearest_rank(&ten, 1.0), 10.0);
+        assert_eq!(percentile_nearest_rank(&[42.0], 0.5), 42.0);
+        assert_eq!(percentile_nearest_rank(&[], 0.5), 0.0); // empty -> 0.0, by contract
+    }
+
+    #[test]
+    fn ceiling_rank_pins() {
+        // The util::bench behavior, pinned (mirrors the bench-side test).
+        let twenty: Vec<f64> = (1..=20).map(|i| i as f64).collect();
+        assert_eq!(percentile_ceiling_rank(&twenty, 0.95), 19.0);
+        assert_eq!(percentile_ceiling_rank(&twenty, 0.50), 10.0);
+        assert_eq!(percentile_ceiling_rank(&twenty, 1.0), 20.0);
+        assert_eq!(percentile_ceiling_rank(&twenty, 0.0), 1.0);
+        assert_eq!(percentile_ceiling_rank(&[7.0], 0.95), 7.0);
+    }
+
+    #[test]
+    fn nearest_vs_ceiling_divergence() {
+        // The smallest interesting sample on which the two definitions
+        // disagree — the reason they cannot be merged into one function.
+        let s = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile_nearest_rank(&s, 0.5), 3.0); // round(3·0.5)=2 -> 3.0
+        assert_eq!(percentile_ceiling_rank(&s, 0.5), 2.0); // ceil(4·0.5)=2 -> 2.0
+    }
+
+    #[test]
+    #[should_panic(expected = "empty sample")]
+    fn ceiling_rank_rejects_empty() {
+        percentile_ceiling_rank(&[], 0.5);
+    }
+}

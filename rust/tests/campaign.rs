@@ -127,11 +127,16 @@ fn shared_trace_results_byte_identical_to_per_run_generation() {
 
     let mut agg = campaign::Aggregator::new();
     for p in &pts {
+        // Regenerate the trace per run (what the shared path memoizes).
+        let jobs = wise_share::jobs::trace::generate(&p.scenario.trace);
         agg.push(&campaign::RunOutcome {
             ordinal: p.ordinal,
             cell: p.cell.clone(),
             seed: p.scenario.trace.seed,
-            summary: p.scenario.run().map_err(|e| e.to_string()),
+            summary: p
+                .scenario
+                .run_with_trace_obs(&jobs, wise_share::Obs::disabled())
+                .map_err(|e| e.to_string()),
         });
     }
     let per_run = agg.finish();
@@ -320,17 +325,25 @@ fn topologies_axis_parses_from_json_and_rejects_unknown_shapes() {
 }
 
 #[test]
-fn csv_carries_schema_v2_header() {
-    // The column set has changed twice (topology, then workload/estimator)
-    // — downstream consumers pin on the schema comment, so its presence
-    // and position are part of the emitter's contract.
+fn csv_carries_schema_v3_header() {
+    // The row/column set has changed three times (topology, then
+    // workload/estimator, then the obskit utilization rows) — downstream
+    // consumers pin on the schema comment, so its presence and position
+    // are part of the emitter's contract.
     let spec = small_spec(&["FIFO"], vec![12], vec![1]);
     let res = campaign::execute(&spec, 0).unwrap();
     let csv = campaign::emit::long_csv(&spec.name, &res.cells);
     let mut lines = csv.lines();
-    assert_eq!(lines.next(), Some("# schema: v2"));
+    assert_eq!(lines.next(), Some("# schema: v3"));
     assert_eq!(lines.next(), Some(campaign::emit::CSV_HEADER));
     assert!(campaign::emit::CSV_HEADER.starts_with("campaign,topology,workload,estimator,"));
+    // The v3 rows are present for every cell.
+    for metric in ["gpu_util", "sharing_frac", "unfinished"] {
+        assert!(
+            csv.lines().any(|l| l.contains(&format!(",all,{metric},"))),
+            "missing {metric} row in:\n{csv}"
+        );
+    }
 }
 
 #[test]

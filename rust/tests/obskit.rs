@@ -1,0 +1,171 @@
+//! Integration: the obskit contract end to end (DESIGN.md §13). Arming
+//! every sink must not change *simulation results* — per-job records and
+//! the run integrals are compared byte-for-byte against an obs-off run of
+//! the same trace for all six policies — and the written artifacts must
+//! be non-empty, schema-clean, and (for the Chrome trace) globally
+//! timestamp-ordered.
+
+use std::path::PathBuf;
+
+use wise_share::cluster::{Cluster, ClusterConfig};
+use wise_share::jobs::trace::{self, TraceConfig};
+use wise_share::jobs::JobState;
+use wise_share::perf::interference::InterferenceModel;
+use wise_share::sched::{self, POLICY_NAMES};
+use wise_share::sim::engine::{self, SimOutcome};
+use wise_share::sim::EngineConfig;
+use wise_share::util::json::Json;
+use wise_share::{Obs, ObsConfig};
+
+const N_JOBS: usize = 240;
+const SEED: u64 = 17;
+
+fn run_policy(name: &str, obs: Obs) -> SimOutcome {
+    let jobs = trace::generate(&TraceConfig::simulation(N_JOBS, SEED));
+    let mut p = sched::by_name(name).expect("registered policy");
+    engine::run_cluster_obs(
+        Cluster::new(ClusterConfig::simulation()),
+        &jobs,
+        InterferenceModel::new(),
+        p.as_mut(),
+        EngineConfig::default(),
+        obs,
+    )
+    .expect("simulation run")
+}
+
+/// Byte-exact view of everything the simulation *computed* (as opposed to
+/// observed): per-job records plus the outcome scalars. Debug formatting
+/// prints f64s exactly enough to distinguish any bit-level drift.
+fn fingerprint(out: &SimOutcome) -> String {
+    format!(
+        "{:?}|{:?}|{:?}|{:?}|{:?}|{:?}|{:?}",
+        out.jobs,
+        out.makespan_s,
+        out.policy_calls,
+        out.preemptions,
+        out.busy_gpu_s,
+        out.shared_gpu_s,
+        out.total_gpus
+    )
+}
+
+fn artifact_dir(policy: &str) -> PathBuf {
+    let slug: String = policy
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c.to_ascii_lowercase() } else { '-' })
+        .collect();
+    std::env::temp_dir().join(format!("wise-share-obskit-{}-{slug}", std::process::id()))
+}
+
+#[test]
+fn sinks_on_vs_off_results_are_byte_identical_and_artifacts_validate() {
+    for name in POLICY_NAMES {
+        let dir = artifact_dir(name);
+        let cfg = ObsConfig {
+            trace: Some(dir.join("trace.json")),
+            metrics: Some(dir.join("metrics.json")),
+            audit: Some(dir.join("audit.jsonl")),
+            sample_every_s: 300.0,
+        };
+        let obs = Obs::new(cfg);
+        assert!(obs.is_enabled());
+
+        let off = run_policy(name, Obs::disabled());
+        let on = run_policy(name, obs.clone());
+        assert_eq!(
+            fingerprint(&off),
+            fingerprint(&on),
+            "{name}: armed sinks changed simulation results"
+        );
+
+        // Completion events observed == jobs the simulation finished.
+        let finished =
+            on.jobs.iter().filter(|j| j.state == JobState::Finished).count() as u64;
+        assert!(finished > 0, "{name}: nothing finished — trace too small to test");
+        assert_eq!(
+            obs.counter("events/completion"),
+            Some(finished),
+            "{name}: completion counter disagrees with the outcome"
+        );
+        assert!(
+            obs.histogram_samples(&format!("on_event_latency/{name}"))
+                .is_some_and(|s| !s.is_empty()),
+            "{name}: no on_event latency histogram recorded"
+        );
+
+        obs.finish().expect("writing artifacts");
+
+        // Chrome trace: parses through the first-party JSON layer, has
+        // events, and is globally ts-ordered (metadata records carry no
+        // timestamp).
+        let text = std::fs::read_to_string(dir.join("trace.json")).unwrap();
+        let doc = Json::parse(&text).expect("chrome trace parses");
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        assert!(!events.is_empty(), "{name}: empty trace");
+        let ts: Vec<f64> = events
+            .iter()
+            .filter(|e| e.get("ph").unwrap().as_str() != Some("M"))
+            .map(|e| e.get("ts").unwrap().as_f64().unwrap())
+            .collect();
+        assert!(!ts.is_empty());
+        assert!(
+            ts.windows(2).all(|w| w[0] <= w[1]),
+            "{name}: trace events not timestamp-ordered"
+        );
+
+        // Sibling JSONL stream: every line is one JSON object.
+        let jsonl = std::fs::read_to_string(dir.join("trace.jsonl")).unwrap();
+        assert!(!jsonl.trim().is_empty());
+        for line in jsonl.lines() {
+            Json::parse(line).expect("trace jsonl line parses");
+        }
+
+        // Metrics document: schema-tagged, with the latency histogram.
+        let text = std::fs::read_to_string(dir.join("metrics.json")).unwrap();
+        let doc = Json::parse(&text).expect("metrics json parses");
+        assert_eq!(
+            doc.get("schema").unwrap().as_str(),
+            Some(wise_share::obskit::metrics::METRICS_SCHEMA)
+        );
+        assert!(doc
+            .get("histograms")
+            .unwrap()
+            .get(&format!("on_event_latency/{name}"))
+            .is_some());
+
+        // Audit log: every line parses, applied txns are recorded, and
+        // SJF-BSBF's Algorithm-2 scoring shows up per candidate pair.
+        let audit = std::fs::read_to_string(dir.join("audit.jsonl")).unwrap();
+        let kinds: Vec<String> = audit
+            .lines()
+            .map(|l| {
+                Json::parse(l)
+                    .expect("audit line parses")
+                    .get("kind")
+                    .unwrap()
+                    .as_str()
+                    .unwrap()
+                    .to_string()
+            })
+            .collect();
+        assert!(kinds.iter().any(|k| k == "apply"), "{name}: no applied txns logged");
+        if name == "SJF-BSBF" {
+            assert!(kinds.iter().any(|k| k == "alg2"), "no Algorithm-2 audit lines");
+        }
+
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+#[test]
+fn disabled_handle_writes_nothing() {
+    let dir = artifact_dir("disabled-probe");
+    let off = Obs::disabled();
+    assert!(!off.is_enabled());
+    run_policy("SJF-BSBF", off.clone());
+    off.finish().unwrap();
+    assert!(!dir.exists(), "a disabled handle must not touch the filesystem");
+    // And an all-None config is the disabled handle, not an armed no-op.
+    assert!(!Obs::new(ObsConfig::default()).is_enabled());
+}
