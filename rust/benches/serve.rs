@@ -1,0 +1,10 @@
+//! `cargo bench --bench serve` — thin wrapper over the registered `serve`
+//! suite (an in-process daemon fed a live workload-v2 session: measures
+//! submissions/sec and per-submit request→decision latency); the body
+//! lives in `wise_share::perfkit::suites::serve` so `wise-share bench`
+//! records the same cases machine-readably. Perfkit flags pass through:
+//! `cargo bench --bench serve -- --profile quick --out BENCH_serve.json`.
+
+fn main() -> anyhow::Result<()> {
+    wise_share::perfkit::bench_main("serve")
+}

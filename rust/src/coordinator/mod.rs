@@ -33,7 +33,7 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
 
 use crate::cluster::{Cluster, ClusterConfig, GpuId};
 use crate::jobs::{JobId, JobRecord, JobSpec};
@@ -41,7 +41,7 @@ use crate::obskit::Obs;
 use crate::perf::interference::InterferenceModel;
 use crate::runtime::executor::{TrainExecutor, TrainState};
 use crate::runtime::ArtifactSet;
-use crate::sched_core::{Decision, Event, Policy, SchedContext};
+use crate::sched_core::{ApplyReport, Decision, EventPump, Policy, PumpHooks, SchedContext, Txn};
 
 /// Physical-run tuning.
 #[derive(Debug, Clone)]
@@ -116,6 +116,38 @@ struct Progress {
 struct Board {
     /// Lead-GPU → jobs it must time-slice.
     lanes: HashMap<GpuId, Vec<Assignment>>,
+}
+
+/// The coordinator's [`PumpHooks`]: translate pump-driven transitions
+/// into worker lane assignments on the shared board.
+struct BoardHooks<'a> {
+    board: &'a Arc<Mutex<Board>>,
+    exec_batch: u32,
+}
+
+impl PumpHooks for BoardHooks<'_> {
+    fn completed(&mut self, _ctx: &SchedContext, job: JobId) -> Result<()> {
+        let mut b = self.board.lock().unwrap();
+        for lane in b.lanes.values_mut() {
+            lane.retain(|a| a.job != job);
+        }
+        Ok(())
+    }
+
+    fn txn_applied(&mut self, _ctx: &SchedContext, txn: &Txn, _report: &ApplyReport) -> Result<()> {
+        let mut b = self.board.lock().unwrap();
+        for d in txn.ops() {
+            if let Decision::Start { job, gpus, accum_step } = d {
+                b.lanes.entry(gpus[0]).or_default().push(Assignment {
+                    job: *job,
+                    accum_step: *accum_step,
+                    batch: self.exec_batch,
+                    seed: *job as u64 * 7919 + 17,
+                });
+            }
+        }
+        Ok(())
+    }
 }
 
 fn worker_loop(
@@ -235,7 +267,6 @@ pub fn run_physical_obs(
         })
         .collect();
     let mut ctx = SchedContext::new(Cluster::new(cfg.cluster), records, xi);
-    let obs_enabled = obs.is_enabled();
     ctx.set_obs(obs.clone());
     // Target iteration counts after scaling.
     let targets: Vec<f64> = ctx.jobs.iter().map(|j| j.remaining_iters).collect();
@@ -244,23 +275,26 @@ pub fn run_physical_obs(
     let t0 = Instant::now();
 
     let result = (|| -> Result<()> {
-        let penalty = policy.preemption_penalty();
         // Tick cadence follows the compressed trace timeline: arrivals are
         // divided by `time_compression`, so a policy's tick interval is
         // too — a Tick fires after the same amount of *workload* time in
-        // both backends, not 60x rarer on the wall clock.
-        let tick_wall_s = policy.tick_interval().map(|t| t / cfg.time_compression);
-        let mut next_tick = tick_wall_s;
-        let mut events: Vec<Event> = Vec::new();
-        let mut clock_events: Vec<Event> = Vec::new();
+        // both backends, not 60x rarer on the wall clock. Delivery itself
+        // (completions → clock events → tick, obs taps, the validated
+        // apply path) lives in the shared [`EventPump`], which the serve
+        // daemon drives too.
+        let mut pump = EventPump::new(policy)
+            .with_tick_scale(cfg.time_compression)
+            .reject_preempts("physical coordinator supports non-preemptive policies only")
+            .apply_context("physical coordinator rejected a policy transaction");
+        let mut hooks = BoardHooks { board: &board, exec_batch: cfg.exec_batch };
         loop {
             // Wall clock drives the shared context: queueing time and
             // attained service (Tiresias' 2D-LAS input) accrue here, and
             // arrivals / restart eligibilities fire as typed events.
-            clock_events.clear();
-            ctx.advance_wall(t0.elapsed().as_secs_f64(), &mut clock_events);
+            pump.begin_wall(&mut ctx, t0.elapsed().as_secs_f64());
             // Apply progress reports from the workers (real execution is
-            // what advances remaining_iters in physical mode).
+            // what advances remaining_iters in physical mode) before the
+            // pump collects completions against them.
             while let Ok(p) = rx.try_recv() {
                 if ctx.note_progress(p.job) {
                     executed[p.job] += 1;
@@ -272,78 +306,13 @@ pub fn run_physical_obs(
                     });
                 }
             }
-            // Completions through the same shared path as the engine.
-            events.clear();
-            ctx.collect_completions(0.0, &mut events);
-            for ev in &events {
-                if let Event::Completion { job } = ev {
-                    let mut b = board.lock().unwrap();
-                    for lane in b.lanes.values_mut() {
-                        lane.retain(|a| a.job != *job);
-                    }
-                }
-            }
-            events.append(&mut clock_events);
-            if let Some(tick) = next_tick {
-                if tick <= ctx.now() + 1e-9 {
-                    next_tick = Some(tick + tick_wall_s.unwrap());
-                    events.push(Event::Tick);
-                }
-            }
-            // Deliver events; validate + apply through sched_core's single
-            // transaction path (no coordinator-local Decision handling).
-            // Delivery happens before the all-finished exit so the last
-            // job's Completion reaches the policy — the engine's "exactly
-            // one Completion per job" guarantee holds in both backends.
-            for &ev in &events {
-                if obs_enabled {
-                    obs.engine_event(ctx.now(), ev);
-                }
-                let txn;
-                if obs_enabled {
-                    let w0 = Instant::now();
-                    txn = policy.on_event(&ctx, ev);
-                    obs.policy_latency(policy.name(), w0.elapsed().as_secs_f64());
-                } else {
-                    txn = policy.on_event(&ctx, ev);
-                }
-                if txn.has_preempt() {
-                    if obs_enabled {
-                        obs.txn_rejected(
-                            ctx.now(),
-                            policy.name(),
-                            &txn,
-                            "physical coordinator supports non-preemptive policies only",
-                        );
-                    }
-                    bail!("physical coordinator supports non-preemptive policies only");
-                }
-                match ctx.apply(&txn, penalty) {
-                    Ok(report) => {
-                        if obs_enabled {
-                            obs.txn_applied(ctx.now(), policy.name(), &txn, &report);
-                        }
-                    }
-                    Err(e) => {
-                        if obs_enabled {
-                            obs.txn_rejected(ctx.now(), policy.name(), &txn, &format!("{e:#}"));
-                        }
-                        return Err(e)
-                            .context("physical coordinator rejected a policy transaction");
-                    }
-                }
-                let mut b = board.lock().unwrap();
-                for d in txn.ops() {
-                    if let Decision::Start { job, gpus, accum_step } = d {
-                        b.lanes.entry(gpus[0]).or_default().push(Assignment {
-                            job: *job,
-                            accum_step: *accum_step,
-                            batch: cfg.exec_batch,
-                            seed: *job as u64 * 7919 + 17,
-                        });
-                    }
-                }
-            }
+            // Completions, clock events and the tick are delivered through
+            // the shared pump; BoardHooks translates the applied decisions
+            // into worker lane assignments. Delivery happens before the
+            // all-finished exit so the last job's Completion reaches the
+            // policy — the engine's "exactly one Completion per job"
+            // guarantee holds in both backends.
+            pump.finish_wall(&mut ctx, policy, &mut hooks)?;
             if ctx.all_finished() {
                 return Ok(());
             }

@@ -44,6 +44,7 @@ pub mod report;
 pub mod runtime;
 pub mod sched;
 pub mod sched_core;
+pub mod serve;
 pub mod sim;
 pub mod util;
 

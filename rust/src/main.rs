@@ -12,6 +12,11 @@
 //!                  exit on regression). CI's `bench-smoke` entry point.
 //! * `physical`   — run the physical-mode coordinator: real PJRT training
 //!                  steps on emulated GPUs (requires `make artifacts`).
+//! * `serve`      — run the scheduler as a long-lived daemon: live job
+//!                  ingestion over a line-JSON protocol, backpressure,
+//!                  crash-recovery snapshots (DESIGN.md §14).
+//! * `serve-load` — replay a workload preset as live traffic against an
+//!                  in-process daemon; reports latency percentiles.
 //! * `trace-gen`  — generate and save a Philly-like trace as JSON.
 //! * `fit`        — demonstrate the Eq. 3/4 calibration path (Fig. 2 check).
 //!
@@ -36,6 +41,7 @@ use wise_share::perf::profiles::{ModelKind, WorkloadProfile};
 use wise_share::perfkit;
 use wise_share::report;
 use wise_share::sched::{self, POLICY_NAMES};
+use wise_share::serve;
 use wise_share::sim::{engine, metrics};
 
 const USAGE: &str = "\
@@ -53,6 +59,17 @@ USAGE:
                        [--audit-dir D] [--sample-every SECS]
   wise-share bench     [--suite NAMES] [--profile quick|full] [--out F]
                        [--baseline F] [--max-regress PCT] | [--check F]
+                       | [--list]
+  wise-share serve     [--policy NAME] [--cluster physical|simulation |
+                        --topology SHAPE] [--xi X] [--max-pending N]
+                       [--time-compression X] [--listen ADDR]
+                       [--snapshot PATH [--snapshot-every SECS]]
+                       [--resume PATH]
+                       [--trace-out F] [--metrics-out F] [--audit-out F]
+                       [--sample-every SECS]
+  wise-share serve-load [--workload PRESET] [--load X] [--jobs N] [--seed S]
+                       [--policy NAME] [--max-pending N]
+                       [--cluster physical|simulation | --topology SHAPE]
   wise-share physical  [--policy NAME] [--jobs N] [--seed S]
                        [--iter-scale F] [--compress F] [--loss-csv F]
                        [--artifacts DIR]
@@ -83,9 +100,18 @@ take directories and write one artifact set per run ordinal. Sinks off
 
 Bench SUITE names (comma-separated for --suite; default = all): tables,
 figures, ablations, sched_overhead, runtime_hotpath, campaign_throughput,
-scale. `--out` writes the schema-versioned JSON perf report; `--baseline`
-+ `--max-regress` (default 10) gate on a recorded report with a nonzero
-exit on regression; `--check F` only validates an emitted report.
+scale, serve. `--out` writes the schema-versioned JSON perf report;
+`--baseline` + `--max-regress` (default 10) gate on a recorded report
+with a nonzero exit on regression; `--check F` only validates an emitted
+report; `--list` prints the registered suites and profiles.
+
+Serve (DESIGN.md §14): a line-JSON request per stdin line (submit,
+cancel, query, advance, snapshot, drain), responses and streamed
+started/completed/rejected events on stdout; `--listen ADDR` accepts one
+TCP client instead. Time is virtual (moves on `advance`/`drain`) unless
+--time-compression X pins it to wall_elapsed*X. --snapshot PATH writes
+crash-recovery snapshots every --snapshot-every sim-seconds (default
+300) and at exit; `serve --resume PATH` restores one and keeps going.
 ";
 
 /// Tiny `--key value` flag parser.
@@ -176,14 +202,23 @@ fn with_policy_suffix(path: &str, policy: Option<&str>) -> PathBuf {
     p.with_file_name(file)
 }
 
+/// Parse `--{key}` as a strictly positive finite float, rejecting zero,
+/// negatives, NaN, and infinities at parse time with the flag named in
+/// the error — shared by every interval/factor flag (`--sample-every`,
+/// `--load`, `--snapshot-every`, `--time-compression`).
+fn positive_f64(args: &Args, key: &str, default: f64) -> Result<f64> {
+    let v: f64 = args.parse_or(key, default)?;
+    if v <= 0.0 || !v.is_finite() {
+        bail!("--{key} {v} must be finite and > 0");
+    }
+    Ok(v)
+}
+
 /// The per-run sink config from `--trace-out` / `--metrics-out` /
 /// `--audit-out` / `--sample-every`; `policy` is `Some` only when several
 /// policies share the flags (`--policy all`).
 fn obs_config(args: &Args, policy: Option<&str>) -> Result<ObsConfig> {
-    let sample_every: f64 = args.parse_or("sample-every", 60.0)?;
-    if sample_every <= 0.0 || !sample_every.is_finite() {
-        bail!("--sample-every {sample_every} must be finite and > 0");
-    }
+    let sample_every = positive_f64(args, "sample-every", 60.0)?;
     Ok(ObsConfig {
         trace: args.get("trace-out").map(|p| with_policy_suffix(p, policy)),
         metrics: args.get("metrics-out").map(|p| with_policy_suffix(p, policy)),
@@ -226,10 +261,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let cluster = resolve_cluster(args)?;
     let jobs: usize = args.parse_or("jobs", 240)?;
     let seed: u64 = args.parse_or("seed", 1)?;
-    let load: f64 = args.parse_or("load", 1.0)?;
-    if load <= 0.0 || !load.is_finite() {
-        bail!("--load {load} must be finite and > 0");
-    }
+    let load = positive_f64(args, "load", 1.0)?;
     let jobs_list = match args.get("trace") {
         Some(p) => {
             if args.get("workload").is_some() {
@@ -301,10 +333,7 @@ fn cmd_campaign(args: &Args) -> Result<()> {
         (None, None) => bail!("campaign needs --spec FILE or --preset paper\n{USAGE}"),
     };
     let threads: usize = args.parse_or("threads", 0)?;
-    let sample_every: f64 = args.parse_or("sample-every", 60.0)?;
-    if sample_every <= 0.0 || !sample_every.is_finite() {
-        bail!("--sample-every {sample_every} must be finite and > 0");
-    }
+    let sample_every = positive_f64(args, "sample-every", 60.0)?;
     let obs_dirs = campaign::ObsDirs {
         trace_dir: args.get("trace-dir").map(PathBuf::from),
         metrics_dir: args.get("metrics-dir").map(PathBuf::from),
@@ -419,6 +448,80 @@ fn cmd_physical(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_serve(args: &Args) -> Result<()> {
+    let ocfg = obs_config(args, None)?;
+    let obs = Obs::new(ocfg.clone());
+    let snapshot = args.get("snapshot").map(PathBuf::from);
+    // Validate the interval/ratio flags up front (named errors at parse
+    // time), before any daemon state exists.
+    let snapshot_every_s = positive_f64(args, "snapshot-every", 300.0)?;
+    let max_pending: usize = args.parse_or("max-pending", 64)?;
+    if max_pending == 0 {
+        bail!("--max-pending 0 must be at least 1");
+    }
+    let time_compression = match args.get("time-compression") {
+        None => None,
+        Some(_) => Some(positive_f64(args, "time-compression", 1.0)?),
+    };
+    let daemon = match args.get("resume") {
+        Some(path) => {
+            // The snapshot pins the scheduling config; accepting these
+            // flags alongside --resume would silently ignore them.
+            for k in ["policy", "cluster", "topology", "xi", "max-pending", "time-compression"]
+            {
+                if args.get(k).is_some() {
+                    bail!("--{k} conflicts with --resume (the snapshot pins it)");
+                }
+            }
+            serve::Daemon::resume(std::path::Path::new(path), snapshot, obs.clone())?
+        }
+        None => {
+            if args.get("snapshot-every").is_some() && snapshot.is_none() {
+                bail!("--snapshot-every requires --snapshot PATH");
+            }
+            let cfg = serve::ServeConfig {
+                policy: args.get("policy").unwrap_or("SJF-BSBF").to_string(),
+                cluster: serve::ClusterSpec::from_args(
+                    args.get("topology"),
+                    args.get("cluster"),
+                )?,
+                xi_global: match args.get("xi") {
+                    Some(v) => {
+                        Some(v.parse().map_err(|e| anyhow::anyhow!("--xi {v:?}: {e}"))?)
+                    }
+                    None => None,
+                },
+                max_pending,
+                time_compression,
+                snapshot,
+                snapshot_every_s,
+                ..serve::ServeConfig::default()
+            };
+            serve::Daemon::new(cfg, obs.clone())?
+        }
+    };
+    serve::run(daemon, args.get("listen"))?;
+    finish_obs(&obs, &ocfg)
+}
+
+fn cmd_serve_load(args: &Args) -> Result<()> {
+    let cfg = serve::LoadConfig {
+        preset: args.get("workload").unwrap_or("philly-sim").to_string(),
+        load: positive_f64(args, "load", 1.0)?,
+        jobs: args.parse_or("jobs", 96)?,
+        seed: args.parse_or("seed", 1)?,
+        policy: args.get("policy").unwrap_or("SJF-BSBF").to_string(),
+        max_pending: args.parse_or("max-pending", 64)?,
+        cluster: serve::ClusterSpec::from_args(args.get("topology"), args.get("cluster"))?,
+    };
+    if cfg.max_pending == 0 {
+        bail!("--max-pending 0 must be at least 1");
+    }
+    let out = serve::load::run(&cfg, Obs::disabled())?;
+    println!("{}", out.summary());
+    Ok(())
+}
+
 fn cmd_trace_gen(args: &Args) -> Result<()> {
     let out = PathBuf::from(args.get("out").context("--out is required")?);
     let seed: u64 = args.parse_or("seed", 1)?;
@@ -466,12 +569,20 @@ fn main() -> Result<()> {
         println!("{USAGE}");
         return Ok(());
     };
+    // `--list` is the one valueless flag; the `--key value` parser would
+    // reject it, so dispatch it before Args::parse.
+    if cmd == "bench" && rest == ["--list"] {
+        print!("{}", perfkit::list());
+        return Ok(());
+    }
     let args = Args::parse(rest)?;
     match cmd.as_str() {
         "simulate" => cmd_simulate(&args),
         "campaign" => cmd_campaign(&args),
         "bench" => cmd_bench(&args),
         "physical" => cmd_physical(&args),
+        "serve" => cmd_serve(&args),
+        "serve-load" => cmd_serve_load(&args),
         "trace-gen" => cmd_trace_gen(&args),
         "fit" => cmd_fit(&args),
         "help" | "--help" | "-h" => {

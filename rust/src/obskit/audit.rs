@@ -110,9 +110,15 @@ impl AuditSink {
         self.lines.is_empty()
     }
 
-    pub fn finish(&mut self) -> Result<()> {
+    /// Mid-run checkpoint: write the lines recorded so far. Recording
+    /// continues; a later flush or finish rewrites the file.
+    pub fn flush(&self) -> Result<()> {
         let Some(path) = &self.path else { return Ok(()) };
         write_file(path, &(self.lines.join("\n") + "\n"))
+    }
+
+    pub fn finish(&mut self) -> Result<()> {
+        self.flush()
     }
 }
 

@@ -174,9 +174,16 @@ impl MetricsSink {
         ])
     }
 
-    pub fn finish(&mut self) -> Result<()> {
+    /// Mid-run checkpoint: write the document as it stands. Rendering is
+    /// non-destructive, so recording continues and a later flush or
+    /// finish rewrites the file.
+    pub fn flush(&self) -> Result<()> {
         let Some(path) = &self.path else { return Ok(()) };
         write_file(path, &self.render().to_string())
+    }
+
+    pub fn finish(&mut self) -> Result<()> {
+        self.flush()
     }
 }
 

@@ -312,6 +312,29 @@ impl Obs {
         c.metrics.as_ref().map(|m| m.render())
     }
 
+    /// Mid-run checkpoint: write every armed sink's artifact *as it
+    /// stands*, without closing trace spans or stopping recording. This
+    /// is the serve daemon's crash-safety valve — called on its snapshot
+    /// cadence and from its shutdown path — so a killed process loses at
+    /// most one flush interval of observations instead of everything
+    /// buffered since the run began (the sinks otherwise write only at
+    /// [`Obs::finish`]).
+    pub fn flush(&self) -> Result<()> {
+        if let Some(core) = &self.inner {
+            let c = core.lock().unwrap();
+            if let Some(tr) = &c.trace {
+                tr.flush()?;
+            }
+            if let Some(m) = &c.metrics {
+                m.flush()?;
+            }
+            if let Some(a) = &c.audit {
+                a.flush()?;
+            }
+        }
+        Ok(())
+    }
+
     /// Close open trace spans and write every armed sink's artifact (a
     /// sink with no path skips the write). Called by the *owner* of the
     /// run — `main.rs` or the campaign runner — never by the engine, so

@@ -119,28 +119,30 @@ impl TraceSink {
         ]));
     }
 
+    fn span_json(job: JobId, span: &OpenSpan, t_end: f64, end: &str) -> Json {
+        obj(vec![
+            ("name", Json::Str(format!("job {job}"))),
+            ("cat", "job".into()),
+            ("ph", "X".into()),
+            ("ts", Json::Num(span.start_s * US)),
+            ("dur", Json::Num((t_end - span.start_s).max(0.0) * US)),
+            ("pid", Json::from(1u64)),
+            ("tid", Json::from(job)),
+            (
+                "args",
+                obj(vec![
+                    ("gpus", Json::from(span.gpus)),
+                    ("shared", Json::from(span.shared)),
+                    ("end", end.into()),
+                ]),
+            ),
+        ])
+    }
+
     fn close_span(&mut self, t: f64, job: JobId, end: &str) {
         if let Some(span) = self.open.remove(&job) {
-            self.events.push((
-                span.start_s,
-                obj(vec![
-                    ("name", Json::Str(format!("job {job}"))),
-                    ("cat", "job".into()),
-                    ("ph", "X".into()),
-                    ("ts", Json::Num(span.start_s * US)),
-                    ("dur", Json::Num((t - span.start_s).max(0.0) * US)),
-                    ("pid", Json::from(1u64)),
-                    ("tid", Json::from(job)),
-                    (
-                        "args",
-                        obj(vec![
-                            ("gpus", Json::from(span.gpus)),
-                            ("shared", Json::from(span.shared)),
-                            ("end", end.into()),
-                        ]),
-                    ),
-                ]),
-            ));
+            let json = Self::span_json(job, &span, t, end);
+            self.events.push((span.start_s, json));
         }
     }
 
@@ -202,6 +204,27 @@ impl TraceSink {
             ("busy", Json::from(busy)),
             ("shared", Json::from(shared)),
         ]));
+    }
+
+    /// Mid-run checkpoint (the serve daemon's snapshot cadence and its
+    /// graceful-shutdown path): write both artifacts *now*, with any
+    /// still-open spans provisionally closed at the last seen time and
+    /// flagged `"in-progress"`. Unlike [`TraceSink::finish`] this
+    /// mutates nothing — recording continues, and a later flush or
+    /// finish atomically rewrites the files with the fuller picture.
+    pub fn flush(&self) -> Result<()> {
+        let Some(path) = self.path.clone() else { return Ok(()) };
+        let mut events = self.events.clone();
+        for (&job, span) in &self.open {
+            events.push((span.start_s, Self::span_json(job, span, self.last_t, "in-progress")));
+        }
+        events.sort_by(|a, b| a.0.total_cmp(&b.0));
+        let doc = obj(vec![
+            ("traceEvents", Json::Arr(events.into_iter().map(|(_, j)| j).collect())),
+            ("displayTimeUnit", "ms".into()),
+        ]);
+        write_file(&path, &doc.to_string())?;
+        write_file(&path.with_extension("jsonl"), &(self.jsonl.join("\n") + "\n"))
     }
 
     /// Close still-open spans (truncated runs) at the last seen time,

@@ -101,6 +101,18 @@ pub fn run(cfg: &RunConfig) -> Result<BenchReport> {
     Ok(report)
 }
 
+/// The `bench --list` text: every registered suite with its description,
+/// plus the run profiles. A function (not inlined in main) so the CLI
+/// test can pin that the listing and the registry cannot drift apart.
+pub fn list() -> String {
+    let mut out = String::from("registered bench suites:\n");
+    for s in registry::all() {
+        out.push_str(&format!("  {:<22} {}\n", s.name, s.description));
+    }
+    out.push_str("profiles: quick, full (default)\n");
+    out
+}
+
 /// Validate a previously-emitted report file — CI's malformed/empty gate
 /// on the `BENCH_ci.json` artifact.
 pub fn check_file(path: &Path) -> Result<()> {

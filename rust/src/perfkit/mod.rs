@@ -35,7 +35,7 @@ pub mod report;
 pub mod suites;
 
 pub use compare::{compare, CaseVerdict, Comparison, Verdict};
-pub use driver::{bench_main, check_file, run, RunConfig, DEFAULT_MAX_REGRESS_PCT};
+pub use driver::{bench_main, check_file, list, run, RunConfig, DEFAULT_MAX_REGRESS_PCT};
 pub use registry::{
     all, by_name_or_err, CaseStats, Profile, Recorder, Suite, SuiteReport,
     SINGLE_SHOT_TOLERANCE_PCT, SUITE_NAMES,

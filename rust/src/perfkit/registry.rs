@@ -145,7 +145,7 @@ pub struct Suite {
 
 /// Registered suite names, in registry (execution) order — one per
 /// `cargo bench` target.
-pub const SUITE_NAMES: [&str; 7] = [
+pub const SUITE_NAMES: [&str; 8] = [
     "tables",
     "figures",
     "ablations",
@@ -153,6 +153,7 @@ pub const SUITE_NAMES: [&str; 7] = [
     "runtime_hotpath",
     "campaign_throughput",
     "scale",
+    "serve",
 ];
 
 /// Every registered suite, in [`SUITE_NAMES`] order.
@@ -165,6 +166,7 @@ pub fn all() -> Vec<Suite> {
         suites::runtime_hotpath::suite(),
         suites::campaign_throughput::suite(),
         suites::scale::suite(),
+        suites::serve::suite(),
     ]
 }
 

@@ -14,4 +14,5 @@ pub mod figures;
 pub mod runtime_hotpath;
 pub mod scale;
 pub mod sched_overhead;
+pub mod serve;
 pub mod tables;

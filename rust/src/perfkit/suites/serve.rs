@@ -1,0 +1,48 @@
+//! `serve` suite — the daemon's request hot path, measured against an
+//! in-process daemon (no pipes, no process spawn: the numbers are the
+//! scheduler's, not the OS's).
+//!
+//! * **session** — one full `serve-load` session (advance + submit per
+//!   job, then drain) end to end: the submissions/sec figure.
+//! * **submit-latency** — the per-request wall cost of `handle_line` on
+//!   a submit (parse → admission → arrival delivery → policy decision),
+//!   folded from the session's raw per-submit timings so the percentiles
+//!   describe real traffic, not a warm single request replayed.
+
+use crate::obskit::Obs;
+use crate::serve::{load, LoadConfig};
+use crate::util::bench::stats_of;
+
+use super::super::registry::{Profile, Recorder, Suite, SuiteReport};
+
+pub fn suite() -> Suite {
+    Suite {
+        name: "serve",
+        description: "daemon ingestion: submissions/sec + request->decision latency",
+        run,
+    }
+}
+
+fn run(profile: Profile) -> SuiteReport {
+    let mut rec = Recorder::new("serve");
+    let jobs = profile.pick(96, 512);
+    let cfg = LoadConfig { jobs, ..LoadConfig::default() };
+    let mut outcome = None;
+    rec.once(&format!("serve/session/{jobs}jobs"), || {
+        outcome = Some(load::run(&cfg, Obs::disabled()).expect("serve-load session"));
+    });
+    let outcome = outcome.expect("session ran");
+    println!(
+        "session: {} jobs in {:.2}s wall = {:.0} submissions/s ({} completed, {} busy)",
+        outcome.submitted,
+        outcome.wall_s,
+        outcome.submissions_per_s,
+        outcome.completed,
+        outcome.rejected_busy,
+    );
+    rec.record(stats_of(
+        &format!("serve/submit-latency/{jobs}jobs"),
+        outcome.decision_latencies_s.clone(),
+    ));
+    rec.finish()
+}

@@ -14,7 +14,7 @@ use std::ops::Deref;
 
 use crate::cluster::overlay::OverlayPool;
 use crate::cluster::{Cluster, ClusterOverlay};
-use crate::jobs::{JobId, JobRecord, JobState};
+use crate::jobs::{JobId, JobRecord, JobSpec, JobState};
 use crate::obskit::Obs;
 use crate::perf::interference::InterferenceModel;
 use crate::sim::SimState;
@@ -514,6 +514,14 @@ impl SchedContext {
     }
 
     fn finish_job(&mut self, id: JobId) {
+        self.retire_running(id, "finish");
+    }
+
+    /// Shared teardown for a running job leaving the cluster for good —
+    /// natural completion (`reason = "finish"`) or a daemon-side cancel
+    /// (`reason = "cancel"`). Releases its GPUs, marks it `Finished`,
+    /// and reprojects any co-runners now running faster.
+    fn retire_running(&mut self, id: JobId, reason: &'static str) {
         let co = self.state.cluster.co_runners(id);
         self.state.cluster.release(id);
         let rec = &mut self.state.jobs[id];
@@ -525,7 +533,7 @@ impl SchedContext {
         self.finished += 1;
         self.rate_epoch[id] += 1;
         if self.obs.is_enabled() {
-            self.obs.job_stopped(self.state.now, id, "finish");
+            self.obs.job_stopped(self.state.now, id, reason);
             for &c in &co {
                 let still_shared = !self.state.cluster.co_runners(c).is_empty();
                 self.obs.job_share_changed(self.state.now, c, still_shared);
@@ -534,6 +542,84 @@ impl SchedContext {
         for c in co {
             self.reproject(c);
         }
+    }
+
+    // ------------------------------------------------ live ingestion
+
+    /// Live ingestion (the serve daemon): append one more job to the
+    /// world mid-run and index it as a future arrival. The spec's `id`
+    /// must be the next dense [`JobId`] (`jobs.len()` before the call) —
+    /// the daemon owns the external-id ↔ dense-id mapping. The job's
+    /// `Arrival` event fires on the first `advance_*` call that reaches
+    /// `spec.arrival_s`, exactly as for jobs present at construction.
+    pub fn admit_job(&mut self, spec: JobSpec) -> JobId {
+        let id = self.state.jobs.len();
+        debug_assert_eq!(spec.id, id, "admitted specs carry the next dense id");
+        debug_assert!(
+            spec.arrival_s >= self.state.now - T_EPS,
+            "admitted arrivals must not predate now"
+        );
+        let rec = JobRecord::new(spec);
+        self.est_rate.push(est_rate_of(&rec));
+        self.rate_epoch.push(0);
+        self.iter_cache.push((u64::MAX, 0.0));
+        self.state.not_before.push(0.0);
+        self.state.service_gpu_s.push(0.0);
+        self.state.jobs.push(rec);
+        // `future_arrivals` is sorted by (arrival, id) descending and pops
+        // from the back. The new id is the largest so far, so among equal
+        // arrival times it belongs at the *front* of the run (pops last —
+        // simultaneous arrivals keep firing in ascending id order).
+        let arrival = self.state.jobs[id].spec.arrival_s;
+        let pos = self.future_arrivals.partition_point(|&e| {
+            self.state.jobs[e].spec.arrival_s.total_cmp(&arrival)
+                == std::cmp::Ordering::Greater
+        });
+        self.future_arrivals.insert(pos, id);
+        id
+    }
+
+    /// Live cancellation (the serve daemon): withdraw `id` from the
+    /// system. A running job is torn down through the shared retire path
+    /// (GPUs released, co-runners reprojected); a queued or not-yet-
+    /// arrived job is simply removed from its queues. Either way the
+    /// record ends `Finished` with `finish_s = now`. Returns `false`
+    /// (and changes nothing) if the job is already finished.
+    pub fn cancel_job(&mut self, id: JobId) -> bool {
+        match self.state.jobs[id].state {
+            JobState::Finished => false,
+            JobState::Running => {
+                self.retire_running(id, "cancel");
+                true
+            }
+            JobState::Pending | JobState::Preempted => {
+                set_remove(&mut self.pending, id);
+                set_remove(&mut self.waiting, id);
+                if let Some(pos) = self.future_arrivals.iter().position(|&e| e == id) {
+                    self.future_arrivals.remove(pos);
+                }
+                // Any restart_heap entry is left in place: the pop path
+                // skips entries whose job is no longer Pending/Preempted.
+                let rec = &mut self.state.jobs[id];
+                rec.state = JobState::Finished;
+                rec.remaining_iters = 0.0;
+                rec.finish_s = Some(self.state.now);
+                self.finished += 1;
+                self.rate_epoch[id] += 1;
+                if self.obs.is_enabled() {
+                    self.obs.job_stopped(self.state.now, id, "cancel");
+                }
+                true
+            }
+        }
+    }
+
+    /// Snapshot restore (the serve daemon's `--resume`): reinstate the
+    /// utilization integrals that [`SchedContext::from_state`] cannot
+    /// derive from the world state alone.
+    pub fn restore_accounting(&mut self, busy_gpu_s: f64, shared_gpu_s: f64) {
+        self.busy_gpu_s = busy_gpu_s;
+        self.shared_gpu_s = shared_gpu_s;
     }
 
     /// Physical mode: record one really-executed iteration of `job`.

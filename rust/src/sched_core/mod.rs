@@ -31,9 +31,11 @@
 //! guide and the exact guarantees.
 
 pub mod context;
+pub mod pump;
 pub mod txn;
 
 pub use context::SchedContext;
+pub use pump::{EventPump, NoHooks, PumpHooks};
 pub use txn::{ApplyReport, Decision, Txn};
 
 use crate::jobs::JobId;

@@ -1,0 +1,324 @@
+//! [`EventPump`] — the event-delivery driver shared by the wall-clock
+//! backends: the physical coordinator and the serve daemon.
+//!
+//! The simulator engine ([`crate::sim::engine`]) owns a batch run from
+//! first arrival to last completion, so it keeps its own closed loop.
+//! The coordinator and the daemon instead advance *incrementally* — to
+//! the current wall instant, or to a client-requested virtual instant —
+//! and must interleave delivery with external input (worker progress
+//! reports, protocol requests). This type factors the part they must
+//! agree on with the engine for the fidelity story to hold: the
+//! completions → arrivals/restarts → tick delivery order at an instant,
+//! the obskit taps around each delivery, and the single validated
+//! [`SchedContext::apply`] path for every policy transaction.
+//!
+//! Two advancement styles:
+//! * [`EventPump::begin_wall`] + [`EventPump::finish_wall`] — one jump to
+//!   a wall instant (the coordinator: real execution drives progress via
+//!   [`SchedContext::note_progress`] between the two calls, then
+//!   completions are collected at the jumped-to time).
+//! * [`EventPump::pump_sim`] — event-boundary stepping to a target
+//!   simulated instant (the daemon's virtual clock: progress integrates
+//!   at piecewise-constant rates, so the pump must stop at every rate
+//!   change exactly as the engine does).
+//!
+//! Backend-specific reactions (the coordinator's assignment board, the
+//! daemon's notification stream) hang off [`PumpHooks`].
+
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::jobs::JobId;
+
+use super::{ApplyReport, Event, Policy, SchedContext, Txn};
+
+/// Backend reactions to pump-driven transitions. Hooks fire *after* the
+/// corresponding state transition has been applied to the context and
+/// may fail, which aborts the pump call.
+pub trait PumpHooks {
+    /// `job` just finished (its GPUs are released). Fires before the
+    /// `Completion` event is delivered to the policy.
+    fn completed(&mut self, _ctx: &SchedContext, _job: JobId) -> Result<()> {
+        Ok(())
+    }
+
+    /// `txn` was validated and applied. Fires once per delivered event
+    /// whose transaction applied cleanly (including empty transactions).
+    fn txn_applied(
+        &mut self,
+        _ctx: &SchedContext,
+        _txn: &Txn,
+        _report: &ApplyReport,
+    ) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// The no-reaction hook set.
+pub struct NoHooks;
+
+impl PumpHooks for NoHooks {}
+
+/// See the module docs. One pump instance lives as long as its backend
+/// run: it owns the tick cadence and the delivery counters.
+pub struct EventPump {
+    /// Tick period in backend clock seconds (already divided by any
+    /// time compression by [`EventPump::with_tick_scale`]).
+    tick_every: Option<f64>,
+    next_tick: Option<f64>,
+    penalty: f64,
+    /// When set, a transaction containing a `Preempt` is rejected with
+    /// this message before it reaches `apply` (the physical coordinator
+    /// cannot checkpoint parameters).
+    reject_preempts: Option<&'static str>,
+    /// When set, apply errors are wrapped with this context string.
+    apply_context: Option<&'static str>,
+    events: Vec<Event>,
+    clock_events: Vec<Event>,
+    policy_calls: u64,
+    preemptions: u64,
+}
+
+impl EventPump {
+    /// A pump for `policy`: tick cadence and preemption penalty are read
+    /// once here (they are `&self` constants on every shipped policy).
+    pub fn new(policy: &dyn Policy) -> EventPump {
+        let tick = policy.tick_interval();
+        EventPump {
+            tick_every: tick,
+            next_tick: tick,
+            penalty: policy.preemption_penalty(),
+            reject_preempts: None,
+            apply_context: None,
+            events: Vec::new(),
+            clock_events: Vec::new(),
+            policy_calls: 0,
+            preemptions: 0,
+        }
+    }
+
+    /// Divide the tick cadence by `scale` (the coordinator's
+    /// `time_compression`: arrivals are compressed onto the wall clock,
+    /// so ticks must be too — a Tick fires after the same amount of
+    /// *workload* time in both backends).
+    pub fn with_tick_scale(mut self, scale: f64) -> EventPump {
+        self.tick_every = self.tick_every.map(|t| t / scale);
+        self.next_tick = self.tick_every;
+        self
+    }
+
+    /// Reject preempting transactions with `msg` (see field docs).
+    pub fn reject_preempts(mut self, msg: &'static str) -> EventPump {
+        self.reject_preempts = Some(msg);
+        self
+    }
+
+    /// Wrap apply errors with `msg` (see field docs).
+    pub fn apply_context(mut self, msg: &'static str) -> EventPump {
+        self.apply_context = Some(msg);
+        self
+    }
+
+    /// Events delivered (= policy invocations) so far.
+    pub fn policy_calls(&self) -> u64 {
+        self.policy_calls
+    }
+
+    /// Preemptions applied so far.
+    pub fn preemptions(&self) -> u64 {
+        self.preemptions
+    }
+
+    /// Next pending tick instant, if the policy ticks.
+    pub fn next_tick(&self) -> Option<f64> {
+        self.next_tick
+    }
+
+    /// Snapshot restore: reinstate the delivery counters and the pending
+    /// tick instant exactly as serialized.
+    pub fn restore(&mut self, policy_calls: u64, preemptions: u64, next_tick: Option<f64>) {
+        self.policy_calls = policy_calls;
+        self.preemptions = preemptions;
+        if self.tick_every.is_some() {
+            self.next_tick = next_tick;
+        }
+    }
+
+    // ------------------------------------------------- wall-clock jump
+
+    /// Phase 1 of a wall-clock iteration: jump the context to wall
+    /// instant `t`, buffering any arrivals/restart eligibilities that
+    /// became due. The caller applies external progress (worker reports)
+    /// between this and [`EventPump::finish_wall`], so completions are
+    /// collected against up-to-date `remaining_iters`.
+    pub fn begin_wall(&mut self, ctx: &mut SchedContext, t: f64) {
+        self.clock_events.clear();
+        ctx.advance_wall(t, &mut self.clock_events);
+    }
+
+    /// Phase 2: collect completions at the jumped-to instant, then
+    /// deliver completions → buffered clock events → tick, applying each
+    /// returned transaction through the shared validated path.
+    pub fn finish_wall(
+        &mut self,
+        ctx: &mut SchedContext,
+        policy: &mut dyn Policy,
+        hooks: &mut dyn PumpHooks,
+    ) -> Result<()> {
+        self.events.clear();
+        ctx.collect_completions(0.0, &mut self.events);
+        let mut clock = std::mem::take(&mut self.clock_events);
+        self.events.append(&mut clock);
+        self.clock_events = clock;
+        self.queue_due_tick(ctx.now());
+        self.deliver(ctx, policy, hooks)
+    }
+
+    // -------------------------------------------- simulated-clock step
+
+    /// Advance the context's *simulated* clock to `target`, stopping at
+    /// every event boundary (arrival, projected finish, restart expiry,
+    /// tick) on the way — the engine's event-selection loop, bounded by
+    /// `target` instead of by all-finished. Progress integrates at
+    /// piecewise-constant rates; `eps_iters` is the engine's completion
+    /// epsilon. `target == ctx.now()` still runs one delivery pass, so
+    /// events due exactly *now* (a just-admitted arrival) fire.
+    pub fn pump_sim(
+        &mut self,
+        ctx: &mut SchedContext,
+        policy: &mut dyn Policy,
+        target: f64,
+        eps_iters: f64,
+        hooks: &mut dyn PumpHooks,
+    ) -> Result<()> {
+        loop {
+            let now = ctx.now();
+            let mut t_next = target;
+            for t in [ctx.next_arrival(), ctx.next_finish(), ctx.next_restart(), self.next_tick]
+            {
+                if let Some(t) = t {
+                    if t < t_next {
+                        t_next = t;
+                    }
+                }
+            }
+            // Due-but-undelivered events can sit at or before `now`
+            // (restored snapshots, zero-penalty restarts): clamp so the
+            // clock never moves backwards.
+            let t_next = t_next.max(now);
+            self.clock_events.clear();
+            ctx.advance_sim(t_next, &mut self.clock_events);
+            self.events.clear();
+            ctx.collect_completions(eps_iters, &mut self.events);
+            let mut clock = std::mem::take(&mut self.clock_events);
+            self.events.append(&mut clock);
+            self.clock_events = clock;
+            self.queue_due_tick(ctx.now());
+            if self.events.is_empty() {
+                // Same float-stall escape hatch as the engine: a finish
+                // projection fired but round-off left the residual above
+                // eps — refresh it (or finish the job) so the next-event
+                // time makes forward progress.
+                ctx.resolve_finish_stall(&mut self.events);
+            }
+            self.deliver(ctx, policy, hooks)?;
+            if ctx.now() + 1e-9 >= target {
+                return Ok(());
+            }
+        }
+    }
+
+    /// Deliver one synthetic `Tick` immediately — the daemon's nudge
+    /// after a cancel frees GPUs without any natural event to react to.
+    pub fn kick(
+        &mut self,
+        ctx: &mut SchedContext,
+        policy: &mut dyn Policy,
+        hooks: &mut dyn PumpHooks,
+    ) -> Result<()> {
+        self.events.clear();
+        self.events.push(Event::Tick);
+        self.deliver(ctx, policy, hooks)
+    }
+
+    // ------------------------------------------------------- internals
+
+    fn queue_due_tick(&mut self, now: f64) {
+        if let Some(tick) = self.next_tick {
+            if tick <= now + 1e-9 {
+                self.next_tick = Some(tick + self.tick_every.unwrap());
+                self.events.push(Event::Tick);
+            }
+        }
+    }
+
+    /// The shared delivery body — identical to the engine's: obs taps
+    /// around each event, policy latency timed only when someone
+    /// listens, every transaction through [`SchedContext::apply`].
+    fn deliver(
+        &mut self,
+        ctx: &mut SchedContext,
+        policy: &mut dyn Policy,
+        hooks: &mut dyn PumpHooks,
+    ) -> Result<()> {
+        let events = std::mem::take(&mut self.events);
+        let obs = ctx.obs().clone();
+        let obs_enabled = obs.is_enabled();
+        let result = (|| -> Result<()> {
+            for &ev in &events {
+                if let Event::Completion { job } = ev {
+                    hooks.completed(ctx, job)?;
+                }
+                if obs_enabled {
+                    obs.engine_event(ctx.now(), ev);
+                }
+                let txn;
+                if obs_enabled {
+                    let t0 = Instant::now();
+                    txn = policy.on_event(ctx, ev);
+                    obs.policy_latency(policy.name(), t0.elapsed().as_secs_f64());
+                } else {
+                    txn = policy.on_event(ctx, ev);
+                }
+                self.policy_calls += 1;
+                if let Some(msg) = self.reject_preempts {
+                    if txn.has_preempt() {
+                        if obs_enabled {
+                            obs.txn_rejected(ctx.now(), policy.name(), &txn, msg);
+                        }
+                        bail!(msg);
+                    }
+                }
+                match ctx.apply(&txn, self.penalty) {
+                    Ok(report) => {
+                        if obs_enabled {
+                            obs.txn_applied(ctx.now(), policy.name(), &txn, &report);
+                        }
+                        self.preemptions += report.preemptions;
+                        hooks.txn_applied(ctx, &txn, &report)?;
+                    }
+                    Err(e) => {
+                        if obs_enabled {
+                            obs.txn_rejected(ctx.now(), policy.name(), &txn, &format!("{e:#}"));
+                        }
+                        return match self.apply_context {
+                            Some(c) => Err(e).context(c),
+                            None => Err(e),
+                        };
+                    }
+                }
+            }
+            Ok(())
+        })();
+        if obs_enabled && !events.is_empty() {
+            let total = ctx.cluster.total_gpus();
+            let busy = total - ctx.cluster.free_count();
+            let shared = busy - ctx.cluster.one_job_count();
+            obs.cluster_counts(ctx.now(), busy, shared);
+            obs.sample(ctx.now(), busy, shared, total, ctx.waiting().len(), ctx.pending().len());
+        }
+        self.events = events;
+        result
+    }
+}

@@ -1,0 +1,637 @@
+//! The [`Daemon`]: one live scheduler — a [`SchedContext`] plus a
+//! [`Policy`] driven through the shared [`EventPump`] — dispatching
+//! line-JSON requests.
+//!
+//! Everything protocol-visible happens in [`Daemon::handle_line`], which
+//! is deliberately I/O-free: it takes one request line and returns the
+//! output lines plus an exit flag. The stdin/TCP loops in the parent
+//! module, the `serve-load` driver, the perfkit `serve` suite, and the
+//! conformance tests all speak to the daemon through this one entry
+//! point, so a scripted session produces byte-identical output no matter
+//! which front end carried the bytes.
+//!
+//! Request handling never panics on client input: anything malformed or
+//! inapplicable becomes an `"ok": false` response with a machine-readable
+//! `code` (see [`super::proto`]).
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::jobs::{JobId, JobSpec, JobState};
+use crate::obskit::Obs;
+use crate::perf::interference::InterferenceModel;
+use crate::sched::{self, POLICY_NAMES};
+use crate::sched_core::{ApplyReport, Decision, EventPump, Policy, PumpHooks, SchedContext, Txn};
+use crate::util::json::Json;
+
+use super::proto::{self, Request, SubmitReq};
+use super::{snapshot, ServeConfig};
+
+/// The output of one request (or of shutdown): protocol lines in emission
+/// order — notifications first, the response last — plus whether the
+/// daemon should exit afterwards.
+#[derive(Debug, Default)]
+pub struct HandleOutcome {
+    pub lines: Vec<String>,
+    pub exit: bool,
+}
+
+/// Pump hook that turns engine transitions into protocol notifications.
+/// Lines accumulate here while the pump runs and are drained into the
+/// current request's output (or the clock poll's) afterwards.
+pub(super) struct Notifier {
+    /// Internal dense [`JobId`] → the client's submit id.
+    pub(super) int2ext: Vec<u64>,
+    pub(super) lines: Vec<String>,
+}
+
+impl Notifier {
+    pub(super) fn new(int2ext: Vec<u64>) -> Notifier {
+        Notifier { int2ext, lines: Vec::new() }
+    }
+}
+
+impl PumpHooks for Notifier {
+    fn completed(&mut self, ctx: &SchedContext, job: JobId) -> Result<()> {
+        let rec = &ctx.jobs[job];
+        self.lines.push(proto::event_completed(
+            ctx.now(),
+            self.int2ext[job],
+            rec.jct(),
+            rec.queued_s,
+        ));
+        Ok(())
+    }
+
+    fn txn_applied(
+        &mut self,
+        ctx: &SchedContext,
+        txn: &Txn,
+        _report: &ApplyReport,
+    ) -> Result<()> {
+        for d in txn.ops() {
+            if let Decision::Start { job, gpus, accum_step } = d {
+                self.lines.push(proto::event_started(
+                    ctx.now(),
+                    self.int2ext[*job],
+                    gpus,
+                    *accum_step,
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+pub struct Daemon {
+    pub(super) cfg: ServeConfig,
+    pub(super) ctx: SchedContext,
+    pub(super) policy: Box<dyn Policy>,
+    pub(super) pump: EventPump,
+    pub(super) notes: Notifier,
+    /// Client submit id → internal dense id.
+    pub(super) ext2int: BTreeMap<u64, JobId>,
+    /// Jobs retired by `cancel` (their `Finished` state is cancellation,
+    /// not completion — they never emitted a `completed` event).
+    pub(super) cancelled: BTreeSet<JobId>,
+    pub(super) draining: bool,
+    /// Next sim instant at which the snapshot cadence fires.
+    pub(super) next_snapshot_s: f64,
+    /// Wall anchor for `--time-compression` mode; set on first poll.
+    pub(super) started_wall: Option<Instant>,
+}
+
+impl Daemon {
+    pub fn new(cfg: ServeConfig, obs: Obs) -> Result<Daemon> {
+        if cfg.max_pending == 0 {
+            bail!("--max-pending 0 must be at least 1");
+        }
+        if !(cfg.snapshot_every_s.is_finite() && cfg.snapshot_every_s > 0.0) {
+            bail!("--snapshot-every {} must be finite and > 0", cfg.snapshot_every_s);
+        }
+        if let Some(c) = cfg.time_compression {
+            if !(c.is_finite() && c > 0.0) {
+                bail!("--time-compression {c} must be finite and > 0");
+            }
+        }
+        let cluster = cfg.cluster.build()?;
+        let xi = match cfg.xi_global {
+            Some(x) => InterferenceModel::with_global(x),
+            None => InterferenceModel::new(),
+        };
+        let policy = sched::by_name(&cfg.policy).with_context(|| {
+            format!("unknown policy {:?} (known: {})", cfg.policy, POLICY_NAMES.join(", "))
+        })?;
+        let pump = EventPump::new(policy.as_ref());
+        let mut ctx = SchedContext::new(cluster, Vec::new(), xi);
+        ctx.set_obs(obs);
+        let next_snapshot_s = cfg.snapshot_every_s;
+        Ok(Daemon {
+            cfg,
+            ctx,
+            policy,
+            pump,
+            notes: Notifier::new(Vec::new()),
+            ext2int: BTreeMap::new(),
+            cancelled: BTreeSet::new(),
+            draining: false,
+            next_snapshot_s,
+            started_wall: None,
+        })
+    }
+
+    /// Restore a daemon from a crash-recovery snapshot (`--resume`).
+    /// Policy, cluster, ξ, and limits come from the snapshot; future
+    /// snapshots go to `snapshot_to` if given, else back to `path`.
+    pub fn resume(
+        path: &std::path::Path,
+        snapshot_to: Option<std::path::PathBuf>,
+        obs: Obs,
+    ) -> Result<Daemon> {
+        snapshot::resume(path, snapshot_to, obs)
+    }
+
+    pub fn now(&self) -> f64 {
+        self.ctx.now()
+    }
+
+    pub fn config(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
+    // --------------------------------------------------- request entry
+
+    /// Handle one request line; never panics on client input. Empty
+    /// lines are ignored (no output).
+    pub fn handle_line(&mut self, line: &str) -> HandleOutcome {
+        let mut out = HandleOutcome::default();
+        let line = line.trim();
+        if line.is_empty() {
+            return out;
+        }
+        match proto::parse_request(line) {
+            Err(e) => out.lines.push(proto::err_line(&e)),
+            Ok(req) => {
+                if let Err(e) = self.dispatch(req, &mut out) {
+                    // Pump/apply/snapshot failures: surface, keep serving.
+                    self.flush_notes(&mut out);
+                    out.lines.push(proto::err(None, proto::E_INTERNAL, &format!("{e:#}")));
+                }
+            }
+        }
+        out
+    }
+
+    /// Wall-clock mode: pin sim time to `wall_elapsed × compression` and
+    /// return any notifications that fired. No-op under the virtual
+    /// clock.
+    pub fn poll_clock(&mut self) -> Result<Vec<String>> {
+        let Some(comp) = self.cfg.time_compression else {
+            return Ok(Vec::new());
+        };
+        let t0 = *self.started_wall.get_or_insert_with(Instant::now);
+        let target = t0.elapsed().as_secs_f64() * comp;
+        if target > self.ctx.now() {
+            self.pump_to(target)?;
+            self.maybe_snapshot()?;
+        }
+        Ok(std::mem::take(&mut self.notes.lines))
+    }
+
+    /// The non-drain exit path (client EOF, SIGINT/SIGTERM): final
+    /// snapshot, flushed obskit sinks, a `shutdown` event. Errors become
+    /// protocol lines — the daemon is exiting either way.
+    pub fn shutdown(&mut self, reason: &str) -> HandleOutcome {
+        let mut out = HandleOutcome { lines: Vec::new(), exit: true };
+        self.flush_notes(&mut out);
+        if let Err(e) = self.finalize() {
+            out.lines.push(proto::err(None, proto::E_INTERNAL, &format!("shutdown: {e:#}")));
+        }
+        out.lines.push(proto::event_shutdown(self.ctx.now(), reason));
+        out
+    }
+
+    // ------------------------------------------------------- dispatch
+
+    fn dispatch(&mut self, req: Request, out: &mut HandleOutcome) -> Result<()> {
+        match req {
+            Request::Submit(s) => self.submit(s, out),
+            Request::Cancel { id } => self.cancel(id, out),
+            Request::Query { id } => {
+                self.query(id, out);
+                Ok(())
+            }
+            Request::Advance { to, dt } => self.advance(to, dt, out),
+            Request::Snapshot { path } => {
+                self.snapshot_req(path, out);
+                Ok(())
+            }
+            Request::Drain => self.drain(out),
+        }
+    }
+
+    fn submit(&mut self, s: SubmitReq, out: &mut HandleOutcome) -> Result<()> {
+        if self.draining {
+            out.lines.push(proto::err(
+                Some("submit"),
+                proto::E_DRAINING,
+                "daemon is draining; no new submissions",
+            ));
+            return Ok(());
+        }
+        if self.ext2int.contains_key(&s.id) {
+            out.lines.push(proto::err(
+                Some("submit"),
+                proto::E_DUPLICATE_ID,
+                &format!("job id {} was already submitted", s.id),
+            ));
+            return Ok(());
+        }
+        if s.gpus == 0 || s.iterations == 0 || s.batch == 0 {
+            out.lines.push(proto::err(
+                Some("submit"),
+                proto::E_BAD_REQUEST,
+                "gpus, iterations, and batch must all be > 0",
+            ));
+            return Ok(());
+        }
+        if !(s.est_factor.is_finite() && s.est_factor > 0.0) {
+            out.lines.push(proto::err(
+                Some("submit"),
+                proto::E_BAD_REQUEST,
+                &format!("est_factor {} must be finite and > 0", s.est_factor),
+            ));
+            return Ok(());
+        }
+        let now = self.ctx.now();
+        let arrival = match s.arrival_s {
+            None => now,
+            Some(a) if !a.is_finite() || a < now - 1e-9 => {
+                out.lines.push(proto::err(
+                    Some("submit"),
+                    proto::E_BAD_REQUEST,
+                    &format!("arrival_s {a} is in the past (now = {now})"),
+                ));
+                return Ok(());
+            }
+            Some(a) => a.max(now),
+        };
+        // The engine's up-front feasibility screen, per job instead of
+        // per trace: a gang that can never place must not sit in the
+        // queue forever.
+        let total = self.ctx.cluster.total_gpus();
+        if s.gpus > total {
+            out.lines.push(proto::err(
+                Some("submit"),
+                proto::E_INFEASIBLE,
+                &format!("job wants {} GPUs but the cluster has {total}", s.gpus),
+            ));
+            return Ok(());
+        }
+        let spec = JobSpec {
+            id: self.ctx.jobs.len(),
+            model: s.model,
+            gpus: s.gpus,
+            iterations: s.iterations,
+            batch: s.batch,
+            arrival_s: arrival,
+            est_factor: s.est_factor,
+        };
+        let floor_gb = spec.profile().mem.mem_gb(1.0);
+        let hosts = (0..total).filter(|&g| self.ctx.cluster.mem_gb(g) + 1e-9 >= floor_gb).count();
+        if hosts < s.gpus {
+            out.lines.push(proto::err(
+                Some("submit"),
+                proto::E_INFEASIBLE,
+                &format!(
+                    "only {hosts} GPUs have the {floor_gb:.1} GB this job needs (wants {})",
+                    s.gpus
+                ),
+            ));
+            return Ok(());
+        }
+        // Backpressure: bound the jobs the scheduler is holding but not
+        // running (queued + not-yet-arrived).
+        let queued = self.ctx.unfinished() - self.ctx.running().len();
+        if queued >= self.cfg.max_pending {
+            out.lines.push(proto::event_rejected(now, s.id, proto::E_BUSY));
+            out.lines.push(proto::err(
+                Some("submit"),
+                proto::E_BUSY,
+                &format!(
+                    "pending queue is full ({queued} >= --max-pending {})",
+                    self.cfg.max_pending
+                ),
+            ));
+            return Ok(());
+        }
+        self.ext2int.insert(s.id, spec.id);
+        self.notes.int2ext.push(s.id);
+        self.ctx.admit_job(spec);
+        // Deliver anything due at this instant (an arrival-now fires its
+        // Arrival event and possibly a start before the response).
+        self.pump_to(self.ctx.now())?;
+        self.maybe_snapshot()?;
+        self.flush_notes(out);
+        out.lines.push(proto::ok("submit", self.ctx.now(), vec![("id", Json::from(s.id))]));
+        Ok(())
+    }
+
+    fn cancel(&mut self, ext: u64, out: &mut HandleOutcome) -> Result<()> {
+        let Some(&int) = self.ext2int.get(&ext) else {
+            out.lines.push(proto::err(
+                Some("cancel"),
+                proto::E_UNKNOWN_JOB,
+                &format!("no job with id {ext}"),
+            ));
+            return Ok(());
+        };
+        if self.ctx.jobs[int].state == JobState::Finished {
+            let what = if self.cancelled.contains(&int) { "cancelled" } else { "completed" };
+            out.lines.push(proto::err(
+                Some("cancel"),
+                proto::E_FINISHED,
+                &format!("job {ext} already {what}"),
+            ));
+            return Ok(());
+        }
+        let was_running = self.ctx.jobs[int].state == JobState::Running;
+        self.ctx.cancel_job(int);
+        self.cancelled.insert(int);
+        if was_running {
+            // The freed GPUs have no natural event to react to: nudge
+            // the policy with one synthetic Tick at the same instant.
+            self.pump.kick(&mut self.ctx, self.policy.as_mut(), &mut self.notes)?;
+        }
+        self.flush_notes(out);
+        out.lines.push(proto::ok("cancel", self.ctx.now(), vec![("id", Json::from(ext))]));
+        Ok(())
+    }
+
+    fn query(&self, id: Option<u64>, out: &mut HandleOutcome) {
+        let now = self.ctx.now();
+        match id {
+            Some(ext) => {
+                let Some(&int) = self.ext2int.get(&ext) else {
+                    out.lines.push(proto::err(
+                        Some("query"),
+                        proto::E_UNKNOWN_JOB,
+                        &format!("no job with id {ext}"),
+                    ));
+                    return;
+                };
+                out.lines.push(proto::ok("query", now, vec![("job", self.job_json(int))]));
+            }
+            None => {
+                let total = self.ctx.cluster.total_gpus();
+                let busy = total - self.ctx.cluster.free_count();
+                let shared = busy - self.ctx.cluster.one_job_count();
+                let completed = self
+                    .ctx
+                    .jobs
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, r)| {
+                        r.state == JobState::Finished && !self.cancelled.contains(i)
+                    })
+                    .count();
+                out.lines.push(proto::ok(
+                    "query",
+                    now,
+                    vec![
+                        ("policy", Json::from(self.cfg.policy.as_str())),
+                        ("draining", Json::from(self.draining)),
+                        ("max_pending", Json::from(self.cfg.max_pending)),
+                        ("jobs", Json::from(self.ctx.jobs.len())),
+                        ("running", Json::from(self.ctx.running().len())),
+                        ("waiting", Json::from(self.ctx.waiting().len())),
+                        ("pending", Json::from(self.ctx.pending().len())),
+                        ("completed", Json::from(completed)),
+                        ("cancelled", Json::from(self.cancelled.len())),
+                        ("busy_gpus", Json::from(busy)),
+                        ("shared_gpus", Json::from(shared)),
+                        ("total_gpus", Json::from(total)),
+                        ("busy_gpu_s", Json::Num(self.ctx.busy_gpu_s())),
+                        ("shared_gpu_s", Json::Num(self.ctx.shared_gpu_s())),
+                        ("policy_calls", Json::from(self.pump.policy_calls())),
+                        ("preemptions", Json::from(self.pump.preemptions())),
+                    ],
+                ));
+            }
+        }
+    }
+
+    fn job_json(&self, int: JobId) -> Json {
+        let rec = &self.ctx.jobs[int];
+        let status = if self.cancelled.contains(&int) {
+            "cancelled"
+        } else {
+            match rec.state {
+                JobState::Pending => "pending",
+                JobState::Running => "running",
+                JobState::Preempted => "preempted",
+                JobState::Finished => "completed",
+            }
+        };
+        proto::jobj(vec![
+            ("id", Json::from(self.notes.int2ext[int])),
+            ("status", Json::from(status)),
+            ("model", Json::from(rec.spec.model.name())),
+            ("gpus", Json::from(rec.spec.gpus)),
+            ("iterations", Json::from(rec.spec.iterations)),
+            ("batch", Json::from(rec.spec.batch as u64)),
+            ("arrival_s", Json::Num(rec.spec.arrival_s)),
+            ("remaining_iters", Json::Num(rec.remaining_iters)),
+            ("accum_step", Json::from(rec.accum_step as u64)),
+            ("gpus_held", Json::Arr(rec.gpus_held.iter().map(|&g| Json::from(g)).collect())),
+            ("first_start_s", opt_num(rec.first_start_s)),
+            ("finish_s", opt_num(rec.finish_s)),
+            ("queued_s", Json::Num(rec.queued_s)),
+            ("jct_s", opt_num(rec.jct())),
+            ("service_gpu_s", Json::Num(self.ctx.service_gpu_s[int])),
+        ])
+    }
+
+    fn advance(&mut self, to: Option<f64>, dt: Option<f64>, out: &mut HandleOutcome) -> Result<()> {
+        if self.cfg.time_compression.is_some() {
+            out.lines.push(proto::err(
+                Some("advance"),
+                proto::E_BAD_REQUEST,
+                "advance is only valid under the virtual clock (daemon runs --time-compression)",
+            ));
+            return Ok(());
+        }
+        let now = self.ctx.now();
+        let target = match (to, dt) {
+            (Some(t), None) => t,
+            (None, Some(d)) => now + d,
+            _ => {
+                out.lines.push(proto::err(
+                    Some("advance"),
+                    proto::E_BAD_REQUEST,
+                    "advance needs exactly one of \"to\" or \"dt\"",
+                ));
+                return Ok(());
+            }
+        };
+        if !target.is_finite() || target < now - 1e-9 {
+            out.lines.push(proto::err(
+                Some("advance"),
+                proto::E_BAD_REQUEST,
+                &format!("advance target {target} is before now ({now}) or not finite"),
+            ));
+            return Ok(());
+        }
+        if target > self.cfg.max_sim_s {
+            out.lines.push(proto::err(
+                Some("advance"),
+                proto::E_BAD_REQUEST,
+                &format!("advance target {target} exceeds the sim horizon {}", self.cfg.max_sim_s),
+            ));
+            return Ok(());
+        }
+        self.pump_to(target.max(now))?;
+        self.maybe_snapshot()?;
+        self.flush_notes(out);
+        out.lines.push(proto::ok("advance", self.ctx.now(), vec![]));
+        Ok(())
+    }
+
+    fn snapshot_req(&mut self, path: Option<String>, out: &mut HandleOutcome) {
+        let path = path.map(std::path::PathBuf::from).or_else(|| self.cfg.snapshot.clone());
+        let Some(path) = path else {
+            out.lines.push(proto::err(
+                Some("snapshot"),
+                proto::E_BAD_REQUEST,
+                "no snapshot path: pass \"path\" or start the daemon with --snapshot PATH",
+            ));
+            return;
+        };
+        match snapshot::write(self, &path) {
+            Ok(()) => out.lines.push(proto::ok(
+                "snapshot",
+                self.ctx.now(),
+                vec![("path", Json::Str(path.display().to_string()))],
+            )),
+            Err(e) => {
+                out.lines.push(proto::err(Some("snapshot"), proto::E_INTERNAL, &format!("{e:#}")))
+            }
+        }
+    }
+
+    /// Stop admitting, fast-forward the clock until every admitted job
+    /// is finished (future arrivals still land and run), write the final
+    /// snapshot, flush the sinks, and exit. Works under both clocks —
+    /// drain is the "finish what you took and stop" path, so it does not
+    /// wait for wall time.
+    fn drain(&mut self, out: &mut HandleOutcome) -> Result<()> {
+        self.draining = true;
+        while !self.ctx.all_finished() {
+            let mut t_next = f64::INFINITY;
+            let next_finish = self.ctx.next_finish();
+            for t in
+                [self.ctx.next_arrival(), next_finish, self.ctx.next_restart(), self.pump.next_tick()]
+            {
+                if let Some(t) = t {
+                    if t < t_next {
+                        t_next = t;
+                    }
+                }
+            }
+            if !t_next.is_finite() {
+                self.flush_notes(out);
+                out.lines.push(proto::err(
+                    Some("drain"),
+                    proto::E_DEADLOCK,
+                    &format!(
+                        "{} unfinished job(s) but no future events — cannot drain",
+                        self.ctx.unfinished()
+                    ),
+                ));
+                return self.exit_after_drain(out);
+            }
+            if t_next > self.cfg.max_sim_s {
+                self.flush_notes(out);
+                out.lines.push(proto::err(
+                    Some("drain"),
+                    proto::E_DEADLOCK,
+                    &format!(
+                        "drain passed the sim horizon ({} s) with {} job(s) unfinished",
+                        self.cfg.max_sim_s,
+                        self.ctx.unfinished()
+                    ),
+                ));
+                return self.exit_after_drain(out);
+            }
+            let target = t_next.max(self.ctx.now());
+            self.pump_to(target)?;
+            self.maybe_snapshot()?;
+        }
+        self.flush_notes(out);
+        let completed = self.ctx.jobs.len() - self.cancelled.len();
+        let counts = vec![
+            ("completed", Json::from(completed)),
+            ("cancelled", Json::from(self.cancelled.len())),
+        ];
+        if let Err(e) = self.finalize() {
+            out.lines.push(proto::err(None, proto::E_INTERNAL, &format!("finalize: {e:#}")));
+        }
+        out.lines.push(proto::ok("drain", self.ctx.now(), counts));
+        out.exit = true;
+        Ok(())
+    }
+
+    fn exit_after_drain(&mut self, out: &mut HandleOutcome) -> Result<()> {
+        if let Err(e) = self.finalize() {
+            out.lines.push(proto::err(None, proto::E_INTERNAL, &format!("finalize: {e:#}")));
+        }
+        out.exit = true;
+        Ok(())
+    }
+
+    // ------------------------------------------------------ internals
+
+    fn pump_to(&mut self, target: f64) -> Result<()> {
+        self.pump.pump_sim(
+            &mut self.ctx,
+            self.policy.as_mut(),
+            target,
+            self.cfg.eps_iters,
+            &mut self.notes,
+        )
+    }
+
+    fn flush_notes(&mut self, out: &mut HandleOutcome) {
+        out.lines.append(&mut self.notes.lines);
+    }
+
+    /// Snapshot cadence: after any clock movement, write the configured
+    /// snapshot if the next due instant has passed (and checkpoint the
+    /// obskit sinks with it, so a crash loses at most one interval).
+    fn maybe_snapshot(&mut self) -> Result<()> {
+        let Some(path) = self.cfg.snapshot.clone() else {
+            return Ok(());
+        };
+        if self.ctx.now() + 1e-9 >= self.next_snapshot_s {
+            snapshot::write(self, &path)?;
+            self.ctx.obs().flush()?;
+            self.next_snapshot_s = self.ctx.now() + self.cfg.snapshot_every_s;
+        }
+        Ok(())
+    }
+
+    /// Final snapshot (if configured) + obskit sink flush. The owner of
+    /// the [`Obs`] handle (the CLI) still runs `finish` afterwards.
+    fn finalize(&mut self) -> Result<()> {
+        if let Some(path) = self.cfg.snapshot.clone() {
+            snapshot::write(self, &path)?;
+        }
+        self.ctx.obs().flush()
+    }
+}
+
+pub(super) fn opt_num(v: Option<f64>) -> Json {
+    v.map(Json::Num).unwrap_or(Json::Null)
+}

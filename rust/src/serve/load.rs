@@ -1,0 +1,207 @@
+//! `serve-load` — replay a workload-v2 preset as *live traffic* against
+//! an in-process daemon.
+//!
+//! Where `simulate` hands the engine the whole trace up front, this
+//! driver speaks the protocol: for each generated job it advances the
+//! virtual clock to the arrival instant and issues a real `submit` line,
+//! then `drain`s. That exercises the admission path (including `busy`
+//! backpressure under `--max-pending`), the notification stream, and the
+//! request→decision hot path — the same loop a real client would run,
+//! which is why the perfkit `serve` suite benches through here.
+//!
+//! Two latency families come out: *end-to-end sim latency* per completed
+//! job (completion instant − submission instant, the client-visible
+//! JCT), and *wall-clock decision latency* per submit (how long
+//! `handle_line` took, scheduler work included).
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::jobs::trace::{self, TraceConfig};
+use crate::jobs::workload;
+use crate::obskit::Obs;
+use crate::util::json::Json;
+use crate::util::stats::percentile_nearest_rank;
+
+use super::proto::jobj;
+use super::{ClusterSpec, Daemon, ServeConfig};
+
+#[derive(Debug, Clone)]
+pub struct LoadConfig {
+    pub preset: String,
+    pub load: f64,
+    pub jobs: usize,
+    pub seed: u64,
+    pub policy: String,
+    pub max_pending: usize,
+    pub cluster: ClusterSpec,
+}
+
+impl Default for LoadConfig {
+    fn default() -> Self {
+        LoadConfig {
+            preset: "philly-sim".to_string(),
+            load: 1.0,
+            jobs: 96,
+            seed: 1,
+            policy: "SJF-BSBF".to_string(),
+            max_pending: 64,
+            cluster: ClusterSpec::Preset("simulation".to_string()),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct LoadOutcome {
+    pub submitted: usize,
+    pub accepted: usize,
+    pub rejected_busy: usize,
+    pub completed: usize,
+    /// Final sim time after drain.
+    pub makespan_s: f64,
+    /// End-to-end sim latency (completion − submission) percentiles.
+    pub latency_mean_s: f64,
+    pub latency_p50_s: f64,
+    pub latency_p95_s: f64,
+    pub latency_p99_s: f64,
+    /// Wall seconds for the whole session and the derived rate.
+    pub wall_s: f64,
+    pub submissions_per_s: f64,
+    /// Raw wall-clock `handle_line` latency per submit, for the perfkit
+    /// suite to fold into bench stats.
+    pub decision_latencies_s: Vec<f64>,
+}
+
+impl LoadOutcome {
+    /// The human report `wise-share serve-load` prints.
+    pub fn summary(&self) -> String {
+        let mut d = self.decision_latencies_s.clone();
+        d.sort_by(f64::total_cmp);
+        format!(
+            "serve-load: {} submitted ({} accepted, {} busy-rejected), {} completed\n\
+             sim: makespan {:.0}s, end-to-end latency mean {:.1}s p50 {:.1}s p95 {:.1}s p99 {:.1}s\n\
+             wall: {:.2}s for the session, {:.0} submissions/s, \
+             decision latency p50 {:.1}us p95 {:.1}us",
+            self.submitted,
+            self.accepted,
+            self.rejected_busy,
+            self.completed,
+            self.makespan_s,
+            self.latency_mean_s,
+            self.latency_p50_s,
+            self.latency_p95_s,
+            self.latency_p99_s,
+            self.wall_s,
+            self.submissions_per_s,
+            percentile_nearest_rank(&d, 0.50) * 1e6,
+            percentile_nearest_rank(&d, 0.95) * 1e6,
+        )
+    }
+}
+
+fn scan_events(lines: &[String], completions: &mut BTreeMap<u64, f64>, rejected: &mut usize) {
+    for line in lines {
+        let Ok(j) = Json::parse(line) else { continue };
+        if j.get("type").and_then(|t| t.as_str()) != Some("event") {
+            continue;
+        }
+        match j.get("event").and_then(|e| e.as_str()) {
+            Some("completed") => {
+                if let (Some(id), Some(t)) =
+                    (j.get("id").and_then(|v| v.as_u64()), j.get("t").and_then(|v| v.as_f64()))
+                {
+                    completions.insert(id, t);
+                }
+            }
+            Some("rejected") => *rejected += 1,
+            _ => {}
+        }
+    }
+}
+
+fn response_ok(lines: &[String]) -> bool {
+    lines
+        .last()
+        .and_then(|l| Json::parse(l).ok())
+        .and_then(|j| j.get("ok").and_then(|o| o.as_bool()))
+        == Some(true)
+}
+
+pub fn run(cfg: &LoadConfig, obs: Obs) -> Result<LoadOutcome> {
+    if !(cfg.load.is_finite() && cfg.load > 0.0) {
+        bail!("--load {} must be finite and > 0", cfg.load);
+    }
+    let preset = workload::by_name_or_err(&cfg.preset)?;
+    let mut tc = TraceConfig::from_preset(&preset, cfg.jobs, cfg.seed);
+    tc.load_factor = cfg.load;
+    let mut specs = trace::generate(&tc);
+    specs.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
+
+    let scfg = ServeConfig {
+        policy: cfg.policy.clone(),
+        cluster: cfg.cluster.clone(),
+        max_pending: cfg.max_pending,
+        ..ServeConfig::default()
+    };
+    let mut daemon = Daemon::new(scfg, obs)?;
+    let wall0 = Instant::now();
+    let mut submissions: BTreeMap<u64, f64> = BTreeMap::new();
+    let mut completions: BTreeMap<u64, f64> = BTreeMap::new();
+    let mut rejected_busy = 0usize;
+    let mut accepted = 0usize;
+    let mut decision = Vec::with_capacity(specs.len());
+
+    for spec in &specs {
+        if spec.arrival_s > daemon.now() + 1e-9 {
+            let adv =
+                jobj(vec![("op", Json::from("advance")), ("to", Json::Num(spec.arrival_s))])
+                    .to_string();
+            let out = daemon.handle_line(&adv);
+            scan_events(&out.lines, &mut completions, &mut rejected_busy);
+        }
+        let req = jobj(vec![
+            ("op", Json::from("submit")),
+            ("id", Json::from(spec.id as u64)),
+            ("model", Json::from(spec.model.name())),
+            ("gpus", Json::from(spec.gpus)),
+            ("iterations", Json::from(spec.iterations)),
+            ("batch", Json::from(spec.batch as u64)),
+            ("est_factor", Json::Num(spec.est_factor)),
+        ])
+        .to_string();
+        let t0 = Instant::now();
+        let out = daemon.handle_line(&req);
+        decision.push(t0.elapsed().as_secs_f64());
+        scan_events(&out.lines, &mut completions, &mut rejected_busy);
+        if response_ok(&out.lines) {
+            accepted += 1;
+            submissions.insert(spec.id as u64, daemon.now());
+        }
+    }
+    let out = daemon.handle_line("{\"op\":\"drain\"}");
+    scan_events(&out.lines, &mut completions, &mut rejected_busy);
+    let wall_s = wall0.elapsed().as_secs_f64();
+
+    let mut lat: Vec<f64> = completions
+        .iter()
+        .filter_map(|(id, &t)| submissions.get(id).map(|&a| t - a))
+        .collect();
+    lat.sort_by(f64::total_cmp);
+    let mean = if lat.is_empty() { 0.0 } else { lat.iter().sum::<f64>() / lat.len() as f64 };
+    Ok(LoadOutcome {
+        submitted: specs.len(),
+        accepted,
+        rejected_busy,
+        completed: completions.len(),
+        makespan_s: daemon.now(),
+        latency_mean_s: mean,
+        latency_p50_s: percentile_nearest_rank(&lat, 0.50),
+        latency_p95_s: percentile_nearest_rank(&lat, 0.95),
+        latency_p99_s: percentile_nearest_rank(&lat, 0.99),
+        wall_s,
+        submissions_per_s: if wall_s > 0.0 { specs.len() as f64 / wall_s } else { 0.0 },
+        decision_latencies_s: decision,
+    })
+}

@@ -1,0 +1,282 @@
+//! servekit — the long-running scheduler daemon (DESIGN.md §14).
+//!
+//! The batch entry points (`simulate`, `campaign`) own a whole trace up
+//! front; `serve` instead keeps the event-driven core — a
+//! [`SchedContext`] plus one [`Policy`] driven through the shared
+//! [`EventPump`] — alive behind a line-JSON protocol so jobs are
+//! *ingested live*: `submit` / `cancel` / `query` / `advance` /
+//! `snapshot` / `drain` requests on stdin (or one TCP client with
+//! `--listen ADDR`), streamed `started` / `completed` / `rejected`
+//! notifications interleaved on the way out.
+//!
+//! Layout:
+//! * [`proto`]    — request parsing, response/event emission, error codes.
+//! * [`daemon`]   — the [`Daemon`]: admission control with backpressure,
+//!                  request dispatch, the drain loop, graceful shutdown.
+//! * [`snapshot`] — crash-recovery snapshots (atomic temp-file rename)
+//!                  and `--resume` restore.
+//! * [`load`]     — `serve-load`: replays a workload-v2 preset as live
+//!                  traffic against an in-process daemon and reports
+//!                  end-to-end latency percentiles.
+//!
+//! Two clocks: by default the daemon is *virtual* — sim time moves only
+//! when a client says `advance` (or `drain` fast-forwards to
+//! completion), which is what the conformance tests and `serve-load`
+//! use, and what makes sessions deterministic. With `--time-compression
+//! X` the daemon pins sim time to `wall_elapsed × X` between requests
+//! instead, the same compression contract as `physical --compress`.
+//!
+//! [`SchedContext`]: crate::sched_core::SchedContext
+//! [`Policy`]: crate::sched_core::Policy
+//! [`EventPump`]: crate::sched_core::EventPump
+
+pub mod daemon;
+pub mod load;
+pub mod proto;
+pub mod snapshot;
+
+pub use daemon::{Daemon, HandleOutcome};
+pub use load::{LoadConfig, LoadOutcome};
+
+use std::io::Write as _;
+use std::path::PathBuf;
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::cluster::{topology, Cluster, ClusterConfig};
+use crate::sim::engine::EngineConfig;
+
+/// Which cluster the daemon schedules onto, in a form that can be
+/// serialized into a snapshot (`tag`) and rebuilt on resume
+/// (`parse_tag` + `build`). Mirrors the `--cluster` / `--topology`
+/// flag pair of the batch subcommands.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ClusterSpec {
+    /// A flat preset name: `"simulation"` (16×4) or `"physical"` (4×4).
+    Preset(String),
+    /// A named topology shape, e.g. `"uniform-16x4-nvlink"`.
+    Topology(String),
+}
+
+impl ClusterSpec {
+    fn preset_checked(name: &str) -> Result<ClusterSpec> {
+        match name {
+            "physical" | "simulation" => Ok(ClusterSpec::Preset(name.to_string())),
+            other => bail!("unknown cluster preset {other:?} (known: physical, simulation)"),
+        }
+    }
+
+    /// Resolve the mutually exclusive `--topology` / `--cluster` flags
+    /// (same rules as the batch subcommands; default: `simulation`).
+    pub fn from_args(topo: Option<&str>, cluster: Option<&str>) -> Result<ClusterSpec> {
+        match (topo, cluster) {
+            (Some(_), Some(_)) => bail!("--topology and --cluster are mutually exclusive"),
+            (Some(shape), None) => {
+                topology::by_name_or_err(shape)?; // validate the name now
+                Ok(ClusterSpec::Topology(shape.to_string()))
+            }
+            (None, name) => ClusterSpec::preset_checked(name.unwrap_or("simulation")),
+        }
+    }
+
+    pub fn build(&self) -> Result<Cluster> {
+        match self {
+            ClusterSpec::Preset(name) => Ok(Cluster::new(match name.as_str() {
+                "physical" => ClusterConfig::physical(),
+                "simulation" => ClusterConfig::simulation(),
+                other => bail!("unknown cluster preset {other:?}"),
+            })),
+            ClusterSpec::Topology(shape) => {
+                Ok(Cluster::with_topology(topology::by_name_or_err(shape)?))
+            }
+        }
+    }
+
+    /// The snapshot-stable spelling.
+    pub fn tag(&self) -> String {
+        match self {
+            ClusterSpec::Preset(n) => format!("preset:{n}"),
+            ClusterSpec::Topology(s) => format!("topology:{s}"),
+        }
+    }
+
+    pub fn parse_tag(tag: &str) -> Result<ClusterSpec> {
+        match tag.split_once(':') {
+            Some(("preset", n)) => ClusterSpec::preset_checked(n),
+            Some(("topology", s)) => {
+                topology::by_name_or_err(s)?;
+                Ok(ClusterSpec::Topology(s.to_string()))
+            }
+            _ => bail!("bad cluster tag {tag:?} (want preset:NAME or topology:SHAPE)"),
+        }
+    }
+}
+
+/// Daemon configuration (the `serve` flags, snapshot-serializable).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub policy: String,
+    pub cluster: ClusterSpec,
+    /// `Some(ξ)` forces the global interference factor (the `--xi`
+    /// flag); `None` uses the calibrated pairwise model.
+    pub xi_global: Option<f64>,
+    /// Admission-control bound: a submit that would leave more than
+    /// this many unfinished-and-not-running jobs is rejected `busy`.
+    pub max_pending: usize,
+    /// `Some(X)` = wall-clock mode: sim time tracks `wall_elapsed × X`.
+    /// `None` = virtual: time moves only on `advance` / `drain`.
+    pub time_compression: Option<f64>,
+    /// Crash-recovery snapshot path; `None` disables snapshots.
+    pub snapshot: Option<PathBuf>,
+    /// Snapshot cadence in sim-seconds (checked after each advance).
+    pub snapshot_every_s: f64,
+    /// Hard sim-time horizon for `drain` (the engine's stall guard).
+    pub max_sim_s: f64,
+    /// Completion epsilon in iterations (the engine's).
+    pub eps_iters: f64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        let e = EngineConfig::default();
+        ServeConfig {
+            policy: "SJF-BSBF".to_string(),
+            cluster: ClusterSpec::Preset("simulation".to_string()),
+            xi_global: None,
+            max_pending: 64,
+            time_compression: None,
+            snapshot: None,
+            snapshot_every_s: 300.0,
+            max_sim_s: e.max_sim_s,
+            eps_iters: e.eps_iters,
+        }
+    }
+}
+
+/// SIGINT/SIGTERM latch. No libc in the vendored set, so the handler is
+/// registered through the raw C `signal` entry point; the handler only
+/// sets an atomic flag, which the serve loop polls between requests.
+#[cfg(unix)]
+mod sig {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    pub static SHUTDOWN: AtomicBool = AtomicBool::new(false);
+
+    extern "C" fn on_signal(_sig: i32) {
+        SHUTDOWN.store(true, Ordering::SeqCst);
+    }
+
+    extern "C" {
+        // C: void (*signal(int, void (*)(int)))(int). Passing the
+        // handler as a typed fn pointer keeps this cast-free; the
+        // returned previous handler is opaque to us.
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+
+    pub fn install() {
+        const SIGINT: i32 = 2;
+        const SIGTERM: i32 = 15;
+        unsafe {
+            signal(SIGINT, on_signal);
+            signal(SIGTERM, on_signal);
+        }
+    }
+
+    pub fn pending() -> bool {
+        SHUTDOWN.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(not(unix))]
+mod sig {
+    pub fn install() {}
+    pub fn pending() -> bool {
+        false
+    }
+}
+
+/// Feed lines from `r` into a channel. A dedicated thread because the
+/// raw `signal(2)` registration leaves SA_RESTART semantics in place, so
+/// a blocking stdin read would never observe the shutdown latch; the
+/// serve loop polls the channel with a short timeout instead.
+fn spawn_reader<R>(r: R) -> Receiver<String>
+where
+    R: std::io::BufRead + Send + 'static,
+{
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        for line in r.lines() {
+            let Ok(line) = line else { return };
+            if tx.send(line).is_err() {
+                return;
+            }
+        }
+    });
+    rx
+}
+
+fn write_lines(w: &mut dyn std::io::Write, lines: &[String]) -> Result<()> {
+    for line in lines {
+        writeln!(w, "{line}").context("writing a response line")?;
+    }
+    w.flush().context("flushing responses")
+}
+
+fn serve_loop(
+    mut daemon: Daemon,
+    rx: Receiver<String>,
+    mut out: impl std::io::Write,
+) -> Result<()> {
+    loop {
+        if sig::pending() {
+            let o = daemon.shutdown("signal");
+            write_lines(&mut out, &o.lines)?;
+            return Ok(());
+        }
+        let clock_lines = daemon.poll_clock()?;
+        write_lines(&mut out, &clock_lines)?;
+        match rx.recv_timeout(Duration::from_millis(5)) {
+            Ok(line) => {
+                let o = daemon.handle_line(&line);
+                write_lines(&mut out, &o.lines)?;
+                if o.exit {
+                    return Ok(());
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => {
+                // Client closed its end (EOF): same graceful path as a
+                // signal — final snapshot, flushed sinks, shutdown event.
+                let o = daemon.shutdown("eof");
+                write_lines(&mut out, &o.lines)?;
+                return Ok(());
+            }
+        }
+    }
+}
+
+/// Run `daemon` to termination: stdin/stdout line protocol by default,
+/// or one accepted TCP client with `listen = Some(addr)`. Returns after
+/// `drain`, client EOF, or SIGINT/SIGTERM — all of which write the final
+/// snapshot (if configured) and flush the obskit sinks first.
+pub fn run(daemon: Daemon, listen: Option<&str>) -> Result<()> {
+    sig::install();
+    match listen {
+        None => {
+            let rx = spawn_reader(std::io::BufReader::new(std::io::stdin()));
+            serve_loop(daemon, rx, std::io::stdout())
+        }
+        Some(addr) => {
+            let listener = std::net::TcpListener::bind(addr)
+                .with_context(|| format!("binding --listen {addr}"))?;
+            eprintln!("serve: listening on {}", listener.local_addr()?);
+            let (stream, peer) = listener.accept().context("accepting a client")?;
+            eprintln!("serve: client {peer} connected");
+            let reader = stream.try_clone().context("cloning the client stream")?;
+            let rx = spawn_reader(std::io::BufReader::new(reader));
+            serve_loop(daemon, rx, stream)
+        }
+    }
+}

@@ -1,0 +1,265 @@
+//! The serve daemon's line-JSON protocol: request parsing and
+//! response/notification emission.
+//!
+//! One request per line on the way in, one JSON document per line on the
+//! way out. Every outbound line carries a `"type"`: `"response"` answers
+//! exactly one request (`"ok": true` plus op-specific fields, or
+//! `"ok": false` with a machine-readable `"code"` and a human `"error"`),
+//! `"event"` is a streamed notification (`started` / `completed` /
+//! `rejected` / `shutdown`). Within one request's output, notifications
+//! are emitted first and the response last, so a client that reads until
+//! the response has also seen every event the request caused.
+//!
+//! Requests (`"op"` selects): `submit` (model/gpus/iterations/batch,
+//! optional arrival_s/est_factor, client-chosen numeric `id`), `cancel`,
+//! `query` (one job by `id`, or the cluster summary), `advance` (virtual
+//! clock only: `dt` or absolute `to`), `snapshot` (optional `path`
+//! override), `drain`.
+
+use crate::perf::profiles::ModelKind;
+use crate::util::json::Json;
+
+/// Machine-readable error codes (the `"code"` field of a failed
+/// response). Pinned by the protocol-conformance tests.
+pub const E_PARSE: &str = "parse";
+pub const E_UNKNOWN_OP: &str = "unknown-op";
+pub const E_BAD_REQUEST: &str = "bad-request";
+pub const E_DUPLICATE_ID: &str = "duplicate-id";
+pub const E_UNKNOWN_JOB: &str = "unknown-job";
+pub const E_FINISHED: &str = "already-finished";
+pub const E_BUSY: &str = "busy";
+pub const E_INFEASIBLE: &str = "infeasible";
+pub const E_DRAINING: &str = "draining";
+pub const E_DEADLOCK: &str = "deadlock";
+pub const E_INTERNAL: &str = "internal";
+
+/// A parsed request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Submit(SubmitReq),
+    Cancel { id: u64 },
+    Query { id: Option<u64> },
+    Advance { to: Option<f64>, dt: Option<f64> },
+    Snapshot { path: Option<String> },
+    Drain,
+}
+
+/// The body of a `submit` request. `id` is the *client's* job id; the
+/// daemon maps it to a dense internal [`crate::jobs::JobId`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct SubmitReq {
+    pub id: u64,
+    pub model: ModelKind,
+    pub gpus: usize,
+    pub iterations: u64,
+    pub batch: u32,
+    pub arrival_s: Option<f64>,
+    pub est_factor: f64,
+}
+
+/// A structured protocol error: becomes a failed response line.
+#[derive(Debug, Clone)]
+pub struct ProtoError {
+    pub op: Option<&'static str>,
+    pub code: &'static str,
+    pub msg: String,
+}
+
+impl ProtoError {
+    fn new(op: Option<&'static str>, code: &'static str, msg: String) -> ProtoError {
+        ProtoError { op, code, msg }
+    }
+}
+
+/// Build a JSON object from `(key, value)` pairs (keys are emitted in
+/// BTreeMap order — deterministic, independent of insertion order).
+pub(super) fn jobj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn req_u64(j: &Json, op: &'static str, key: &str) -> Result<u64, ProtoError> {
+    j.get(key).and_then(|v| v.as_u64()).ok_or_else(|| {
+        ProtoError::new(
+            Some(op),
+            E_BAD_REQUEST,
+            format!("{op} needs a non-negative integer {key:?}"),
+        )
+    })
+}
+
+fn opt_f64(j: &Json, op: &'static str, key: &str) -> Result<Option<f64>, ProtoError> {
+    match j.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => v.as_f64().map(Some).ok_or_else(|| {
+            ProtoError::new(Some(op), E_BAD_REQUEST, format!("{op} field {key:?} must be a number"))
+        }),
+    }
+}
+
+/// Parse one request line. Errors carry the machine-readable code the
+/// failed response must report.
+pub fn parse_request(line: &str) -> Result<Request, ProtoError> {
+    let j = Json::parse(line)
+        .map_err(|e| ProtoError::new(None, E_PARSE, format!("malformed request JSON: {e:#}")))?;
+    let Some(op) = j.get("op").and_then(|o| o.as_str()) else {
+        return Err(ProtoError::new(
+            None,
+            E_PARSE,
+            "request has no \"op\" string field".to_string(),
+        ));
+    };
+    match op {
+        "submit" => {
+            let id = req_u64(&j, "submit", "id")?;
+            let Some(model_name) = j.get("model").and_then(|m| m.as_str()) else {
+                return Err(ProtoError::new(
+                    Some("submit"),
+                    E_BAD_REQUEST,
+                    "submit needs a \"model\" string".to_string(),
+                ));
+            };
+            let Some(model) = ModelKind::from_name(model_name) else {
+                let known: Vec<&str> = ModelKind::ALL.iter().map(|m| m.name()).collect();
+                return Err(ProtoError::new(
+                    Some("submit"),
+                    E_BAD_REQUEST,
+                    format!("unknown model {model_name:?} (known: {})", known.join(", ")),
+                ));
+            };
+            let gpus = req_u64(&j, "submit", "gpus")? as usize;
+            let iterations = req_u64(&j, "submit", "iterations")?;
+            let batch = req_u64(&j, "submit", "batch")?;
+            if batch > u32::MAX as u64 {
+                return Err(ProtoError::new(
+                    Some("submit"),
+                    E_BAD_REQUEST,
+                    format!("batch {batch} exceeds u32"),
+                ));
+            }
+            let arrival_s = opt_f64(&j, "submit", "arrival_s")?;
+            let est_factor = opt_f64(&j, "submit", "est_factor")?.unwrap_or(1.0);
+            Ok(Request::Submit(SubmitReq {
+                id,
+                model,
+                gpus,
+                iterations,
+                batch: batch as u32,
+                arrival_s,
+                est_factor,
+            }))
+        }
+        "cancel" => Ok(Request::Cancel { id: req_u64(&j, "cancel", "id")? }),
+        "query" => {
+            let id = match j.get("id") {
+                None | Some(Json::Null) => None,
+                Some(v) => Some(v.as_u64().ok_or_else(|| {
+                    ProtoError::new(
+                        Some("query"),
+                        E_BAD_REQUEST,
+                        "query \"id\" must be a non-negative integer".to_string(),
+                    )
+                })?),
+            };
+            Ok(Request::Query { id })
+        }
+        "advance" => {
+            let to = opt_f64(&j, "advance", "to")?;
+            let dt = opt_f64(&j, "advance", "dt")?;
+            Ok(Request::Advance { to, dt })
+        }
+        "snapshot" => {
+            let path = j.get("path").and_then(|p| p.as_str()).map(str::to_string);
+            Ok(Request::Snapshot { path })
+        }
+        "drain" => Ok(Request::Drain),
+        other => Err(ProtoError::new(
+            None,
+            E_UNKNOWN_OP,
+            format!(
+                "unknown op {other:?} (known: submit, cancel, query, advance, snapshot, drain)"
+            ),
+        )),
+    }
+}
+
+// ----------------------------------------------------------- emission
+
+/// A successful response: `{"type":"response","op":…,"ok":true,"t":…,…}`.
+pub fn ok(op: &str, t: f64, extra: Vec<(&str, Json)>) -> String {
+    let mut pairs = vec![
+        ("type", Json::from("response")),
+        ("op", Json::from(op)),
+        ("ok", Json::from(true)),
+        ("t", Json::Num(t)),
+    ];
+    pairs.extend(extra);
+    jobj(pairs).to_string()
+}
+
+/// A failed response with a machine-readable `code`.
+pub fn err(op: Option<&str>, code: &str, msg: &str) -> String {
+    let mut pairs = vec![
+        ("type", Json::from("response")),
+        ("ok", Json::from(false)),
+        ("code", Json::from(code)),
+        ("error", Json::from(msg)),
+    ];
+    if let Some(op) = op {
+        pairs.insert(1, ("op", Json::from(op)));
+    }
+    jobj(pairs).to_string()
+}
+
+pub fn err_line(e: &ProtoError) -> String {
+    err(e.op, e.code, &e.msg)
+}
+
+/// `started` notification: the policy placed the job.
+pub fn event_started(t: f64, ext_id: u64, gpus: &[usize], accum_step: u32) -> String {
+    jobj(vec![
+        ("type", Json::from("event")),
+        ("event", Json::from("started")),
+        ("id", Json::from(ext_id)),
+        ("t", Json::Num(t)),
+        ("gpus", Json::Arr(gpus.iter().map(|&g| Json::from(g)).collect())),
+        ("accum_step", Json::from(accum_step as u64)),
+    ])
+    .to_string()
+}
+
+/// `completed` notification: the job ran all its iterations.
+pub fn event_completed(t: f64, ext_id: u64, jct_s: Option<f64>, queued_s: f64) -> String {
+    jobj(vec![
+        ("type", Json::from("event")),
+        ("event", Json::from("completed")),
+        ("id", Json::from(ext_id)),
+        ("t", Json::Num(t)),
+        ("jct_s", jct_s.map(Json::Num).unwrap_or(Json::Null)),
+        ("queued_s", Json::Num(queued_s)),
+    ])
+    .to_string()
+}
+
+/// `rejected` notification: admission control turned the submit away.
+pub fn event_rejected(t: f64, ext_id: u64, code: &str) -> String {
+    jobj(vec![
+        ("type", Json::from("event")),
+        ("event", Json::from("rejected")),
+        ("id", Json::from(ext_id)),
+        ("t", Json::Num(t)),
+        ("code", Json::from(code)),
+    ])
+    .to_string()
+}
+
+/// `shutdown` notification: the daemon is exiting (`reason`: `"signal"`
+/// or `"eof"`; a `drain` answers with its response instead).
+pub fn event_shutdown(t: f64, reason: &str) -> String {
+    jobj(vec![
+        ("type", Json::from("event")),
+        ("event", Json::from("shutdown")),
+        ("reason", Json::from(reason)),
+        ("t", Json::Num(t)),
+    ])
+    .to_string()
+}

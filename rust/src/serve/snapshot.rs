@@ -1,0 +1,281 @@
+//! Crash-recovery snapshots: the daemon's full protocol-visible state as
+//! one schema-versioned JSON document, written atomically (temp file +
+//! rename, so a crash mid-write leaves the previous snapshot intact) and
+//! restored by `serve --resume`.
+//!
+//! What round-trips: every job spec and its live fields
+//! (state/remaining/penalty/service), the clock, the accounting
+//! integrals, the pump's delivery counters and pending tick, the
+//! external-id mapping, the cancelled set, and the daemon config. The
+//! scheduler caches are *not* serialized —
+//! [`SchedContext::from_state`] rebuilds them, and [`util::json`]'s
+//! shortest-round-trip float emission makes the restore bit-exact, which
+//! is what lets the conformance tests demand byte-identical `query`
+//! output across a snapshot → resume cycle.
+//!
+//! Policy internals (Tiresias queue levels, held SJF-BSBF pairings) are
+//! deliberately out of scope: every shipped policy recomputes from
+//! context state on the next event, so a resumed run re-converges — the
+//! replay-equivalence test in `rust/tests/serve.rs` pins this for the
+//! non-preemptive policies.
+//!
+//! [`SchedContext::from_state`]: crate::sched_core::SchedContext::from_state
+//! [`util::json`]: crate::util::json
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::jobs::{JobRecord, JobSpec, JobState};
+use crate::obskit::Obs;
+use crate::perf::interference::InterferenceModel;
+use crate::perf::profiles::ModelKind;
+use crate::sched;
+use crate::sched_core::{EventPump, SchedContext};
+use crate::sim::SimState;
+use crate::util::json::Json;
+
+use super::daemon::{opt_num, Daemon, Notifier};
+use super::proto::jobj;
+use super::{ClusterSpec, ServeConfig};
+
+/// Schema tag of the snapshot document.
+pub const SNAPSHOT_SCHEMA: &str = "wise-share-serve-snapshot-v1";
+
+fn state_str(s: JobState) -> &'static str {
+    match s {
+        JobState::Pending => "pending",
+        JobState::Running => "running",
+        JobState::Preempted => "preempted",
+        JobState::Finished => "finished",
+    }
+}
+
+fn state_from(s: &str) -> Result<JobState> {
+    Ok(match s {
+        "pending" => JobState::Pending,
+        "running" => JobState::Running,
+        "preempted" => JobState::Preempted,
+        "finished" => JobState::Finished,
+        other => bail!("snapshot names unknown job state {other:?}"),
+    })
+}
+
+fn render(d: &Daemon) -> Json {
+    let jobs = Json::Arr(
+        d.ctx
+            .jobs
+            .iter()
+            .enumerate()
+            .map(|(id, rec)| {
+                jobj(vec![
+                    ("ext_id", Json::from(d.notes.int2ext[id])),
+                    ("model", Json::from(rec.spec.model.name())),
+                    ("gpus", Json::from(rec.spec.gpus)),
+                    ("iterations", Json::from(rec.spec.iterations)),
+                    ("batch", Json::from(rec.spec.batch as u64)),
+                    ("arrival_s", Json::Num(rec.spec.arrival_s)),
+                    ("est_factor", Json::Num(rec.spec.est_factor)),
+                    ("state", Json::from(state_str(rec.state))),
+                    ("remaining_iters", Json::Num(rec.remaining_iters)),
+                    ("accum_step", Json::from(rec.accum_step as u64)),
+                    ("first_start_s", opt_num(rec.first_start_s)),
+                    ("finish_s", opt_num(rec.finish_s)),
+                    ("queued_s", Json::Num(rec.queued_s)),
+                    (
+                        "gpus_held",
+                        Json::Arr(rec.gpus_held.iter().map(|&g| Json::from(g)).collect()),
+                    ),
+                    ("not_before", Json::Num(d.ctx.not_before[id])),
+                    ("service_gpu_s", Json::Num(d.ctx.service_gpu_s[id])),
+                    ("cancelled", Json::from(d.cancelled.contains(&id))),
+                ])
+            })
+            .collect(),
+    );
+    jobj(vec![
+        ("schema", Json::from(SNAPSHOT_SCHEMA)),
+        ("policy", Json::from(d.cfg.policy.as_str())),
+        ("cluster", Json::Str(d.cfg.cluster.tag())),
+        ("xi_global", opt_num(d.cfg.xi_global)),
+        ("max_pending", Json::from(d.cfg.max_pending)),
+        ("time_compression", opt_num(d.cfg.time_compression)),
+        ("snapshot_every_s", Json::Num(d.cfg.snapshot_every_s)),
+        ("draining", Json::from(d.draining)),
+        ("now", Json::Num(d.ctx.now())),
+        ("busy_gpu_s", Json::Num(d.ctx.busy_gpu_s())),
+        ("shared_gpu_s", Json::Num(d.ctx.shared_gpu_s())),
+        ("policy_calls", Json::from(d.pump.policy_calls())),
+        ("preemptions", Json::from(d.pump.preemptions())),
+        ("next_tick", opt_num(d.pump.next_tick())),
+        ("next_snapshot_s", Json::Num(d.next_snapshot_s)),
+        ("jobs", jobs),
+    ])
+}
+
+/// Atomically write `d`'s snapshot to `path`: the document lands in
+/// `<path>.tmp` first and is renamed over the target, so readers (and a
+/// crash between the two syscalls) only ever see a complete document.
+pub(super) fn write(d: &Daemon, path: &Path) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            fs::create_dir_all(parent)
+                .with_context(|| format!("creating {}", parent.display()))?;
+        }
+    }
+    let tmp = PathBuf::from(format!("{}.tmp", path.display()));
+    fs::write(&tmp, render(d).to_string() + "\n")
+        .with_context(|| format!("writing {}", tmp.display()))?;
+    fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} -> {}", tmp.display(), path.display()))
+}
+
+fn req<'a>(j: &'a Json, key: &str) -> Result<&'a Json> {
+    j.get(key).with_context(|| format!("snapshot field {key:?} is missing"))
+}
+
+fn req_str<'a>(j: &'a Json, key: &str) -> Result<&'a str> {
+    req(j, key)?.as_str().with_context(|| format!("snapshot field {key:?} must be a string"))
+}
+
+fn req_f64(j: &Json, key: &str) -> Result<f64> {
+    req(j, key)?.as_f64().with_context(|| format!("snapshot field {key:?} must be a number"))
+}
+
+fn req_u64(j: &Json, key: &str) -> Result<u64> {
+    req(j, key)?
+        .as_u64()
+        .with_context(|| format!("snapshot field {key:?} must be a non-negative integer"))
+}
+
+fn req_usize(j: &Json, key: &str) -> Result<usize> {
+    req(j, key)?
+        .as_usize()
+        .with_context(|| format!("snapshot field {key:?} must be a non-negative integer"))
+}
+
+fn req_bool(j: &Json, key: &str) -> Result<bool> {
+    req(j, key)?.as_bool().with_context(|| format!("snapshot field {key:?} must be a bool"))
+}
+
+/// `null` (or absent) → `None`.
+fn opt_f64(j: &Json, key: &str) -> Option<f64> {
+    j.get(key).and_then(|v| v.as_f64())
+}
+
+/// Restore a daemon from the snapshot at `path`. Config (policy,
+/// cluster, ξ, limits) is inherited from the document; future snapshots
+/// go to `snapshot_to` when given, else back onto `path`, so an
+/// untouched `serve --resume PATH` keeps checkpointing where it left
+/// off.
+pub(super) fn resume(path: &Path, snapshot_to: Option<PathBuf>, obs: Obs) -> Result<Daemon> {
+    let text = fs::read_to_string(path)
+        .with_context(|| format!("reading snapshot {}", path.display()))?;
+    let j = Json::parse(&text)
+        .with_context(|| format!("parsing snapshot {}", path.display()))?;
+    match j.get("schema").and_then(|s| s.as_str()) {
+        Some(SNAPSHOT_SCHEMA) => {}
+        other => bail!(
+            "snapshot {}: unsupported schema {other:?} (want {SNAPSHOT_SCHEMA:?})",
+            path.display()
+        ),
+    }
+    let cfg = ServeConfig {
+        policy: req_str(&j, "policy")?.to_string(),
+        cluster: ClusterSpec::parse_tag(req_str(&j, "cluster")?)?,
+        xi_global: opt_f64(&j, "xi_global"),
+        max_pending: req_usize(&j, "max_pending")?,
+        time_compression: opt_f64(&j, "time_compression"),
+        snapshot: snapshot_to.or_else(|| Some(path.to_path_buf())),
+        snapshot_every_s: req_f64(&j, "snapshot_every_s")?,
+        ..ServeConfig::default()
+    };
+    let mut cluster = cfg.cluster.build()?;
+    let jobs_j =
+        req(&j, "jobs")?.as_arr().context("snapshot field \"jobs\" must be an array")?;
+    let mut jobs: Vec<JobRecord> = Vec::with_capacity(jobs_j.len());
+    let mut not_before = Vec::with_capacity(jobs_j.len());
+    let mut service_gpu_s = Vec::with_capacity(jobs_j.len());
+    let mut int2ext = Vec::with_capacity(jobs_j.len());
+    let mut ext2int = BTreeMap::new();
+    let mut cancelled = BTreeSet::new();
+    for (id, jj) in jobs_j.iter().enumerate() {
+        let ctx_of = |e: anyhow::Error| e.context(format!("snapshot job {id}"));
+        let ext = req_u64(jj, "ext_id").map_err(ctx_of)?;
+        let model_name = req_str(jj, "model")?;
+        let model = ModelKind::from_name(model_name)
+            .with_context(|| format!("snapshot job {id}: unknown model {model_name:?}"))?;
+        let spec = JobSpec {
+            id,
+            model,
+            gpus: req_usize(jj, "gpus")?,
+            iterations: req_u64(jj, "iterations")?,
+            batch: req_u64(jj, "batch")? as u32,
+            arrival_s: req_f64(jj, "arrival_s")?,
+            est_factor: req_f64(jj, "est_factor")?,
+        };
+        let mut rec = JobRecord::new(spec);
+        rec.state = state_from(req_str(jj, "state")?)?;
+        rec.remaining_iters = req_f64(jj, "remaining_iters")?;
+        rec.accum_step = req_u64(jj, "accum_step")? as u32;
+        rec.first_start_s = opt_f64(jj, "first_start_s");
+        rec.finish_s = opt_f64(jj, "finish_s");
+        rec.queued_s = req_f64(jj, "queued_s")?;
+        rec.gpus_held = req(jj, "gpus_held")?
+            .as_arr()
+            .context("gpus_held must be an array")?
+            .iter()
+            .map(|g| g.as_usize().context("gpus_held entries must be integers"))
+            .collect::<Result<Vec<_>>>()?;
+        if rec.state == JobState::Running {
+            cluster.allocate(id, &rec.gpus_held);
+        }
+        if req_bool(jj, "cancelled")? {
+            cancelled.insert(id);
+        }
+        not_before.push(req_f64(jj, "not_before")?);
+        service_gpu_s.push(req_f64(jj, "service_gpu_s")?);
+        if ext2int.insert(ext, id).is_some() {
+            bail!("snapshot job {id}: duplicate ext_id {ext}");
+        }
+        int2ext.push(ext);
+        jobs.push(rec);
+    }
+    let xi = match cfg.xi_global {
+        Some(x) => InterferenceModel::with_global(x),
+        None => InterferenceModel::new(),
+    };
+    let state = SimState {
+        now: req_f64(&j, "now")?,
+        cluster,
+        jobs,
+        xi,
+        not_before,
+        service_gpu_s,
+    };
+    let mut ctx = SchedContext::from_state(state);
+    ctx.set_obs(obs);
+    ctx.restore_accounting(req_f64(&j, "busy_gpu_s")?, req_f64(&j, "shared_gpu_s")?);
+    let policy = sched::by_name(&cfg.policy)
+        .with_context(|| format!("snapshot names unknown policy {:?}", cfg.policy))?;
+    let mut pump = EventPump::new(policy.as_ref());
+    pump.restore(
+        req_u64(&j, "policy_calls")?,
+        req_u64(&j, "preemptions")?,
+        opt_f64(&j, "next_tick"),
+    );
+    Ok(Daemon {
+        cfg,
+        ctx,
+        policy,
+        pump,
+        notes: Notifier::new(int2ext),
+        ext2int,
+        cancelled,
+        draining: req_bool(&j, "draining")?,
+        next_snapshot_s: req_f64(&j, "next_snapshot_s")?,
+        started_wall: None,
+    })
+}

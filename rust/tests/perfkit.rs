@@ -157,6 +157,22 @@ fn emitted_json_is_schema_tagged_and_parseable_standalone() {
 }
 
 #[test]
+fn bench_list_prints_every_registered_suite_and_exits_zero() {
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_wise-share"))
+        .args(["bench", "--list"])
+        .output()
+        .expect("spawning wise-share");
+    assert!(out.status.success(), "bench --list must exit 0");
+    let text = String::from_utf8_lossy(&out.stdout);
+    for name in perfkit::SUITE_NAMES {
+        assert!(text.contains(name), "suite {name:?} missing from:\n{text}");
+    }
+    assert!(text.contains("profiles: quick, full"), "{text}");
+    // The in-process view agrees with the CLI.
+    assert_eq!(text.into_owned(), perfkit::list());
+}
+
+#[test]
 fn figures_quick_suite_runs_and_records() {
     // The cheapest real suite: Figs. 2/3 are closed-form, Fig. 4 is the
     // 30-job physical trace. Proves a registered suite body runs end to

@@ -1,0 +1,394 @@
+//! serve end-to-end: the daemon protocol's conformance contract
+//! (DESIGN.md §14).
+//!
+//! * every malformed or invalid request yields a structured error
+//!   response with a machine-readable `code` — never a panic,
+//! * admission control: duplicate ids, infeasible gangs, `busy`
+//!   backpressure past `--max-pending` (with the `rejected` event),
+//! * a scripted session is deterministic: same requests, byte-identical
+//!   output,
+//! * snapshot → resume is lossless: `query` output is byte-identical
+//!   across the cycle, and a resumed daemon replays the same remaining
+//!   completion stream as the uninterrupted run,
+//! * the CLI rejects non-positive intervals/ratios at parse time with
+//!   the flag's name in the error.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+use wise_share::obskit::Obs;
+use wise_share::serve::{proto, ClusterSpec, Daemon, HandleOutcome, LoadConfig, ServeConfig};
+use wise_share::util::json::Json;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("wise-share-serve-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+/// A virtual-clock daemon on the 16×4 simulation cluster.
+fn daemon(policy: &str, max_pending: usize) -> Daemon {
+    let cfg = ServeConfig {
+        policy: policy.to_string(),
+        max_pending,
+        ..ServeConfig::default()
+    };
+    Daemon::new(cfg, Obs::disabled()).unwrap()
+}
+
+fn submit(id: u64, model: &str, gpus: usize, iterations: u64, batch: u32) -> String {
+    format!(
+        "{{\"op\":\"submit\",\"id\":{id},\"model\":\"{model}\",\"gpus\":{gpus},\
+         \"iterations\":{iterations},\"batch\":{batch}}}"
+    )
+}
+
+fn advance_to(t: f64) -> String {
+    format!("{{\"op\":\"advance\",\"to\":{t}}}")
+}
+
+/// The response is always the last line; parse it.
+fn response(out: &HandleOutcome) -> Json {
+    let last = out.lines.last().unwrap_or_else(|| panic!("no output lines"));
+    Json::parse(last).unwrap_or_else(|e| panic!("unparseable response {last:?}: {e}"))
+}
+
+fn code(out: &HandleOutcome) -> String {
+    let r = response(out);
+    assert_eq!(r.get("ok").and_then(Json::as_bool), Some(false), "expected a failed response");
+    r.get("code").and_then(|c| c.as_str()).expect("failed response has a code").to_string()
+}
+
+fn assert_ok(out: &HandleOutcome) -> Json {
+    let r = response(out);
+    assert_eq!(
+        r.get("ok").and_then(Json::as_bool),
+        Some(true),
+        "expected ok, got {:?}",
+        out.lines.last()
+    );
+    r
+}
+
+fn events_of(lines: &[String], kind: &str) -> Vec<Json> {
+    lines
+        .iter()
+        .filter_map(|l| Json::parse(l).ok())
+        .filter(|j| {
+            j.get("type").and_then(|t| t.as_str()) == Some("event")
+                && j.get("event").and_then(|e| e.as_str()) == Some(kind)
+        })
+        .collect()
+}
+
+#[test]
+fn malformed_and_unknown_requests_get_structured_errors() {
+    let mut d = daemon("SJF-BSBF", 64);
+    // Truncated JSON, a non-object, a missing op: all E_PARSE.
+    for bad in ["{\"op\": \"sub", "[1, 2, 3]", "{\"id\": 4}", "42"] {
+        let out = d.handle_line(bad);
+        assert_eq!(out.lines.len(), 1, "{bad:?} -> {:?}", out.lines);
+        assert_eq!(code(&out), proto::E_PARSE, "{bad:?}");
+        assert!(!out.exit);
+    }
+    // Unknown op names the known ones.
+    let out = d.handle_line("{\"op\":\"frobnicate\"}");
+    assert_eq!(code(&out), proto::E_UNKNOWN_OP);
+    let err = response(&out).get("error").unwrap().as_str().unwrap().to_string();
+    assert!(err.contains("submit") && err.contains("drain"), "{err}");
+    // Missing / malformed submit fields.
+    let out = d.handle_line("{\"op\":\"submit\"}");
+    assert_eq!(code(&out), proto::E_BAD_REQUEST);
+    let out = d.handle_line("{\"op\":\"submit\",\"id\":1,\"model\":\"nope\",\"gpus\":1}");
+    assert_eq!(code(&out), proto::E_BAD_REQUEST);
+    let err = response(&out).get("error").unwrap().as_str().unwrap().to_string();
+    assert!(err.contains("CIFAR10"), "unknown model should list the known ones: {err}");
+    // Zero-sized dimensions and bad est_factor.
+    let out = d.handle_line(&submit(1, "CIFAR10", 0, 100, 32));
+    assert_eq!(code(&out), proto::E_BAD_REQUEST);
+    let out = d.handle_line(
+        "{\"op\":\"submit\",\"id\":1,\"model\":\"CIFAR10\",\"gpus\":1,\
+         \"iterations\":100,\"batch\":32,\"est_factor\":-2.0}",
+    );
+    assert_eq!(code(&out), proto::E_BAD_REQUEST);
+    // Empty lines are ignored outright.
+    let out = d.handle_line("   ");
+    assert!(out.lines.is_empty() && !out.exit);
+    // And the daemon is still healthy after all of that.
+    assert_ok(&d.handle_line("{\"op\":\"query\"}"));
+}
+
+#[test]
+fn duplicate_unknown_and_finished_ids() {
+    let mut d = daemon("SJF", 64);
+    let out = d.handle_line(&submit(7, "CIFAR10", 1, 200, 32));
+    let r = assert_ok(&out);
+    assert_eq!(r.get("id").and_then(Json::as_u64), Some(7));
+    // The arrival-now job starts before the response comes back.
+    assert_eq!(events_of(&out.lines, "started").len(), 1);
+    // Same client id again: rejected without touching the first.
+    let out = d.handle_line(&submit(7, "CIFAR10", 1, 200, 32));
+    assert_eq!(code(&out), proto::E_DUPLICATE_ID);
+    // Cancel of a job nobody submitted.
+    let out = d.handle_line("{\"op\":\"cancel\",\"id\":99}");
+    assert_eq!(code(&out), proto::E_UNKNOWN_JOB);
+    let out = d.handle_line("{\"op\":\"query\",\"id\":99}");
+    assert_eq!(code(&out), proto::E_UNKNOWN_JOB);
+    // Run job 7 to completion, then cancel it: already-finished.
+    let out = d.handle_line(&advance_to(20_000.0));
+    assert_ok(&out);
+    assert_eq!(events_of(&out.lines, "completed").len(), 1);
+    let out = d.handle_line("{\"op\":\"cancel\",\"id\":7}");
+    assert_eq!(code(&out), proto::E_FINISHED);
+    // Cancelling a cancelled job is also already-finished.
+    let out = d.handle_line(&submit(8, "CIFAR10", 1, 500_000, 32));
+    assert_ok(&out);
+    assert_ok(&d.handle_line("{\"op\":\"cancel\",\"id\":8}"));
+    let out = d.handle_line("{\"op\":\"cancel\",\"id\":8}");
+    assert_eq!(code(&out), proto::E_FINISHED);
+    let r = assert_ok(&d.handle_line("{\"op\":\"query\",\"id\":8}"));
+    let status = r.get("job").unwrap().get("status").unwrap().as_str().unwrap();
+    assert_eq!(status, "cancelled");
+}
+
+#[test]
+fn backpressure_rejects_busy_past_max_pending() {
+    // SJF does not share GPUs, so a second whole-cluster gang must queue.
+    let mut d = daemon("SJF", 1);
+    assert_ok(&d.handle_line(&submit(1, "CIFAR10", 64, 100_000, 32)));
+    assert_ok(&d.handle_line(&submit(2, "CIFAR10", 64, 100_000, 32)));
+    let r = assert_ok(&d.handle_line("{\"op\":\"query\"}"));
+    assert_eq!(r.get("running").and_then(Json::as_usize), Some(1));
+    // One queued job = the --max-pending bound: the third submit bounces.
+    let out = d.handle_line(&submit(3, "CIFAR10", 1, 100, 32));
+    assert_eq!(code(&out), proto::E_BUSY);
+    let rej = events_of(&out.lines, "rejected");
+    assert_eq!(rej.len(), 1);
+    assert_eq!(rej[0].get("id").and_then(Json::as_u64), Some(3));
+    assert_eq!(rej[0].get("code").and_then(|c| c.as_str()), Some(proto::E_BUSY));
+    // The rejected id was never admitted — it can be resubmitted later.
+    let out = d.handle_line("{\"op\":\"query\",\"id\":3}");
+    assert_eq!(code(&out), proto::E_UNKNOWN_JOB);
+    // Cancelling the queued job frees the slot.
+    assert_ok(&d.handle_line("{\"op\":\"cancel\",\"id\":2}"));
+    assert_ok(&d.handle_line(&submit(3, "CIFAR10", 1, 100, 32)));
+}
+
+#[test]
+fn infeasible_gangs_are_rejected_up_front() {
+    let mut d = daemon("SJF-BSBF", 64);
+    // More GPUs than the simulation cluster (16×4) has.
+    let out = d.handle_line(&submit(1, "CIFAR10", 65, 100, 32));
+    assert_eq!(code(&out), proto::E_INFEASIBLE);
+    // An arrival in the past is a client error, not time travel.
+    let mut d = daemon("SJF-BSBF", 64);
+    assert_ok(&d.handle_line(&advance_to(100.0)));
+    let out = d.handle_line(
+        "{\"op\":\"submit\",\"id\":1,\"model\":\"CIFAR10\",\"gpus\":1,\
+         \"iterations\":100,\"batch\":32,\"arrival_s\":5.0}",
+    );
+    assert_eq!(code(&out), proto::E_BAD_REQUEST);
+}
+
+#[test]
+fn advance_validation_and_snapshot_path_requirement() {
+    let mut d = daemon("SJF-BSBF", 64);
+    for bad in [
+        "{\"op\":\"advance\"}",
+        "{\"op\":\"advance\",\"to\":5.0,\"dt\":5.0}",
+        "{\"op\":\"advance\",\"to\":1e30}",
+    ] {
+        let out = d.handle_line(bad);
+        assert_eq!(code(&out), proto::E_BAD_REQUEST, "{bad:?}");
+    }
+    assert_ok(&d.handle_line(&advance_to(50.0)));
+    let out = d.handle_line(&advance_to(10.0));
+    assert_eq!(code(&out), proto::E_BAD_REQUEST, "advance must not move backwards");
+    // snapshot with neither a request path nor --snapshot.
+    let out = d.handle_line("{\"op\":\"snapshot\"}");
+    assert_eq!(code(&out), proto::E_BAD_REQUEST);
+}
+
+#[test]
+fn drain_completes_everything_and_refuses_new_work() {
+    let mut d = daemon("SJF", 64);
+    for id in 1..=4u64 {
+        assert_ok(&d.handle_line(&submit(id, "CIFAR10", 8, 2_000 * id, 64)));
+    }
+    assert_ok(&d.handle_line("{\"op\":\"cancel\",\"id\":2}"));
+    let out = d.handle_line("{\"op\":\"drain\"}");
+    let r = assert_ok(&out);
+    assert!(out.exit, "drain ends the session");
+    assert_eq!(r.get("completed").and_then(Json::as_usize), Some(3));
+    assert_eq!(r.get("cancelled").and_then(Json::as_usize), Some(1));
+    assert_eq!(events_of(&out.lines, "completed").len(), 3);
+    // Draining (and drained) daemons admit nothing.
+    let out = d.handle_line(&submit(9, "CIFAR10", 1, 100, 32));
+    assert_eq!(code(&out), proto::E_DRAINING);
+}
+
+/// The scripted session the determinism guarantee is pinned on: same
+/// seedless virtual-clock script, byte-identical output.
+fn session_script() -> Vec<String> {
+    let mut s = vec![
+        submit(1, "CIFAR10", 8, 8_000, 64),
+        submit(2, "BERT", 16, 400, 16),
+        submit(3, "ImageNet", 16, 900, 64),
+        advance_to(30.0),
+        submit(4, "NCF", 4, 30_000, 256),
+        submit(5, "DeepSpeech2", 8, 1_500, 32),
+        "{\"op\":\"cancel\",\"id\":3}".to_string(),
+        advance_to(120.0),
+        submit(6, "YoloV3", 8, 2_500, 16),
+        "{\"op\":\"query\"}".to_string(),
+    ];
+    s.push("{\"op\":\"drain\"}".to_string());
+    s
+}
+
+fn run_script(d: &mut Daemon, script: &[String]) -> Vec<String> {
+    let mut all = Vec::new();
+    for line in script {
+        all.extend(d.handle_line(line).lines);
+    }
+    all
+}
+
+#[test]
+fn scripted_sessions_are_deterministic() {
+    let script = session_script();
+    let a = run_script(&mut daemon("SJF-BSBF", 64), &script);
+    let b = run_script(&mut daemon("SJF-BSBF", 64), &script);
+    assert_eq!(a, b, "same script, same daemon config: byte-identical output");
+    assert!(!a.is_empty());
+}
+
+#[test]
+fn snapshot_resume_roundtrips_query_byte_identically() {
+    let path = tmp("roundtrip.json");
+    let mut d = daemon("SJF", 64);
+    for id in 1..=5u64 {
+        assert_ok(&d.handle_line(&submit(id, "CIFAR10", 16, 40_000, 64)));
+    }
+    assert_ok(&d.handle_line("{\"op\":\"cancel\",\"id\":4}"));
+    assert_ok(&d.handle_line(&advance_to(200.0)));
+    let r = assert_ok(
+        &d.handle_line(&format!("{{\"op\":\"snapshot\",\"path\":{:?}}}", path.display())),
+    );
+    assert_eq!(r.get("path").and_then(|p| p.as_str()), Some(&*path.display().to_string()));
+    // The same queries against the original and the resumed daemon.
+    let mut queries = vec!["{\"op\":\"query\"}".to_string()];
+    queries.extend((1..=5u64).map(|id| format!("{{\"op\":\"query\",\"id\":{id}}}")));
+    let before: Vec<String> =
+        queries.iter().flat_map(|q| d.handle_line(q).lines).collect();
+    let mut r = Daemon::resume(&path, None, Obs::disabled()).unwrap();
+    let after: Vec<String> =
+        queries.iter().flat_map(|q| r.handle_line(q).lines).collect();
+    assert_eq!(before, after, "query output must survive snapshot -> resume byte-for-byte");
+    // The atomic write leaves no temp file behind.
+    assert!(!PathBuf::from(format!("{}.tmp", path.display())).exists());
+}
+
+#[test]
+fn resume_replays_the_same_remaining_completion_stream() {
+    let path = tmp("replay.json");
+    // Durations spread so that at the snapshot instant the shortest job
+    // is certainly done and the longest certainly is not.
+    let prefix: Vec<String> = (1..=10u64)
+        .map(|id| submit(id, "CIFAR10", 16, 2_000 + 15_000 * (id - 1), 64))
+        .collect();
+    let mid = advance_to(1_500.0);
+
+    // Uninterrupted run: prefix, advance, drain.
+    let mut a = daemon("SJF", 64);
+    run_script(&mut a, &prefix);
+    a.handle_line(&mid);
+    let tail_a = a.handle_line("{\"op\":\"drain\"}");
+    assert!(tail_a.exit);
+
+    // Interrupted run: same prefix + advance, snapshot, resume, drain.
+    let mut b = daemon("SJF", 64);
+    run_script(&mut b, &prefix);
+    b.handle_line(&mid);
+    assert_ok(&b.handle_line(&format!("{{\"op\":\"snapshot\",\"path\":{:?}}}", path.display())));
+    drop(b);
+    let mut c = Daemon::resume(&path, None, Obs::disabled()).unwrap();
+    let tail_c = c.handle_line("{\"op\":\"drain\"}");
+    assert!(tail_c.exit);
+
+    assert_eq!(
+        tail_a.lines, tail_c.lines,
+        "a resumed daemon must finish the session exactly like the uninterrupted one"
+    );
+    // The mid-session snapshot caught a genuinely partial state (some
+    // jobs done, some not), or this test proves nothing.
+    let done_early = events_of(&tail_a.lines, "completed").len();
+    assert!(done_early > 0 && done_early < 10, "{done_early} of 10 completed after resume");
+}
+
+#[test]
+fn resume_rejects_garbage_snapshots() {
+    let path = tmp("bad-snapshot.json");
+    std::fs::write(&path, "{\"schema\": \"somebody-elses-v7\"}").unwrap();
+    let err = Daemon::resume(&path, None, Obs::disabled()).unwrap_err().to_string();
+    assert!(err.contains("unsupported schema"), "{err}");
+    std::fs::write(&path, "not json at all").unwrap();
+    assert!(Daemon::resume(&path, None, Obs::disabled()).is_err());
+    assert!(Daemon::resume(&tmp("missing.json"), None, Obs::disabled()).is_err());
+}
+
+#[test]
+fn serve_load_runs_a_small_session_end_to_end() {
+    let cfg = LoadConfig {
+        jobs: 24,
+        seed: 7,
+        cluster: ClusterSpec::Preset("simulation".to_string()),
+        ..LoadConfig::default()
+    };
+    let out = wise_share::serve::load::run(&cfg, Obs::disabled()).unwrap();
+    assert_eq!(out.submitted, 24);
+    assert_eq!(out.accepted + out.rejected_busy, 24);
+    assert_eq!(out.completed, out.accepted, "drain finishes every accepted job");
+    assert!(out.makespan_s > 0.0);
+    assert_eq!(out.decision_latencies_s.len(), 24);
+    assert!(out.latency_p50_s <= out.latency_p95_s && out.latency_p95_s <= out.latency_p99_s);
+    let text = out.summary();
+    assert!(text.contains("24 submitted"), "{text}");
+    // And the session is deterministic in the sim domain.
+    let again = wise_share::serve::load::run(&cfg, Obs::disabled()).unwrap();
+    assert_eq!(out.completed, again.completed);
+    assert_eq!(out.makespan_s, again.makespan_s);
+    assert_eq!(out.latency_p99_s, again.latency_p99_s);
+}
+
+// ------------------------------------------------------------ CLI layer
+
+fn run_cli(args: &[&str]) -> (bool, String) {
+    let out = Command::new(env!("CARGO_BIN_EXE_wise-share"))
+        .args(args)
+        .output()
+        .expect("spawning wise-share");
+    (out.status.success(), String::from_utf8_lossy(&out.stderr).into_owned())
+}
+
+#[test]
+fn cli_rejects_non_positive_intervals_at_parse_time() {
+    // (argv, the flag the error must name)
+    let cases: &[(&[&str], &str)] = &[
+        (&["simulate", "--sample-every", "0"], "--sample-every"),
+        (&["simulate", "--load", "0"], "--load"),
+        (&["serve", "--snapshot-every", "0"], "--snapshot-every"),
+        (&["serve", "--snapshot-every", "-3"], "--snapshot-every"),
+        (&["serve", "--time-compression", "0"], "--time-compression"),
+        (&["serve", "--max-pending", "0"], "--max-pending"),
+        (&["serve", "--snapshot-every", "5"], "--snapshot"),
+        (&["serve", "--resume", "/nonexistent.json", "--policy", "SJF"], "--policy"),
+        (&["serve-load", "--load", "-1"], "--load"),
+        (&["serve-load", "--workload", "nope"], "workload preset"),
+    ];
+    for (argv, needle) in cases {
+        let (ok, stderr) = run_cli(argv);
+        assert!(!ok, "{argv:?} must fail");
+        assert!(stderr.contains(needle), "{argv:?}: stderr {stderr:?} lacks {needle:?}");
+    }
+}
