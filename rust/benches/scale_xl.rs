@@ -1,0 +1,11 @@
+//! `cargo bench --bench scale_xl` — thin wrapper over the registered
+//! `scale_xl` suite (the million-job event core: 100k-job quick tier for
+//! CI's `scale-smoke` leg, a 1M-job / 100k-GPU full tier; events/s and
+//! jobs/s recorded as gated metrics); the body lives in
+//! `wise_share::perfkit::suites::scale_xl` so `wise-share bench` records
+//! the same cases machine-readably. Perfkit flags pass through:
+//! `cargo bench --bench scale_xl -- --profile quick --out BENCH_xl.json`.
+
+fn main() -> anyhow::Result<()> {
+    wise_share::perfkit::bench_main("scale_xl")
+}

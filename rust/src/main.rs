@@ -100,7 +100,7 @@ take directories and write one artifact set per run ordinal. Sinks off
 
 Bench SUITE names (comma-separated for --suite; default = all): tables,
 figures, ablations, sched_overhead, runtime_hotpath, campaign_throughput,
-scale, serve. `--out` writes the schema-versioned JSON perf report;
+scale, scale_xl, serve. `--out` writes the schema-versioned JSON perf report;
 `--baseline` + `--max-regress` (default 10) gate on a recorded report
 with a nonzero exit on regression; `--check F` only validates an emitted
 report; `--list` prints the registered suites and profiles.

@@ -7,12 +7,19 @@
 //! is the fairest single number to gate on. Per-case tolerances recorded
 //! in the *baseline* override the CLI default, so a recorded baseline
 //! pins its own noise allowances (DESIGN.md §12).
+//!
+//! Cases that record **throughput** metrics (events/sec, jobs/sec — the
+//! `scale_xl` suite) additionally gate higher-is-better: a *drop* beyond
+//! the same per-case tolerance regresses. Only cases where both sides
+//! recorded throughput are gated this way — a baseline written before the
+//! metrics existed neither gates nor fails.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
 use anyhow::{bail, Result};
 
+use super::registry::Throughput;
 use super::report::BenchReport;
 
 /// Outcome of one case's comparison.
@@ -22,6 +29,9 @@ pub enum Verdict {
     Pass { delta_pct: f64 },
     /// `min_s` grew past the tolerance.
     Regress { delta_pct: f64, limit_pct: f64 },
+    /// A higher-is-better metric (events/sec or jobs/sec) dropped past
+    /// the tolerance. `metric` names the offending one.
+    RegressThroughput { metric: &'static str, drop_pct: f64, limit_pct: f64 },
     /// Measured now, absent from the baseline (new case).
     New,
     /// In the baseline, not measured now. Does not fail the gate — quick
@@ -71,7 +81,8 @@ pub fn compare(
             baseline.env.profile
         );
     }
-    let index = |rep: &BenchReport| -> BTreeMap<(String, String), (f64, Option<f64>)> {
+    type Entry = (f64, Option<f64>, Option<Throughput>);
+    let index = |rep: &BenchReport| -> BTreeMap<(String, String), Entry> {
         rep.suites
             .iter()
             .filter(|s| s.skipped.is_none())
@@ -79,7 +90,7 @@ pub fn compare(
                 s.cases.iter().map(move |c| {
                     (
                         (s.suite.clone(), c.stats.name.clone()),
-                        (c.stats.min_s, c.max_regress_pct),
+                        (c.stats.min_s, c.max_regress_pct, c.throughput),
                     )
                 })
             })
@@ -106,19 +117,47 @@ pub fn compare(
             let verdict = match base.get(&(s.suite.clone(), c.stats.name.clone())) {
                 None if base_skipped.contains(&s.suite.as_str()) => continue,
                 None => Verdict::New,
-                Some(&(base_min, base_tol)) => {
-                    if base_min <= 0.0 {
+                Some(&(base_min, base_tol, base_tp)) => {
+                    let limit_pct = base_tol.unwrap_or(default_pct);
+                    let wall = if base_min <= 0.0 {
                         // A zero-time baseline cannot regress meaningfully
                         // (clock-resolution artifact); pass it.
                         Verdict::Pass { delta_pct: 0.0 }
                     } else {
                         let delta_pct = (c.stats.min_s / base_min - 1.0) * 100.0;
-                        let limit_pct = base_tol.unwrap_or(default_pct);
                         if delta_pct > limit_pct {
                             Verdict::Regress { delta_pct, limit_pct }
                         } else {
                             Verdict::Pass { delta_pct }
                         }
+                    };
+                    // Higher-is-better metrics gate only when both sides
+                    // recorded them; the wall-clock verdict wins ties so
+                    // at most one row appears per case.
+                    match (wall, base_tp, c.throughput) {
+                        (Verdict::Pass { delta_pct }, Some(base), Some(cur)) => {
+                            let drops = [
+                                ("events_per_s", base.events_per_s, cur.events_per_s),
+                                ("jobs_per_s", base.jobs_per_s, cur.jobs_per_s),
+                            ];
+                            let mut v = Verdict::Pass { delta_pct };
+                            for (metric, b, c) in drops {
+                                if b <= 0.0 {
+                                    continue;
+                                }
+                                let drop_pct = (1.0 - c / b) * 100.0;
+                                if drop_pct > limit_pct {
+                                    v = Verdict::RegressThroughput {
+                                        metric,
+                                        drop_pct,
+                                        limit_pct,
+                                    };
+                                    break;
+                                }
+                            }
+                            v
+                        }
+                        (wall, _, _) => wall,
                     }
                 }
             };
@@ -143,7 +182,9 @@ pub fn compare(
     let count = |f: fn(&Verdict) -> bool| rows.iter().filter(|r| f(&r.verdict)).count();
     Ok(Comparison {
         n_passed: count(|v| matches!(v, Verdict::Pass { .. })),
-        n_regressed: count(|v| matches!(v, Verdict::Regress { .. })),
+        n_regressed: count(|v| {
+            matches!(v, Verdict::Regress { .. } | Verdict::RegressThroughput { .. })
+        }),
         n_new: count(|v| matches!(v, Verdict::New)),
         n_missing: count(|v| matches!(v, Verdict::Missing)),
         rows,
@@ -165,6 +206,12 @@ impl Comparison {
                 Verdict::Regress { delta_pct, limit_pct } => writeln!(
                     out,
                     "  REGRESS {}/{} ({delta_pct:+.1}% min > +{limit_pct:.1}% allowed)",
+                    r.suite, r.name
+                )
+                .unwrap(),
+                Verdict::RegressThroughput { metric, drop_pct, limit_pct } => writeln!(
+                    out,
+                    "  REGRESS {}/{} ({metric} dropped {drop_pct:.1}% > {limit_pct:.1}% allowed)",
                     r.suite, r.name
                 )
                 .unwrap(),
@@ -202,6 +249,10 @@ impl Comparison {
                     "{}/{} ({delta_pct:+.1}% > +{limit_pct:.1}%)",
                     r.suite, r.name
                 )),
+                Verdict::RegressThroughput { metric, drop_pct, limit_pct } => Some(format!(
+                    "{}/{} ({metric} -{drop_pct:.1}% > {limit_pct:.1}%)",
+                    r.suite, r.name
+                )),
                 _ => None,
             })
             .collect();
@@ -231,7 +282,17 @@ mod tests {
                 p95_s: min_s * 1.2,
             },
             max_regress_pct: tol,
+            throughput: None,
         }
+    }
+
+    fn tp_case(name: &str, min_s: f64, tol: Option<f64>, ev: f64, jo: f64) -> CaseStats {
+        let mut c = case(name, min_s, tol);
+        c.throughput = Some(crate::perfkit::registry::Throughput {
+            events_per_s: ev,
+            jobs_per_s: jo,
+        });
+        c
     }
 
     fn report(profile: &str, suites: Vec<SuiteReport>) -> BenchReport {
@@ -351,6 +412,82 @@ mod tests {
         let cmp = compare(&current, &baseline, 10.0).unwrap();
         assert_eq!(cmp.n_regressed, 0);
         assert_eq!(cmp.n_passed, 1);
+    }
+
+    #[test]
+    fn throughput_drop_gates_higher_is_better() {
+        let baseline = report(
+            "quick",
+            vec![suite("scale_xl", vec![tp_case("xl/a", 1.0, Some(20.0), 100_000.0, 500.0)])],
+        );
+        // Wall time flat, events/sec down 50% (> 20% tolerance): regress.
+        let current = report(
+            "quick",
+            vec![suite("scale_xl", vec![tp_case("xl/a", 1.0, None, 50_000.0, 500.0)])],
+        );
+        let cmp = compare(&current, &baseline, 10.0).unwrap();
+        assert_eq!(cmp.n_regressed, 1);
+        assert!(matches!(
+            cmp.rows[0].verdict,
+            Verdict::RegressThroughput { metric: "events_per_s", .. }
+        ));
+        let err = cmp.gate().unwrap_err().to_string();
+        assert!(err.contains("events_per_s"), "{err}");
+        let rendered = cmp.render();
+        assert!(rendered.contains("dropped 50.0%"), "{rendered}");
+
+        // jobs/sec is gated too, independently of events/sec.
+        let current = report(
+            "quick",
+            vec![suite("scale_xl", vec![tp_case("xl/a", 1.0, None, 100_000.0, 100.0)])],
+        );
+        let cmp = compare(&current, &baseline, 10.0).unwrap();
+        assert!(matches!(
+            cmp.rows[0].verdict,
+            Verdict::RegressThroughput { metric: "jobs_per_s", .. }
+        ));
+
+        // A throughput *gain* passes; drops within tolerance pass.
+        let current = report(
+            "quick",
+            vec![suite("scale_xl", vec![tp_case("xl/a", 1.0, None, 150_000.0, 450.0)])],
+        );
+        let cmp = compare(&current, &baseline, 10.0).unwrap();
+        assert_eq!(cmp.n_regressed, 0);
+        assert_eq!(cmp.n_passed, 1);
+        cmp.gate().unwrap();
+    }
+
+    #[test]
+    fn throughput_gate_needs_both_sides() {
+        // Baseline predates the metrics: a current report that records
+        // them neither gates nor fails (and vice versa).
+        let old_base =
+            report("quick", vec![suite("scale_xl", vec![case("xl/a", 1.0, None)])]);
+        let current = report(
+            "quick",
+            vec![suite("scale_xl", vec![tp_case("xl/a", 1.0, None, 10.0, 1.0)])],
+        );
+        let cmp = compare(&current, &old_base, 10.0).unwrap();
+        assert_eq!(cmp.n_regressed, 0);
+        assert_eq!(cmp.n_passed, 1);
+        let cmp = compare(&old_base, &current, 10.0).unwrap();
+        assert_eq!(cmp.n_regressed, 0);
+
+        // A min_s regression wins over the throughput verdict — one row,
+        // the wall-clock one.
+        let baseline = report(
+            "quick",
+            vec![suite("scale_xl", vec![tp_case("xl/a", 1.0, None, 100.0, 10.0)])],
+        );
+        let current = report(
+            "quick",
+            vec![suite("scale_xl", vec![tp_case("xl/a", 2.0, None, 1.0, 1.0)])],
+        );
+        let cmp = compare(&current, &baseline, 10.0).unwrap();
+        assert_eq!(cmp.rows.len(), 1);
+        assert!(matches!(cmp.rows[0].verdict, Verdict::Regress { .. }));
+        assert_eq!(cmp.n_regressed, 1);
     }
 
     #[test]

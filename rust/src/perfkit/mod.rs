@@ -18,7 +18,8 @@
 //!    the [`report::SCHEMA`] tag, via the first-party `util::json`.
 //! 3. **Compare** ([`compare`]) — per-case regression verdicts against a
 //!    previously-recorded report, gating on `min_s` with per-case
-//!    tolerances; [`Comparison::gate`] turns regressions into a nonzero
+//!    tolerances (and higher-is-better on recorded [`Throughput`]
+//!    metrics); [`Comparison::gate`] turns regressions into a nonzero
 //!    process exit.
 //! 4. **Driver** ([`driver`]) — the shared `wise-share bench` /
 //!    `cargo bench` entry point: run suites, write `BENCH_<sha>.json`,
@@ -37,7 +38,7 @@ pub mod suites;
 pub use compare::{compare, CaseVerdict, Comparison, Verdict};
 pub use driver::{bench_main, check_file, list, run, RunConfig, DEFAULT_MAX_REGRESS_PCT};
 pub use registry::{
-    all, by_name_or_err, CaseStats, Profile, Recorder, Suite, SuiteReport,
+    all, by_name_or_err, CaseStats, Profile, Recorder, Suite, SuiteReport, Throughput,
     SINGLE_SHOT_TOLERANCE_PCT, SUITE_NAMES,
 };
 pub use report::{BenchReport, EnvInfo, SCHEMA};

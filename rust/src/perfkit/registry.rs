@@ -48,6 +48,18 @@ impl Profile {
     }
 }
 
+/// Higher-is-better throughput metrics a case may record alongside its
+/// wall-clock stats — the `scale_xl` suite's first-class gated numbers:
+/// a drop in either gates exactly like a latency regression (see
+/// [`super::compare`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Throughput {
+    /// Engine events processed per second of measured wall time.
+    pub events_per_s: f64,
+    /// Jobs completed per second of measured wall time.
+    pub jobs_per_s: f64,
+}
+
 /// One recorded case: the measured stats plus an optional per-case
 /// regression tolerance. `None` means the gate's `--max-regress` default
 /// applies; suites set an explicit tolerance on wall-clock-noisy cases
@@ -56,6 +68,10 @@ impl Profile {
 pub struct CaseStats {
     pub stats: BenchStats,
     pub max_regress_pct: Option<f64>,
+    /// Optional higher-is-better metrics ([`Recorder::throughput`]);
+    /// serialized additively in the bench JSON, so the schema stays
+    /// `wise-share-bench-v1`-compatible.
+    pub throughput: Option<Throughput>,
 }
 
 /// Everything one suite produced in one run.
@@ -91,7 +107,7 @@ impl Recorder {
     fn push(&mut self, stats: BenchStats) -> BenchStats {
         let max_regress_pct =
             if stats.iters <= 1 { Some(SINGLE_SHOT_TOLERANCE_PCT) } else { None };
-        self.cases.push(CaseStats { stats: stats.clone(), max_regress_pct });
+        self.cases.push(CaseStats { stats: stats.clone(), max_regress_pct, throughput: None });
         stats
     }
 
@@ -124,6 +140,18 @@ impl Recorder {
         case.max_regress_pct = Some(max_regress_pct);
     }
 
+    /// Attach higher-is-better throughput metrics to the most recently
+    /// recorded case (events processed and jobs completed per second of
+    /// measured wall time). Gated in [`super::compare`] with the same
+    /// per-case tolerance as the wall-clock stats.
+    pub fn throughput(&mut self, events_per_s: f64, jobs_per_s: f64) {
+        let case = self
+            .cases
+            .last_mut()
+            .expect("throughput() must follow a recorded case");
+        case.throughput = Some(Throughput { events_per_s, jobs_per_s });
+    }
+
     /// Abandon the suite with a reason (environment cannot run it).
     pub fn skip(self, reason: String) -> SuiteReport {
         SuiteReport { suite: self.suite.to_string(), skipped: Some(reason), cases: Vec::new() }
@@ -145,7 +173,7 @@ pub struct Suite {
 
 /// Registered suite names, in registry (execution) order — one per
 /// `cargo bench` target.
-pub const SUITE_NAMES: [&str; 8] = [
+pub const SUITE_NAMES: [&str; 9] = [
     "tables",
     "figures",
     "ablations",
@@ -153,6 +181,7 @@ pub const SUITE_NAMES: [&str; 8] = [
     "runtime_hotpath",
     "campaign_throughput",
     "scale",
+    "scale_xl",
     "serve",
 ];
 
@@ -166,6 +195,7 @@ pub fn all() -> Vec<Suite> {
         suites::runtime_hotpath::suite(),
         suites::campaign_throughput::suite(),
         suites::scale::suite(),
+        suites::scale_xl::suite(),
         suites::serve::suite(),
     ]
 }

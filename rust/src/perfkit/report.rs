@@ -14,7 +14,7 @@ use anyhow::{bail, Context, Result};
 use crate::util::bench::BenchStats;
 use crate::util::json::Json;
 
-use super::registry::{CaseStats, Profile, SuiteReport};
+use super::registry::{CaseStats, Profile, SuiteReport, Throughput};
 
 /// Schema tag of the emitted document. Bump on any column/semantics
 /// change — consumers (and [`BenchReport::from_json`]) pin on it instead
@@ -121,6 +121,15 @@ impl BenchReport {
                         bail!("case {:?} has a degenerate tolerance {pct}", st.name);
                     }
                 }
+                if let Some(tp) = c.throughput {
+                    for (key, v) in
+                        [("events_per_s", tp.events_per_s), ("jobs_per_s", tp.jobs_per_s)]
+                    {
+                        if !v.is_finite() || v <= 0.0 {
+                            bail!("case {:?} has degenerate throughput {key} = {v}", st.name);
+                        }
+                    }
+                }
             }
         }
         Ok(())
@@ -225,6 +234,12 @@ fn case_to_json(c: &CaseStats) -> Json {
     if let Some(pct) = c.max_regress_pct {
         m.insert("max_regress_pct".to_string(), Json::Num(pct));
     }
+    // Additive fields — readers of the v1 schema that predate throughput
+    // metrics simply ignore them, so the tag does not bump.
+    if let Some(tp) = c.throughput {
+        m.insert("events_per_s".to_string(), Json::Num(tp.events_per_s));
+        m.insert("jobs_per_s".to_string(), Json::Num(tp.jobs_per_s));
+    }
     Json::Obj(m)
 }
 
@@ -253,6 +268,17 @@ fn case_from_json(j: &Json) -> Result<CaseStats> {
                 v.as_f64()
                     .with_context(|| format!("case {name:?}: max_regress_pct"))?,
             ),
+        },
+        throughput: match (j.get("events_per_s"), j.get("jobs_per_s")) {
+            (Some(e), Some(c)) => Some(Throughput {
+                events_per_s: e
+                    .as_f64()
+                    .with_context(|| format!("case {name:?}: events_per_s"))?,
+                jobs_per_s: c
+                    .as_f64()
+                    .with_context(|| format!("case {name:?}: jobs_per_s"))?,
+            }),
+            _ => None,
         },
     })
 }
@@ -294,6 +320,7 @@ mod tests {
                 p95_s: min_s * 1.2,
             },
             max_regress_pct: None,
+            throughput: None,
         }
     }
 
@@ -382,6 +409,33 @@ mod tests {
         let mut rep = report();
         rep.suites[0].cases[0].stats.p50_s = rep.suites[0].cases[0].stats.p95_s * 2.0;
         assert!(rep.check().unwrap_err().to_string().contains("unordered"));
+    }
+
+    #[test]
+    fn throughput_fields_roundtrip_and_validate() {
+        let mut rep = report();
+        rep.suites[0].cases[0].throughput =
+            Some(Throughput { events_per_s: 250_000.0, jobs_per_s: 1_800.0 });
+        rep.check().unwrap();
+        let text = rep.to_json().to_string();
+        // Additive serialization under the unchanged v1 schema tag.
+        assert!(text.contains("\"events_per_s\""), "{text}");
+        assert!(text.contains(SCHEMA), "{text}");
+        let back = BenchReport::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(rep, back);
+        let tp = back.suites[0].cases[0].throughput.unwrap();
+        assert_eq!(tp.events_per_s, 250_000.0);
+        assert_eq!(tp.jobs_per_s, 1_800.0);
+        // A case without throughput stays None through the roundtrip.
+        assert!(back.suites[0].cases[1].throughput.is_none());
+        // Degenerate throughput fails the artifact gate.
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            let mut rep = report();
+            rep.suites[0].cases[0].throughput =
+                Some(Throughput { events_per_s: bad, jobs_per_s: 1.0 });
+            let err = rep.check().unwrap_err().to_string();
+            assert!(err.contains("degenerate throughput"), "{bad}: {err}");
+        }
     }
 
     #[test]

@@ -13,6 +13,7 @@ pub mod campaign_throughput;
 pub mod figures;
 pub mod runtime_hotpath;
 pub mod scale;
+pub mod scale_xl;
 pub mod sched_overhead;
 pub mod serve;
 pub mod tables;

@@ -1,0 +1,128 @@
+//! `scale_xl` suite — the million-job event core, gated on throughput.
+//!
+//! Where the `scale` suite answers "does the engine keep up at Philly
+//! trace sizes", this one pins the asymptotics: the lazy-integration +
+//! calendar-queue event core (DESIGN.md §15) is what makes a 1M-job /
+//! 100k-GPU trace tractable at all, and these cases are the regression
+//! net around it. Events/sec and jobs/sec are recorded as first-class
+//! metrics ([`Recorder::throughput`]) and gated higher-is-better by
+//! `bench --baseline` alongside the wall-clock minimum, so an accidental
+//! return to per-event O(running) sweeps fails CI instead of silently
+//! tripling the smoke job's runtime.
+//!
+//! Tiers:
+//! * `quick` — a 100k-job SJF run on 4096 uniform GPUs plus a modest
+//!   SJF-BSBF case (sharing keeps Alg. 1's quadratic pending scan in the
+//!   loop). Seconds-scale; CI's `scale-smoke` leg runs it on every push.
+//! * `full` — the headline: 1M jobs over 100k GPUs (25k uniform
+//!   4-GPU servers), single timed pass. Minutes-scale; developers run it
+//!   before touching the event core.
+//!
+//! Trace generation is untimed; the recorded region is the engine run
+//! only, so the numbers isolate event dispatch + policy calls.
+
+use crate::cluster::{Cluster, ClusterConfig};
+use crate::jobs::trace::{self, TraceConfig};
+use crate::jobs::workload;
+use crate::perf::interference::InterferenceModel;
+use crate::sched;
+use crate::sim::{engine, EngineConfig};
+
+use super::super::registry::{Profile, Recorder, Suite, SuiteReport};
+
+pub fn suite() -> Suite {
+    Suite {
+        name: "scale_xl",
+        description: "100k-1M-job traces; events/s + jobs/s gated as first-class metrics",
+        run,
+    }
+}
+
+fn uniform(servers: usize) -> Cluster {
+    Cluster::new(ClusterConfig {
+        servers,
+        gpus_per_server: 4,
+        gpu_mem_gb: 11.0,
+        max_share: 2,
+    })
+}
+
+/// One xl case: generate the preset trace (untimed), run the policy
+/// through the full engine (timed), record events/s + jobs/s.
+fn case(
+    rec: &mut Recorder,
+    policy: &str,
+    shape: &str,
+    cluster: Cluster,
+    preset: &str,
+    n_jobs: usize,
+) {
+    let cfg = TraceConfig::from_preset(
+        &workload::by_name(preset).expect("registry preset"),
+        n_jobs,
+        1,
+    );
+    let jobs = trace::generate(&cfg);
+    let name = format!("scale_xl/{}/{shape}/{n_jobs}-{preset}", policy.to_lowercase());
+    let mut events = 0u64;
+    let stats = rec.once(&name, || {
+        let mut p = sched::by_name(policy).expect("registry policy");
+        let out = engine::run_cluster(
+            cluster,
+            &jobs,
+            InterferenceModel::new(),
+            p.as_mut(),
+            EngineConfig::default(),
+        )
+        .expect("scale_xl run");
+        events = out.policy_calls;
+        std::hint::black_box(out.makespan_s);
+    });
+    let wall = stats.mean_s.max(1e-12);
+    let events_per_s = events as f64 / wall;
+    let jobs_per_s = n_jobs as f64 / wall;
+    rec.throughput(events_per_s, jobs_per_s);
+    println!("  {name}: {events} events, {events_per_s:.0} events/s, {jobs_per_s:.0} jobs/s");
+}
+
+fn run(profile: Profile) -> SuiteReport {
+    let mut rec = Recorder::new("scale_xl");
+    match profile {
+        Profile::Quick => {
+            // CI tier: 100k jobs over 4096 GPUs exercises the calendar
+            // queue's rebuild path and the lazy ledger at real depth while
+            // staying seconds-scale.
+            case(
+                &mut rec,
+                "SJF",
+                "uniform-1024x4",
+                uniform(1024),
+                "small-job-flood",
+                100_000,
+            );
+            // Sharing machinery at depth: overlays + pairwise search keep
+            // the reproject/settle path hot (bounded size — Alg. 1 is
+            // quadratic in the pending queue).
+            case(
+                &mut rec,
+                "SJF-BSBF",
+                "uniform-64x4",
+                uniform(64),
+                "small-job-flood",
+                5_000,
+            );
+        }
+        Profile::Full => {
+            // The headline case: 1M jobs on a 100k-GPU datacenter.
+            case(
+                &mut rec,
+                "SJF",
+                "uniform-25000x4",
+                uniform(25_000),
+                "small-job-flood",
+                1_000_000,
+            );
+        }
+    }
+    rec.finish()
+}

@@ -104,8 +104,12 @@ impl Policy for SjfBsbf {
             let mut candidates: Vec<(JobId, Vec<GpuId>, SharingConfig)> = Vec::new();
             for (owner, gpus) in owners {
                 // A job we just started this pass has a hypothetical accum
-                // step and placement; respect both.
+                // step and placement; respect both. A running owner's
+                // stored `remaining_iters` is its value at the last settle
+                // (lazy integration) — fold it to `now` for the pair-JCT
+                // inputs.
                 let mut orec = ctx.jobs[owner].clone();
+                orec.remaining_iters = ctx.remaining_iters(owner);
                 let run_gpus: &[GpuId] = match started.get(&owner) {
                     Some((a, held)) => {
                         orec.accum_step = *a;

@@ -34,7 +34,7 @@ impl Default for Tiresias {
 impl Tiresias {
     /// 2D-LAS priority: (queue, arrival). Lower tuple = higher priority.
     fn priority(&self, ctx: &SchedContext, id: JobId) -> (u8, f64, usize) {
-        let q = if ctx.service_gpu_s[id] < self.threshold_gpu_s { 0 } else { 1 };
+        let q = if ctx.attained_service(id) < self.threshold_gpu_s { 0 } else { 1 };
         (q, ctx.jobs[id].spec.arrival_s, id)
     }
 }

@@ -1,0 +1,405 @@
+//! [`CalendarQueue`] — a bucketed timer wheel for the event core's
+//! finish-projection and restart-expiry queues.
+//!
+//! A classic calendar queue (Brown '88) beats a binary heap under heavy
+//! traffic because the common operations touch one bucket instead of a
+//! log-depth path: a push lands in the bucket covering its timestamp
+//! (O(1) amortized), and pops drain the front bucket, which is sorted
+//! on demand. With N live timers spread over the span the wheel covers,
+//! both operations are O(1) amortized versus the heap's O(log N) — and
+//! the bucket layout keeps coincident-timestamp entries physically
+//! adjacent, so the engine's batched delivery of same-instant events is
+//! a linear walk rather than N interleaved heap pops.
+//!
+//! Design points, in order of subtlety:
+//!
+//! * **Total order.** Entries are `(f64 time, P payload)` and pop in
+//!   ascending `(total_cmp(time), P)` order — exactly the order the
+//!   `BinaryHeap<Reverse<(OrdF64, ..)>>`s this replaces produced, which
+//!   `tests/event_core.rs` pins property-test-style against a reference
+//!   heap. Duplicate entries are allowed (a job preempted twice at the
+//!   same instant pushes two identical expiries, just as the heap did).
+//! * **Front-bucket laziness.** Only the bucket currently being drained
+//!   is ever sorted (descending, so the minimum pops from the back);
+//!   pushes into later buckets are plain appends. A push into the front
+//!   bucket binary-inserts when the bucket is already sorted, else it
+//!   appends and re-flags the bucket for sorting.
+//! * **Overflow + rebuild.** Entries beyond the wheel's horizon go to an
+//!   overflow list. When the wheel drains into the overflow's span, or
+//!   the overflow outgrows half the queue, the whole queue rebuilds its
+//!   bucket geometry from the live entries: bucket count is the next
+//!   power of two of the population (clamped to [16, 4096]) and the
+//!   width divides the live span evenly. All geometry is derived from
+//!   *content only* — no clocks, no capacities — so two runs with the
+//!   same push/pop sequence produce bit-identical pop streams, which is
+//!   what the threads-1-vs-8 determinism CI leg relies on.
+//! * **Past-due pushes.** A push at `t < base` (the engine's `T_EPS`
+//!   slack can produce these) clamps into the front bucket; the sort
+//!   before the next pop still surfaces it in correct order relative to
+//!   everything else in that bucket.
+
+use std::cmp::Ordering;
+use std::collections::VecDeque;
+
+/// Ascending `(time, payload)` entry order; times via `total_cmp` so the
+/// order is total even for non-finite junk (which callers never push).
+fn cmp_entries<P: Ord>(a: &(f64, P), b: &(f64, P)) -> Ordering {
+    a.0.total_cmp(&b.0).then_with(|| a.1.cmp(&b.1))
+}
+
+/// See the module docs. `P` is the payload carried next to the timestamp
+/// and the tie-break key among equal times.
+#[derive(Debug, Clone)]
+pub struct CalendarQueue<P> {
+    /// `ring[i]` covers `[base + i*width, base + (i+1)*width)`.
+    ring: VecDeque<Vec<(f64, P)>>,
+    /// Start of the front bucket's span.
+    base: f64,
+    /// Bucket width in seconds (> 0 always).
+    width: f64,
+    /// Whether `ring[0]` is sorted descending (min at the back).
+    front_sorted: bool,
+    /// Entries at or beyond the wheel horizon, unordered.
+    overflow: Vec<(f64, P)>,
+    /// Minimum time in `overflow` (`INFINITY` when empty) — lets bucket
+    /// rotation skip the overflow scan entirely when nothing is due.
+    overflow_min: f64,
+    /// Total live entries (ring + overflow).
+    len: usize,
+}
+
+impl<P: Ord + Copy> Default for CalendarQueue<P> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<P: Ord + Copy> CalendarQueue<P> {
+    pub fn new() -> Self {
+        CalendarQueue {
+            ring: VecDeque::new(),
+            base: 0.0,
+            width: 1.0,
+            front_sorted: true,
+            overflow: Vec::new(),
+            overflow_min: f64::INFINITY,
+            len: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn clear(&mut self) {
+        self.ring.clear();
+        self.overflow.clear();
+        self.overflow_min = f64::INFINITY;
+        self.front_sorted = true;
+        self.len = 0;
+    }
+
+    /// Insert `(t, p)`. `t` must not be NaN (event times are arithmetic
+    /// over finite inputs; this is a debug assertion, not a runtime gate).
+    pub fn push(&mut self, t: f64, p: P) {
+        debug_assert!(!t.is_nan(), "calendar queue entries need a real time");
+        self.len += 1;
+        if self.ring.is_empty() {
+            // First entry (or first after clear): seed the geometry.
+            self.rebuild_from(vec![(t, p)]);
+            return;
+        }
+        if t < self.base {
+            // Past-due push: clamp into the front bucket; ordering is
+            // restored by the sort before the next pop.
+            self.push_front_bucket((t, p));
+            return;
+        }
+        let idx = ((t - self.base) / self.width) as usize;
+        if idx == 0 {
+            self.push_front_bucket((t, p));
+        } else if idx < self.ring.len() {
+            self.ring[idx].push((t, p));
+        } else {
+            self.overflow_min = self.overflow_min.min(t);
+            self.overflow.push((t, p));
+            // Overflow pressure: the geometry no longer matches where the
+            // entries actually live — re-derive it from the population.
+            if self.overflow.len() > self.len / 2 + 64 {
+                self.rebuild_all();
+            }
+        }
+    }
+
+    /// Earliest `(time, payload)` without removing it.
+    pub fn peek(&mut self) -> Option<(f64, P)> {
+        self.settle_front()?;
+        self.ring[0].last().copied()
+    }
+
+    /// Remove and return the earliest `(time, payload)`.
+    pub fn pop(&mut self) -> Option<(f64, P)> {
+        self.settle_front()?;
+        self.len -= 1;
+        self.ring[0].pop()
+    }
+
+    // ------------------------------------------------------- internals
+
+    fn push_front_bucket(&mut self, e: (f64, P)) {
+        let front = &mut self.ring[0];
+        if self.front_sorted {
+            // Keep the descending sort: insert after every entry greater
+            // than `e`, so the minimum stays at the back.
+            let pos = front.partition_point(|x| cmp_entries(x, &e) == Ordering::Greater);
+            front.insert(pos, e);
+        } else {
+            front.push(e);
+        }
+    }
+
+    /// Make `ring[0]` the non-empty, sorted bucket holding the global
+    /// minimum. Returns `None` iff the queue is empty.
+    fn settle_front(&mut self) -> Option<()> {
+        if self.len == 0 {
+            return None;
+        }
+        loop {
+            // Pull overflow entries due within the front bucket's span.
+            let horizon = self.base + self.width;
+            if self.overflow_min < horizon {
+                let mut i = 0;
+                while i < self.overflow.len() {
+                    if self.overflow[i].0 < horizon {
+                        let e = self.overflow.swap_remove(i);
+                        self.ring[0].push(e);
+                        self.front_sorted = false;
+                    } else {
+                        i += 1;
+                    }
+                }
+                self.overflow_min =
+                    self.overflow.iter().fold(f64::INFINITY, |m, e| m.min(e.0));
+            }
+            if !self.ring[0].is_empty() {
+                if !self.front_sorted {
+                    self.ring[0].sort_by(|a, b| cmp_entries(b, a));
+                    self.front_sorted = true;
+                }
+                return Some(());
+            }
+            if self.len == self.overflow.len() {
+                // The wheel is fully drained and everything live sits in
+                // the overflow: re-derive the geometry around it.
+                self.rebuild_all();
+                continue;
+            }
+            // Rotate: the front bucket is empty but a later one is not.
+            let empty = self.ring.pop_front().expect("ring is never empty here");
+            self.ring.push_back(empty);
+            self.base += self.width;
+            self.front_sorted = true; // an empty bucket is trivially sorted
+        }
+    }
+
+    fn rebuild_all(&mut self) {
+        let mut all: Vec<(f64, P)> = Vec::with_capacity(self.len);
+        for b in self.ring.iter_mut() {
+            all.append(b);
+        }
+        all.append(&mut self.overflow);
+        self.overflow_min = f64::INFINITY;
+        self.rebuild_from(all);
+    }
+
+    /// Re-derive bucket geometry from `entries` (the full live set) and
+    /// distribute them. Deterministic in content only.
+    fn rebuild_from(&mut self, entries: Vec<(f64, P)>) {
+        debug_assert_eq!(entries.len() + self.overflow.len(), self.len);
+        let nb = entries.len().next_power_of_two().clamp(16, 4096);
+        let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+        for e in &entries {
+            lo = lo.min(e.0);
+            hi = hi.max(e.0);
+        }
+        let span = hi - lo;
+        let mut width = span / nb as f64;
+        if !(width > 0.0) || !width.is_finite() {
+            // Empty span (all entries coincident) or an underflowed
+            // quotient: any positive width is correct, 1 s is neutral.
+            width = if span > 0.0 { span } else { 1.0 };
+        }
+        self.base = lo;
+        self.width = width;
+        self.ring.clear();
+        self.ring.resize(nb, Vec::new());
+        self.front_sorted = true;
+        for (t, p) in entries {
+            // `hi` itself maps to index nb; clamp the distribution — every
+            // entry here is inside [lo, hi] by construction.
+            let idx = (((t - lo) / width) as usize).min(nb - 1);
+            if idx == 0 {
+                self.push_front_bucket((t, p));
+            } else {
+                self.ring[idx].push((t, p));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+
+    /// Reference min-order via the heap the calendar replaces.
+    #[derive(Default)]
+    struct RefHeap {
+        heap: BinaryHeap<Reverse<(u64, usize)>>,
+    }
+
+    impl RefHeap {
+        // total_cmp order == integer order of the sign-adjusted bit
+        // pattern; tests only push non-negative times, where the raw
+        // bit pattern suffices.
+        fn push(&mut self, t: f64, p: usize) {
+            self.heap.push(Reverse((t.to_bits(), p)));
+        }
+        fn pop(&mut self) -> Option<(f64, usize)> {
+            self.heap.pop().map(|Reverse((b, p))| (f64::from_bits(b), p))
+        }
+    }
+
+    #[test]
+    fn drains_in_time_then_payload_order() {
+        let mut q = CalendarQueue::new();
+        for (t, p) in [(5.0, 1), (1.0, 9), (5.0, 0), (3.0, 4), (1.0, 2)] {
+            q.push(t, p);
+        }
+        let mut got = Vec::new();
+        while let Some(e) = q.pop() {
+            got.push(e);
+        }
+        assert_eq!(got, vec![(1.0, 2), (1.0, 9), (3.0, 4), (5.0, 0), (5.0, 1)]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn peek_matches_pop_and_len_tracks() {
+        let mut q = CalendarQueue::new();
+        q.push(2.0, 7usize);
+        q.push(0.5, 3usize);
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.peek(), Some((0.5, 3)));
+        assert_eq!(q.pop(), Some((0.5, 3)));
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.pop(), Some((2.0, 7)));
+        assert_eq!(q.pop(), None);
+        assert_eq!(q.peek(), None);
+    }
+
+    #[test]
+    fn past_due_push_still_pops_first() {
+        let mut q = CalendarQueue::new();
+        // Establish geometry well past zero, then push an earlier entry.
+        for i in 0..100usize {
+            q.push(1000.0 + i as f64, i);
+        }
+        q.pop();
+        q.push(1.0, 777usize);
+        assert_eq!(q.pop(), Some((1.0, 777)));
+    }
+
+    #[test]
+    fn duplicates_are_kept() {
+        let mut q = CalendarQueue::new();
+        q.push(4.0, 2usize);
+        q.push(4.0, 2usize);
+        assert_eq!(q.pop(), Some((4.0, 2)));
+        assert_eq!(q.pop(), Some((4.0, 2)));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn clear_resets_to_empty() {
+        let mut q = CalendarQueue::new();
+        for i in 0..50usize {
+            q.push(i as f64 * 3.3, i);
+        }
+        q.clear();
+        assert!(q.is_empty());
+        assert_eq!(q.pop(), None);
+        q.push(1.0, 1usize);
+        assert_eq!(q.pop(), Some((1.0, 1)));
+    }
+
+    #[test]
+    fn prop_matches_reference_heap_under_random_interleaving() {
+        forall("calendar-vs-heap", 0xCA1E, 64, |rng| {
+            let mut cal = CalendarQueue::new();
+            let mut heap = RefHeap::default();
+            // Mixed time scales: sub-second jitter, minutes, and
+            // week-scale outliers that force overflow + rebuild.
+            for step in 0..400 {
+                if rng.f64() < 0.65 || cal.is_empty() {
+                    let t = match rng.index(3) {
+                        0 => rng.f64(),
+                        1 => rng.f64() * 600.0,
+                        _ => rng.f64() * 604_800.0,
+                    };
+                    let p = rng.index(64);
+                    cal.push(t, p);
+                    heap.push(t, p);
+                } else {
+                    let got = cal.pop();
+                    let want = heap.pop();
+                    if got != want {
+                        return Err(format!(
+                            "step {step}: calendar popped {got:?}, heap {want:?}"
+                        ));
+                    }
+                }
+            }
+            while let Some(want) = heap.pop() {
+                let got = cal.pop();
+                if got != Some(want) {
+                    return Err(format!("drain: calendar {got:?} != heap {want:?}"));
+                }
+            }
+            if !cal.is_empty() {
+                return Err(format!("{} entries left after drain", cal.len()));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_coincident_timestamps_pop_in_payload_order() {
+        forall("calendar-coincident", 0xBEEF, 32, |rng| {
+            let mut cal = CalendarQueue::new();
+            let t = rng.f64() * 1e5;
+            let n = 2 + rng.index(30);
+            let mut payloads: Vec<usize> = (0..n).collect();
+            // Push in a shuffled order; pops must come back ascending.
+            for i in (1..n).rev() {
+                payloads.swap(i, rng.index(i + 1));
+            }
+            for &p in &payloads {
+                cal.push(t, p);
+            }
+            for want in 0..n {
+                let got = cal.pop();
+                if got != Some((t, want)) {
+                    return Err(format!("expected ({t}, {want}), got {got:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -3,13 +3,22 @@
 //! Owns the [`SimState`] plus incrementally-maintained index caches so
 //! that (a) policies read the pending/running sets as slices instead of
 //! re-allocating `Vec`s per call, and (b) the engine selects its next
-//! event from min-heaps in O(log n) instead of rescanning every running
-//! job per event. All mutation goes through the methods here and through
-//! [`SchedContext::apply`](super::txn) — the caches can never drift from
-//! the state they index.
+//! event from calendar queues in O(1) amortized instead of rescanning
+//! every running job per event. All mutation goes through the methods
+//! here and through [`SchedContext::apply`](super::txn) — the caches can
+//! never drift from the state they index.
+//!
+//! Since the million-job event core rework (DESIGN.md §15) the per-job
+//! progress quantities are **lazily integrated**: `advance` no longer
+//! sweeps the running/waiting sets, it only moves the clock and fires due
+//! events. `remaining_iters`, `service_gpu_s` and `queued_s` are settled
+//! on rate transitions via the [`ProgressLedger`] anchors and read
+//! through the closed-form accessors ([`SchedContext::remaining_iters`],
+//! [`SchedContext::attained_service`], [`SchedContext::queued_seconds`]).
+//! Reading the raw `SimState` fields of a *running* (or waiting) job
+//! through `Deref` yields the value at its last settle, not at `now` —
+//! in-tree consumers go through the accessors.
 
-use std::cmp::Reverse;
-use std::collections::BinaryHeap;
 use std::ops::Deref;
 
 use crate::cluster::overlay::OverlayPool;
@@ -19,29 +28,13 @@ use crate::obskit::Obs;
 use crate::perf::interference::InterferenceModel;
 use crate::sim::SimState;
 
+use super::calendar::CalendarQueue;
+use super::ledger::{EagerReference, ProgressLedger};
 use super::Event;
 
 /// Eligibility slack shared with the legacy `SimState` scans: a time `t`
 /// counts as reached once `now + EPS >= t`.
 pub(super) const T_EPS: f64 = 1e-9;
-
-/// Total-order wrapper so event times can live in a [`BinaryHeap`].
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub(super) struct OrdF64(pub f64);
-
-impl Eq for OrdF64 {}
-
-impl PartialOrd for OrdF64 {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-
-impl Ord for OrdF64 {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.0.total_cmp(&other.0)
-    }
-}
 
 /// Insert into a sorted id set (no-op if present).
 pub(super) fn set_insert(v: &mut Vec<JobId>, id: JobId) {
@@ -74,12 +67,21 @@ fn sort_arrivals_desc(state: &SimState, ids: &mut [JobId]) {
     });
 }
 
+/// Float agreement for the eager reference sweep: lazy settling and the
+/// eager per-event loops differ only in summation order, so they agree to
+/// accumulated round-off, not bitwise.
+fn close(lazy: f64, eager: f64) -> bool {
+    (lazy - eager).abs() <= 1e-6 + 1e-9 * eager.abs()
+}
+
 /// The read view handed to policies and the single mutation path shared
 /// by the simulator engine and the physical coordinator.
 ///
 /// Derefs to [`SimState`] for read access to jobs, cluster, interference
-/// model, `not_before` and `service_gpu_s`; the state itself is private
-/// so every transition flows through the validated methods below.
+/// model and `not_before`; the state itself is private so every
+/// transition flows through the validated methods below. For the lazily
+/// integrated quantities of live jobs, use the accessors
+/// ([`SchedContext::remaining_iters`] & friends), not the raw fields.
 #[derive(Debug, Clone)]
 pub struct SchedContext {
     pub(super) state: SimState,
@@ -94,34 +96,23 @@ pub struct SchedContext {
     /// Jobs not yet arrived, sorted by (arrival, id) descending so the
     /// next arrival pops from the back.
     pub(super) future_arrivals: Vec<JobId>,
-    /// Min-heap of `(not_before, job)` restart-penalty expiries.
-    pub(super) restart_heap: BinaryHeap<Reverse<(OrdF64, JobId)>>,
-    /// Min-heap of `(projected finish, job, epoch)`; entries whose epoch
-    /// is stale (the job's progress rate changed since) are skipped.
-    pub(super) finish_heap: BinaryHeap<Reverse<(OrdF64, JobId, u64)>>,
-    /// Per-job rate epoch, bumped whenever the job's iteration rate
-    /// changes (start, preempt, finish, or a co-runner change).
-    pub(super) rate_epoch: Vec<u64>,
+    /// Calendar queue of `(not_before, job)` restart-penalty expiries.
+    pub(super) restart_q: CalendarQueue<JobId>,
+    /// Calendar queue of `(projected finish, (job, epoch))`; entries whose
+    /// epoch is stale (the job's rate changed since) are skipped.
+    pub(super) finish_q: CalendarQueue<(JobId, u64)>,
+    /// The lazy-integration anchors + per-job rate caches (SoA hot
+    /// fields; see the module docs of [`super::ledger`]).
+    pub(super) ledger: ProgressLedger,
     /// Count of `Finished` jobs (O(1) `all_finished`).
     pub(super) finished: usize,
-    /// Whether finish projections are maintained. True under the
-    /// simulated clock; the first `advance_wall` call turns it off —
+    /// Whether the simulated clock is driving progress: finish
+    /// projections are maintained and `remaining_iters` integrates at the
+    /// Eq. 7 × ξ rates. True until the first `advance_wall` call —
     /// projections are simulated-time quantities, meaningless against
-    /// the wall clock, and the coordinator never consults them.
+    /// the wall clock, where real execution reports progress via
+    /// [`SchedContext::note_progress`].
     pub(super) project_finishes: bool,
-    /// Placement-resolved effective iteration time per job, memoized as
-    /// `(rate epoch at computation, seconds)`; a stale epoch means
-    /// invalid. Start/preempt/finish and co-runner changes bump
-    /// `rate_epoch`, so invalidation rides the existing plumbing.
-    iter_cache: Vec<(u64, f64)>,
-    /// Estimated solo seconds/iteration per job at its current
-    /// accumulation step (`iter_time(accum) × est_factor`), maintained
-    /// eagerly: it only changes when a `Start` sets a new accumulation
-    /// step, so `estimated_remaining` — the SJF-family sort key, read
-    /// O(n log n) times per event — is a single multiply instead of a
-    /// profile walk (`estimate/*` in `cargo bench --bench
-    /// sched_overhead`).
-    pub(super) est_rate: Vec<f64>,
     /// Scratch-buffer pool for [`SchedContext::overlay`] planning views.
     overlay_pool: OverlayPool,
     /// Pooled id buffer for [`SchedContext::collect_completions`] — with
@@ -138,6 +129,11 @@ pub struct SchedContext {
     busy_gpu_s: f64,
     /// GPU-seconds with ≥ 2 resident jobs (co-located intervals).
     shared_gpu_s: f64,
+    /// When armed ([`SchedContext::verify_against_eager_reference`]),
+    /// every `advance` replays the pre-ledger eager sweeps over shadow
+    /// vectors and asserts the lazy closed forms agree. Verification
+    /// only — `None` on every production path.
+    eager_ref: Option<Box<EagerReference>>,
 }
 
 impl Deref for SchedContext {
@@ -167,25 +163,24 @@ impl SchedContext {
         };
         let mut future_arrivals: Vec<JobId> = (0..n).collect();
         sort_arrivals_desc(&state, &mut future_arrivals);
-        let est_rate = state.jobs.iter().map(est_rate_of).collect();
+        let ledger = ProgressLedger::new(&state.jobs, 0.0);
         SchedContext {
             state,
             pending: Vec::new(),
             running: Vec::new(),
             waiting: Vec::new(),
             future_arrivals,
-            restart_heap: BinaryHeap::new(),
-            finish_heap: BinaryHeap::new(),
-            rate_epoch: vec![0; n],
+            restart_q: CalendarQueue::new(),
+            finish_q: CalendarQueue::new(),
+            ledger,
             finished: 0,
             project_finishes: true,
-            iter_cache: vec![(u64::MAX, 0.0); n],
-            est_rate,
             overlay_pool: OverlayPool::default(),
             completions_scratch: Vec::new(),
             obs: Obs::disabled(),
             busy_gpu_s: 0.0,
             shared_gpu_s: 0.0,
+            eager_ref: None,
         }
     }
 
@@ -193,30 +188,30 @@ impl SchedContext {
     /// synthetic mid-simulation states), rebuilding every cache. Unlike
     /// [`SchedContext::new`], jobs whose arrival time has already passed
     /// are indexed as pending/waiting immediately — no `Arrival` events
-    /// fire for them.
+    /// fire for them. The stored per-job quantities are taken as settled
+    /// at `state.now` (anchors start here).
     pub fn from_state(state: SimState) -> Self {
         let n = state.jobs.len();
-        let est_rate = state.jobs.iter().map(est_rate_of).collect();
+        let now = state.now;
+        let ledger = ProgressLedger::new(&state.jobs, now);
         let mut ctx = SchedContext {
             state,
             pending: Vec::new(),
             running: Vec::new(),
             waiting: Vec::new(),
             future_arrivals: Vec::new(),
-            restart_heap: BinaryHeap::new(),
-            finish_heap: BinaryHeap::new(),
-            rate_epoch: vec![0; n],
+            restart_q: CalendarQueue::new(),
+            finish_q: CalendarQueue::new(),
+            ledger,
             finished: 0,
             project_finishes: true,
-            iter_cache: vec![(u64::MAX, 0.0); n],
-            est_rate,
             overlay_pool: OverlayPool::default(),
             completions_scratch: Vec::new(),
             obs: Obs::disabled(),
             busy_gpu_s: 0.0,
             shared_gpu_s: 0.0,
+            eager_ref: None,
         };
-        let now = ctx.state.now;
         for id in 0..n {
             let rec = &ctx.state.jobs[id];
             match rec.state {
@@ -225,11 +220,11 @@ impl SchedContext {
                 JobState::Pending | JobState::Preempted => {
                     if rec.spec.arrival_s <= now + T_EPS {
                         ctx.waiting.push(id);
+                        ctx.ledger.wait_since[id] = now;
                         if ctx.state.not_before[id] <= now + T_EPS {
                             ctx.pending.push(id);
                         } else {
-                            ctx.restart_heap
-                                .push(Reverse((OrdF64(ctx.state.not_before[id]), id)));
+                            ctx.restart_q.push(ctx.state.not_before[id], id);
                         }
                     } else {
                         ctx.future_arrivals.push(id);
@@ -247,8 +242,10 @@ impl SchedContext {
         ctx
     }
 
-    /// Consume the context, returning the final world state.
-    pub fn into_state(self) -> SimState {
+    /// Consume the context, returning the final world state with every
+    /// lazily-integrated quantity settled at `now`.
+    pub fn into_state(mut self) -> SimState {
+        self.settle_all();
         self.state
     }
 
@@ -317,14 +314,45 @@ impl SchedContext {
     /// (start, preempt, finish, co-runner change) instead of once per
     /// event.
     pub fn cached_iter_time(&mut self, id: JobId) -> f64 {
-        let epoch = self.rate_epoch[id];
-        let (cached_epoch, cached) = self.iter_cache[id];
+        let epoch = self.ledger.epoch[id];
+        let (cached_epoch, cached) = self.ledger.iter_cache[id];
         if cached_epoch == epoch {
             return cached;
         }
         let t = self.state.effective_iter_time(id);
-        self.iter_cache[id] = (epoch, t);
+        self.ledger.iter_cache[id] = (epoch, t);
         t
+    }
+
+    // ------------------------------------------- lazy-quantity accessors
+
+    /// `id`'s true remaining iterations at `now`.
+    ///
+    /// Closed-form lazy read: the stored `remaining_iters` is the value at
+    /// the job's last settle; a running (sim-mode) job extrapolates down
+    /// its current rate from there. For every non-integrating job the
+    /// sentinel rate (∞) makes this bit-identical to the stored field —
+    /// the SJF-family sort over *pending* jobs reads exactly what the
+    /// eager core read.
+    pub fn remaining_iters(&self, id: JobId) -> f64 {
+        let dt = self.state.now - self.ledger.anchor_s[id];
+        (self.state.jobs[id].remaining_iters - dt / self.ledger.iter_s[id]).max(0.0)
+    }
+
+    /// `id`'s true attained GPU service (GPU-seconds) at `now` — the
+    /// Tiresias queue-demotion key. Lazy over the settle anchor; exact
+    /// passthrough for jobs holding no GPUs.
+    pub fn attained_service(&self, id: JobId) -> f64 {
+        let dt = self.state.now - self.ledger.anchor_s[id];
+        self.state.service_gpu_s[id] + self.state.jobs[id].gpus_held.len() as f64 * dt
+    }
+
+    /// `id`'s true accrued queueing delay (seconds) at `now`. Lazy over
+    /// the waiting-entry instant; exact passthrough when not waiting.
+    pub fn queued_seconds(&self, id: JobId) -> f64 {
+        let since = self.ledger.wait_since[id];
+        let base = self.state.jobs[id].queued_s;
+        if since.is_finite() { base + (self.state.now - since) } else { base }
     }
 
     /// The scheduler's *belief* about `id`'s remaining solo runtime:
@@ -338,7 +366,7 @@ impl SchedContext {
     /// O(1): the per-iteration factor is cached on the context and only
     /// changes when a `Start` sets a new accumulation step.
     pub fn estimated_remaining(&self, id: JobId) -> f64 {
-        self.est_rate[id] * self.state.jobs[id].remaining_iters
+        self.ledger.est_rate[id] * self.remaining_iters(id)
     }
 
     pub fn all_finished(&self) -> bool {
@@ -349,6 +377,47 @@ impl SchedContext {
         self.state.jobs.len() - self.finished
     }
 
+    // ------------------------------------------------- settle machinery
+
+    /// Fold `id`'s lazily-integrated progress and service into the stored
+    /// fields and move its anchor to `now`. Exact no-op (bitwise) for
+    /// jobs that are not integrating and hold no GPUs — see the sentinel
+    /// table in [`super::ledger`]. Must run *before* any transition that
+    /// changes the job's rate or gang (the old values parameterize the
+    /// interval being folded).
+    pub(super) fn settle_job(&mut self, id: JobId) {
+        let dt = self.state.now - self.ledger.anchor_s[id];
+        let rec = &mut self.state.jobs[id];
+        rec.remaining_iters = (rec.remaining_iters - dt / self.ledger.iter_s[id]).max(0.0);
+        self.state.service_gpu_s[id] += rec.gpus_held.len() as f64 * dt;
+        self.ledger.anchor_s[id] = self.state.now;
+    }
+
+    /// Fold `id`'s accrued queueing delay and stop the accrual (the job
+    /// is leaving the waiting set: start or cancel).
+    pub(super) fn settle_wait(&mut self, id: JobId) {
+        let since = self.ledger.wait_since[id];
+        if since.is_finite() {
+            self.state.jobs[id].queued_s += self.state.now - since;
+            self.ledger.wait_since[id] = f64::NAN;
+        }
+    }
+
+    /// Settle every job at `now` (progress, service, and queueing — jobs
+    /// still waiting keep accruing from a refreshed anchor). Used when
+    /// the raw `SimState` must be externally consistent: `into_state` and
+    /// the sim→wall mode switch.
+    pub(super) fn settle_all(&mut self) {
+        for id in 0..self.state.jobs.len() {
+            self.settle_job(id);
+            let since = self.ledger.wait_since[id];
+            if since.is_finite() {
+                self.state.jobs[id].queued_s += self.state.now - since;
+                self.ledger.wait_since[id] = self.state.now;
+            }
+        }
+    }
+
     // ---------------------------------------------- next-event queries
 
     /// Earliest future arrival, if any.
@@ -357,50 +426,60 @@ impl SchedContext {
     }
 
     /// Earliest restart-penalty expiry among preempted jobs, if any.
-    pub fn next_restart(&self) -> Option<f64> {
-        self.restart_heap.peek().map(|&Reverse((OrdF64(t), _))| t)
+    pub fn next_restart(&mut self) -> Option<f64> {
+        self.restart_q.peek().map(|(t, _)| t)
     }
 
     /// Earliest projected completion among running jobs, if any.
     ///
-    /// O(log n) amortized: the heap holds one live entry per running job
-    /// (re-pushed whenever a rate changes); stale entries are popped here.
-    /// Simulated-clock backends only — after the first `advance_wall`
-    /// call projections are no longer maintained and this returns `None`
-    /// (wall-mode completions come from real execution progress).
+    /// O(1) amortized: the calendar queue holds one live entry per
+    /// running job (re-pushed whenever a rate changes); stale entries are
+    /// popped here. Simulated-clock backends only — after the first
+    /// `advance_wall` call projections are no longer maintained and this
+    /// returns `None` (wall-mode completions come from real execution
+    /// progress).
     pub fn next_finish(&mut self) -> Option<f64> {
-        while let Some(&Reverse((OrdF64(t), id, epoch))) = self.finish_heap.peek() {
-            if epoch == self.rate_epoch[id] {
+        while let Some((t, (id, epoch))) = self.finish_q.peek() {
+            if epoch == self.ledger.epoch[id] {
                 return Some(t);
             }
-            let _ = self.finish_heap.pop();
+            let _ = self.finish_q.pop();
         }
         None
     }
 
     // ------------------------------------------------ time advancement
 
-    /// Simulator clock: advance to `t`, integrating job progress at the
-    /// piecewise-constant Eq. 7 × ξ rates, accruing `service_gpu_s` and
-    /// `queued_s`, and firing `Arrival`/`RestartEligible` events due by
-    /// `t` into `events`.
+    /// Simulator clock: advance to `t` and fire `Arrival`/
+    /// `RestartEligible` events due by `t` into `events`. Job progress at
+    /// the piecewise-constant Eq. 7 × ξ rates, `service_gpu_s` and
+    /// `queued_s` all integrate lazily — no per-job work happens here.
     pub fn advance_sim(&mut self, t: f64, events: &mut Vec<Event>) {
-        self.advance(t, true, events);
+        self.advance(t, events);
     }
 
-    /// Wall clock (physical coordinator): advance to `t`, accruing
-    /// `service_gpu_s` and `queued_s` and firing events — but *not*
-    /// integrating `remaining_iters`, which real execution drives through
-    /// [`SchedContext::note_progress`].
+    /// Wall clock (physical coordinator): advance to `t`, firing due
+    /// events. `remaining_iters` does *not* integrate in wall mode —
+    /// real execution drives it through [`SchedContext::note_progress`];
+    /// service and queueing accrue lazily exactly as in sim mode.
     pub fn advance_wall(&mut self, t: f64, events: &mut Vec<Event>) {
-        // Wall mode never consults next_finish(); stop maintaining (and
-        // accumulating) simulated-time projections from here on.
-        self.project_finishes = false;
-        self.finish_heap.clear();
-        self.advance(t, false, events);
+        if self.project_finishes {
+            // First wall jump: fold any simulated-rate progress accrued
+            // so far, then stop integrating and drop the projections —
+            // they are simulated-time quantities the coordinator never
+            // consults.
+            self.settle_all();
+            self.project_finishes = false;
+            for r in self.ledger.iter_s.iter_mut() {
+                *r = f64::INFINITY;
+            }
+            self.finish_q.clear();
+            self.eager_ref = None;
+        }
+        self.advance(t, events);
     }
 
-    fn advance(&mut self, t: f64, integrate: bool, events: &mut Vec<Event>) {
+    fn advance(&mut self, t: f64, events: &mut Vec<Event>) {
         let dt = t - self.state.now;
         if dt > 0.0 {
             // Occupancy is piecewise-constant between events, so the
@@ -410,24 +489,9 @@ impl SchedContext {
             let shared = busy - self.state.cluster.one_job_count();
             self.busy_gpu_s += busy as f64 * dt;
             self.shared_gpu_s += shared as f64 * dt;
-            // Take the sets out so the loop can mutate `state` freely; the
-            // transitions below never touch them mid-loop.
-            let running = std::mem::take(&mut self.running);
-            for &id in &running {
-                if integrate {
-                    let it = self.cached_iter_time(id);
-                    let rec = &mut self.state.jobs[id];
-                    rec.remaining_iters = (rec.remaining_iters - dt / it).max(0.0);
-                }
-                let held = self.state.jobs[id].gpus_held.len() as f64;
-                self.state.service_gpu_s[id] += held * dt;
-            }
-            self.running = running;
-            let waiting = std::mem::take(&mut self.waiting);
-            for &id in &waiting {
-                self.state.jobs[id].queued_s += dt;
-            }
-            self.waiting = waiting;
+        }
+        if self.eager_ref.is_some() {
+            self.eager_reference_step(dt);
         }
         self.state.now = t;
 
@@ -438,13 +502,16 @@ impl SchedContext {
             self.future_arrivals.pop();
             set_insert(&mut self.waiting, id);
             set_insert(&mut self.pending, id);
+            // Queue-time accrual starts at the event instant, exactly as
+            // the eager per-advance loop did.
+            self.ledger.wait_since[id] = t;
             events.push(Event::Arrival { job: id });
         }
-        while let Some(&Reverse((OrdF64(nb), id))) = self.restart_heap.peek() {
+        while let Some((nb, id)) = self.restart_q.peek() {
             if nb > t + T_EPS {
                 break;
             }
-            self.restart_heap.pop();
+            self.restart_q.pop();
             // Guards: the job may have restarted meanwhile (zero-penalty
             // preempt + same-transaction start), or this entry may be
             // stale because a newer preemption pushed a later expiry.
@@ -455,62 +522,72 @@ impl SchedContext {
                 events.push(Event::RestartEligible { job: id });
             }
         }
+        if self.eager_ref.is_some() {
+            self.eager_reference_verify();
+        }
     }
 
     // ------------------------------------------------ completion path
 
-    /// Finish every running job whose `remaining_iters <= eps`, firing a
-    /// `Completion` event per job (ascending id). Shared by the engine
+    /// Finish every running job due to complete by `now`, firing a
+    /// `Completion` event per job in **ascending id order** (pinned by an
+    /// explicit sort — under the calendar queue the drain surfaces jobs
+    /// in projected-finish order, not id order). Shared by the engine
     /// (`eps = eps_iters`) and the coordinator (`eps = 0`). The id buffer
-    /// is pooled on the context (taken out while `finish_job` mutates the
-    /// sets, put back after), so the steady-state event loop allocates
+    /// is pooled on the context, so the steady-state event loop allocates
     /// nothing here.
+    ///
+    /// Sim mode drains due finish projections: each due job settles, and
+    /// either completes (residual ≤ eps) or — when round-off left the
+    /// residual above eps — re-projects from the settled residual, the
+    /// per-event refresh the old rescan engine got for free. A residual
+    /// whose runtime is below f64 resolution at `now` completes rather
+    /// than stall the clock. Wall mode keeps the O(running) scan:
+    /// progress arrives from real execution, there are no projections.
     pub fn collect_completions(&mut self, eps: f64, events: &mut Vec<Event>) {
         let mut done = std::mem::take(&mut self.completions_scratch);
         done.clear();
-        done.extend(
-            self.running
-                .iter()
-                .copied()
-                .filter(|&id| self.state.jobs[id].remaining_iters <= eps),
-        );
+        if self.project_finishes {
+            let now = self.state.now;
+            loop {
+                let Some((t, (id, epoch))) = self.finish_q.peek() else { break };
+                if t > now + T_EPS {
+                    break;
+                }
+                self.finish_q.pop();
+                if epoch != self.ledger.epoch[id] {
+                    continue; // stale projection: the rate changed since
+                }
+                debug_assert_eq!(self.state.jobs[id].state, JobState::Running);
+                self.settle_job(id);
+                let rem = self.state.jobs[id].remaining_iters;
+                if rem <= eps {
+                    done.push(id);
+                    continue;
+                }
+                let t2 = now + rem * self.ledger.iter_s[id];
+                if t2 > now {
+                    // Same epoch: the entry just consumed was the only
+                    // live one, this refresh replaces it.
+                    self.finish_q.push(t2, (id, epoch));
+                } else {
+                    done.push(id); // below clock resolution at `now`
+                }
+            }
+        } else {
+            done.extend(
+                self.running
+                    .iter()
+                    .copied()
+                    .filter(|&id| self.state.jobs[id].remaining_iters <= eps),
+            );
+        }
+        done.sort_unstable();
         for &id in &done {
             self.finish_job(id);
             events.push(Event::Completion { job: id });
         }
         self.completions_scratch = done;
-    }
-
-    /// Engine helper for floating-point finish-projection stalls.
-    ///
-    /// A projected completion can fire while integration leaves a
-    /// residual just above the engine's `eps_iters` (at large `now` the
-    /// round-off of `now + remaining·t_iter` undershoots by up to
-    /// ~ulp(now)/2). The projection was pushed once and nothing bumps the
-    /// job's rate epoch, so without intervention the next-event time is
-    /// pinned at `now` forever. For every live heap entry not strictly in
-    /// the future this either (a) re-pushes a fresh projection from the
-    /// current residual when that lands strictly after `now` — the
-    /// per-event recomputation the old rescan engine got for free — or
-    /// (b) completes the job through the normal completion path when the
-    /// residual's runtime is below f64 resolution at `now`, firing its
-    /// `Completion` into `events`.
-    pub fn resolve_finish_stall(&mut self, events: &mut Vec<Event>) {
-        while let Some(t) = self.next_finish() {
-            if t > self.state.now {
-                break;
-            }
-            let Some(&std::cmp::Reverse((_, id, _))) = self.finish_heap.peek() else {
-                break;
-            };
-            let rem_t = self.state.jobs[id].remaining_iters * self.cached_iter_time(id);
-            if self.state.now + rem_t > self.state.now {
-                self.reproject(id);
-            } else {
-                self.finish_job(id);
-                events.push(Event::Completion { job: id });
-            }
-        }
     }
 
     fn finish_job(&mut self, id: JobId) {
@@ -519,9 +596,10 @@ impl SchedContext {
 
     /// Shared teardown for a running job leaving the cluster for good —
     /// natural completion (`reason = "finish"`) or a daemon-side cancel
-    /// (`reason = "cancel"`). Releases its GPUs, marks it `Finished`,
-    /// and reprojects any co-runners now running faster.
+    /// (`reason = "cancel"`). Settles, releases its GPUs, marks it
+    /// `Finished`, and reprojects any co-runners now running faster.
     fn retire_running(&mut self, id: JobId, reason: &'static str) {
+        self.settle_job(id);
         let co = self.state.cluster.co_runners(id);
         self.state.cluster.release(id);
         let rec = &mut self.state.jobs[id];
@@ -531,7 +609,8 @@ impl SchedContext {
         rec.gpus_held.clear();
         set_remove(&mut self.running, id);
         self.finished += 1;
-        self.rate_epoch[id] += 1;
+        self.ledger.epoch[id] += 1;
+        self.ledger.iter_s[id] = f64::INFINITY;
         if self.obs.is_enabled() {
             self.obs.job_stopped(self.state.now, id, reason);
             for &c in &co {
@@ -560,9 +639,12 @@ impl SchedContext {
             "admitted arrivals must not predate now"
         );
         let rec = JobRecord::new(spec);
-        self.est_rate.push(est_rate_of(&rec));
-        self.rate_epoch.push(0);
-        self.iter_cache.push((u64::MAX, 0.0));
+        self.ledger.push_job(&rec, self.state.now);
+        if let Some(r) = self.eager_ref.as_mut() {
+            r.remaining.push(rec.remaining_iters);
+            r.service.push(0.0);
+            r.queued.push(0.0);
+        }
         self.state.not_before.push(0.0);
         self.state.service_gpu_s.push(0.0);
         self.state.jobs.push(rec);
@@ -593,19 +675,20 @@ impl SchedContext {
                 true
             }
             JobState::Pending | JobState::Preempted => {
+                self.settle_wait(id);
                 set_remove(&mut self.pending, id);
                 set_remove(&mut self.waiting, id);
                 if let Some(pos) = self.future_arrivals.iter().position(|&e| e == id) {
                     self.future_arrivals.remove(pos);
                 }
-                // Any restart_heap entry is left in place: the pop path
+                // Any restart_q entry is left in place: the pop path
                 // skips entries whose job is no longer Pending/Preempted.
                 let rec = &mut self.state.jobs[id];
                 rec.state = JobState::Finished;
                 rec.remaining_iters = 0.0;
                 rec.finish_s = Some(self.state.now);
                 self.finished += 1;
-                self.rate_epoch[id] += 1;
+                self.ledger.epoch[id] += 1;
                 if self.obs.is_enabled() {
                     self.obs.job_stopped(self.state.now, id, "cancel");
                 }
@@ -625,7 +708,8 @@ impl SchedContext {
     /// Physical mode: record one really-executed iteration of `job`.
     /// Returns false (and changes nothing) if the job is not running or
     /// already done — late progress reports from a worker are dropped,
-    /// exactly as before.
+    /// exactly as before. (Wall mode never integrates `remaining_iters`,
+    /// so the stored field is live here — no settle needed.)
     pub fn note_progress(&mut self, job: JobId) -> bool {
         let Some(rec) = self.state.jobs.get_mut(job) else { return false };
         if rec.state == JobState::Running && rec.remaining_iters > 0.0 {
@@ -638,16 +722,88 @@ impl SchedContext {
 
     // ------------------------------------------------ cache plumbing
 
-    /// Invalidate `id`'s finish projection (and its cached iteration
-    /// time, via the epoch bump) and, if it is running, push a fresh
-    /// projection at the current rate.
+    /// Settle `id` at its outgoing rate, invalidate its finish projection
+    /// (and its cached iteration time, via the epoch bump) and, if it is
+    /// running under the simulated clock, record the incoming integration
+    /// rate and push a fresh projection.
     pub(super) fn reproject(&mut self, id: JobId) {
-        self.rate_epoch[id] += 1;
+        self.settle_job(id);
+        self.ledger.epoch[id] += 1;
         if self.project_finishes && self.state.jobs[id].state == JobState::Running {
-            let t = self.state.now
-                + self.state.jobs[id].remaining_iters * self.cached_iter_time(id);
-            self.finish_heap.push(Reverse((OrdF64(t), id, self.rate_epoch[id])));
+            let it = self.cached_iter_time(id);
+            self.ledger.iter_s[id] = it;
+            let t = self.state.now + self.state.jobs[id].remaining_iters * it;
+            self.finish_q.push(t, (id, self.ledger.epoch[id]));
+        } else {
+            self.ledger.iter_s[id] = f64::INFINITY;
         }
+    }
+
+    // --------------------------------------- eager reference (verify)
+
+    /// Arm the eager reference sweep: from here on, every `advance`
+    /// replays the pre-ledger O(running)+O(waiting) per-event integration
+    /// loops over shadow vectors and panics if the lazy closed forms
+    /// disagree beyond accumulated round-off. Verification harness for
+    /// tests (`tests/event_core.rs` drives the six-policy golden traces
+    /// under it) — never enabled on production paths, and dropped on the
+    /// switch to wall mode (the sweep checks simulated integration).
+    pub fn verify_against_eager_reference(&mut self) {
+        let n = self.state.jobs.len();
+        self.eager_ref = Some(Box::new(EagerReference {
+            remaining: (0..n).map(|id| self.remaining_iters(id)).collect(),
+            service: (0..n).map(|id| self.attained_service(id)).collect(),
+            queued: (0..n).map(|id| self.queued_seconds(id)).collect(),
+        }));
+    }
+
+    /// The old eager sweep, verbatim, over the shadow vectors.
+    fn eager_reference_step(&mut self, dt: f64) {
+        let Some(mut r) = self.eager_ref.take() else { return };
+        if dt > 0.0 {
+            let running = std::mem::take(&mut self.running);
+            for &id in &running {
+                let it = self.cached_iter_time(id);
+                r.remaining[id] = (r.remaining[id] - dt / it).max(0.0);
+                let held = self.state.jobs[id].gpus_held.len() as f64;
+                r.service[id] += held * dt;
+            }
+            self.running = running;
+            for &id in &self.waiting {
+                r.queued[id] += dt;
+            }
+        }
+        self.eager_ref = Some(r);
+    }
+
+    fn eager_reference_verify(&mut self) {
+        let Some(r) = self.eager_ref.take() else { return };
+        for &id in &self.running {
+            let lazy = self.remaining_iters(id);
+            assert!(
+                close(lazy, r.remaining[id]),
+                "lazy remaining_iters({id}) = {lazy} diverged from eager sweep {} at t = {}",
+                r.remaining[id],
+                self.state.now
+            );
+            let lazy = self.attained_service(id);
+            assert!(
+                close(lazy, r.service[id]),
+                "lazy attained_service({id}) = {lazy} diverged from eager sweep {} at t = {}",
+                r.service[id],
+                self.state.now
+            );
+        }
+        for &id in &self.waiting {
+            let lazy = self.queued_seconds(id);
+            assert!(
+                close(lazy, r.queued[id]),
+                "lazy queued_seconds({id}) = {lazy} diverged from eager sweep {} at t = {}",
+                r.queued[id],
+                self.state.now
+            );
+        }
+        self.eager_ref = Some(r);
     }
 
     /// Debug check: the incremental caches must agree with a fresh scan
@@ -691,10 +847,43 @@ impl SchedContext {
         }
         for (id, rec) in self.state.jobs.iter().enumerate() {
             let fresh = est_rate_of(rec);
-            if self.est_rate[id].to_bits() != fresh.to_bits() {
+            if self.ledger.est_rate[id].to_bits() != fresh.to_bits() {
                 return Err(format!(
                     "est_rate cache for job {id} is {} but recomputes to {fresh}",
-                    self.est_rate[id]
+                    self.ledger.est_rate[id]
+                ));
+            }
+            // Ledger invariants (the eager cross-check of the lazy core):
+            // a job integrates iff it is running under the simulated
+            // clock, and the recorded rate must be the placement-resolved
+            // iteration time, to the bit.
+            let integrating = self.project_finishes && rec.state == JobState::Running;
+            if integrating != self.ledger.iter_s[id].is_finite() {
+                return Err(format!(
+                    "job {id} ({:?}) has iter_s = {} but integrating = {integrating}",
+                    rec.state, self.ledger.iter_s[id]
+                ));
+            }
+            if integrating {
+                let fresh = self.state.effective_iter_time(id);
+                if self.ledger.iter_s[id].to_bits() != fresh.to_bits() {
+                    return Err(format!(
+                        "job {id} integrates at {} but placement resolves to {fresh}",
+                        self.ledger.iter_s[id]
+                    ));
+                }
+            }
+            let in_waiting = self.waiting.binary_search(&id).is_ok();
+            if in_waiting != self.ledger.wait_since[id].is_finite() {
+                return Err(format!(
+                    "job {id} wait_since = {} but waiting-set membership = {in_waiting}",
+                    self.ledger.wait_since[id]
+                ));
+            }
+            if self.ledger.anchor_s[id] > self.state.now + T_EPS {
+                return Err(format!(
+                    "job {id} anchored at {} which is after now = {}",
+                    self.ledger.anchor_s[id], self.state.now
                 ));
             }
         }

@@ -1,0 +1,107 @@
+//! [`ProgressLedger`] — the SoA hot-field store behind lazy progress
+//! integration (DESIGN.md §15).
+//!
+//! The eager core walked every running job on every `advance` to
+//! integrate `remaining_iters`/`service_gpu_s` and every waiting job to
+//! accrue `queued_s` — O(occupancy) per event, the term that made sim
+//! cost quadratic in trace size. The ledger replaces the sweep with
+//! epoch-anchored accounting: each job carries the instant it was last
+//! *settled* (`anchor_s`) and its current integration rate (`iter_s`),
+//! and the true value of any lazy quantity at `now` is a closed-form
+//! read:
+//!
+//! ```text
+//! remaining(now)  = remaining_at_anchor - (now - anchor) / iter_s
+//! service(now)    = service_at_anchor   + gpus_held × (now - anchor)
+//! queued(now)     = queued_at_anchor    + (now - wait_since)   [waiting]
+//! ```
+//!
+//! Jobs are *settled* (the closed form folded into the stored value and
+//! the anchor moved to `now`) only on transitions that change their rate:
+//! start, preempt, completion, a co-runner change, cancel. Between
+//! transitions nothing touches them — `advance` is O(1) + due events.
+//!
+//! The sentinel encodings make the lazy reads **bit-exact** for every job
+//! whose quantity is not currently integrating, so hot paths like the
+//! SJF sort over pending jobs read exactly the stored field:
+//!
+//! * `iter_s = ∞` ⇒ `(now - anchor)/∞ == 0.0` and `x - 0.0 == x` for
+//!   every non-negative `x`: a non-running (or wall-mode) job's
+//!   `remaining_iters` passes through untouched.
+//! * `gpus_held.is_empty()` ⇒ `0.0 × dt == 0.0` and `x + 0.0 == x`: a
+//!   non-running job's `service_gpu_s` passes through untouched.
+//! * `wait_since = NaN` ⇒ the waiting term is skipped entirely: a
+//!   non-waiting job's `queued_s` passes through untouched.
+//!
+//! This struct also absorbs the per-job caches the context already kept
+//! (`epoch`, the memoized placement-resolved iteration time, the
+//! estimated solo rate) so the hot per-job metadata lives in six dense
+//! parallel vectors instead of being scattered across `JobRecord`s —
+//! the completion path and the policy sort no longer drag whole records
+//! (spec, gang vector, timestamps) through cache to read one f64.
+
+use crate::jobs::JobRecord;
+
+use super::context::est_rate_of;
+
+/// See the module docs. All fields are parallel, indexed by [`crate::jobs::JobId`].
+#[derive(Debug, Clone)]
+pub(super) struct ProgressLedger {
+    /// Instant each job was last settled.
+    pub anchor_s: Vec<f64>,
+    /// Effective seconds/iteration while integrating; `INFINITY` when the
+    /// job is not integrating (not running, or wall mode).
+    pub iter_s: Vec<f64>,
+    /// Instant the job (re)joined the waiting set; `NaN` when not waiting.
+    pub wait_since: Vec<f64>,
+    /// Rate epoch, bumped whenever the job's iteration rate changes
+    /// (start, preempt, finish, or a co-runner change). Stamped into
+    /// finish-queue entries so stale projections are skippable.
+    pub epoch: Vec<u64>,
+    /// Placement-resolved effective iteration time, memoized as
+    /// `(epoch at computation, seconds)`; a stale epoch means invalid.
+    pub iter_cache: Vec<(u64, f64)>,
+    /// Estimated solo seconds/iteration at the current accumulation step
+    /// (`iter_time(accum) × est_factor`) — the cached factor of the
+    /// SJF-family sort key. Only a `Start` changes it.
+    pub est_rate: Vec<f64>,
+}
+
+impl ProgressLedger {
+    pub fn new(jobs: &[JobRecord], now: f64) -> ProgressLedger {
+        let n = jobs.len();
+        ProgressLedger {
+            anchor_s: vec![now; n],
+            iter_s: vec![f64::INFINITY; n],
+            wait_since: vec![f64::NAN; n],
+            epoch: vec![0; n],
+            iter_cache: vec![(u64::MAX, 0.0); n],
+            est_rate: jobs.iter().map(est_rate_of).collect(),
+        }
+    }
+
+    /// Append slots for a job admitted mid-run (the serve daemon).
+    pub fn push_job(&mut self, rec: &JobRecord, now: f64) {
+        self.anchor_s.push(now);
+        self.iter_s.push(f64::INFINITY);
+        self.wait_since.push(f64::NAN);
+        self.epoch.push(0);
+        self.iter_cache.push((u64::MAX, 0.0));
+        self.est_rate.push(est_rate_of(rec));
+    }
+}
+
+/// Shadow state for the **eager reference sweep** — the verification mode
+/// behind [`super::SchedContext::verify_against_eager_reference`]. When
+/// armed, every `advance` replays the pre-ledger per-event integration
+/// loops over these vectors (the exact arithmetic the O(running) sweep
+/// used) and asserts the lazy closed forms agree within float tolerance.
+/// The two schemes differ only in summation order, so agreement is tight
+/// but not bitwise; `tests/event_core.rs` runs full six-policy golden
+/// traces under this cross-check.
+#[derive(Debug, Clone)]
+pub(super) struct EagerReference {
+    pub remaining: Vec<f64>,
+    pub service: Vec<f64>,
+    pub queued: Vec<f64>,
+}

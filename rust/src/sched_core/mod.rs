@@ -14,11 +14,14 @@
 //! * **[`SchedContext`]** — the read view handed to policies. It owns the
 //!   world state ([`crate::sim::SimState`], reachable via `Deref`) plus
 //!   *incrementally maintained* index caches: the eligible-pending set,
-//!   the running set, the waiting set (queue-time accrual), a min-heap of
-//!   projected finish times and a min-heap of restart-penalty expiries.
-//!   Policies read `ctx.pending()` / `ctx.running()` as slices instead of
-//!   re-deriving them with an O(n) scan per call, and the engine picks its
-//!   next event in O(log n) instead of rescanning every running job.
+//!   the running set, the waiting set (queue-time accrual), and
+//!   calendar queues ([`calendar::CalendarQueue`]) of projected finish
+//!   times and restart-penalty expiries. Policies read `ctx.pending()` /
+//!   `ctx.running()` as slices instead of re-deriving them with an O(n)
+//!   scan per call; the engine picks its next event in O(1) amortized,
+//!   and per-job progress integrates lazily (settled only on rate
+//!   transitions — see DESIGN.md §15), so event cost no longer grows
+//!   with cluster occupancy.
 //! * **[`Txn`]** — the write path. A policy returns a transaction of
 //!   [`Decision`]s from [`Policy::on_event`]; [`SchedContext::apply`] is
 //!   the *single* place that validates (gang non-empty and within share
@@ -30,7 +33,9 @@
 //! See DESIGN.md "§9 sched_core — writing a policy" for the authoring
 //! guide and the exact guarantees.
 
+pub mod calendar;
 pub mod context;
+mod ledger;
 pub mod pump;
 pub mod txn;
 

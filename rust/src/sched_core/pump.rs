@@ -215,13 +215,10 @@ impl EventPump {
             self.events.append(&mut clock);
             self.clock_events = clock;
             self.queue_due_tick(ctx.now());
-            if self.events.is_empty() {
-                // Same float-stall escape hatch as the engine: a finish
-                // projection fired but round-off left the residual above
-                // eps — refresh it (or finish the job) so the next-event
-                // time makes forward progress.
-                ctx.resolve_finish_stall(&mut self.events);
-            }
+            // A delivery pass with no events is fine: a due finish
+            // projection whose residual round-off left above eps was
+            // re-projected inside `collect_completions`, so the next
+            // event-selection pass sees a strictly later finish time.
             self.deliver(ctx, policy, hooks)?;
             if ctx.now() + 1e-9 >= target {
                 return Ok(());

@@ -28,7 +28,7 @@ use anyhow::{bail, Context, Result};
 use crate::cluster::GpuId;
 use crate::jobs::{JobId, JobState};
 
-use super::context::{set_insert, set_remove, OrdF64, SchedContext, T_EPS};
+use super::context::{set_insert, set_remove, SchedContext, T_EPS};
 
 /// Scheduling action requested by a policy.
 #[derive(Debug, Clone)]
@@ -186,6 +186,11 @@ impl SchedContext {
                 bail!("Start({job}): GPU {g} memory over budget ({used:.2} GB)");
             }
         }
+        // Settle the outgoing (no-op) rates and close out queue-time
+        // accrual *before* the transition mutates the gang or state — the
+        // old values parameterize the interval being folded.
+        self.settle_job(job);
+        self.settle_wait(job);
         self.state.cluster.allocate(job, gpus);
         let rec = &mut self.state.jobs[job];
         rec.state = JobState::Running;
@@ -193,7 +198,7 @@ impl SchedContext {
         rec.gpus_held = gpus.to_vec();
         // The estimated per-iteration rate depends on the accumulation
         // step; a Start is the only place that changes it.
-        self.est_rate[job] = super::context::est_rate_of(rec);
+        self.ledger.est_rate[job] = super::context::est_rate_of(rec);
         if rec.first_start_s.is_none() {
             rec.first_start_s = Some(now);
         }
@@ -224,6 +229,9 @@ impl SchedContext {
             bail!("Preempt({job}): job is {:?}", rec.state);
         }
         let co = self.state.cluster.co_runners(job);
+        // Fold the progress and service accrued at the outgoing rate
+        // before the gang is torn down.
+        self.settle_job(job);
         self.state.cluster.release(job);
         let rec = &mut self.state.jobs[job];
         rec.state = JobState::Preempted;
@@ -232,7 +240,9 @@ impl SchedContext {
         self.state.not_before[job] = not_before;
         set_remove(&mut self.running, job);
         set_insert(&mut self.waiting, job);
-        self.rate_epoch[job] += 1;
+        self.ledger.wait_since[job] = self.state.now;
+        self.ledger.epoch[job] += 1;
+        self.ledger.iter_s[job] = f64::INFINITY;
         if not_before <= self.state.now + T_EPS {
             // Zero (or sub-epsilon) penalty: immediately schedulable again
             // — including by a later decision in this same transaction.
@@ -244,8 +254,7 @@ impl SchedContext {
         // meantime). Without this a zero-penalty preempt would re-queue
         // the job silently and, with no other events due, the engine
         // would report a deadlock on a well-behaved workload.
-        self.restart_heap
-            .push(std::cmp::Reverse((OrdF64(not_before), job)));
+        self.restart_q.push(not_before, job);
         if self.obs.is_enabled() {
             self.obs.job_stopped(self.state.now, job, "preempt");
             for &c in &co {

@@ -443,14 +443,14 @@ impl Daemon {
             ("iterations", Json::from(rec.spec.iterations)),
             ("batch", Json::from(rec.spec.batch as u64)),
             ("arrival_s", Json::Num(rec.spec.arrival_s)),
-            ("remaining_iters", Json::Num(rec.remaining_iters)),
+            ("remaining_iters", Json::Num(self.ctx.remaining_iters(int))),
             ("accum_step", Json::from(rec.accum_step as u64)),
             ("gpus_held", Json::Arr(rec.gpus_held.iter().map(|&g| Json::from(g)).collect())),
             ("first_start_s", opt_num(rec.first_start_s)),
             ("finish_s", opt_num(rec.finish_s)),
-            ("queued_s", Json::Num(rec.queued_s)),
+            ("queued_s", Json::Num(self.ctx.queued_seconds(int))),
             ("jct_s", opt_num(rec.jct())),
-            ("service_gpu_s", Json::Num(self.ctx.service_gpu_s[int])),
+            ("service_gpu_s", Json::Num(self.ctx.attained_service(int))),
         ])
     }
 

@@ -79,17 +79,21 @@ fn render(d: &Daemon) -> Json {
                     ("arrival_s", Json::Num(rec.spec.arrival_s)),
                     ("est_factor", Json::Num(rec.spec.est_factor)),
                     ("state", Json::from(state_str(rec.state))),
-                    ("remaining_iters", Json::Num(rec.remaining_iters)),
+                    // Accessor reads, not the raw fields: lazily
+                    // integrated quantities are folded to `now`, so the
+                    // resumed context (which anchors everything at `now`)
+                    // continues from exactly what was serialized.
+                    ("remaining_iters", Json::Num(d.ctx.remaining_iters(id))),
                     ("accum_step", Json::from(rec.accum_step as u64)),
                     ("first_start_s", opt_num(rec.first_start_s)),
                     ("finish_s", opt_num(rec.finish_s)),
-                    ("queued_s", Json::Num(rec.queued_s)),
+                    ("queued_s", Json::Num(d.ctx.queued_seconds(id))),
                     (
                         "gpus_held",
                         Json::Arr(rec.gpus_held.iter().map(|&g| Json::from(g)).collect()),
                     ),
                     ("not_before", Json::Num(d.ctx.not_before[id])),
-                    ("service_gpu_s", Json::Num(d.ctx.service_gpu_s[id])),
+                    ("service_gpu_s", Json::Num(d.ctx.attained_service(id))),
                     ("cancelled", Json::from(d.cancelled.contains(&id))),
                 ])
             })

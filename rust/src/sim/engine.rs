@@ -3,10 +3,11 @@
 //! policy, and applies the returned [`Txn`]s through the shared
 //! [`sched_core`](crate::sched_core) validation layer.
 //!
-//! Event selection is O(log n) per event: next arrival comes from the
-//! context's sorted arrival queue, next completion from its lazily
-//! invalidated finish-time min-heap, next restart eligibility from its
-//! penalty min-heap — replacing the old per-event O(running + n) rescan.
+//! Event selection is O(1) amortized per event: next arrival comes from
+//! the context's sorted arrival queue, next completion and next restart
+//! eligibility from its lazily invalidated calendar queues — and job
+//! progress integrates lazily (settled only on rate transitions), so
+//! per-event cost no longer grows with cluster occupancy (DESIGN.md §15).
 //!
 //! The steady-state loop also allocates nothing per event: the two event
 //! vecs below are reused across iterations, the policies' planning views
@@ -219,13 +220,10 @@ pub fn run_cluster_obs(
         }
         if events.is_empty() {
             // A finish projection fired but round-off left the job's
-            // residual above eps_iters: refresh the projection (or finish
-            // the job if its residual runtime is below clock resolution)
-            // so the next-event time makes forward progress.
-            ctx.resolve_finish_stall(&mut events);
-            if events.is_empty() {
-                continue;
-            }
+            // residual above eps_iters: `collect_completions` already
+            // re-projected it from the settled residual, so the next
+            // event-selection pass sees a strictly later finish time.
+            continue;
         }
 
         // ---- deliver each event; apply through the shared txn layer -------

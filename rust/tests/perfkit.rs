@@ -32,6 +32,7 @@ fn case(name: &str, min_s: f64, tol: Option<f64>) -> perfkit::CaseStats {
             p95_s: min_s * 1.2,
         },
         max_regress_pct: tol,
+        throughput: None,
     }
 }
 
