@@ -1,0 +1,247 @@
+//! [`FreeIndex`]: a bucketed free-capacity index over servers, so the
+//! placement strategies ([`super::placement`]) iterate only servers that
+//! can actually contribute GPUs to a gang — and bail in O(1) when none
+//! can — instead of scoring every server per candidate.
+//!
+//! Three structures, all maintained incrementally at the same site that
+//! updates the per-server free counters (`on_load_change` in the live
+//! [`super::Cluster`] and the [`super::ClusterOverlay`] planning view):
+//!
+//! * **buckets** — `buckets[k]` holds the servers with exactly `k` free
+//!   GPUs, each bucket sorted ascending by server index. Consolidated
+//!   placement walks `buckets[need]` (exact fits) then the remaining
+//!   buckets from `max_free` down — precisely the
+//!   [`super::placement::server_score`] order restricted to servers with
+//!   free capacity, so the chosen gangs are byte-identical to the former
+//!   full sort (memory-ineligible servers sit in the buckets too, but
+//!   the shared `take_free` walk skips them exactly as the sort-based
+//!   order had them skipped).
+//! * **nonempty** — servers with at least one free GPU, ascending: the
+//!   first-fit iteration order.
+//! * **per-tier free totals** — free GPUs grouped by server GPU-memory
+//!   capacity (servers are internally homogeneous), so the eligible-free
+//!   sum that gates a placement (`Σ eligible_free < need → None`) is a
+//!   walk over the handful of distinct capacities instead of every
+//!   server.
+//!
+//! `PartialEq` + [`FreeIndex::build`] give the invariant check: the
+//! incrementally maintained index must equal a from-scratch rebuild
+//! ([`super::Cluster::check_invariants`], exercised by the randomized
+//! property tests).
+
+use super::topology::Topology;
+
+/// Memory-eligibility slack shared with the placement walk: a server
+/// whose per-GPU budget is within this of the requirement qualifies.
+pub(super) const MEM_EPS: f64 = 1e-9;
+
+/// Bucketed free-count index over servers. See the module docs.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FreeIndex {
+    /// `buckets[k]`: servers with exactly `k` free GPUs, ascending.
+    /// `buckets[0]` is kept empty — fully busy servers are unindexed.
+    buckets: Vec<Vec<usize>>,
+    /// Largest `k` with a non-empty bucket (0 when the cluster is full).
+    max_free: usize,
+    /// Servers with at least one free GPU, ascending.
+    nonempty: Vec<usize>,
+    /// Distinct per-GPU memory capacities, descending.
+    tier_mem: Vec<f64>,
+    /// Free-GPU total per capacity tier (same indexing as `tier_mem`).
+    tier_free: Vec<usize>,
+    /// Capacity tier of each server.
+    tier_of: Vec<usize>,
+}
+
+impl FreeIndex {
+    /// Build from scratch over a topology and its per-server free counts
+    /// (construction and the invariant cross-check).
+    pub fn build(topology: &Topology, free_per_server: &[usize]) -> Self {
+        let n = topology.n_servers();
+        debug_assert_eq!(n, free_per_server.len());
+        let widest = (0..n).map(|s| topology.server(s).gpus).max().unwrap_or(0);
+        let mut tier_mem: Vec<f64> =
+            (0..n).map(|s| topology.server(s).gpu.mem_gb).collect();
+        tier_mem.sort_by(|a, b| b.total_cmp(a));
+        tier_mem.dedup();
+        let mut idx = FreeIndex {
+            buckets: vec![Vec::new(); widest + 1],
+            max_free: 0,
+            nonempty: Vec::new(),
+            tier_free: vec![0; tier_mem.len()],
+            tier_of: (0..n)
+                .map(|s| {
+                    let mem = topology.server(s).gpu.mem_gb;
+                    tier_mem.iter().position(|&m| m == mem).expect("tier exists")
+                })
+                .collect(),
+            tier_mem,
+        };
+        for (s, &free) in free_per_server.iter().enumerate() {
+            let t = idx.tier_of[s];
+            idx.tier_free[t] += free;
+            if free > 0 {
+                idx.buckets[free].push(s);
+                idx.nonempty.push(s);
+                idx.max_free = idx.max_free.max(free);
+            }
+        }
+        idx
+    }
+
+    /// Incremental update: server `s` went from `old` to `new` free GPUs.
+    pub fn server_free_changed(&mut self, s: usize, old: usize, new: usize) {
+        if old == new {
+            return;
+        }
+        if old > 0 {
+            let b = &mut self.buckets[old];
+            if let Ok(i) = b.binary_search(&s) {
+                b.remove(i);
+            }
+        }
+        if new > 0 {
+            let b = &mut self.buckets[new];
+            if let Err(i) = b.binary_search(&s) {
+                b.insert(i, s);
+            }
+        }
+        if old == 0 {
+            if let Err(i) = self.nonempty.binary_search(&s) {
+                self.nonempty.insert(i, s);
+            }
+        } else if new == 0 {
+            if let Ok(i) = self.nonempty.binary_search(&s) {
+                self.nonempty.remove(i);
+            }
+        }
+        let t = self.tier_of[s];
+        self.tier_free[t] -= old;
+        self.tier_free[t] += new;
+        if new > self.max_free {
+            self.max_free = new;
+        } else {
+            while self.max_free > 0 && self.buckets[self.max_free].is_empty() {
+                self.max_free -= 1;
+            }
+        }
+    }
+
+    /// Overwrite from another index, reusing this one's allocations (the
+    /// overlay pool resets its scratch index from the live cluster's on
+    /// every acquire).
+    pub fn copy_from(&mut self, other: &FreeIndex) {
+        self.buckets.clone_from(&other.buckets);
+        self.max_free = other.max_free;
+        self.nonempty.clone_from(&other.nonempty);
+        self.tier_mem.clone_from(&other.tier_mem);
+        self.tier_free.clone_from(&other.tier_free);
+        self.tier_of.clone_from(&other.tier_of);
+    }
+
+    /// Largest free count of any server (0 when the cluster is full).
+    pub fn max_free(&self) -> usize {
+        self.max_free
+    }
+
+    /// Servers with exactly `k` free GPUs, ascending. Empty slice for
+    /// any `k` beyond the widest server (or `k == 0`).
+    pub fn bucket(&self, k: usize) -> &[usize] {
+        self.buckets.get(k).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    /// Servers with at least one free GPU, ascending — the first-fit
+    /// iteration order.
+    pub fn nonempty(&self) -> &[usize] {
+        &self.nonempty
+    }
+
+    /// Total free GPUs on servers whose per-GPU memory budget holds
+    /// `mem_gb`. O(tiers) — the O(1) bail for infeasible placements.
+    pub fn eligible_total(&self, mem_gb: f64) -> usize {
+        self.tier_mem
+            .iter()
+            .zip(&self.tier_free)
+            .take_while(|(&m, _)| m + MEM_EPS >= mem_gb)
+            .map(|(_, &f)| f)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::topology;
+
+    fn uniform() -> Topology {
+        Topology::from_config(&crate::cluster::ClusterConfig::physical())
+    }
+
+    #[test]
+    fn build_indexes_fresh_cluster() {
+        let topo = uniform();
+        let idx = FreeIndex::build(&topo, &[4, 4, 4, 4]);
+        assert_eq!(idx.max_free(), 4);
+        assert_eq!(idx.bucket(4), &[0, 1, 2, 3]);
+        assert!(idx.bucket(3).is_empty());
+        assert!(idx.bucket(99).is_empty());
+        assert_eq!(idx.nonempty(), &[0, 1, 2, 3]);
+        assert_eq!(idx.eligible_total(11.0), 16);
+        assert_eq!(idx.eligible_total(20.0), 0);
+    }
+
+    #[test]
+    fn incremental_matches_rebuild() {
+        let topo = uniform();
+        let mut free = [4usize, 4, 4, 4];
+        let mut idx = FreeIndex::build(&topo, &free);
+        // Drain server 1, partially fill 0 and 3, then refill 1.
+        let steps: &[(usize, usize)] = &[(1, 0), (0, 2), (3, 1), (1, 4), (0, 0)];
+        for &(s, to) in steps {
+            let old = free[s];
+            free[s] = to;
+            idx.server_free_changed(s, old, to);
+            assert_eq!(idx, FreeIndex::build(&topo, &free), "after {s} -> {to}");
+        }
+        assert_eq!(idx.max_free(), 4);
+        assert_eq!(idx.bucket(4), &[1]);
+        assert_eq!(idx.bucket(1), &[3]);
+        assert_eq!(idx.nonempty(), &[1, 3]);
+    }
+
+    #[test]
+    fn full_cluster_bails_o1() {
+        let topo = uniform();
+        let mut idx = FreeIndex::build(&topo, &[0, 0, 0, 0]);
+        assert_eq!(idx.max_free(), 0);
+        assert!(idx.nonempty().is_empty());
+        assert_eq!(idx.eligible_total(0.0), 0);
+        idx.server_free_changed(2, 0, 1);
+        assert_eq!(idx.max_free(), 1);
+        assert_eq!(idx.nonempty(), &[2]);
+    }
+
+    #[test]
+    fn tiers_gate_by_memory() {
+        // hetero-16x4-2tier: servers 0..8 carry 11 GB GPUs, 8..16 carry
+        // 22 GB, 4 GPUs each.
+        let topo = topology::by_name("hetero-16x4-2tier").unwrap();
+        let free: Vec<usize> = vec![4; 16];
+        let mut idx = FreeIndex::build(&topo, &free);
+        assert_eq!(idx.eligible_total(15.0), 32);
+        assert_eq!(idx.eligible_total(11.0), 64);
+        assert_eq!(idx.eligible_total(22.1), 0);
+        idx.server_free_changed(9, 4, 1);
+        assert_eq!(idx.eligible_total(15.0), 29);
+        assert_eq!(idx, FreeIndex::build(&topo, &[4, 4, 4, 4, 4, 4, 4, 4, 4, 1, 4, 4, 4, 4, 4, 4]));
+    }
+
+    #[test]
+    fn copy_from_round_trips() {
+        let topo = uniform();
+        let mut a = FreeIndex::build(&topo, &[4, 4, 4, 4]);
+        let b = FreeIndex::build(&topo, &[0, 2, 4, 1]);
+        a.copy_from(&b);
+        assert_eq!(a, b);
+    }
+}

@@ -12,10 +12,12 @@
 //! the read interface shared by the live [`Cluster`] and the hypothetical
 //! [`overlay::ClusterOverlay`] planning view.
 
+pub mod free_index;
 pub mod overlay;
 pub mod placement;
 pub mod topology;
 
+pub use free_index::FreeIndex;
 pub use overlay::ClusterOverlay;
 pub use topology::Topology;
 
@@ -80,6 +82,12 @@ pub trait AllocView {
     fn one_job_count(&self) -> usize;
     /// Free GPUs on one server. O(1).
     fn server_free(&self, server: usize) -> usize;
+    /// The bucketed free-capacity index ([`free_index`]) — servers
+    /// grouped by free count, plus per-memory-tier free totals — that
+    /// lets [`placement`] iterate only servers able to host a gang and
+    /// bail O(1) when none can. Maintained incrementally alongside the
+    /// per-server free counters.
+    fn free_index(&self) -> &FreeIndex;
 
     fn total_gpus(&self) -> usize {
         self.topology().total_gpus()
@@ -127,6 +135,9 @@ pub struct Cluster {
     n_free: usize,
     n_one_job: usize,
     n_schedulable: usize,
+    /// Bucketed free-capacity index, updated in lockstep with
+    /// `free_per_server` (see [`free_index`]).
+    free_index: FreeIndex,
 }
 
 impl Cluster {
@@ -144,6 +155,7 @@ impl Cluster {
         let total = topology.total_gpus();
         let free_per_server: Vec<usize> =
             (0..topology.n_servers()).map(|s| topology.server(s).gpus).collect();
+        let free_index = FreeIndex::build(&topology, &free_per_server);
         Cluster {
             config,
             slots: vec![GpuSlot::default(); total],
@@ -152,6 +164,7 @@ impl Cluster {
             n_free: total,
             n_one_job: 0,
             n_schedulable: total,
+            free_index,
             topology,
         }
     }
@@ -227,13 +240,17 @@ impl Cluster {
 
     fn on_load_change(&mut self, gpu: GpuId, old: usize, new: usize) {
         let s = self.topology.server_of(gpu);
-        if old == 0 {
-            self.free_per_server[s] -= 1;
-            self.n_free -= 1;
-        }
-        if new == 0 {
-            self.free_per_server[s] += 1;
-            self.n_free += 1;
+        if old == 0 || new == 0 {
+            let prev = self.free_per_server[s];
+            if old == 0 {
+                self.free_per_server[s] -= 1;
+                self.n_free -= 1;
+            }
+            if new == 0 {
+                self.free_per_server[s] += 1;
+                self.n_free += 1;
+            }
+            self.free_index.server_free_changed(s, prev, self.free_per_server[s]);
         }
         if old == 1 {
             self.one_job_per_server[s] -= 1;
@@ -359,6 +376,13 @@ impl Cluster {
                 ));
             }
         }
+        let rebuilt = FreeIndex::build(&self.topology, &self.free_per_server);
+        if self.free_index != rebuilt {
+            return Err(format!(
+                "free index {:?} != rebuild {rebuilt:?}",
+                self.free_index
+            ));
+        }
         Ok(())
     }
 }
@@ -390,6 +414,10 @@ impl AllocView for Cluster {
 
     fn server_free(&self, server: usize) -> usize {
         self.free_per_server[server]
+    }
+
+    fn free_index(&self) -> &FreeIndex {
+        &self.free_index
     }
 }
 

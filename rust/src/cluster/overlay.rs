@@ -20,7 +20,7 @@ use std::cell::RefCell;
 
 use crate::jobs::JobId;
 
-use super::{AllocView, Cluster, GpuId, Topology};
+use super::{AllocView, Cluster, FreeIndex, GpuId, Topology};
 
 /// Reusable scratch buffers of one overlay (cleared between uses).
 #[derive(Debug, Default, Clone)]
@@ -36,6 +36,9 @@ struct OverlayBufs {
     /// consults — [`AllocView::server_free`]); the one-job class is
     /// tracked as a cluster-wide total only.
     free_per_server: Vec<usize>,
+    /// Bucketed free-capacity index, reset from the live cluster's on
+    /// acquire and maintained in lockstep with `free_per_server`.
+    free_index: FreeIndex,
 }
 
 /// Pool of [`OverlayBufs`], owned by the scheduling context. Cloning a
@@ -60,6 +63,7 @@ impl OverlayPool {
         let topo = base.topology();
         bufs.free_per_server.clear();
         bufs.free_per_server.extend((0..topo.n_servers()).map(|s| base.server_free(s)));
+        bufs.free_index.copy_from(AllocView::free_index(base));
         ClusterOverlay {
             base,
             pool: self,
@@ -105,13 +109,18 @@ impl ClusterOverlay<'_> {
 
     fn on_load_change(&mut self, gpu: GpuId, old: usize, new: usize) {
         let s = self.base.topology().server_of(gpu);
-        if old == 0 {
-            self.bufs.free_per_server[s] -= 1;
-            self.free_count -= 1;
-        }
-        if new == 0 {
-            self.bufs.free_per_server[s] += 1;
-            self.free_count += 1;
+        if old == 0 || new == 0 {
+            let prev = self.bufs.free_per_server[s];
+            if old == 0 {
+                self.bufs.free_per_server[s] -= 1;
+                self.free_count -= 1;
+            }
+            if new == 0 {
+                self.bufs.free_per_server[s] += 1;
+                self.free_count += 1;
+            }
+            let cur = self.bufs.free_per_server[s];
+            self.bufs.free_index.server_free_changed(s, prev, cur);
         }
         if old == 1 {
             self.one_job_count -= 1;
@@ -201,6 +210,10 @@ impl AllocView for ClusterOverlay<'_> {
 
     fn server_free(&self, server: usize) -> usize {
         self.bufs.free_per_server[server]
+    }
+
+    fn free_index(&self) -> &FreeIndex {
+        &self.bufs.free_index
     }
 }
 

@@ -9,8 +9,12 @@
 //! Both strategies are generic over [`AllocView`], so they run unchanged
 //! against the live [`crate::cluster::Cluster`] and a policy's
 //! [`crate::cluster::ClusterOverlay`] plan, and both are assembled by the
-//! same server-ordered [`take_free`] walk — consolidated ranks servers
-//! with the shared [`server_score`], first-fit takes them in index order.
+//! same server-ordered [`take_free`] walk. Since the free-capacity index
+//! ([`crate::cluster::FreeIndex`]) neither strategy visits every server:
+//! consolidated walks the index buckets in exactly the [`server_score`]
+//! order (exact fits, then fullest-first), first-fit walks the nonempty
+//! servers in index order, and both bail O(1) — via the per-memory-tier
+//! free totals — when no combination of servers can host `need` GPUs.
 //! The `*_mem` variants additionally skip GPUs whose per-type memory
 //! budget cannot hold `mem_gb` (a no-op on uniform topologies, where
 //! every GPU has the reference budget).
@@ -80,14 +84,23 @@ pub fn consolidated_free_mem<V: AllocView>(
     need: usize,
     mem_gb: f64,
 ) -> Option<Vec<GpuId>> {
-    let n_servers = view.topology().n_servers();
-    let total: usize = (0..n_servers).map(|s| eligible_free(view, s, mem_gb)).sum();
-    if total < need {
+    let idx = view.free_index();
+    if idx.eligible_total(mem_gb) < need {
         return None;
     }
-    let mut order: Vec<usize> = (0..n_servers).collect();
-    order.sort_by_key(|&s| server_score(eligible_free(view, s, mem_gb), need, s));
-    take_free(view, need, order.into_iter(), mem_gb)
+    // The bucketed walk reproduces the former
+    // `sort_by_key(server_score)` order over every server that can
+    // contribute: exact-fit servers first (ascending index), then the
+    // rest fullest-first. Memory-ineligible servers still sit in the
+    // buckets — `take_free` skips them, exactly as the sort had them
+    // ranked last and skipped. Fully busy servers are simply absent.
+    let order = idx.bucket(need).iter().copied().chain(
+        (1..=idx.max_free())
+            .rev()
+            .filter(|&k| k != need)
+            .flat_map(|k| idx.bucket(k).iter().copied()),
+    );
+    take_free(view, need, order, mem_gb)
 }
 
 /// First-fit over free GPUs in index order (the baseline the consolidation
@@ -97,14 +110,19 @@ pub fn first_fit_free<V: AllocView>(view: &V, need: usize) -> Option<Vec<GpuId>>
 }
 
 /// [`first_fit_free`] restricted to GPUs whose memory budget holds `mem_gb`.
-/// No eligibility precheck: the natural-order [`take_free`] walk already
-/// returns `None` in exactly the insufficient cases.
+/// Walks only servers with free GPUs (the index's nonempty list, in
+/// server order — the same taken sequence as the full `0..n_servers`
+/// walk) and bails O(1) when the eligible total cannot cover `need`.
 pub fn first_fit_free_mem<V: AllocView>(
     view: &V,
     need: usize,
     mem_gb: f64,
 ) -> Option<Vec<GpuId>> {
-    take_free(view, need, 0..view.topology().n_servers(), mem_gb)
+    let idx = view.free_index();
+    if idx.eligible_total(mem_gb) < need {
+        return None;
+    }
+    take_free(view, need, idx.nonempty().iter().copied(), mem_gb)
 }
 
 #[cfg(test)]

@@ -10,9 +10,12 @@
 //!
 //! Cases that record **throughput** metrics (events/sec, jobs/sec — the
 //! `scale_xl` suite) additionally gate higher-is-better: a *drop* beyond
-//! the same per-case tolerance regresses. Only cases where both sides
-//! recorded throughput are gated this way — a baseline written before the
-//! metrics existed neither gates nor fails.
+//! the tolerance regresses. The drop limit is the baseline case's
+//! `max_drop_pct` when recorded, falling back to its `max_regress_pct`,
+//! then to the CLI default — so a single-shot case can carry wide
+//! wall-clock headroom while its throughput floor stays tight. Only
+//! cases where both sides recorded throughput are gated this way — a
+//! baseline written before the metrics existed neither gates nor fails.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -81,7 +84,7 @@ pub fn compare(
             baseline.env.profile
         );
     }
-    type Entry = (f64, Option<f64>, Option<Throughput>);
+    type Entry = (f64, Option<f64>, Option<f64>, Option<Throughput>);
     let index = |rep: &BenchReport| -> BTreeMap<(String, String), Entry> {
         rep.suites
             .iter()
@@ -90,7 +93,7 @@ pub fn compare(
                 s.cases.iter().map(move |c| {
                     (
                         (s.suite.clone(), c.stats.name.clone()),
-                        (c.stats.min_s, c.max_regress_pct, c.throughput),
+                        (c.stats.min_s, c.max_regress_pct, c.max_drop_pct, c.throughput),
                     )
                 })
             })
@@ -117,8 +120,9 @@ pub fn compare(
             let verdict = match base.get(&(s.suite.clone(), c.stats.name.clone())) {
                 None if base_skipped.contains(&s.suite.as_str()) => continue,
                 None => Verdict::New,
-                Some(&(base_min, base_tol, base_tp)) => {
+                Some(&(base_min, base_tol, base_drop_tol, base_tp)) => {
                     let limit_pct = base_tol.unwrap_or(default_pct);
+                    let drop_limit_pct = base_drop_tol.or(base_tol).unwrap_or(default_pct);
                     let wall = if base_min <= 0.0 {
                         // A zero-time baseline cannot regress meaningfully
                         // (clock-resolution artifact); pass it.
@@ -146,11 +150,11 @@ pub fn compare(
                                     continue;
                                 }
                                 let drop_pct = (1.0 - c / b) * 100.0;
-                                if drop_pct > limit_pct {
+                                if drop_pct > drop_limit_pct {
                                     v = Verdict::RegressThroughput {
                                         metric,
                                         drop_pct,
-                                        limit_pct,
+                                        limit_pct: drop_limit_pct,
                                     };
                                     break;
                                 }
@@ -282,6 +286,7 @@ mod tests {
                 p95_s: min_s * 1.2,
             },
             max_regress_pct: tol,
+            max_drop_pct: None,
             throughput: None,
         }
     }
@@ -456,6 +461,54 @@ mod tests {
         assert_eq!(cmp.n_regressed, 0);
         assert_eq!(cmp.n_passed, 1);
         cmp.gate().unwrap();
+    }
+
+    #[test]
+    fn per_case_drop_tolerance_overrides_wall_clock_tolerance() {
+        // A single-shot case with 80% wall-clock headroom but a tight 20%
+        // throughput floor: the drop gate must use max_drop_pct, not
+        // max_regress_pct.
+        let mut base_case = tp_case("xl/a", 1.0, Some(80.0), 100_000.0, 500.0);
+        base_case.max_drop_pct = Some(20.0);
+        let baseline = report("quick", vec![suite("scale_xl", vec![base_case])]);
+
+        // 40% events/sec drop: within the 80% wall-clock headroom, past
+        // the 20% drop floor — must regress.
+        let current = report(
+            "quick",
+            vec![suite("scale_xl", vec![tp_case("xl/a", 1.0, None, 60_000.0, 500.0)])],
+        );
+        let cmp = compare(&current, &baseline, 10.0).unwrap();
+        assert_eq!(cmp.n_regressed, 1);
+        assert!(matches!(
+            cmp.rows[0].verdict,
+            Verdict::RegressThroughput { metric: "events_per_s", limit_pct, .. }
+                if limit_pct == 20.0
+        ));
+
+        // 10% drop: within the 20% floor — passes.
+        let current = report(
+            "quick",
+            vec![suite("scale_xl", vec![tp_case("xl/a", 1.0, None, 90_000.0, 500.0)])],
+        );
+        let cmp = compare(&current, &baseline, 10.0).unwrap();
+        assert_eq!(cmp.n_regressed, 0);
+        assert_eq!(cmp.n_passed, 1);
+        cmp.gate().unwrap();
+
+        // Without max_drop_pct the old fallback chain still applies: the
+        // same 40% drop slips under the 80% wall-clock tolerance.
+        let baseline = report(
+            "quick",
+            vec![suite("scale_xl", vec![tp_case("xl/a", 1.0, Some(80.0), 100_000.0, 500.0)])],
+        );
+        let current = report(
+            "quick",
+            vec![suite("scale_xl", vec![tp_case("xl/a", 1.0, None, 60_000.0, 500.0)])],
+        );
+        let cmp = compare(&current, &baseline, 10.0).unwrap();
+        assert_eq!(cmp.n_regressed, 0);
+        assert_eq!(cmp.n_passed, 1);
     }
 
     #[test]

@@ -68,6 +68,13 @@ pub struct Throughput {
 pub struct CaseStats {
     pub stats: BenchStats,
     pub max_regress_pct: Option<f64>,
+    /// Throughput-specific tolerance: the largest events/sec or jobs/sec
+    /// *drop* (percent) the gate allows before flagging
+    /// `RegressThroughput`. `None` falls back to `max_regress_pct`, then
+    /// to the gate's CLI default — so wall-clock-noisy cases can carry a
+    /// generous `max_regress_pct` while still gating their throughput
+    /// tightly. Serialized additively (`wise-share-bench-v1` unchanged).
+    pub max_drop_pct: Option<f64>,
     /// Optional higher-is-better metrics ([`Recorder::throughput`]);
     /// serialized additively in the bench JSON, so the schema stays
     /// `wise-share-bench-v1`-compatible.
@@ -107,7 +114,12 @@ impl Recorder {
     fn push(&mut self, stats: BenchStats) -> BenchStats {
         let max_regress_pct =
             if stats.iters <= 1 { Some(SINGLE_SHOT_TOLERANCE_PCT) } else { None };
-        self.cases.push(CaseStats { stats: stats.clone(), max_regress_pct, throughput: None });
+        self.cases.push(CaseStats {
+            stats: stats.clone(),
+            max_regress_pct,
+            max_drop_pct: None,
+            throughput: None,
+        });
         stats
     }
 
@@ -140,10 +152,20 @@ impl Recorder {
         case.max_regress_pct = Some(max_regress_pct);
     }
 
+    /// Set the throughput-drop tolerance of the most recently recorded
+    /// case (see [`CaseStats::max_drop_pct`]).
+    pub fn drop_tolerance(&mut self, max_drop_pct: f64) {
+        let case = self
+            .cases
+            .last_mut()
+            .expect("drop_tolerance() must follow a recorded case");
+        case.max_drop_pct = Some(max_drop_pct);
+    }
+
     /// Attach higher-is-better throughput metrics to the most recently
     /// recorded case (events processed and jobs completed per second of
-    /// measured wall time). Gated in [`super::compare`] with the same
-    /// per-case tolerance as the wall-clock stats.
+    /// measured wall time). Gated in [`super::compare`] against the
+    /// case's `max_drop_pct` when set, else its wall-clock tolerance.
     pub fn throughput(&mut self, events_per_s: f64, jobs_per_s: f64) {
         let case = self
             .cases

@@ -116,9 +116,13 @@ impl BenchReport {
                 if st.min_s > st.p50_s || st.p50_s > st.p95_s {
                     bail!("case {:?} has unordered quantiles: {st:?}", st.name);
                 }
-                if let Some(pct) = c.max_regress_pct {
-                    if !pct.is_finite() || pct < 0.0 {
-                        bail!("case {:?} has a degenerate tolerance {pct}", st.name);
+                for (key, tol) in
+                    [("max_regress_pct", c.max_regress_pct), ("max_drop_pct", c.max_drop_pct)]
+                {
+                    if let Some(pct) = tol {
+                        if !pct.is_finite() || pct < 0.0 {
+                            bail!("case {:?} has a degenerate {key} {pct}", st.name);
+                        }
                     }
                 }
                 if let Some(tp) = c.throughput {
@@ -234,6 +238,9 @@ fn case_to_json(c: &CaseStats) -> Json {
     if let Some(pct) = c.max_regress_pct {
         m.insert("max_regress_pct".to_string(), Json::Num(pct));
     }
+    if let Some(pct) = c.max_drop_pct {
+        m.insert("max_drop_pct".to_string(), Json::Num(pct));
+    }
     // Additive fields — readers of the v1 schema that predate throughput
     // metrics simply ignore them, so the tag does not bump.
     if let Some(tp) = c.throughput {
@@ -267,6 +274,12 @@ fn case_from_json(j: &Json) -> Result<CaseStats> {
             Some(v) => Some(
                 v.as_f64()
                     .with_context(|| format!("case {name:?}: max_regress_pct"))?,
+            ),
+        },
+        max_drop_pct: match j.get("max_drop_pct") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(
+                v.as_f64().with_context(|| format!("case {name:?}: max_drop_pct"))?,
             ),
         },
         throughput: match (j.get("events_per_s"), j.get("jobs_per_s")) {
@@ -320,6 +333,7 @@ mod tests {
                 p95_s: min_s * 1.2,
             },
             max_regress_pct: None,
+            max_drop_pct: None,
             throughput: None,
         }
     }
@@ -409,6 +423,27 @@ mod tests {
         let mut rep = report();
         rep.suites[0].cases[0].stats.p50_s = rep.suites[0].cases[0].stats.p95_s * 2.0;
         assert!(rep.check().unwrap_err().to_string().contains("unordered"));
+    }
+
+    #[test]
+    fn drop_tolerance_roundtrips_and_validates() {
+        let mut rep = report();
+        rep.suites[0].cases[0].max_drop_pct = Some(35.0);
+        rep.check().unwrap();
+        let text = rep.to_json().to_string();
+        assert!(text.contains("\"max_drop_pct\""), "{text}");
+        let back = BenchReport::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(rep, back);
+        assert_eq!(back.suites[0].cases[0].max_drop_pct, Some(35.0));
+        // Absent on the other case (and omitted from its JSON object).
+        assert_eq!(back.suites[0].cases[1].max_drop_pct, None);
+        // Degenerate values fail the artifact gate.
+        for bad in [-5.0, f64::NAN, f64::INFINITY] {
+            let mut rep = report();
+            rep.suites[0].cases[0].max_drop_pct = Some(bad);
+            let err = rep.check().unwrap_err().to_string();
+            assert!(err.contains("max_drop_pct"), "{bad}: {err}");
+        }
     }
 
     #[test]

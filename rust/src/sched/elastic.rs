@@ -94,6 +94,10 @@ impl Policy for Elastic {
         self.penalty_s
     }
 
+    fn coalesce_coincident(&self) -> bool {
+        true
+    }
+
     fn on_event(&mut self, ctx: &SchedContext, _ev: Event) -> Txn {
         let mut active: Vec<JobId> = ctx.running().to_vec();
         active.extend_from_slice(ctx.pending());

@@ -17,18 +17,16 @@ impl Policy for Fifo {
         "FIFO"
     }
 
+    fn coalesce_coincident(&self) -> bool {
+        true
+    }
+
     fn on_event(&mut self, ctx: &SchedContext, _ev: Event) -> Txn {
-        let mut pending: Vec<usize> = ctx.pending().to_vec();
-        pending.sort_by(|&a, &b| {
-            ctx.jobs[a]
-                .spec
-                .arrival_s
-                .total_cmp(&ctx.jobs[b].spec.arrival_s)
-                .then(a.cmp(&b))
-        });
         let mut plan = ctx.overlay();
         let mut txn = Txn::new();
-        for id in pending {
+        // Arrival order comes pre-sorted from the context's incrementally
+        // maintained pending index: no per-pass re-sort.
+        for id in ctx.pending_by_arrival() {
             let spec = &ctx.jobs[id].spec;
             let solo_gb = spec.profile().mem.mem_gb(spec.batch as f64);
             match placement::consolidated_free_mem(&plan, spec.gpus, solo_gb) {

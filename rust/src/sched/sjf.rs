@@ -16,29 +16,28 @@ use crate::sched_core::{Event, Policy, SchedContext, Txn};
 #[derive(Debug, Default)]
 pub struct Sjf;
 
-/// Pending ids sorted by estimated remaining solo runtime (the shared
-/// SJF-family key — SJF, SJF-FFS and SJF-BSBF all rank on this), ties by
-/// id. Reads the context's incrementally maintained pending cache and
-/// its O(1) estimate table.
-pub(crate) fn pending_by_runtime(ctx: &SchedContext) -> Vec<usize> {
-    let mut pending: Vec<usize> = ctx.pending().to_vec();
-    pending.sort_by(|&a, &b| {
-        ctx.estimated_remaining(a)
-            .total_cmp(&ctx.estimated_remaining(b))
-            .then(a.cmp(&b))
-    });
-    pending
-}
-
 impl Policy for Sjf {
     fn name(&self) -> &'static str {
         "SJF"
     }
 
+    fn coalesce_coincident(&self) -> bool {
+        true
+    }
+
     fn on_event(&mut self, ctx: &SchedContext, _ev: Event) -> Txn {
         let mut plan = ctx.overlay();
         let mut txn = Txn::new();
-        for id in pending_by_runtime(ctx) {
+        // The shared SJF-family candidate order — estimated remaining
+        // solo runtime, ties by id — comes pre-sorted from the context's
+        // incrementally maintained pending index: no per-pass re-sort.
+        for id in ctx.pending_by_estimate() {
+            if plan.free_count() == 0 {
+                // Every gang needs ≥ 1 free GPU and the loop has no other
+                // side effects, so the remaining candidates are all
+                // placement failures — same outcome, skipped.
+                break;
+            }
             let spec = &ctx.jobs[id].spec;
             let solo_gb = spec.profile().mem.mem_gb(spec.batch as f64);
             if let Some(gpus) =

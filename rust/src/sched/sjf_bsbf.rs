@@ -33,8 +33,6 @@ use crate::obskit::Alg2Audit;
 use crate::pair::{batch_size_scaling_placed, SharingConfig};
 use crate::sched_core::{Event, Policy, SchedContext, Txn};
 
-use super::sjf::pending_by_runtime;
-
 #[derive(Debug)]
 pub struct SjfBsbf {
     /// Scheduling-op latencies (seconds) for the §V-4 overhead claim.
@@ -66,6 +64,10 @@ impl Policy for SjfBsbf {
         "SJF-BSBF"
     }
 
+    fn coalesce_coincident(&self) -> bool {
+        true
+    }
+
     fn on_event(&mut self, ctx: &SchedContext, _ev: Event) -> Txn {
         let t0 = std::time::Instant::now();
         let mut plan = ctx.overlay();
@@ -75,7 +77,14 @@ impl Policy for SjfBsbf {
         // candidates in the same pass).
         let mut started: HashMap<JobId, (u32, Vec<GpuId>)> = HashMap::new();
 
-        for id in pending_by_runtime(ctx) {
+        for id in ctx.pending_by_estimate() {
+            if plan.free_count() == 0 && plan.one_job_count() == 0 {
+                // Neither an exclusive start nor a share can place
+                // anything (every gang needs ≥ 1 GPU and the line-9 gate
+                // rejects before any Algorithm-2 work or audit), so the
+                // remaining candidates are all skips — same outcome.
+                break;
+            }
             let need = ctx.jobs[id].spec.gpus;
             let prof = ctx.jobs[id].spec.profile();
             let solo_gb = prof.mem.mem_gb(ctx.jobs[id].spec.batch as f64);

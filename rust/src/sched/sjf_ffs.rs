@@ -7,16 +7,15 @@
 //! always shares when memory allows (κ = 0 unconditionally), picking the
 //! largest memory-feasible sub-batch — no Theorem 1, no interference check.
 //! Like the whole SJF family it ranks its queue on the *estimated*
-//! remaining runtime (`pending_by_runtime`); since it never consults
-//! durations beyond that sort, it is less estimate-sensitive than BSBF.
+//! remaining runtime ([`SchedContext::pending_by_estimate`]); since it
+//! never consults durations beyond that order, it is less
+//! estimate-sensitive than BSBF.
 
 use std::collections::HashMap;
 
 use crate::cluster::{placement, AllocView};
 use crate::jobs::JobId;
 use crate::sched_core::{Event, Policy, SchedContext, Txn};
-
-use super::sjf::pending_by_runtime;
 
 #[derive(Debug, Default)]
 pub struct SjfFfs;
@@ -26,6 +25,10 @@ impl Policy for SjfFfs {
         "SJF-FFS"
     }
 
+    fn coalesce_coincident(&self) -> bool {
+        true
+    }
+
     fn on_event(&mut self, ctx: &SchedContext, _ev: Event) -> Txn {
         let mut plan = ctx.overlay();
         let mut txn = Txn::new();
@@ -33,7 +36,14 @@ impl Policy for SjfFfs {
         // we start within this same batch of decisions.
         let mut started_accum: HashMap<JobId, u32> = HashMap::new();
 
-        for id in pending_by_runtime(ctx) {
+        for id in ctx.pending_by_estimate() {
+            if plan.free_count() == 0 && plan.one_job_count() == 0 {
+                // Neither an exclusive start nor a first-fit share can
+                // place anything (every gang needs ≥ 1 GPU and the line-9
+                // gate rejects before any side effect), so the remaining
+                // candidates are all skips — same outcome, cut short.
+                break;
+            }
             let need = ctx.jobs[id].spec.gpus;
             let prof = ctx.jobs[id].spec.profile();
             let solo_gb = prof.mem.mem_gb(ctx.jobs[id].spec.batch as f64);

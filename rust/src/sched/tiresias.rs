@@ -32,10 +32,10 @@ impl Default for Tiresias {
 }
 
 impl Tiresias {
-    /// 2D-LAS priority: (queue, arrival). Lower tuple = higher priority.
-    fn priority(&self, ctx: &SchedContext, id: JobId) -> (u8, f64, usize) {
-        let q = if ctx.attained_service(id) < self.threshold_gpu_s { 0 } else { 1 };
-        (q, ctx.jobs[id].spec.arrival_s, id)
+    /// 2D-LAS queue of a job: 0 (high priority) below the
+    /// attained-service threshold, 1 (low) at or above it.
+    fn queue_of(&self, ctx: &SchedContext, id: JobId) -> u8 {
+        u8::from(ctx.attained_service(id) >= self.threshold_gpu_s)
     }
 }
 
@@ -52,26 +52,69 @@ impl Policy for Tiresias {
         self.penalty_s
     }
 
+    fn coalesce_coincident(&self) -> bool {
+        true
+    }
+
     fn on_event(&mut self, ctx: &SchedContext, _ev: Event) -> Txn {
-        // Rank everyone active (running + eligible pending) by 2D-LAS,
-        // straight from the context's incremental caches.
-        let mut active: Vec<JobId> = ctx.running().to_vec();
-        active.extend_from_slice(ctx.pending());
-        active.sort_by(|&a, &b| {
-            let pa = self.priority(ctx, a);
-            let pb = self.priority(ctx, b);
-            pa.0.cmp(&pb.0).then(pa.1.total_cmp(&pb.1)).then(pa.2.cmp(&pb.2))
+        // Rank everyone active (running + eligible pending) by 2D-LAS
+        // priority (queue, arrival, id). Only the running set — bounded
+        // by cluster size — is sorted here; the pending backlog comes
+        // pre-sorted by (arrival, id) from the context's incremental
+        // index and is merged in per queue, so a pass over a deep queue
+        // never re-sorts it.
+        let mut running: Vec<(u8, f64, JobId)> = ctx
+            .running()
+            .iter()
+            .map(|&id| (self.queue_of(ctx, id), ctx.jobs[id].spec.arrival_s, id))
+            .collect();
+        running.sort_by(|a, b| {
+            a.0.cmp(&b.0).then(a.1.total_cmp(&b.1)).then(a.2.cmp(&b.2))
         });
 
-        // Greedy exclusive admission in priority order.
+        // Greedy exclusive admission in priority order. Admission stops
+        // outright once the budget hits zero: every gang needs ≥ 1 GPU,
+        // so no later candidate could be admitted anyway.
         let total = ctx.cluster.total_gpus();
         let mut budget = total;
         let mut should_run: Vec<JobId> = Vec::new();
-        for &id in &active {
-            let need = ctx.jobs[id].spec.gpus;
-            if need <= budget {
-                should_run.push(id);
-                budget -= need;
+        let mut run_iter = running.iter().copied().peekable();
+        'admit: for q in 0..2u8 {
+            let mut pend = ctx
+                .pending_by_arrival()
+                .filter(|&id| self.queue_of(ctx, id) == q)
+                .peekable();
+            loop {
+                if budget == 0 {
+                    break 'admit;
+                }
+                let next_run = run_iter.peek().copied().filter(|r| r.0 == q);
+                let id = match (next_run, pend.peek().copied()) {
+                    (None, None) => break,
+                    (Some((_, _, rid)), None) => {
+                        run_iter.next();
+                        rid
+                    }
+                    (None, Some(pid)) => {
+                        pend.next();
+                        pid
+                    }
+                    (Some((_, ra, rid)), Some(pid)) => {
+                        let pa = ctx.jobs[pid].spec.arrival_s;
+                        if ra.total_cmp(&pa).then(rid.cmp(&pid)).is_le() {
+                            run_iter.next();
+                            rid
+                        } else {
+                            pend.next();
+                            pid
+                        }
+                    }
+                };
+                let need = ctx.jobs[id].spec.gpus;
+                if need <= budget {
+                    should_run.push(id);
+                    budget -= need;
+                }
             }
         }
 
@@ -86,7 +129,7 @@ impl Policy for Tiresias {
                 // queue 1 is the threshold doing its job; from queue 0 it
                 // is pure contention.
                 if ctx.obs().is_enabled() {
-                    let (q, _, _) = self.priority(ctx, id);
+                    let q = self.queue_of(ctx, id);
                     ctx.obs().policy_note(
                         ctx.now(),
                         self.name(),

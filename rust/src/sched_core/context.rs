@@ -30,6 +30,7 @@ use crate::sim::SimState;
 
 use super::calendar::CalendarQueue;
 use super::ledger::{EagerReference, ProgressLedger};
+use super::order::{key_bits, PendingOrder};
 use super::Event;
 
 /// Eligibility slack shared with the legacy `SimState` scans: a time `t`
@@ -88,6 +89,12 @@ pub struct SchedContext {
     /// Eligible pending set: arrived, `Pending`/`Preempted`, past any
     /// restart penalty. Sorted ascending by id.
     pub(super) pending: Vec<JobId>,
+    /// Ordered views of `pending` — by `(estimated_remaining, id)` and by
+    /// `(arrival_s, id)` — maintained at the same membership sites
+    /// ([`SchedContext::pending_insert`]/[`SchedContext::pending_remove`])
+    /// so policy passes iterate candidates without re-sorting the
+    /// backlog. See [`super::order`] for the key-stability argument.
+    pub(super) order: PendingOrder,
     /// Running set, sorted ascending by id.
     pub(super) running: Vec<JobId>,
     /// Waiting set (queue-time accrual): arrived and `Pending`/
@@ -167,6 +174,7 @@ impl SchedContext {
         SchedContext {
             state,
             pending: Vec::new(),
+            order: PendingOrder::with_jobs(n),
             running: Vec::new(),
             waiting: Vec::new(),
             future_arrivals,
@@ -197,6 +205,7 @@ impl SchedContext {
         let mut ctx = SchedContext {
             state,
             pending: Vec::new(),
+            order: PendingOrder::with_jobs(n),
             running: Vec::new(),
             waiting: Vec::new(),
             future_arrivals: Vec::new(),
@@ -213,16 +222,15 @@ impl SchedContext {
             eager_ref: None,
         };
         for id in 0..n {
-            let rec = &ctx.state.jobs[id];
-            match rec.state {
+            match ctx.state.jobs[id].state {
                 JobState::Running => ctx.running.push(id),
                 JobState::Finished => ctx.finished += 1,
                 JobState::Pending | JobState::Preempted => {
-                    if rec.spec.arrival_s <= now + T_EPS {
+                    if ctx.state.jobs[id].spec.arrival_s <= now + T_EPS {
                         ctx.waiting.push(id);
                         ctx.ledger.wait_since[id] = now;
                         if ctx.state.not_before[id] <= now + T_EPS {
-                            ctx.pending.push(id);
+                            ctx.pending_insert(id);
                         } else {
                             ctx.restart_q.push(ctx.state.not_before[id], id);
                         }
@@ -284,6 +292,40 @@ impl SchedContext {
     /// no allocation, no scan.
     pub fn pending(&self) -> &[JobId] {
         &self.pending
+    }
+
+    /// Pending ids ascending by `(estimated_remaining, id)` — the shared
+    /// SJF-family candidate order, read from the incrementally maintained
+    /// [`PendingOrder`] instead of a per-pass re-sort. Identical (to the
+    /// element) to sorting [`SchedContext::pending`] by
+    /// `estimated_remaining(a).total_cmp(..).then(a.cmp(&b))`.
+    pub fn pending_by_estimate(&self) -> impl Iterator<Item = JobId> + '_ {
+        self.order.iter_by_estimate()
+    }
+
+    /// Pending ids ascending by `(arrival_s, id)` — FIFO's head-of-line
+    /// order and the Tiresias within-queue order, maintained
+    /// incrementally.
+    pub fn pending_by_arrival(&self) -> impl Iterator<Item = JobId> + '_ {
+        self.order.iter_by_arrival()
+    }
+
+    /// Insert `id` into the eligible pending set and both of its ordered
+    /// views. Idempotent, like the sorted-set helper it wraps. The
+    /// estimate key is captured here; it is bit-stable for as long as the
+    /// job stays pending (see [`super::order`]).
+    pub(super) fn pending_insert(&mut self, id: JobId) {
+        set_insert(&mut self.pending, id);
+        let est = self.estimated_remaining(id);
+        self.order.insert(id, est, self.state.jobs[id].spec.arrival_s);
+    }
+
+    /// Remove `id` from the eligible pending set and its ordered views.
+    /// Idempotent. Uses the stored insertion key, so it is safe to call
+    /// after `est_rate` has already been refreshed for a start.
+    pub(super) fn pending_remove(&mut self, id: JobId) {
+        set_remove(&mut self.pending, id);
+        self.order.remove(id, self.state.jobs[id].spec.arrival_s);
     }
 
     /// Running jobs, ascending by id. Maintained incrementally.
@@ -501,7 +543,7 @@ impl SchedContext {
             }
             self.future_arrivals.pop();
             set_insert(&mut self.waiting, id);
-            set_insert(&mut self.pending, id);
+            self.pending_insert(id);
             // Queue-time accrual starts at the event instant, exactly as
             // the eager per-advance loop did.
             self.ledger.wait_since[id] = t;
@@ -518,7 +560,7 @@ impl SchedContext {
             if matches!(self.state.jobs[id].state, JobState::Pending | JobState::Preempted)
                 && self.state.not_before[id] <= t + T_EPS
             {
-                set_insert(&mut self.pending, id);
+                self.pending_insert(id);
                 events.push(Event::RestartEligible { job: id });
             }
         }
@@ -640,6 +682,7 @@ impl SchedContext {
         );
         let rec = JobRecord::new(spec);
         self.ledger.push_job(&rec, self.state.now);
+        self.order.grow();
         if let Some(r) = self.eager_ref.as_mut() {
             r.remaining.push(rec.remaining_iters);
             r.service.push(0.0);
@@ -676,7 +719,7 @@ impl SchedContext {
             }
             JobState::Pending | JobState::Preempted => {
                 self.settle_wait(id);
-                set_remove(&mut self.pending, id);
+                self.pending_remove(id);
                 set_remove(&mut self.waiting, id);
                 if let Some(pos) = self.future_arrivals.iter().position(|&e| e == id) {
                     self.future_arrivals.remove(pos);
@@ -815,6 +858,46 @@ impl SchedContext {
                 self.pending,
                 self.state.pending()
             ));
+        }
+        // The pending order must equal a full re-sort of the pending set
+        // on freshly computed keys — the eager derivation the index
+        // replaced — and every stored estimate key must still match a
+        // recomputation (the frozen-while-pending argument, enforced).
+        let mut by_est = self.pending.clone();
+        by_est.sort_by(|&a, &b| {
+            self.estimated_remaining(a)
+                .total_cmp(&self.estimated_remaining(b))
+                .then(a.cmp(&b))
+        });
+        let got: Vec<JobId> = self.order.iter_by_estimate().collect();
+        if got != by_est {
+            return Err(format!(
+                "pending order (by estimate) {got:?} != re-sort {by_est:?}"
+            ));
+        }
+        let mut by_arr = self.pending.clone();
+        by_arr.sort_by(|&a, &b| {
+            self.state.jobs[a]
+                .spec
+                .arrival_s
+                .total_cmp(&self.state.jobs[b].spec.arrival_s)
+                .then(a.cmp(&b))
+        });
+        let got: Vec<JobId> = self.order.iter_by_arrival().collect();
+        if got != by_arr {
+            return Err(format!(
+                "pending order (by arrival) {got:?} != re-sort {by_arr:?}"
+            ));
+        }
+        for &id in &self.pending {
+            let fresh = key_bits(self.estimated_remaining(id));
+            if self.order.est_key(id) != fresh {
+                return Err(format!(
+                    "pending order key for job {id} drifted: stored {:#x}, \
+                     recomputes to {fresh:#x}",
+                    self.order.est_key(id)
+                ));
+            }
         }
         if self.running != self.state.running() {
             return Err(format!(

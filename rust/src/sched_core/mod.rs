@@ -36,20 +36,36 @@
 pub mod calendar;
 pub mod context;
 mod ledger;
+pub mod order;
 pub mod pump;
 pub mod txn;
 
 pub use context::SchedContext;
+pub use order::PendingOrder;
 pub use pump::{EventPump, NoHooks, PumpHooks};
 pub use txn::{ApplyReport, Decision, Txn};
 
 use crate::jobs::JobId;
 
-/// What the backend observed since the last policy invocation. Policies
-/// receive exactly one event per [`Policy::on_event`] call; simultaneous
-/// events (e.g. two arrivals at the same instant) are delivered as
-/// consecutive calls at the same `ctx.now()`, completions first, then
-/// arrivals, then restart eligibilities, then the tick.
+/// What the backend observed since the last policy invocation.
+/// Simultaneous events (e.g. two arrivals at the same instant) are
+/// ordered completions first, then arrivals, then restart eligibilities,
+/// then the tick, and every event in the batch is delivered at the same
+/// `ctx.now()` with the ledger fully settled — the first policy pass of
+/// a batch already sees the whole coincident world.
+///
+/// **Coincident-batch delivery** depends on
+/// [`Policy::coalesce_coincident`]. Event-reactive policies (the
+/// default) get one `on_event` call per event, as always. Full-pass
+/// policies that opt in get one call for the *first* event of a
+/// same-instant batch and further calls only while their transactions
+/// keep doing work: once a pass returns an empty [`Txn`], the remaining
+/// events of that batch are absorbed without a pass — for a pure
+/// decision function that ignores the event payload, those passes would
+/// have been byte-identical no-ops (same instant, unchanged state).
+/// `SimOutcome::policy_calls` and `EventPump::policy_calls` count
+/// delivered *passes*, so they shrink under coalescing even though every
+/// event still fires its observability tap and pump completion hook.
 ///
 /// An event describes what *happened*, not what is actionable now: a
 /// transaction applied by an earlier same-instant delivery may already
@@ -91,6 +107,17 @@ pub trait Policy {
     /// reallocation. `None` (default) means event-driven only.
     fn tick_interval(&self) -> Option<f64> {
         None
+    }
+
+    /// Opt in to coincident-batch delivery (see the [`Event`] docs): when
+    /// true, the backend may absorb the tail of a same-instant event
+    /// batch once a pass returns an empty [`Txn`]. Only sound for
+    /// policies whose `on_event` is a full pass that ignores the event
+    /// payload — i.e. a pure decision function of `ctx` alone — which is
+    /// exactly what makes the skipped passes provable no-ops. Default
+    /// `false`: one call per event, the historical contract.
+    fn coalesce_coincident(&self) -> bool {
+        false
     }
 
     /// Seconds a preempted job loses before it can restart.

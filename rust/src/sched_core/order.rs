@@ -1,0 +1,181 @@
+//! [`PendingOrder`]: incrementally maintained orderings of the eligible
+//! pending set, so a policy pass iterates candidates in priority order
+//! without re-sorting the backlog per event.
+//!
+//! Two orderings cover the paper's six policies:
+//!
+//! * **by estimate** — `(total_cmp(estimated_remaining), id)` ascending:
+//!   the shared SJF-family key (SJF, SJF-FFS, SJF-BSBF) and the
+//!   within-queue order Tiresias admits in.
+//! * **by arrival** — `(total_cmp(arrival_s), id)` ascending: FIFO's
+//!   head-of-line order and the Tiresias tie-break.
+//!
+//! Both keys are **frozen while a job is pending**, which is what makes
+//! the index sound: `estimated_remaining` reads
+//! `est_rate × remaining_iters`, where `est_rate` only changes on a
+//! `Start` (it is a function of the accumulation step) and a pending
+//! job's lazy `remaining_iters` is bit-stable between events (its
+//! integration rate is the ∞ sentinel, so the closed form collapses to
+//! the stored field — see `ledger`). Arrival times never change. The
+//! index therefore updates only at the pending-set membership sites in
+//! `context`/`txn`, and `SchedContext::cache_integrity` cross-checks it
+//! against a full re-sort.
+//!
+//! Keys are stored as sign-flipped IEEE-754 bit patterns
+//! ([`key_bits`]), a monotone bijection with `f64::total_cmp` — the
+//! `BTreeSet` order is exactly the order the eager `sort_by` produced,
+//! including for `-0.0`/`NaN` corner values.
+//!
+//! One subtlety pins the stored-key design: `apply_start` refreshes
+//! `est_rate` (new accumulation step) *before* removing the job from the
+//! pending set, so removal by recomputed key would miss the entry.
+//! [`PendingOrder::remove`] therefore removes by the key the job was
+//! inserted with (`est_key`), never by recomputation.
+
+use std::collections::BTreeSet;
+
+use crate::jobs::JobId;
+
+/// Monotone u64 encoding of an `f64`: `a.total_cmp(&b) == key_bits(a)
+/// .cmp(&key_bits(b))` for all values, NaNs and signed zeros included.
+pub(super) fn key_bits(x: f64) -> u64 {
+    let b = x.to_bits();
+    if b & (1 << 63) != 0 {
+        !b
+    } else {
+        b | (1 << 63)
+    }
+}
+
+/// Ordered views of the eligible pending set. Membership and both
+/// orderings are maintained at the same sites that mutate
+/// `SchedContext::pending`; `by_arrival` is the membership source of
+/// truth (insert/remove are idempotent, mirroring the sorted-Vec set
+/// helpers they ride along with).
+#[derive(Debug, Clone, Default)]
+pub struct PendingOrder {
+    /// `(key_bits(estimated_remaining at insert), id)` ascending.
+    by_estimate: BTreeSet<(u64, JobId)>,
+    /// `(key_bits(arrival_s), id)` ascending.
+    by_arrival: BTreeSet<(u64, JobId)>,
+    /// The estimate key each pending job was inserted under — removal
+    /// must use this, not a recomputation (see the module docs).
+    est_key: Vec<u64>,
+}
+
+impl PendingOrder {
+    /// Empty order sized for `n` jobs (no job pending yet).
+    pub fn with_jobs(n: usize) -> Self {
+        PendingOrder {
+            by_estimate: BTreeSet::new(),
+            by_arrival: BTreeSet::new(),
+            est_key: vec![0; n],
+        }
+    }
+
+    /// Register one more job id (live ingestion); it is not pending.
+    pub(super) fn grow(&mut self) {
+        self.est_key.push(0);
+    }
+
+    /// Index `id` as pending under the given keys. No-op if present
+    /// (zero-penalty preempts insert eagerly and again on the queued
+    /// `RestartEligible` pop, exactly like `set_insert`).
+    pub(super) fn insert(&mut self, id: JobId, estimate: f64, arrival_s: f64) {
+        if self.by_arrival.insert((key_bits(arrival_s), id)) {
+            let k = key_bits(estimate);
+            self.est_key[id] = k;
+            self.by_estimate.insert((k, id));
+        }
+    }
+
+    /// Drop `id` from the order. No-op if absent.
+    pub(super) fn remove(&mut self, id: JobId, arrival_s: f64) {
+        if self.by_arrival.remove(&(key_bits(arrival_s), id)) {
+            self.by_estimate.remove(&(self.est_key[id], id));
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_arrival.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_arrival.is_empty()
+    }
+
+    /// Pending ids ascending by `(estimated_remaining, id)` — the
+    /// SJF-family candidate order, without the per-pass re-sort.
+    pub fn iter_by_estimate(&self) -> impl Iterator<Item = JobId> + '_ {
+        self.by_estimate.iter().map(|&(_, id)| id)
+    }
+
+    /// Pending ids ascending by `(arrival_s, id)` — FIFO's head-of-line
+    /// order and the Tiresias within-queue order.
+    pub fn iter_by_arrival(&self) -> impl Iterator<Item = JobId> + '_ {
+        self.by_arrival.iter().map(|&(_, id)| id)
+    }
+
+    /// The estimate key `id` is currently indexed under (integrity
+    /// checks only — meaningless for non-pending ids).
+    pub(super) fn est_key(&self, id: JobId) -> u64 {
+        self.est_key[id]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn key_bits_orders_like_total_cmp() {
+        let vals = [
+            f64::NEG_INFINITY,
+            -1.5,
+            -0.0,
+            0.0,
+            1e-300,
+            42.0,
+            f64::INFINITY,
+            f64::NAN,
+            -f64::NAN,
+        ];
+        for &a in &vals {
+            for &b in &vals {
+                assert_eq!(
+                    a.total_cmp(&b),
+                    key_bits(a).cmp(&key_bits(b)),
+                    "key_bits must order {a} vs {b} like total_cmp"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn insert_remove_idempotent_and_ordered() {
+        let mut o = PendingOrder::with_jobs(4);
+        o.insert(2, 5.0, 1.0);
+        o.insert(0, 9.0, 3.0);
+        o.insert(1, 5.0, 2.0);
+        o.insert(2, 7.0, 1.0); // duplicate: ignored, keys unchanged
+        assert_eq!(o.len(), 3);
+        assert_eq!(o.iter_by_estimate().collect::<Vec<_>>(), vec![1, 2, 0]);
+        assert_eq!(o.iter_by_arrival().collect::<Vec<_>>(), vec![2, 1, 0]);
+        o.remove(3, 0.0); // absent: no-op
+        o.remove(1, 2.0);
+        o.remove(1, 2.0);
+        assert_eq!(o.iter_by_estimate().collect::<Vec<_>>(), vec![2, 0]);
+        assert!(!o.is_empty());
+    }
+
+    #[test]
+    fn removal_survives_key_drift() {
+        // The apply_start hazard: the live estimate changed after insert;
+        // removal must still find the entry via the stored key.
+        let mut o = PendingOrder::with_jobs(1);
+        o.insert(0, 10.0, 0.5);
+        o.remove(0, 0.5);
+        assert!(o.is_empty());
+        assert_eq!(o.iter_by_estimate().count(), 0);
+    }
+}

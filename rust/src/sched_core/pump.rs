@@ -120,7 +120,11 @@ impl EventPump {
         self
     }
 
-    /// Events delivered (= policy invocations) so far.
+    /// Policy *passes* delivered so far — the same count the engine's
+    /// `SimOutcome::policy_calls` reports: one per event for
+    /// event-reactive policies, fewer under
+    /// [`Policy::coalesce_coincident`] (the tail of a same-instant batch
+    /// is absorbed once a pass returns an empty transaction).
     pub fn policy_calls(&self) -> u64 {
         self.policy_calls
     }
@@ -252,7 +256,10 @@ impl EventPump {
 
     /// The shared delivery body — identical to the engine's: obs taps
     /// around each event, policy latency timed only when someone
-    /// listens, every transaction through [`SchedContext::apply`].
+    /// listens, every transaction through [`SchedContext::apply`], and
+    /// the same coincident-batch coalescing rule (once a pass returns an
+    /// empty transaction, the rest of the batch is absorbed without a
+    /// pass — completion hooks and obs taps still fire per event).
     fn deliver(
         &mut self,
         ctx: &mut SchedContext,
@@ -262,6 +269,8 @@ impl EventPump {
         let events = std::mem::take(&mut self.events);
         let obs = ctx.obs().clone();
         let obs_enabled = obs.is_enabled();
+        let coalesce = policy.coalesce_coincident();
+        let mut converged = false;
         let result = (|| -> Result<()> {
             for &ev in &events {
                 if let Event::Completion { job } = ev {
@@ -269,6 +278,9 @@ impl EventPump {
                 }
                 if obs_enabled {
                     obs.engine_event(ctx.now(), ev);
+                }
+                if coalesce && converged {
+                    continue;
                 }
                 let txn;
                 if obs_enabled {
@@ -279,6 +291,9 @@ impl EventPump {
                     txn = policy.on_event(ctx, ev);
                 }
                 self.policy_calls += 1;
+                if coalesce && txn.is_empty() {
+                    converged = true;
+                }
                 if let Some(msg) = self.reject_preempts {
                     if txn.has_preempt() {
                         if obs_enabled {

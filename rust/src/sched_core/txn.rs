@@ -202,7 +202,10 @@ impl SchedContext {
         if rec.first_start_s.is_none() {
             rec.first_start_s = Some(now);
         }
-        set_remove(&mut self.pending, job);
+        // Ordered-view removal must come through `pending_remove`: the
+        // estimate key was refreshed above, so the index is dropped by
+        // its stored insertion key, not a recomputation.
+        self.pending_remove(job);
         set_remove(&mut self.waiting, job);
         set_insert(&mut self.running, job);
         self.reproject(job);
@@ -246,7 +249,9 @@ impl SchedContext {
         if not_before <= self.state.now + T_EPS {
             // Zero (or sub-epsilon) penalty: immediately schedulable again
             // — including by a later decision in this same transaction.
-            set_insert(&mut self.pending, job);
+            // The sentinel rate is already in place, so the ordered view
+            // indexes the settled (frozen) estimate.
+            self.pending_insert(job);
         }
         // Always queue the expiry so the backend delivers the documented
         // RestartEligible event (immediately, for a zero penalty — the

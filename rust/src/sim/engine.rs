@@ -45,7 +45,11 @@ pub struct SimOutcome {
     pub jobs: Vec<JobRecord>,
     /// Total simulated span from first arrival to last completion.
     pub makespan_s: f64,
-    /// Number of policy invocations (events delivered).
+    /// Number of policy *passes* delivered. For event-reactive policies
+    /// this equals the event count; for policies opting into
+    /// [`Policy::coalesce_coincident`] it is smaller, because the tail
+    /// of a same-instant batch is absorbed once a pass returns an empty
+    /// transaction (see the [`Event`] docs).
     pub policy_calls: u64,
     /// Number of preemptions performed.
     pub preemptions: u64,
@@ -227,9 +231,19 @@ pub fn run_cluster_obs(
         }
 
         // ---- deliver each event; apply through the shared txn layer -------
+        // Under `coalesce_coincident`, once a pass at this instant
+        // returns an empty transaction the remaining events of the batch
+        // are absorbed without a pass: the policy is a pure decision
+        // function of `ctx` alone, and nothing changed since the empty
+        // pass, so the skipped passes would have been identical no-ops.
+        let coalesce = policy.coalesce_coincident();
+        let mut converged = false;
         for &ev in &events {
             if obs_enabled {
                 obs.engine_event(ctx.now(), ev);
+            }
+            if coalesce && converged {
+                continue;
             }
             let txn;
             if obs_enabled {
@@ -243,6 +257,9 @@ pub fn run_cluster_obs(
                 txn = policy.on_event(&ctx, ev);
             }
             policy_calls += 1;
+            if coalesce && txn.is_empty() {
+                converged = true;
+            }
             match ctx.apply(&txn, penalty) {
                 Ok(report) => {
                     if obs_enabled {

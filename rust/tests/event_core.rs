@@ -25,7 +25,7 @@ use wise_share::perf::profiles::ModelKind;
 use wise_share::prop_assert;
 use wise_share::sched::{self, POLICY_NAMES};
 use wise_share::sched_core::calendar::CalendarQueue;
-use wise_share::sched_core::{Event, EventPump, NoHooks, SchedContext, Txn};
+use wise_share::sched_core::{Event, EventPump, NoHooks, Policy, SchedContext, Txn};
 use wise_share::sim::engine;
 use wise_share::util::prop::forall;
 use wise_share::util::rng::Rng;
@@ -167,6 +167,195 @@ fn six_policy_golden_runs_agree_engine_vs_pump_with_eager_shadow() {
         ctx.cache_integrity()
             .unwrap_or_else(|e| panic!("{name}: {e}"));
     }
+}
+
+// ------------------------------------------------- batched delivery pin
+
+/// Forces the historical one-call-per-event contract: delegates
+/// everything to the wrapped policy but keeps the default
+/// `coalesce_coincident = false`, so the engine may not absorb any
+/// same-instant batch tail.
+struct PerEventDelivery(Box<dyn Policy>);
+
+impl Policy for PerEventDelivery {
+    fn name(&self) -> &'static str {
+        self.0.name()
+    }
+    fn on_event(&mut self, ctx: &SchedContext, ev: Event) -> Txn {
+        self.0.on_event(ctx, ev)
+    }
+    fn tick_interval(&self) -> Option<f64> {
+        self.0.tick_interval()
+    }
+    fn preemption_penalty(&self) -> f64 {
+        self.0.preemption_penalty()
+    }
+}
+
+/// Coincident-batch coalescing is an optimization, not a semantics
+/// change: for all six policies on the paper-scale golden trace, the
+/// batched run and a forced per-event run must agree bitwise on every
+/// job field — only the number of delivered passes may shrink.
+#[test]
+fn coalesced_batch_delivery_matches_per_event_delivery() {
+    let trace_jobs = trace::generate(&TraceConfig::simulation(240, 17));
+    for name in POLICY_NAMES {
+        let mut batched = sched::by_name(name).unwrap();
+        let out_b = engine::run(
+            ClusterConfig::simulation(),
+            &trace_jobs,
+            InterferenceModel::new(),
+            batched.as_mut(),
+        )
+        .unwrap_or_else(|e| panic!("{name}: batched run failed: {e:#}"));
+        let mut per_event = PerEventDelivery(sched::by_name(name).unwrap());
+        let out_e = engine::run(
+            ClusterConfig::simulation(),
+            &trace_jobs,
+            InterferenceModel::new(),
+            &mut per_event,
+        )
+        .unwrap_or_else(|e| panic!("{name}: per-event run failed: {e:#}"));
+        assert!(
+            out_b.policy_calls <= out_e.policy_calls,
+            "{name}: coalescing cannot add passes ({} vs {})",
+            out_b.policy_calls,
+            out_e.policy_calls
+        );
+        assert_eq!(out_b.preemptions, out_e.preemptions, "{name}: preemptions");
+        assert_eq!(
+            out_b.busy_gpu_s.to_bits(),
+            out_e.busy_gpu_s.to_bits(),
+            "{name}: busy integral"
+        );
+        for (a, b) in out_b.jobs.iter().zip(out_e.jobs.iter()) {
+            let id = a.spec.id;
+            assert_eq!(a.state, b.state, "{name}: job {id} state");
+            assert_eq!(
+                a.remaining_iters.to_bits(),
+                b.remaining_iters.to_bits(),
+                "{name}: job {id} remaining"
+            );
+            assert_eq!(
+                a.queued_s.to_bits(),
+                b.queued_s.to_bits(),
+                "{name}: job {id} queued"
+            );
+            assert_eq!(
+                a.finish_s.map(f64::to_bits),
+                b.finish_s.map(f64::to_bits),
+                "{name}: job {id} finish"
+            );
+            assert_eq!(
+                a.first_start_s.map(f64::to_bits),
+                b.first_start_s.map(f64::to_bits),
+                "{name}: job {id} first start"
+            );
+            assert_eq!(a.accum_step, b.accum_step, "{name}: job {id} accum step");
+        }
+    }
+}
+
+/// A guaranteed-coincident scenario pins the actual saving: three
+/// identical jobs arrive at t=0 (one batch of three arrivals) and finish
+/// at the same projected instant (one batch of three completions). SJF
+/// starts all three on the first arrival pass, converges on the second,
+/// and absorbs the third; the completion batch converges on its first
+/// (empty) pass. 3 delivered passes for 6 events.
+#[test]
+fn coalescing_absorbs_tail_of_coincident_batches() {
+    let specs: Vec<JobSpec> = (0..3)
+        .map(|id| JobSpec {
+            id,
+            model: ModelKind::Cifar10,
+            gpus: 1,
+            iterations: 50,
+            batch: 128,
+            arrival_s: 0.0,
+            est_factor: 1.0,
+        })
+        .collect();
+    let mut p = sched::by_name("SJF").unwrap();
+    let out = engine::run(
+        ClusterConfig::simulation(),
+        &specs,
+        InterferenceModel::new(),
+        p.as_mut(),
+    )
+    .unwrap();
+    assert!(out.jobs.iter().all(|j| j.state == JobState::Finished));
+    assert_eq!(
+        out.policy_calls, 3,
+        "6 coincident events must coalesce into 3 delivered passes"
+    );
+    // The forced per-event run still gets one call per event.
+    let mut per_event = PerEventDelivery(sched::by_name("SJF").unwrap());
+    let out_e = engine::run(
+        ClusterConfig::simulation(),
+        &specs,
+        InterferenceModel::new(),
+        &mut per_event,
+    )
+    .unwrap();
+    assert_eq!(out_e.policy_calls, 6, "per-event delivery must not coalesce");
+}
+
+// --------------------------------------------- pending order vs re-sort
+
+/// The incrementally maintained pending order must equal a full re-sort
+/// of `ctx.pending()` — by `(estimated_remaining, id)` and by
+/// `(arrival_s, id)` — at every step of random contended traces under
+/// random policies (starts, completions, preemptions, restarts all churn
+/// the index).
+#[test]
+fn prop_pending_order_matches_full_resort() {
+    forall("pending-order-vs-resort", 0x9E4D, 12, |rng: &mut Rng| {
+        let n_jobs = 20 + rng.index(30);
+        let seed = rng.index(1 << 16) as u64;
+        let trace_jobs = trace::generate(&TraceConfig::simulation(n_jobs, seed));
+        let name = POLICY_NAMES[rng.index(POLICY_NAMES.len())];
+        let mut p = sched::by_name(name).unwrap();
+        let mut ctx = SchedContext::new(
+            Cluster::new(ClusterConfig::simulation()),
+            trace_jobs.iter().cloned().map(JobRecord::new).collect(),
+            InterferenceModel::new(),
+        );
+        let mut pump = EventPump::new(p.as_ref());
+        let horizon = 120.0 * 24.0 * 3600.0;
+        let mut t = 0.0;
+        while !ctx.all_finished() && t < horizon {
+            t = (t + 6.0 * 3600.0).min(horizon);
+            pump.pump_sim(&mut ctx, p.as_mut(), t, 1e-6, &mut NoHooks)
+                .map_err(|e| format!("{name}/{n_jobs}j/{seed}: {e:#}"))?;
+            let got: Vec<_> = ctx.pending_by_estimate().collect();
+            let mut want = ctx.pending().to_vec();
+            want.sort_by(|&a, &b| {
+                ctx.estimated_remaining(a)
+                    .total_cmp(&ctx.estimated_remaining(b))
+                    .then(a.cmp(&b))
+            });
+            prop_assert!(
+                got == want,
+                "{name}/{n_jobs}j/{seed} t={t}: by-estimate {got:?} != re-sort {want:?}"
+            );
+            let got: Vec<_> = ctx.pending_by_arrival().collect();
+            let mut want = ctx.pending().to_vec();
+            want.sort_by(|&a, &b| {
+                ctx.jobs[a]
+                    .spec
+                    .arrival_s
+                    .total_cmp(&ctx.jobs[b].spec.arrival_s)
+                    .then(a.cmp(&b))
+            });
+            prop_assert!(
+                got == want,
+                "{name}/{n_jobs}j/{seed} t={t}: by-arrival {got:?} != re-sort {want:?}"
+            );
+        }
+        prop_assert!(ctx.all_finished(), "{name}/{n_jobs}j/{seed}: unfinished");
+        ctx.cache_integrity().map_err(|e| format!("{name}: {e}"))?;
+        Ok(())
+    });
 }
 
 // --------------------------------------------------- completion ordering

@@ -32,8 +32,23 @@ fn case(name: &str, min_s: f64, tol: Option<f64>) -> perfkit::CaseStats {
             p95_s: min_s * 1.2,
         },
         max_regress_pct: tol,
+        max_drop_pct: None,
         throughput: None,
     }
+}
+
+fn tp_case(
+    name: &str,
+    min_s: f64,
+    tol: Option<f64>,
+    drop_tol: Option<f64>,
+    events_per_s: f64,
+    jobs_per_s: f64,
+) -> perfkit::CaseStats {
+    let mut c = case(name, min_s, tol);
+    c.max_drop_pct = drop_tol;
+    c.throughput = Some(perfkit::Throughput { events_per_s, jobs_per_s });
+    c
 }
 
 fn report(profile: &str, cases: Vec<perfkit::CaseStats>) -> BenchReport {
@@ -111,6 +126,52 @@ fn baseline_gate_passes_within_and_fails_past_tolerance() {
     // Profiles must match: a quick report cannot gate a full baseline.
     let quick = report("quick", vec![case("a", 1.0, None)]);
     assert!(perfkit::compare(&quick, &baseline, 10.0).is_err());
+}
+
+#[test]
+fn throughput_gate_honors_per_case_drop_tolerance() {
+    // Baseline: wide 80% wall-clock headroom (single-shot noise), tight
+    // 25% throughput floor — the scale_xl backlog cases' shape.
+    let baseline = report(
+        "quick",
+        vec![tp_case("xl/backlog", 10.0, Some(80.0), Some(25.0), 200_000.0, 1_000.0)],
+    );
+
+    // Within the floor (-10% events/sec): Pass, gate clean.
+    let current = report(
+        "quick",
+        vec![tp_case("xl/backlog", 10.0, None, None, 180_000.0, 1_000.0)],
+    );
+    let cmp = perfkit::compare(&current, &baseline, 10.0).unwrap();
+    assert_eq!((cmp.n_passed, cmp.n_regressed), (1, 0));
+    assert!(matches!(cmp.rows[0].verdict, perfkit::Verdict::Pass { .. }));
+    cmp.gate().unwrap();
+
+    // Past the floor (-40%) but well inside the 80% wall-clock headroom:
+    // RegressThroughput at the 25% drop limit, and the gate errors.
+    let current = report(
+        "quick",
+        vec![tp_case("xl/backlog", 12.0, None, None, 120_000.0, 1_000.0)],
+    );
+    let cmp = perfkit::compare(&current, &baseline, 10.0).unwrap();
+    assert_eq!(cmp.n_regressed, 1);
+    assert!(matches!(
+        cmp.rows[0].verdict,
+        perfkit::Verdict::RegressThroughput { metric: "events_per_s", limit_pct, .. }
+            if limit_pct == 25.0
+    ));
+    let err = cmp.gate().unwrap_err().to_string();
+    assert!(err.contains("xl/backlog"), "{err}");
+    assert!(err.contains("events_per_s"), "{err}");
+
+    // Round-trip preserves the drop tolerance, so a saved baseline file
+    // gates identically to the in-memory one.
+    let path = tmp("drop-tol.json");
+    baseline.save(&path).unwrap();
+    let back = BenchReport::load(&path).unwrap();
+    assert_eq!(back, baseline);
+    let cmp = perfkit::compare(&current, &back, 10.0).unwrap();
+    assert_eq!(cmp.n_regressed, 1);
 }
 
 #[test]

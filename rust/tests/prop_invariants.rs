@@ -3,13 +3,14 @@
 //!
 //! Covered properties:
 //! * cluster allocation/release conservation + share-cap under random ops,
+//! * free-capacity index (buckets / nonempty / tier totals) vs rescan,
 //! * Theorem 1 endpoint optimality against randomized interior κ,
 //! * Algorithm 2 memory feasibility + accumulation-step arithmetic,
 //! * Eq. 7 monotonicity in batch / accumulation / interference,
 //! * end-to-end engine conservation over random small traces,
 //! * JSON parser round-trip over random documents.
 
-use wise_share::cluster::{Cluster, ClusterConfig};
+use wise_share::cluster::{topology, AllocView, Cluster, ClusterConfig, FreeIndex};
 use wise_share::jobs::trace::{self, TraceConfig};
 use wise_share::jobs::{JobRecord, JobSpec, JobState};
 use wise_share::pair::{batch_size_scaling, best_pair_schedule, PairSide};
@@ -59,6 +60,78 @@ fn prop_cluster_alloc_release_conserves_slots() {
             cluster.free_gpus().len() == cluster.total_gpus(),
             "slots leaked after full release"
         );
+        Ok(())
+    });
+}
+
+/// The incrementally maintained free-capacity index (buckets, nonempty
+/// list, per-memory-tier free totals) must equal a from-scratch rescan
+/// after every random allocate/release — on a uniform topology and on the
+/// two-tier heterogeneous one, where `eligible_total` actually gates.
+#[test]
+fn prop_free_index_matches_rescan_under_random_ops() {
+    forall("free-index-rescan", 0xF1u64, CASES, |rng| {
+        let mut cluster = if rng.f64() < 0.5 {
+            Cluster::new(ClusterConfig::physical())
+        } else {
+            Cluster::with_topology(topology::by_name("hetero-16x4-2tier").unwrap())
+        };
+        let n_servers = cluster.topology().n_servers();
+        let mut live: Vec<usize> = Vec::new();
+        for op in 0..60 {
+            if !live.is_empty() && rng.f64() < 0.4 {
+                let job = live.swap_remove(rng.index(live.len()));
+                cluster.release(job);
+            } else {
+                let want = 1 + rng.index(4);
+                let candidates: Vec<usize> = (0..cluster.total_gpus())
+                    .filter(|&g| cluster.load(g) < 2)
+                    .collect();
+                if candidates.len() < want {
+                    continue;
+                }
+                let job = 2000 + op;
+                cluster.allocate(job, &candidates[..want]);
+                live.push(job);
+            }
+            let free: Vec<usize> =
+                (0..n_servers).map(|s| cluster.server_free(s)).collect();
+            let idx = AllocView::free_index(&cluster);
+            prop_assert!(
+                *idx == FreeIndex::build(cluster.topology(), &free),
+                "op {op}: incremental index != rebuild (free {free:?})"
+            );
+            for k in 1..=idx.max_free() {
+                let want: Vec<usize> =
+                    (0..n_servers).filter(|&s| free[s] == k).collect();
+                prop_assert!(
+                    idx.bucket(k) == want.as_slice(),
+                    "op {op}: bucket[{k}] {:?} != rescan {want:?}",
+                    idx.bucket(k)
+                );
+            }
+            let want_nonempty: Vec<usize> =
+                (0..n_servers).filter(|&s| free[s] > 0).collect();
+            prop_assert!(
+                idx.nonempty() == want_nonempty.as_slice(),
+                "op {op}: nonempty {:?} != rescan {want_nonempty:?}",
+                idx.nonempty()
+            );
+            prop_assert!(
+                idx.eligible_total(0.0) == cluster.free_count(),
+                "op {op}: eligible_total(0) != free_count"
+            );
+            for probe in [11.0, 15.0, 22.0] {
+                let want: usize = (0..cluster.total_gpus())
+                    .filter(|&g| cluster.load(g) == 0 && cluster.mem_gb(g) + 1e-9 >= probe)
+                    .count();
+                prop_assert!(
+                    idx.eligible_total(probe) == want,
+                    "op {op}: eligible_total({probe}) {} != rescan {want}",
+                    idx.eligible_total(probe)
+                );
+            }
+        }
         Ok(())
     });
 }
