@@ -26,6 +26,7 @@ fn main() -> anyhow::Result<()> {
         topologies: Vec::new(),
         workloads: Vec::new(),      // philly-sim, the paper trace shape
         estimators: Vec::new(),     // oracle durations, as the paper assumes
+        share_caps: Vec::new(),     // the paper's C = 2
         seeds: vec![1, 2, 3],
         jobs_scale_load_baseline: Some(240), // 480 jobs ⇒ 2× density
     };

@@ -85,6 +85,7 @@ fn main() -> anyhow::Result<()> {
         ],
         workloads: Vec::new(),
         estimators: Vec::new(),
+        share_caps: Vec::new(),
         seeds: vec![1, 2],
         jobs_scale_load_baseline: None,
     };

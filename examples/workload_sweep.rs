@@ -12,7 +12,7 @@
 //! Run: `cargo run --release --example workload_sweep`
 
 use wise_share::campaign::{self, CampaignSpec};
-use wise_share::sched::POLICY_NAMES;
+use wise_share::sched::PAPER_POLICY_NAMES;
 
 fn main() -> anyhow::Result<()> {
     let spec = CampaignSpec::paper_preset();
@@ -24,7 +24,7 @@ fn main() -> anyhow::Result<()> {
 
     // Compact Fig. 6a matrix: seed-averaged avg JCT (hours) per cell.
     print!("jobs");
-    for name in POLICY_NAMES {
+    for name in PAPER_POLICY_NAMES {
         print!(",{name}");
     }
     println!();
@@ -32,7 +32,7 @@ fn main() -> anyhow::Result<()> {
     jobs_axis.dedup();
     for n_jobs in jobs_axis {
         print!("{n_jobs}");
-        for name in POLICY_NAMES {
+        for name in PAPER_POLICY_NAMES {
             let cell = res
                 .cells
                 .iter()

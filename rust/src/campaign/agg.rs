@@ -241,6 +241,7 @@ mod tests {
             total_gpus: 64,
             n_jobs: 240,
             load_milli: 1000,
+            share_cap: 2,
             policy: policy.into(),
         }
     }

@@ -11,15 +11,16 @@ use crate::sim::metrics::Summary;
 use super::agg::{CellAgg, Stream};
 
 /// CSV schema version comment, emitted as the file's first line. The
-/// row/column set has changed three times (topology in the cluster-v2
+/// row/column set has changed four times (topology in the cluster-v2
 /// PR, workload/estimator in workload v2, the per-cell `gpu_util` /
-/// `sharing_frac` / `unfinished` rows in obskit), so consumers pin on
+/// `sharing_frac` / `unfinished` rows in obskit, the `share_cap` column
+/// of the k-way sharing axis — DESIGN.md §17), so consumers pin on
 /// this instead of guessing from the shape; bump it whenever it changes.
-pub const CSV_SCHEMA: &str = "# schema: v3";
+pub const CSV_SCHEMA: &str = "# schema: v4";
 
 /// Long-format CSV header.
 pub const CSV_HEADER: &str = "campaign,topology,workload,estimator,gpus,jobs,load,\
-                              policy,slice,metric,seeds,mean,std,min,max,ci95";
+                              share_cap,policy,slice,metric,seeds,mean,std,min,max,ci95";
 
 /// One `(slice, metric)` CSV row per statistic of every cell, in cell
 /// (expansion) order. Time metrics are in seconds; `gpu_util`,
@@ -32,13 +33,14 @@ pub fn long_csv(campaign: &str, cells: &[CellAgg]) -> String {
     writeln!(out, "{CSV_HEADER}").unwrap();
     for c in cells {
         let base = format!(
-            "{campaign},{},{},{},{},{},{},{}",
+            "{campaign},{},{},{},{},{},{},{},{}",
             c.key.topology,
             c.key.workload,
             c.key.estimator,
             c.key.total_gpus,
             c.key.n_jobs,
             c.key.load_factor(),
+            c.key.share_cap,
             c.key.policy
         );
         let mut row = |slice: &str, metric: &str, s: &Stream| {
@@ -90,12 +92,13 @@ pub fn markdown(campaign: &str, cells: &[CellAgg]) -> String {
         let seeds = group.iter().map(CellAgg::seeds).max().unwrap_or(0);
         writeln!(
             out,
-            "### {campaign}: {}, {} GPUs, {} jobs, load x{}, {} workload, \
+            "### {campaign}: {}, {} GPUs, {} jobs, load x{}, C={}, {} workload, \
              {} estimates ({seeds} seed(s))\n",
             k.topology,
             k.total_gpus,
             k.n_jobs,
             k.load_factor(),
+            k.share_cap,
             k.workload,
             k.estimator,
         )
@@ -191,6 +194,7 @@ mod tests {
                         total_gpus: 64,
                         n_jobs: 240,
                         load_milli: 1500,
+                        share_cap: 2,
                         policy: policy.to_string(),
                     },
                     seed,
@@ -225,7 +229,7 @@ mod tests {
         // sharing_frac + unfinished) = 32 data rows.
         assert_eq!(lines.len(), 2 + 2 * 16);
         assert!(lines[2].starts_with(
-            "demo,uniform-16x4,philly-sim,oracle,64,240,1.5,FIFO,all,avg_jct_s,2,"
+            "demo,uniform-16x4,philly-sim,oracle,64,240,1.5,2,FIFO,all,avg_jct_s,2,"
         ));
         assert!(csv.contains("SJF-BSBF,all,makespan_s"));
         assert!(csv.contains("FIFO,all,gpu_util,2,0.800000"));
@@ -237,7 +241,7 @@ mod tests {
     fn markdown_groups_and_reports_ci() {
         let md = markdown("demo", &cells());
         assert!(md.contains(
-            "### demo: uniform-16x4, 64 GPUs, 240 jobs, load x1.5, philly-sim \
+            "### demo: uniform-16x4, 64 GPUs, 240 jobs, load x1.5, C=2, philly-sim \
              workload, oracle estimates (2 seed(s))"
         ));
         // One table34 block: both policies appear in the JCT rows.
@@ -272,6 +276,7 @@ mod tests {
                 total_gpus: 64,
                 n_jobs: 120,
                 load_milli: 500,
+                share_cap: 2,
                 policy: "FIFO".to_string(),
             },
             seed: 9,

@@ -178,6 +178,7 @@ mod tests {
             topologies: Vec::new(),
             workloads: Vec::new(),
             estimators: Vec::new(),
+            share_caps: Vec::new(),
             seeds: vec![1, 2, 3, 4],
             jobs_scale_load_baseline: None,
         };

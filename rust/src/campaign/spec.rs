@@ -49,6 +49,11 @@ pub struct Axes {
     /// `noisy:SIGMA[:SEED]`, `percentile:PCT`) to sweep; empty ⇒ the
     /// oracle. Cell keys carry the canonical spec string.
     pub estimators: Vec<String>,
+    /// Share caps C (max co-located jobs per GPU, DESIGN.md §17) to
+    /// sweep; empty ⇒ the base cluster's `max_share` (the paper's C = 2).
+    /// Applies on top of the resolved cluster shape, named topologies
+    /// included.
+    pub share_caps: Vec<usize>,
     /// Trace seeds; aggregation (mean/std/CI) runs across this axis.
     pub seeds: Vec<u64>,
     /// If `Some(baseline)`, each run's effective load factor is further
@@ -100,6 +105,7 @@ impl CampaignSpec {
                 topologies: Vec::new(),
                 workloads: Vec::new(),
                 estimators: Vec::new(),
+                share_caps: Vec::new(),
                 seeds: vec![1],
                 jobs_scale_load_baseline: None,
             },
@@ -112,7 +118,8 @@ impl CampaignSpec {
     /// (480, ×2) cell Table IV, and the whole job-count row Fig. 6a.
     pub fn paper_preset() -> CampaignSpec {
         let mut spec = CampaignSpec::new("paper");
-        spec.policies = sched::POLICY_NAMES.iter().map(|s| s.to_string()).collect();
+        spec.policies =
+            sched::PAPER_POLICY_NAMES.iter().map(|s| s.to_string()).collect();
         spec.axes = Axes {
             load_factors: vec![1.0],
             job_counts: vec![120, 240, 360, 480],
@@ -120,6 +127,7 @@ impl CampaignSpec {
             topologies: Vec::new(),
             workloads: Vec::new(),
             estimators: Vec::new(),
+            share_caps: Vec::new(),
             seeds: vec![1, 2, 3],
             jobs_scale_load_baseline: Some(240),
         };
@@ -176,6 +184,7 @@ impl CampaignSpec {
             topologies: str_list(axes, "topologies", Vec::new())?,
             workloads: str_list(axes, "workloads", Vec::new())?,
             estimators: str_list(axes, "estimators", Vec::new())?,
+            share_caps: usize_list(axes, "share_caps", Vec::new())?,
             seeds: u64_list(axes, "seeds", vec![1])?,
             jobs_scale_load_baseline: opt_usize(axes, "scale_load_with_jobs")?,
         };
@@ -257,6 +266,11 @@ impl CampaignSpec {
         }
         if self.cluster.max_share == 0 {
             bail!("campaign {:?}: max_share must be >= 1", self.name);
+        }
+        for &c in &a.share_caps {
+            if c == 0 {
+                bail!("campaign {:?}: share caps must be >= 1", self.name);
+            }
         }
         for name in &self.axes.workloads {
             workload::by_name_or_err(name)
@@ -341,6 +355,9 @@ pub struct ScenarioSpec {
     pub cluster: ClusterConfig,
     /// Named topology shape ([`topology::by_name`]) overriding `cluster`.
     pub topology: Option<String>,
+    /// Share-cap override (the `share_caps` axis); `None` keeps the
+    /// resolved cluster's own `max_share`.
+    pub share_cap: Option<usize>,
     pub trace: TraceConfig,
     pub xi_global: Option<f64>,
     pub max_sim_s: f64,
@@ -363,9 +380,13 @@ pub struct RunResult {
 impl ScenarioSpec {
     /// The cluster this scenario runs on.
     pub fn build_cluster(&self) -> Result<Cluster> {
-        Ok(match &self.topology {
+        let cluster = match &self.topology {
             Some(name) => Cluster::with_topology(topology::by_name_or_err(name)?),
             None => Cluster::new(self.cluster),
+        };
+        Ok(match self.share_cap {
+            Some(cap) => cluster.with_max_share(cap),
+            None => cluster,
         })
     }
 
@@ -569,11 +590,45 @@ mod tests {
     }
 
     #[test]
+    fn validate_share_caps_axis() {
+        let mut spec = CampaignSpec::new("x");
+        spec.policies = vec!["SJF-BSBF-k".to_string()];
+        spec.axes.share_caps = vec![2, 3, 4];
+        spec.validate().unwrap();
+        spec.axes.share_caps = vec![0];
+        let err = spec.validate().unwrap_err().to_string();
+        assert!(err.contains("share caps must be >= 1"), "{err}");
+    }
+
+    #[test]
+    fn scenario_share_cap_overrides_cluster() {
+        use crate::cluster::AllocView;
+        let scenario = ScenarioSpec {
+            policy: "SJF-FFS".to_string(),
+            cluster: ClusterConfig::physical(),
+            topology: None,
+            share_cap: Some(3),
+            trace: TraceConfig::simulation(8, 3),
+            xi_global: None,
+            max_sim_s: EngineConfig::default().max_sim_s,
+        };
+        let cluster = scenario.build_cluster().unwrap();
+        assert_eq!(cluster.max_share(), 3);
+        // Topology-resolved clusters honor the override too.
+        let topo = ScenarioSpec {
+            topology: Some("hetero-16x4-2tier".to_string()),
+            ..scenario
+        };
+        assert_eq!(topo.build_cluster().unwrap().max_share(), 3);
+    }
+
+    #[test]
     fn scenario_run_produces_summary() {
         let scenario = ScenarioSpec {
             policy: "FIFO".to_string(),
             cluster: ClusterConfig::physical(),
             topology: None,
+            share_cap: None,
             trace: TraceConfig::simulation(12, 3),
             xi_global: None,
             max_sim_s: EngineConfig::default().max_sim_s,
@@ -590,6 +645,7 @@ mod tests {
             policy: "FIFO".to_string(),
             cluster: ClusterConfig::physical(),
             topology: None,
+            share_cap: None,
             trace: TraceConfig::simulation(12, 3),
             xi_global: None,
             max_sim_s: EngineConfig::default().max_sim_s,
@@ -616,6 +672,7 @@ mod tests {
             policy: "FIFO".to_string(),
             cluster: ClusterConfig::physical(),
             topology: Some("hetero-16x4-2tier".to_string()),
+            share_cap: None,
             trace: TraceConfig::simulation(8, 3),
             xi_global: None,
             max_sim_s: EngineConfig::default().max_sim_s,

@@ -3,7 +3,7 @@
 //!
 //! Axis nesting order (outer → inner): cluster shape (topology or GPU
 //! count) → workload preset → estimator → job count → load factor →
-//! policy → seed. The order is part of the subsystem's contract — run
+//! share cap → policy → seed. The order is part of the subsystem's contract — run
 //! ordinals are stable across processes, results are reported in
 //! expansion order regardless of which worker finished first, and cells
 //! (everything but the seed) appear in first-occurrence order in every
@@ -38,6 +38,9 @@ pub struct CellKey {
     pub n_jobs: usize,
     /// Effective load factor × 1000.
     pub load_milli: u64,
+    /// Share cap C the run's cluster enforces (the `share_caps` axis, or
+    /// the resolved cluster's own `max_share` when the axis is unset).
+    pub share_cap: usize,
     pub policy: String,
 }
 
@@ -47,7 +50,7 @@ impl CellKey {
     }
 
     /// The non-policy coordinates — emitters group cells on this.
-    pub fn scenario_coords(&self) -> (&str, &str, &str, usize, usize, u64) {
+    pub fn scenario_coords(&self) -> (&str, &str, &str, usize, usize, u64, usize) {
         (
             &self.topology,
             &self.workload,
@@ -55,6 +58,7 @@ impl CellKey {
             self.total_gpus,
             self.n_jobs,
             self.load_milli,
+            self.share_cap,
         )
     }
 }
@@ -258,6 +262,14 @@ pub fn expand(spec: &CampaignSpec) -> Result<Vec<RunPoint>> {
         }
         load_grid.push(seen_millis.into_iter().map(|(m, _)| m).collect());
     }
+    // Share-cap axis: `None` keeps each resolved cluster's own cap (the
+    // paper's C = 2 everywhere), so an unset axis leaves existing matrices
+    // byte-identical.
+    let share_caps: Vec<Option<usize>> = if spec.axes.share_caps.is_empty() {
+        vec![None]
+    } else {
+        spec.axes.share_caps.iter().map(|&c| Some(c)).collect()
+    };
     let mut points = Vec::new();
     for variant in &variants {
         let cluster = variant.cluster;
@@ -266,9 +278,10 @@ pub fn expand(spec: &CampaignSpec) -> Result<Vec<RunPoint>> {
                 for (ji, &n_jobs) in spec.axes.job_counts.iter().enumerate() {
                     for &load_milli in &load_grid[ji] {
                         let quantized = load_milli as f64 / 1000.0;
-                        // The trace is policy-invariant: build one config
-                        // (and one lazily-shared generation) per seed,
-                        // reused across the whole policy axis below.
+                        // The trace is policy- and cap-invariant: build one
+                        // config (and one lazily-shared generation) per
+                        // seed, reused across the whole cap × policy block
+                        // below.
                         let seed_traces: Vec<Arc<SharedTrace>> = spec
                             .axes
                             .seeds
@@ -286,30 +299,35 @@ pub fn expand(spec: &CampaignSpec) -> Result<Vec<RunPoint>> {
                                 Arc::new(SharedTrace::new(trace))
                             })
                             .collect();
-                        for policy in &spec.policies {
-                            let cell = CellKey {
-                                topology: variant.name.clone(),
-                                workload: preset.name.to_string(),
-                                estimator: est_name.clone(),
-                                total_gpus: variant.total_gpus,
-                                n_jobs,
-                                load_milli,
-                                policy: policy.clone(),
-                            };
-                            for shared in &seed_traces {
-                                points.push(RunPoint {
-                                    ordinal: points.len(),
-                                    cell: cell.clone(),
-                                    scenario: ScenarioSpec {
-                                        policy: policy.clone(),
-                                        cluster,
-                                        topology: variant.topology.clone(),
-                                        trace: shared.config().clone(),
-                                        xi_global: spec.xi_global,
-                                        max_sim_s: spec.max_sim_s,
-                                    },
-                                    trace: shared.clone(),
-                                });
+                        for &share_cap in &share_caps {
+                            for policy in &spec.policies {
+                                let cell = CellKey {
+                                    topology: variant.name.clone(),
+                                    workload: preset.name.to_string(),
+                                    estimator: est_name.clone(),
+                                    total_gpus: variant.total_gpus,
+                                    n_jobs,
+                                    load_milli,
+                                    share_cap: share_cap
+                                        .unwrap_or(variant.cluster.max_share),
+                                    policy: policy.clone(),
+                                };
+                                for shared in &seed_traces {
+                                    points.push(RunPoint {
+                                        ordinal: points.len(),
+                                        cell: cell.clone(),
+                                        scenario: ScenarioSpec {
+                                            policy: policy.clone(),
+                                            cluster,
+                                            topology: variant.topology.clone(),
+                                            share_cap,
+                                            trace: shared.config().clone(),
+                                            xi_global: spec.xi_global,
+                                            max_sim_s: spec.max_sim_s,
+                                        },
+                                        trace: shared.clone(),
+                                    });
+                                }
                             }
                         }
                     }
@@ -335,6 +353,7 @@ mod tests {
             topologies: Vec::new(),
             workloads: Vec::new(),
             estimators: Vec::new(),
+            share_caps: Vec::new(),
             seeds: vec![1, 2, 3],
             jobs_scale_load_baseline: None,
         };
@@ -431,6 +450,37 @@ mod tests {
         // Workload is outer to estimator: the first half of the matrix is
         // all philly-sim.
         assert!(pts[..pts.len() / 2].iter().all(|p| p.cell.workload == "philly-sim"));
+    }
+
+    #[test]
+    fn unset_share_cap_axis_keeps_cluster_cap() {
+        let pts = expand(&spec()).unwrap();
+        assert!(pts.iter().all(|p| p.cell.share_cap == 2));
+        assert!(pts.iter().all(|p| p.scenario.share_cap.is_none()));
+    }
+
+    #[test]
+    fn share_cap_axis_expands_and_shares_traces() {
+        let mut s = spec();
+        s.axes.gpu_counts = Vec::new();
+        s.axes.share_caps = vec![2, 3];
+        let pts = expand(&s).unwrap();
+        // 2 caps x 2 jobs x 2 loads x 2 policies x 3 seeds.
+        assert_eq!(pts.len(), 2 * 2 * 2 * 2 * 3);
+        // Cap is outer to policy, inner to load: first policy block is
+        // C = 2, the next C = 3 over the same (jobs, load) cell.
+        assert_eq!(pts[0].cell.share_cap, 2);
+        assert_eq!(pts[0].scenario.share_cap, Some(2));
+        assert_eq!(pts[6].cell.share_cap, 3);
+        assert_eq!(pts[6].scenario.share_cap, Some(3));
+        assert_eq!(pts[0].cell.n_jobs, pts[6].cell.n_jobs);
+        assert_eq!(pts[0].cell.load_milli, pts[6].cell.load_milli);
+        // The trace is cap-invariant: same (seed, cell group) carries the
+        // same Arc across both caps and both policies.
+        assert!(Arc::ptr_eq(&pts[0].trace, &pts[3].trace));
+        assert!(Arc::ptr_eq(&pts[0].trace, &pts[6].trace));
+        assert!(Arc::ptr_eq(&pts[0].trace, &pts[9].trace));
+        assert!(!Arc::ptr_eq(&pts[0].trace, &pts[1].trace));
     }
 
     #[test]

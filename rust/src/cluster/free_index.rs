@@ -1,7 +1,8 @@
 //! [`FreeIndex`]: a bucketed free-capacity index over servers, so the
 //! placement strategies ([`super::placement`]) iterate only servers that
 //! can actually contribute GPUs to a gang — and bail in O(1) when none
-//! can — instead of scoring every server per candidate.
+//! can — instead of scoring every server per candidate (DESIGN.md §16
+//! covers the policy-pass hot path this index serves).
 //!
 //! Three structures, all maintained incrementally at the same site that
 //! updates the per-server free counters (`on_load_change` in the live

@@ -3,8 +3,10 @@
 //! and two link tiers. The paper's own model (`|S|` identical servers
 //! behind a sufficient-bandwidth switch) is the uniform special case a
 //! flat [`ClusterConfig`] constructs. A GPU may hold at most `C` jobs
-//! (Eq. 9; the paper fixes C = 2 after observing that 3-way sharing is
-//! never beneficial). Gang allocation/release is atomic (Eqs. 8, 10–12).
+//! (Eq. 9; the paper evaluates C = 2, and `max_share` keeps that
+//! default, but the cap is configurable — k-way sharing sets with
+//! C ∈ {3, 4} are DESIGN.md §17). Gang allocation/release is atomic
+//! (Eqs. 8, 10–12).
 //!
 //! Occupancy classes (free / one-job / schedulable) are maintained
 //! incrementally per server on every allocate/release, so policy passes
@@ -76,6 +78,12 @@ pub trait AllocView {
     /// First job on a GPU, if any — the sharing-partner lookup for
     /// one-job GPUs (`G_OJ`, Alg. 1 line 5).
     fn owner(&self, gpu: GpuId) -> Option<JobId>;
+    /// Every job on a GPU, in slot order (base residents before plan
+    /// grants on an overlay — the order a mutated clone's slot vector
+    /// would hold). The k-way sharing-set lookup (DESIGN.md §17); with
+    /// C = 2 a shareable GPU has exactly one resident and this is
+    /// `owner` as a one-element vector.
+    fn residents(&self, gpu: GpuId) -> Vec<JobId>;
     /// Total GPUs holding no job. O(1).
     fn free_count(&self) -> usize;
     /// Total GPUs holding exactly one job. O(1).
@@ -117,6 +125,20 @@ pub trait AllocView {
     /// (Alg. 1 line 5).
     fn one_job_gpus(&self) -> Vec<GpuId> {
         (0..self.total_gpus()).filter(|&g| self.load(g) == 1).collect()
+    }
+
+    /// GPUs holding at least one job but with a free share slot — the
+    /// k-way sharing candidates (DESIGN.md §17). With C = 2 only
+    /// load-1 GPUs qualify, so this is exactly
+    /// [`AllocView::one_job_gpus`], in the same order.
+    fn shareable_gpus(&self) -> Vec<GpuId> {
+        let cap = self.max_share();
+        (0..self.total_gpus())
+            .filter(|&g| {
+                let load = self.load(g);
+                load >= 1 && load < cap
+            })
+            .collect()
     }
 }
 
@@ -171,6 +193,22 @@ impl Cluster {
 
     pub fn topology(&self) -> &Topology {
         &self.topology
+    }
+
+    /// Override the share cap C (Eq. 9) — the k-way sharing knob
+    /// (DESIGN.md §17, `simulate --max-share`, campaign `share_caps`
+    /// axis). Works on any occupancy state: the schedulable count is
+    /// recomputed against the new cap.
+    pub fn set_max_share(&mut self, cap: usize) {
+        assert!(cap >= 1, "share cap C must be >= 1");
+        self.config.max_share = cap;
+        self.n_schedulable = self.slots.iter().filter(|s| s.jobs.len() < cap).count();
+    }
+
+    /// Builder form of [`Cluster::set_max_share`].
+    pub fn with_max_share(mut self, cap: usize) -> Self {
+        self.set_max_share(cap);
+        self
     }
 
     pub fn server_of(&self, gpu: GpuId) -> usize {
@@ -404,6 +442,10 @@ impl AllocView for Cluster {
         self.slots[gpu].jobs.first().copied()
     }
 
+    fn residents(&self, gpu: GpuId) -> Vec<JobId> {
+        self.slots[gpu].jobs.clone()
+    }
+
     fn free_count(&self) -> usize {
         self.n_free
     }
@@ -506,6 +548,46 @@ mod tests {
         assert_eq!(c.one_job_gpus(), vec![0, 1, 4, 5]);
         assert_eq!(c.one_job_count(), 4);
         c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn raised_share_cap_admits_k_way_sets() {
+        let mut c = cluster().with_max_share(3);
+        c.allocate(1, &[0]);
+        c.allocate(2, &[0]);
+        c.allocate(3, &[0]); // third resident is legal at C = 3
+        assert_eq!(c.load(0), 3);
+        assert_eq!(c.residents(0), vec![1, 2, 3]);
+        // GPU 0 is full; the free GPUs hold no job, so nothing is shareable.
+        assert!(c.shareable_gpus().is_empty());
+        c.allocate(4, &[1]);
+        c.allocate(5, &[1]);
+        assert_eq!(c.shareable_gpus(), vec![1]); // 2 residents < C = 3
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn set_max_share_recomputes_schedulable() {
+        let mut c = cluster();
+        c.allocate(1, &[0]);
+        c.allocate(2, &[0]); // GPU 0 full at C = 2
+        assert_eq!(c.schedulable_gpus(), 15);
+        c.set_max_share(3);
+        assert_eq!(c.schedulable_gpus(), 16);
+        c.check_invariants().unwrap();
+        c.set_max_share(2);
+        assert_eq!(c.schedulable_gpus(), 15);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn shareable_matches_one_job_gpus_at_c2() {
+        let mut c = cluster();
+        c.allocate(1, &[0, 1, 2, 3]);
+        c.allocate(2, &[2, 3]);
+        assert_eq!(c.shareable_gpus(), c.one_job_gpus());
+        assert_eq!(c.residents(2), vec![1, 2]);
+        assert_eq!(c.residents(4), Vec::<usize>::new());
     }
 
     #[test]

@@ -200,6 +200,19 @@ impl AllocView for ClusterOverlay<'_> {
             .or_else(|| self.bufs.extra[gpu].first().copied())
     }
 
+    fn residents(&self, gpu: GpuId) -> Vec<JobId> {
+        // Same order a mutated clone would hold: surviving base
+        // residents, then plan grants.
+        self.base
+            .slot(gpu)
+            .jobs
+            .iter()
+            .filter(|&&j| !self.is_released(j))
+            .chain(self.bufs.extra[gpu].iter())
+            .copied()
+            .collect()
+    }
+
     fn free_count(&self) -> usize {
         self.free_count
     }
@@ -270,6 +283,7 @@ mod tests {
         for g in 0..c.total_gpus() {
             assert_eq!(view.load(g), clone.load(g), "gpu {g}");
             assert_eq!(view.owner(g), clone.slot(g).jobs.first().copied(), "gpu {g}");
+            assert_eq!(view.residents(g), clone.slot(g).jobs, "gpu {g}");
         }
         // The base cluster is untouched.
         drop(view);
@@ -295,6 +309,7 @@ mod tests {
         for g in 0..c.total_gpus() {
             assert_eq!(view.load(g), clone.load(g), "gpu {g}");
             assert_eq!(view.owner(g), clone.slot(g).jobs.first().copied(), "gpu {g}");
+            assert_eq!(view.residents(g), clone.slot(g).jobs, "gpu {g}");
         }
     }
 

@@ -1,5 +1,5 @@
 //! Duration-estimator layer: what the scheduler *believes* a job's
-//! runtime is.
+//! runtime is (DESIGN.md §11 covers the workload/estimator subsystem).
 //!
 //! Every SJF-family policy in the paper ranks on the oracle remaining
 //! solo runtime `L_k`, but production schedulers only ever see

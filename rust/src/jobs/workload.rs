@@ -1,4 +1,5 @@
-//! Workload v2: pluggable arrival processes and named job-mix presets.
+//! Workload v2: pluggable arrival processes and named job-mix presets
+//! (DESIGN.md §11 covers the workload/estimator subsystem).
 //!
 //! The paper evaluates SJF-BSBF on one Philly-scaled Poisson trace, but
 //! real multi-tenant clusters exhibit diurnal and bursty arrival patterns

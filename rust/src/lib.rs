@@ -11,8 +11,10 @@
 //!
 //! * **L3 (this crate)** — cluster substrate, the shared event-driven
 //!   scheduling core ([`sched_core`]: typed events, cached scheduling
-//!   context, validated transaction layer), discrete-event simulator, six
-//!   scheduling policies, preset-driven workload generation (pluggable
+//!   context, validated transaction layer), discrete-event simulator, seven
+//!   scheduling policies (the paper's six plus the k-way `SJF-BSBF-k`
+//!   behind a per-cluster share cap C, DESIGN.md §17),
+//!   preset-driven workload generation (pluggable
 //!   arrival processes + duration estimators, [`jobs::workload`] /
 //!   [`jobs::estimate`]), metrics/reporting,
 //!   a declarative parallel scenario-sweep engine ([`campaign`]), a

@@ -50,6 +50,7 @@ wise-share — SJF-BSBF scheduling reproduction
 USAGE:
   wise-share simulate  [--policy NAME|all] [--jobs N] [--seed S] [--trace F]
                        [--cluster physical|simulation | --topology SHAPE]
+                       [--max-share C]
                        [--workload PRESET] [--estimator SPEC]
                        [--xi X] [--load L]
                        [--trace-out F] [--metrics-out F] [--audit-out F]
@@ -88,6 +89,11 @@ helios-heavy-tail, small-job-flood.
 
 Estimator SPECs (scheduler-visible duration estimates, also usable on the
 campaign `estimators` axis): oracle | noisy:SIGMA[:SEED] | percentile:PCT.
+
+Share cap (DESIGN.md §17): `simulate --max-share C` caps every GPU at C
+co-resident jobs (default 2, the paper's pair sharing; also usable on
+the campaign `share_caps` axis). C >= 3 only changes schedules under
+sharing policies that probe beyond pairs (SJF-FFS, SJF-BSBF-k).
 
 Observability (obskit, DESIGN.md §13): --trace-out writes a
 Perfetto-viewable Chrome-trace JSON (plus a sibling .jsonl event stream),
@@ -258,7 +264,15 @@ fn resolve_cluster(args: &Args) -> Result<Cluster> {
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {
-    let cluster = resolve_cluster(args)?;
+    let mut cluster = resolve_cluster(args)?;
+    if let Some(v) = args.get("max-share") {
+        let cap: usize =
+            v.parse().map_err(|e| anyhow::anyhow!("--max-share {v:?}: {e}"))?;
+        if cap == 0 {
+            bail!("--max-share 0 must be at least 1");
+        }
+        cluster.set_max_share(cap);
+    }
     let jobs: usize = args.parse_or("jobs", 240)?;
     let seed: u64 = args.parse_or("seed", 1)?;
     let load = positive_f64(args, "load", 1.0)?;

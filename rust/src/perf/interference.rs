@@ -1,4 +1,5 @@
-//! Interference ratios ξ for GPU-shared job pairs (Eqs. 5/6, Fig. 3).
+//! Interference ratios ξ for GPU-shared job pairs (Eqs. 5/6, Fig. 3) and
+//! their k-way composition for sharing sets (DESIGN.md §17).
 //!
 //! When jobs A and B share a GPU set, each one's iteration time inflates:
 //! `t̂ = t · ξ`, ξ ≥ 1. The paper measures ξ per (model, co-runner) pair and
@@ -7,6 +8,13 @@
 //! intensity, and allow (a) explicit per-pair overrides (the interface a
 //! real deployment would fit from co-located profiling runs, §IV-B) and
 //! (b) a global constant override used by the Fig. 6b sensitivity sweep.
+//!
+//! With share caps C > 2 a victim can face several aggressors at once;
+//! [`InterferenceModel::xi_set`] composes the per-aggressor pair factors
+//! under a selectable [`Composition`] rule. Invariants: a composed ξ is
+//! ≥ 1, collapses to the single pair factor when there is exactly one
+//! aggressor, and never decreases when an aggressor is added (pinned by
+//! `rust/tests/share_cap.rs`).
 
 use std::collections::HashMap;
 
@@ -16,6 +24,27 @@ use super::profiles::{ModelKind, WorkloadProfile};
 /// Symmetric pair key (ξ is looked up per *victim*, so the map key is the
 /// ordered pair (victim, aggressor)).
 pub type PairKey = (ModelKind, ModelKind);
+
+/// How per-aggressor pair factors compose into one ξ when a victim shares
+/// its GPUs with k > 1 co-runners (DESIGN.md §17).
+///
+/// Both rules are the identity on a single aggressor, so every pair-model
+/// (C = 2) code path is unaffected by the choice.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Composition {
+    /// ξ_set = max over aggressors of the pair factor: contention is a
+    /// bottleneck — the victim is slowed by its worst neighbor and the
+    /// rest hide behind that stall. This is the engine default and is
+    /// bit-for-bit the fold the simulator has always applied to
+    /// co-runner sets.
+    #[default]
+    MaxDegradation,
+    /// ξ_set = product over aggressors of the pair factors: each
+    /// neighbor's slowdown is independent and multiplicative — the
+    /// pessimistic composition for compute-bound victims whose
+    /// aggressors contend on disjoint resources.
+    PairwiseProduct,
+}
 
 #[derive(Debug, Clone, Default)]
 pub struct InterferenceModel {
@@ -77,6 +106,26 @@ impl InterferenceModel {
     /// Both ratios for a sharing pair: (ξ_a, ξ_b).
     pub fn pair(&self, a: ModelKind, b: ModelKind) -> (f64, f64) {
         (self.xi(a, b), self.xi(b, a))
+    }
+
+    /// Composed ξ for `victim` sharing with a whole aggressor set
+    /// (DESIGN.md §17). An empty set composes to 1 (no inflation); one
+    /// aggressor composes to exactly [`InterferenceModel::xi`] under
+    /// either rule.
+    ///
+    /// [`Composition::MaxDegradation`] reproduces, bit for bit, the
+    /// `fold(1.0, f64::max)` the simulator has always applied to a
+    /// running job's co-runners — that identity is what keeps C = 2
+    /// traces byte-identical across the k-way generalization.
+    pub fn xi_set<I>(&self, victim: ModelKind, aggressors: I, comp: Composition) -> f64
+    where
+        I: IntoIterator<Item = ModelKind>,
+    {
+        let factors = aggressors.into_iter().map(|a| self.xi(victim, a));
+        match comp {
+            Composition::MaxDegradation => factors.fold(1.0f64, f64::max),
+            Composition::PairwiseProduct => factors.fold(1.0f64, |acc, xi| acc * xi),
+        }
     }
 }
 
@@ -144,5 +193,32 @@ mod tests {
     fn rejects_sub_unit_ratio() {
         let mut m = InterferenceModel::new();
         m.set(ModelKind::Bert, ModelKind::Bert, 0.5);
+    }
+
+    #[test]
+    fn xi_set_collapses_to_pair_factor_for_one_aggressor() {
+        let m = InterferenceModel::new();
+        for a in ModelKind::ALL {
+            for b in ModelKind::ALL {
+                let pair = m.xi(a, b);
+                for comp in [Composition::MaxDegradation, Composition::PairwiseProduct] {
+                    assert_eq!(m.xi_set(a, [b], comp).to_bits(), pair.to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn xi_set_empty_is_unity_and_product_dominates_max() {
+        let m = InterferenceModel::new();
+        let set = [ModelKind::YoloV3, ModelKind::Bert, ModelKind::Cifar10];
+        for comp in [Composition::MaxDegradation, Composition::PairwiseProduct] {
+            assert_eq!(m.xi_set(ModelKind::Bert, [], comp), 1.0);
+        }
+        let mx = m.xi_set(ModelKind::Bert, set, Composition::MaxDegradation);
+        let prod = m.xi_set(ModelKind::Bert, set, Composition::PairwiseProduct);
+        assert!(mx >= 1.0);
+        // Each factor is >= 1, so the product bounds the max from above.
+        assert!(prod >= mx);
     }
 }

@@ -6,13 +6,20 @@
 //!   degree `δ` (Eq. 7):
 //!   `t_iter = (s-1)·t_comp(B/s) + (t_comp(B/s)^δ + t_comm^δ)^(1/δ)`
 //! * GPU sharing multiplies iteration time by an interference ratio ξ
-//!   (Eqs. 5/6), looked up in [`interference::InterferenceModel`].
+//!   (Eqs. 5/6), looked up in [`interference::InterferenceModel`]; sets
+//!   of co-runners compose per-pair factors under a selectable
+//!   [`interference::Composition`] rule, and [`share_set`] scores adding
+//!   a job to an existing sharing set (DESIGN.md §17).
 //!
-//! All times are seconds (f64); message sizes are MB.
+//! All times are seconds (f64); message sizes are MB. Invariants: every
+//! Eq. 7 time is positive and monotone in the accumulation step, a
+//! reference [`GangSpan`] reproduces the placement-agnostic arithmetic
+//! bit-for-bit, and composed ξ is ≥ 1 (DESIGN.md §2, §12, §17).
 
 pub mod fit;
 pub mod interference;
 pub mod profiles;
+pub mod share_set;
 
 
 /// Placement summary of a gang, derived from where it actually landed on

@@ -1,0 +1,400 @@
+//! k-way sharing sets: Algorithm-2-style marginal-benefit scoring for
+//! adding one pending job to an *existing* set of co-residents
+//! (DESIGN.md §17).
+//!
+//! [`crate::pair`] is the paper's exact C = 2 analysis: one running job,
+//! one newcomer, Theorem 1 on the two κ endpoints. With a share cap
+//! C > 2 the candidate GPU set may already hold up to C − 1 residents,
+//! so the score for "add job A here" must account for the whole set:
+//! composed interference ([`Composition`]), Eq. 9 memory feasibility
+//! over *all* residents, and completion times under a fluid drain where
+//! each member de-inflates as its neighbors finish.
+//!
+//! Invariants:
+//! * exactly one resident ⇒ [`share_set_scaling_placed`] delegates to
+//!   [`pair::batch_size_scaling_placed`], so the returned verdict, the
+//!   sub-batch, and the sort key ([`ShareSetConfig::set_jct`]) are
+//!   bit-for-bit the pair path's — this is the hinge of the C = 2
+//!   parity guarantee (`rust/tests/share_cap.rs`);
+//! * the newcomer's memory budget is the tightest GPU's budget minus
+//!   the sum of every resident's footprint (Eq. 9 over the set, not a
+//!   pairwise check);
+//! * `None` means no sub-batch down to 1 fits next to the residents.
+
+use crate::jobs::JobRecord;
+use crate::pair;
+use crate::perf::interference::{Composition, InterferenceModel};
+use crate::perf::profiles::ModelKind;
+use crate::perf::GangSpan;
+
+/// Best configuration for adding one job to a sharing set — the k-way
+/// generalization of [`pair::SharingConfig`].
+#[derive(Debug, Clone, Copy)]
+pub struct ShareSetConfig {
+    /// Share now (κ = 0)? False ⇒ the set prefers the newcomer to wait.
+    pub share: bool,
+    /// Chosen sub-batch `b̄` for the newcomer.
+    pub sub_batch: u32,
+    /// Accumulation step s = B / b̄.
+    pub accum_step: u32,
+    /// Best mean completion time of the whole set (newcomer + residents),
+    /// measured from now — the Alg. 1 line 14 sort key. Equals
+    /// [`pair::SharingConfig::pair_jct`] bit-for-bit at one resident.
+    pub set_jct: f64,
+    /// Mean set JCT under full overlap (κ = 0).
+    pub overlap_avg: f64,
+    /// Mean set JCT with the newcomer waiting out every resident.
+    pub sequential_avg: f64,
+}
+
+impl ShareSetConfig {
+    fn from_pair(cfg: pair::SharingConfig) -> Self {
+        ShareSetConfig {
+            share: cfg.share,
+            sub_batch: cfg.sub_batch,
+            accum_step: cfg.accum_step,
+            set_jct: cfg.pair_jct,
+            overlap_avg: cfg.schedule.overlap_avg,
+            sequential_avg: cfg.schedule.sequential_avg,
+        }
+    }
+}
+
+/// One member of a fluid-drain evaluation: solo per-iteration time on its
+/// own placement plus estimated remaining iterations.
+#[derive(Debug, Clone)]
+struct SetSide {
+    model: ModelKind,
+    iter_time: f64,
+    iters: f64,
+}
+
+/// Fluid drain of a co-located set: every member runs inflated by the
+/// composed ξ of the *currently active* others, de-inflating as
+/// neighbors depart. Returns each member's finish time from now. With
+/// two members this is exactly the drain-first overlap arithmetic of
+/// [`pair::best_pair_schedule`].
+fn fluid_finish(sides: &[SetSide], xi: &InterferenceModel, comp: Composition) -> Vec<f64> {
+    let n = sides.len();
+    let mut rem: Vec<f64> = sides.iter().map(|s| s.iters).collect();
+    let mut finish = vec![0.0f64; n];
+    let mut active: Vec<usize> = (0..n).collect();
+    let mut now = 0.0f64;
+    while !active.is_empty() {
+        let inflated: Vec<f64> = active
+            .iter()
+            .map(|&j| {
+                let others =
+                    active.iter().filter(|&&o| o != j).map(|&o| sides[o].model);
+                sides[j].iter_time * xi.xi_set(sides[j].model, others, comp)
+            })
+            .collect();
+        // Next departure: earliest index wins ties (deterministic).
+        let mut next = 0usize;
+        let mut dt = f64::INFINITY;
+        for (pos, (&j, &t)) in active.iter().zip(&inflated).enumerate() {
+            let left = rem[j] * t;
+            if left < dt {
+                next = pos;
+                dt = left;
+            }
+        }
+        now += dt;
+        for (pos, (&j, &t)) in active.iter().zip(&inflated).enumerate() {
+            if pos == next {
+                rem[j] = 0.0;
+                finish[j] = now;
+            } else {
+                rem[j] -= dt / t;
+            }
+        }
+        active.remove(next);
+    }
+    finish
+}
+
+/// Algorithm 2 generalized to sharing sets: sweep the newcomer's
+/// sub-batch over `{B, B/2, …, 1}`, check Eq. 9 over the whole resident
+/// set, and score each feasible configuration by the mean completion
+/// time of all k + 1 jobs under the better κ endpoint.
+///
+/// * `residents` — the jobs already on the candidate GPU set (their
+///   batches and accumulation steps stay untouched, §V-B3), with
+///   `remaining_iters` refreshed by the caller; `resident_spans` are
+///   their own placements, index-aligned.
+/// * `gang` / `new_span` — the shared GPU set the newcomer would land on.
+/// * `gpu_mem_gb` — the tightest shared GPU's budget; residents'
+///   footprints are subtracted here (Eq. 9 over the set).
+///
+/// With exactly one resident this delegates to
+/// [`pair::batch_size_scaling_placed`] and is bit-identical to it.
+#[allow(clippy::too_many_arguments)]
+pub fn share_set_scaling_placed(
+    new_job: &JobRecord,
+    residents: &[JobRecord],
+    gang: usize,
+    gpu_mem_gb: f64,
+    xi: &InterferenceModel,
+    comp: Composition,
+    sweep_batches: bool,
+    new_span: &GangSpan,
+    resident_spans: &[GangSpan],
+) -> Option<ShareSetConfig> {
+    assert!(!residents.is_empty(), "share-set scoring needs at least one resident");
+    assert_eq!(residents.len(), resident_spans.len(), "one span per resident");
+    if residents.len() == 1 {
+        return pair::batch_size_scaling_placed(
+            new_job,
+            &residents[0],
+            gang,
+            gpu_mem_gb,
+            xi,
+            sweep_batches,
+            new_span,
+            &resident_spans[0],
+        )
+        .map(ShareSetConfig::from_pair);
+    }
+
+    let new_prof = new_job.spec.profile();
+    // Eq. 9 over the set: the newcomer gets what every resident together
+    // leaves on the tightest GPU.
+    let budget = residents.iter().fold(gpu_mem_gb, |b, r| {
+        b - r.spec.profile().mem.mem_gb(r.spec.batch as f64 / r.accum_step as f64)
+    });
+
+    let resident_sides: Vec<SetSide> = residents
+        .iter()
+        .zip(resident_spans)
+        .map(|(r, span)| SetSide {
+            model: r.spec.model,
+            iter_time: r.spec.profile().perf.iter_time_placed(
+                r.spec.batch as f64,
+                r.accum_step,
+                r.spec.gpus,
+                span,
+            ),
+            iters: r.estimated_remaining_iters(),
+        })
+        .collect();
+    // Sequential endpoint: the residents drain among themselves (they
+    // interfere with each other whether or not the newcomer joins), and
+    // the newcomer starts solo after the last departure.
+    let resident_finish = fluid_finish(&resident_sides, xi, comp);
+    let last_resident = resident_finish.iter().fold(0.0f64, |a, &b| a.max(b));
+    let resident_sum: f64 = resident_finish.iter().sum();
+
+    let mut best: Option<ShareSetConfig> = None;
+    let mut b = new_job.spec.batch.max(1);
+    loop {
+        let s = (new_job.spec.batch as f64 / b as f64).ceil() as u32;
+        if new_prof.mem.mem_gb(b as f64) <= budget {
+            let new_iter = new_prof.perf.iter_time_placed(
+                new_job.spec.batch as f64,
+                s,
+                gang,
+                new_span,
+            );
+            let mut sides = resident_sides.clone();
+            sides.push(SetSide {
+                model: new_job.spec.model,
+                iter_time: new_iter,
+                iters: new_job.estimated_remaining_iters(),
+            });
+            let finish = fluid_finish(&sides, xi, comp);
+            let n = finish.len() as f64;
+            let overlap_avg = finish.iter().sum::<f64>() / n;
+            let seq_new = last_resident + new_iter * new_job.estimated_remaining_iters();
+            let sequential_avg = (resident_sum + seq_new) / n;
+            let share = overlap_avg <= sequential_avg;
+            let set_jct = overlap_avg.min(sequential_avg);
+            let better = match &best {
+                None => true,
+                Some(cfg) => set_jct < cfg.set_jct,
+            };
+            if better {
+                best = Some(ShareSetConfig {
+                    share,
+                    sub_batch: b,
+                    accum_step: s,
+                    set_jct,
+                    overlap_avg,
+                    sequential_avg,
+                });
+            }
+        }
+        if b == 1 || !sweep_batches {
+            break;
+        }
+        b /= 2;
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jobs::{JobRecord, JobSpec};
+
+    fn record(model: ModelKind, gpus: usize, iters: u64, batch: u32) -> JobRecord {
+        JobRecord::new(JobSpec {
+            id: 0,
+            model,
+            gpus,
+            iterations: iters,
+            batch,
+            arrival_s: 0.0,
+            est_factor: 1.0,
+        })
+    }
+
+    #[test]
+    fn one_resident_is_bitwise_the_pair_path() {
+        let new = record(ModelKind::Bert, 4, 500, 16);
+        let run = record(ModelKind::Cifar10, 4, 500, 128);
+        let xi = InterferenceModel::new();
+        let r = GangSpan::reference();
+        let set = share_set_scaling_placed(
+            &new,
+            std::slice::from_ref(&run),
+            4,
+            11.0,
+            &xi,
+            Composition::MaxDegradation,
+            true,
+            &r,
+            std::slice::from_ref(&r),
+        )
+        .unwrap();
+        let pair = pair::batch_size_scaling_placed(&new, &run, 4, 11.0, &xi, true, &r, &r)
+            .unwrap();
+        assert_eq!(set.set_jct.to_bits(), pair.pair_jct.to_bits());
+        assert_eq!(set.share, pair.share);
+        assert_eq!(set.sub_batch, pair.sub_batch);
+        assert_eq!(set.accum_step, pair.accum_step);
+    }
+
+    #[test]
+    fn memory_budget_sums_over_all_residents() {
+        // One CIFAR10 resident (4.3 GB) leaves room for a sub-batched BERT;
+        // two of them (8.6 GB) leave less than BERT's 4.2 GB base, so the
+        // set check must reject what a pairwise check would admit.
+        let new = record(ModelKind::Bert, 4, 500, 16);
+        let run = record(ModelKind::Cifar10, 4, 500, 128);
+        let xi = InterferenceModel::new();
+        let r = GangSpan::reference();
+        let one = share_set_scaling_placed(
+            &new,
+            std::slice::from_ref(&run),
+            4,
+            11.0,
+            &xi,
+            Composition::MaxDegradation,
+            true,
+            &r,
+            std::slice::from_ref(&r),
+        );
+        assert!(one.is_some());
+        let residents = [run.clone(), run.clone()];
+        let spans = [r, r];
+        let two = share_set_scaling_placed(
+            &new,
+            &residents,
+            4,
+            11.0,
+            &xi,
+            Composition::MaxDegradation,
+            true,
+            &r,
+            &spans,
+        );
+        assert!(two.is_none(), "set budget must reject the third resident");
+    }
+
+    #[test]
+    fn polite_trio_shares() {
+        let new = record(ModelKind::Ncf, 2, 1000, 4096);
+        let residents = [
+            record(ModelKind::Cifar10, 2, 1000, 128),
+            record(ModelKind::Ncf, 2, 1000, 4096),
+        ];
+        let xi = InterferenceModel::new();
+        let r = GangSpan::reference();
+        let spans = [r, r];
+        let cfg = share_set_scaling_placed(
+            &new,
+            &residents,
+            2,
+            11.0,
+            &xi,
+            Composition::MaxDegradation,
+            true,
+            &r,
+            &spans,
+        )
+        .unwrap();
+        assert!(cfg.share, "{cfg:?}");
+    }
+
+    #[test]
+    fn heavy_interference_set_declines_to_share() {
+        let new = record(ModelKind::Cifar10, 2, 1000, 32);
+        let residents = [
+            record(ModelKind::Cifar10, 2, 1000, 32),
+            record(ModelKind::Cifar10, 2, 1000, 32),
+        ];
+        let xi = InterferenceModel::with_global(4.0);
+        let r = GangSpan::reference();
+        let spans = [r, r];
+        let cfg = share_set_scaling_placed(
+            &new,
+            &residents,
+            2,
+            11.0,
+            &xi,
+            Composition::MaxDegradation,
+            true,
+            &r,
+            &spans,
+        )
+        .unwrap();
+        assert!(!cfg.share, "{cfg:?}");
+    }
+
+    #[test]
+    fn product_composition_never_scores_below_max() {
+        let new = record(ModelKind::Ncf, 2, 1000, 4096);
+        let residents = [
+            record(ModelKind::Cifar10, 2, 1000, 128),
+            record(ModelKind::Ncf, 2, 1000, 4096),
+        ];
+        let xi = InterferenceModel::new();
+        let r = GangSpan::reference();
+        let spans = [r, r];
+        let mx = share_set_scaling_placed(
+            &new,
+            &residents,
+            2,
+            11.0,
+            &xi,
+            Composition::MaxDegradation,
+            true,
+            &r,
+            &spans,
+        )
+        .unwrap();
+        let prod = share_set_scaling_placed(
+            &new,
+            &residents,
+            2,
+            11.0,
+            &xi,
+            Composition::PairwiseProduct,
+            true,
+            &r,
+            &spans,
+        )
+        .unwrap();
+        assert!(prod.overlap_avg >= mx.overlap_avg, "{prod:?} vs {mx:?}");
+    }
+}

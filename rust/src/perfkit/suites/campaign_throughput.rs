@@ -36,6 +36,7 @@ fn run(profile: Profile) -> SuiteReport {
         topologies: Vec::new(),
         workloads: Vec::new(),
         estimators: Vec::new(),
+        share_caps: Vec::new(),
         seeds: (1..=n_seeds).collect(),
         jobs_scale_load_baseline: None,
     };

@@ -1,6 +1,7 @@
-//! The six scheduling policies evaluated in the paper (§VI-A Baselines):
-//! FIFO, SJF, Tiresias, Pollux-like elastic, SJF-FFS and the contribution,
-//! SJF-BSBF. All implement the event-driven
+//! The scheduling policies: the six the paper evaluates (§VI-A Baselines)
+//! — FIFO, SJF, Tiresias, Pollux-like elastic, SJF-FFS and the
+//! contribution, SJF-BSBF — plus SJF-BSBF-k, the k-way sharing-set
+//! generalization of DESIGN.md §17. All implement the event-driven
 //! [`crate::sched_core::Policy`] — `on_event(&SchedContext, Event) -> Txn`
 //! — and run unchanged on the simulator and (for the non-preemptive ones)
 //! the physical coordinator, which share the `sched_core` validation and
@@ -10,6 +11,7 @@ pub mod elastic;
 pub mod fifo;
 pub mod sjf;
 pub mod sjf_bsbf;
+pub mod sjf_bsbf_k;
 pub mod sjf_ffs;
 pub mod tiresias;
 
@@ -17,13 +19,20 @@ pub use elastic::Elastic;
 pub use fifo::Fifo;
 pub use sjf::Sjf;
 pub use sjf_bsbf::SjfBsbf;
+pub use sjf_bsbf_k::SjfBsbfK;
 pub use sjf_ffs::SjfFfs;
 pub use tiresias::Tiresias;
 
 use crate::sched_core::Policy;
 
-/// All policy names, in the paper's table order.
-pub const POLICY_NAMES: [&str; 6] =
+/// All policy names: the paper's table order, then the §17 extension.
+pub const POLICY_NAMES: [&str; 7] =
+    ["FIFO", "SJF", "Tiresias", "Pollux", "SJF-FFS", "SJF-BSBF", "SJF-BSBF-k"];
+
+/// The six policies of the paper's evaluation tables — what
+/// `campaign::CampaignSpec::paper_preset` sweeps. Excludes the k-way
+/// extension so the headline reproduction matrix stays the paper's.
+pub const PAPER_POLICY_NAMES: [&str; 6] =
     ["FIFO", "SJF", "Tiresias", "Pollux", "SJF-FFS", "SJF-BSBF"];
 
 /// Instantiate a policy by its paper name (CLI / bench entry point).
@@ -35,6 +44,7 @@ pub fn by_name(name: &str) -> Option<Box<dyn Policy>> {
         "Pollux" => Box::new(Elastic::default()),
         "SJF-FFS" => Box::new(SjfFfs::default()),
         "SJF-BSBF" => Box::new(SjfBsbf::default()),
+        "SJF-BSBF-k" => Box::new(SjfBsbfK::default()),
         _ => return None,
     })
 }
@@ -50,5 +60,10 @@ mod tests {
             assert_eq!(p.name(), name);
         }
         assert!(by_name("bogus").is_none());
+    }
+
+    #[test]
+    fn paper_names_are_a_prefix_of_all_names() {
+        assert_eq!(&POLICY_NAMES[..PAPER_POLICY_NAMES.len()], &PAPER_POLICY_NAMES);
     }
 }

@@ -1,0 +1,379 @@
+//! **SJF-BSBF-k** — SJF-BSBF generalized to k-way sharing sets
+//! (DESIGN.md §17): the share cap C comes from the cluster config
+//! instead of being hard-wired to pairs.
+//!
+//! Per pending job, in ascending estimated-remaining-runtime order:
+//! 1. enough free GPUs → consolidated exclusive start (Alg. 1 lines 6–7);
+//! 2. otherwise, if free + *shareable* GPUs (1 ≤ load < C) cover the
+//!    request: score every distinct resident *set* with the generalized
+//!    Algorithm 2 ([`share_set_scaling_placed`]) — composed interference
+//!    under the configured [`Composition`], Eq. 9 memory feasibility over
+//!    all residents, fluid-drain κ endpoints — keep the sets whose best
+//!    configuration says *share*, sort them by set JCT ascending and take
+//!    their GPUs until the gang is covered, topping up from free GPUs
+//!    only when the shared ones do not suffice;
+//! 3. if the job's best option is not to share, it stays pending.
+//!
+//! **C = 2 parity**: with `max_share == 2` every shareable GPU holds
+//! exactly one resident, resident-set grouping degenerates to the
+//! per-owner grouping of [`super::SjfBsbf`], and the set scorer delegates
+//! to [`crate::pair::batch_size_scaling_placed`] — so this policy is
+//! bit-for-bit identical to SJF-BSBF on any C = 2 cluster (pinned on the
+//! 240-job golden trace by `rust/tests/share_cap.rs`).
+
+use std::collections::{BTreeMap, HashMap};
+
+use crate::cluster::{placement, AllocView, GpuId};
+use crate::jobs::{JobId, JobRecord};
+use crate::obskit::Alg2Audit;
+use crate::perf::interference::Composition;
+use crate::perf::share_set::{share_set_scaling_placed, ShareSetConfig};
+use crate::perf::GangSpan;
+use crate::sched_core::{Event, Policy, SchedContext, Txn};
+
+#[derive(Debug)]
+pub struct SjfBsbfK {
+    /// Scheduling-op latencies (seconds) for the §V-4 overhead claim.
+    pub op_latencies_s: Vec<f64>,
+    /// How per-pair ξ factors compose over a resident set.
+    pub composition: Composition,
+    /// Ablation: sweep sub-batches in the generalized Algorithm 2.
+    pub sweep_batches: bool,
+    /// Ablation: apply the share-or-wait gate (false = accept every
+    /// memory-feasible share).
+    pub theorem1_gate: bool,
+    /// Ablation: sort candidate sets by set JCT before taking GPUs.
+    pub sort_by_benefit: bool,
+}
+
+impl Default for SjfBsbfK {
+    fn default() -> Self {
+        SjfBsbfK {
+            op_latencies_s: Vec::new(),
+            composition: Composition::MaxDegradation,
+            sweep_batches: true,
+            theorem1_gate: true,
+            sort_by_benefit: true,
+        }
+    }
+}
+
+impl Policy for SjfBsbfK {
+    fn name(&self) -> &'static str {
+        "SJF-BSBF-k"
+    }
+
+    fn coalesce_coincident(&self) -> bool {
+        true
+    }
+
+    fn on_event(&mut self, ctx: &SchedContext, _ev: Event) -> Txn {
+        let t0 = std::time::Instant::now();
+        let mut plan = ctx.overlay();
+        let cap = plan.max_share();
+        let mut txn = Txn::new();
+        // Accumulation step + planned gang of jobs started in this batch.
+        let mut started: HashMap<JobId, (u32, Vec<GpuId>)> = HashMap::new();
+
+        for id in ctx.pending_by_estimate() {
+            if plan.free_count() == 0
+                && plan.one_job_count() == 0
+                && (cap <= 2 || plan.shareable_gpus().is_empty())
+            {
+                // Nothing can be placed: no free GPU for an exclusive
+                // start and no GPU with a spare share slot. At C = 2 the
+                // one-job count answers this in O(1); a raised cap may
+                // still have multi-resident GPUs with room, so only then
+                // pay the shareable scan.
+                break;
+            }
+            let need = ctx.jobs[id].spec.gpus;
+            let prof = ctx.jobs[id].spec.profile();
+            let solo_gb = prof.mem.mem_gb(ctx.jobs[id].spec.batch as f64);
+            // --- exclusive start on free GPUs
+            if let Some(gpus) = placement::consolidated_free_mem(&plan, need, solo_gb) {
+                plan.allocate(id, &gpus);
+                started.insert(id, (1, gpus.clone()));
+                txn.start(id, gpus, 1);
+                continue;
+            }
+            // --- gate: free + shareable GPUs must cover the request
+            let shareable = plan.shareable_gpus();
+            if shareable.len() + plan.free_count() < need {
+                continue;
+            }
+            let free = plan.free_gpus();
+            // --- generalized lines 10-13: score every distinct resident
+            // set (BTreeMap over the resident vectors: deterministic
+            // iteration; at C = 2 each key is a one-owner vector, so this
+            // is exactly SJF-BSBF's per-owner grouping and order).
+            let mut sets: BTreeMap<Vec<JobId>, Vec<GpuId>> = BTreeMap::new();
+            for &g in &shareable {
+                sets.entry(plan.residents(g)).or_default().push(g);
+            }
+            let mut candidates: Vec<(Vec<GpuId>, ShareSetConfig)> = Vec::new();
+            for (residents, gpus) in sets {
+                // Residents started in this same pass carry hypothetical
+                // accumulation steps and placements; running residents'
+                // `remaining_iters` are folded to `now` (lazy ledger).
+                let mut orecs: Vec<JobRecord> = Vec::with_capacity(residents.len());
+                let mut spans: Vec<GangSpan> = Vec::with_capacity(residents.len());
+                for &owner in &residents {
+                    let mut orec = ctx.jobs[owner].clone();
+                    orec.remaining_iters = ctx.remaining_iters(owner);
+                    let run_gpus: &[GpuId] = match started.get(&owner) {
+                        Some((a, held)) => {
+                            orec.accum_step = *a;
+                            held
+                        }
+                        None => &ctx.jobs[owner].gpus_held,
+                    };
+                    spans.push(plan.span_of(run_gpus));
+                    orecs.push(orec);
+                }
+                let shared = &gpus[..need.min(gpus.len())];
+                let new_span = plan.span_of(shared);
+                let budget = shared
+                    .iter()
+                    .map(|&g| plan.mem_gb(g))
+                    .fold(f64::INFINITY, f64::min);
+                let Some(cfg) = share_set_scaling_placed(
+                    &ctx.jobs[id],
+                    &orecs,
+                    need,
+                    budget,
+                    &ctx.xi,
+                    self.composition,
+                    self.sweep_batches,
+                    &new_span,
+                    &spans,
+                ) else {
+                    if ctx.obs().is_enabled() {
+                        ctx.obs().alg2_candidate(
+                            ctx.now(),
+                            &Alg2Audit {
+                                job: id,
+                                owner: residents[0],
+                                accepted: false,
+                                reason: "memory-infeasible",
+                                accum_step: None,
+                                pair_jct_s: None,
+                            },
+                        );
+                    }
+                    continue;
+                };
+                let accepted = cfg.share || !self.theorem1_gate;
+                if ctx.obs().is_enabled() {
+                    ctx.obs().alg2_candidate(
+                        ctx.now(),
+                        &Alg2Audit {
+                            job: id,
+                            owner: residents[0],
+                            accepted,
+                            reason: if cfg.share {
+                                "share"
+                            } else if !self.theorem1_gate {
+                                "gate-ablated"
+                            } else {
+                                "exclusive-preferred"
+                            },
+                            accum_step: Some(cfg.accum_step),
+                            pair_jct_s: Some(cfg.set_jct),
+                        },
+                    );
+                }
+                if accepted {
+                    candidates.push((gpus, cfg));
+                }
+            }
+            // --- best sharing benefit first (stable sort: ties keep the
+            // deterministic resident-set order)
+            if self.sort_by_benefit {
+                candidates.sort_by(|a, b| a.1.set_jct.total_cmp(&b.1.set_jct));
+            }
+            // --- take GPUs from the best sets
+            let mut chosen: Vec<GpuId> = Vec::new();
+            let mut accum = 1u32;
+            for (gpus, cfg) in &candidates {
+                if chosen.len() >= need {
+                    break;
+                }
+                for &g in gpus {
+                    if chosen.len() == need {
+                        break;
+                    }
+                    chosen.push(g);
+                }
+                accum = accum.max(cfg.accum_step);
+            }
+            if chosen.is_empty() {
+                continue; // best benefit is to wait everywhere
+            }
+            // Top up from free GPUs only if sharing alone cannot cover.
+            let sub_gb = prof.mem.mem_gb(ctx.jobs[id].spec.batch as f64 / accum as f64);
+            for &g in &free {
+                if chosen.len() == need {
+                    break;
+                }
+                if plan.mem_gb(g) + 1e-9 >= sub_gb {
+                    chosen.push(g);
+                }
+            }
+            if chosen.len() < need {
+                continue;
+            }
+            plan.allocate(id, &chosen);
+            started.insert(id, (accum, chosen.clone()));
+            txn.start(id, chosen, accum);
+        }
+        self.op_latencies_s.push(t0.elapsed().as_secs_f64());
+        txn
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterConfig;
+    use crate::jobs::JobSpec;
+    use crate::perf::interference::InterferenceModel;
+    use crate::perf::profiles::ModelKind;
+    use crate::sched::SjfBsbf;
+    use crate::sim::engine;
+
+    fn job(
+        id: usize,
+        model: ModelKind,
+        gpus: usize,
+        iters: u64,
+        batch: u32,
+        arrival: f64,
+    ) -> JobSpec {
+        JobSpec { id, model, gpus, iterations: iters, batch, arrival_s: arrival, est_factor: 1.0 }
+    }
+
+    fn polite_mixed_trace() -> Vec<JobSpec> {
+        vec![
+            job(0, ModelKind::Cifar10, 16, 3000, 128, 0.0),
+            job(1, ModelKind::Ncf, 16, 2000, 4096, 1.0),
+            job(2, ModelKind::Ncf, 16, 500, 4096, 2.0),
+            job(3, ModelKind::Bert, 8, 400, 16, 3.0),
+            job(4, ModelKind::YoloV3, 8, 600, 4, 4.0),
+        ]
+    }
+
+    #[test]
+    fn c2_matches_sjf_bsbf_exactly() {
+        // With the default C = 2 cluster the k-way policy must reproduce
+        // SJF-BSBF bit-for-bit (the full-scale gate lives in
+        // rust/tests/share_cap.rs; this is the unit-sized canary).
+        let trace = polite_mixed_trace();
+        let a = engine::run(
+            ClusterConfig::physical(),
+            &trace,
+            InterferenceModel::new(),
+            &mut SjfBsbf::default(),
+        )
+        .unwrap();
+        let b = engine::run(
+            ClusterConfig::physical(),
+            &trace,
+            InterferenceModel::new(),
+            &mut SjfBsbfK::default(),
+        )
+        .unwrap();
+        assert_eq!(format!("{:?}", a.jobs), format!("{:?}", b.jobs));
+        assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits());
+    }
+
+    #[test]
+    fn c3_admits_a_third_polite_resident() {
+        // CIFAR10@128 (4.3 GB) + NCF@4096 (3.4 GB) leave 3.3 GB: a second
+        // NCF fits at sub-batch 2048 (2.1 GB), and the composed ξ of the
+        // polite trio stays ~1.1 — so C = 3 should co-locate the third
+        // job immediately while C = 2 must queue it.
+        let trace = vec![
+            job(0, ModelKind::Cifar10, 16, 3000, 128, 0.0),
+            job(1, ModelKind::Ncf, 16, 2000, 4096, 1.0),
+            job(2, ModelKind::Ncf, 16, 500, 4096, 2.0),
+        ];
+        let mut c3 = ClusterConfig::physical();
+        c3.max_share = 3;
+        let out3 = engine::run(
+            c3,
+            &trace,
+            InterferenceModel::new(),
+            &mut SjfBsbfK::default(),
+        )
+        .unwrap();
+        assert!(
+            out3.jobs[2].queueing_delay().unwrap() < 1.0,
+            "C = 3 must admit the third resident: {:?}",
+            out3.jobs[2]
+        );
+        let out2 = engine::run(
+            ClusterConfig::physical(),
+            &trace,
+            InterferenceModel::new(),
+            &mut SjfBsbfK::default(),
+        )
+        .unwrap();
+        assert!(
+            out2.jobs[2].queueing_delay().unwrap() > 1.0,
+            "C = 2 must queue the third job: {:?}",
+            out2.jobs[2]
+        );
+    }
+
+    #[test]
+    fn still_declines_catastrophic_shares_at_any_cap() {
+        // The Theorem-1 gate survives the generalization: two small-batch
+        // YoloV3 (ξ ≈ 6) must not co-locate even with spare share slots.
+        let trace = vec![
+            job(0, ModelKind::YoloV3, 16, 1500, 4, 0.0),
+            job(1, ModelKind::YoloV3, 16, 1500, 4, 1.0),
+        ];
+        let mut c4 = ClusterConfig::physical();
+        c4.max_share = 4;
+        let out = engine::run(
+            c4,
+            &trace,
+            InterferenceModel::new(),
+            &mut SjfBsbfK::default(),
+        )
+        .unwrap();
+        let q1 = out.jobs[1].queueing_delay().unwrap();
+        assert!(q1 > 1.0, "toxic share must still be refused, q={q1}");
+    }
+
+    #[test]
+    fn product_composition_is_more_conservative() {
+        // PairwiseProduct inflates composed ξ, so it can only refuse more
+        // shares than MaxDegradation — the third job's start must not get
+        // *earlier* when switching composition.
+        let trace = vec![
+            job(0, ModelKind::Cifar10, 16, 3000, 128, 0.0),
+            job(1, ModelKind::Ncf, 16, 2000, 4096, 1.0),
+            job(2, ModelKind::Ncf, 16, 500, 4096, 2.0),
+        ];
+        let mut c3 = ClusterConfig::physical();
+        c3.max_share = 3;
+        let mx = engine::run(
+            c3,
+            &trace,
+            InterferenceModel::new(),
+            &mut SjfBsbfK::default(),
+        )
+        .unwrap();
+        let mut prod_policy = SjfBsbfK {
+            composition: Composition::PairwiseProduct,
+            ..SjfBsbfK::default()
+        };
+        let prod =
+            engine::run(c3, &trace, InterferenceModel::new(), &mut prod_policy).unwrap();
+        let q_mx = mx.jobs[2].queueing_delay().unwrap();
+        let q_prod = prod.jobs[2].queueing_delay().unwrap();
+        assert!(q_prod + 1e-9 >= q_mx, "product must not share more: {q_prod} vs {q_mx}");
+    }
+}

@@ -10,6 +10,13 @@
 //! remaining runtime ([`SchedContext::pending_by_estimate`]); since it
 //! never consults durations beyond that order, it is less
 //! estimate-sensitive than BSBF.
+//!
+//! The first fit honors the cluster's share cap C (DESIGN.md §17): with a
+//! raised cap it packs onto any GPU with a spare slot whose *summed*
+//! resident footprint (Eq. 9) leaves room for at least sub-batch 1. At
+//! C = 2 the shareable set is exactly the one-job set and the resident
+//! sum has one term, so the paper configuration is bit-for-bit unchanged
+//! (pinned by `rust/tests/share_cap.rs`).
 
 use std::collections::HashMap;
 
@@ -36,12 +43,18 @@ impl Policy for SjfFfs {
         // we start within this same batch of decisions.
         let mut started_accum: HashMap<JobId, u32> = HashMap::new();
 
+        let cap = plan.max_share();
         for id in ctx.pending_by_estimate() {
-            if plan.free_count() == 0 && plan.one_job_count() == 0 {
+            if plan.free_count() == 0
+                && plan.one_job_count() == 0
+                && (cap <= 2 || plan.shareable_gpus().is_empty())
+            {
                 // Neither an exclusive start nor a first-fit share can
                 // place anything (every gang needs ≥ 1 GPU and the line-9
                 // gate rejects before any side effect), so the remaining
-                // candidates are all skips — same outcome, cut short.
+                // candidates are all skips — same outcome, cut short. At
+                // C = 2 the one-job count answers the share question in
+                // O(1); only a raised cap pays the shareable scan.
                 break;
             }
             let need = ctx.jobs[id].spec.gpus;
@@ -54,31 +67,34 @@ impl Policy for SjfFfs {
                 txn.start(id, gpus, 1);
                 continue;
             }
-            // 2) first-fit over one-job GPUs, memory-checked only.
-            if plan.one_job_count() + plan.free_count() < need {
+            // 2) first-fit over GPUs with a spare share slot (exactly the
+            //    one-job set at C = 2), memory-checked only.
+            let shareable = plan.shareable_gpus();
+            if shareable.len() + plan.free_count() < need {
                 continue;
             }
-            let one_job = plan.one_job_gpus();
             let free = plan.free_gpus();
             // Tightest per-GPU headroom across the GPUs we take (each GPU
             // has its own per-type budget under heterogeneity); the
-            // sub-batch must fit next to the heaviest co-runner.
+            // sub-batch must fit next to the *summed* co-runner footprint
+            // (Eq. 9 over all residents — one term at C = 2).
             let mut chosen: Vec<usize> = Vec::new();
             let mut min_headroom = f64::INFINITY;
-            for &g in &one_job {
+            for &g in &shareable {
                 if chosen.len() == need {
                     break;
                 }
-                let other = plan.owner(g).expect("one-job GPU has an owner");
-                let orec = &ctx.jobs[other];
-                let o_accum =
-                    started_accum.get(&other).copied().unwrap_or(orec.accum_step);
-                let resident = orec
-                    .spec
-                    .profile()
-                    .mem
-                    .mem_gb(orec.spec.batch as f64 / o_accum as f64);
-                let headroom = plan.mem_gb(g) - resident;
+                let mut headroom = plan.mem_gb(g);
+                for other in plan.residents(g) {
+                    let orec = &ctx.jobs[other];
+                    let o_accum =
+                        started_accum.get(&other).copied().unwrap_or(orec.accum_step);
+                    headroom -= orec
+                        .spec
+                        .profile()
+                        .mem
+                        .mem_gb(orec.spec.batch as f64 / o_accum as f64);
+                }
                 // Feasible at all? (even sub-batch 1 must fit)
                 if prof.mem.mem_gb(1.0) <= headroom {
                     chosen.push(g);
@@ -211,6 +227,40 @@ mod tests {
         .unwrap();
         let q1 = out.jobs[1].queueing_delay().unwrap();
         assert!(q1 > 1.0, "memory-infeasible share must queue, q={q1}");
+    }
+
+    #[test]
+    fn packs_a_third_resident_when_cap_raised() {
+        // At C = 3 first-fit packs a third CIFAR10 next to two residents
+        // (3 × 4.3 GB > 11 GB, but sub-batch halving fits); at the paper's
+        // C = 2 the same job must queue.
+        let trace = vec![
+            job(0, ModelKind::Cifar10, 16, 3000, 128, 0.0),
+            job(1, ModelKind::Cifar10, 16, 2000, 128, 1.0),
+            job(2, ModelKind::Cifar10, 16, 100, 128, 2.0),
+        ];
+        let mut cfg = ClusterConfig::physical();
+        cfg.max_share = 3;
+        let out3 =
+            engine::run(cfg, &trace, InterferenceModel::new(), &mut SjfFfs).unwrap();
+        assert!(
+            out3.jobs[2].queueing_delay().unwrap() < 1.0,
+            "C = 3 first-fit must admit the third job: {:?}",
+            out3.jobs[2]
+        );
+        assert!(out3.jobs[2].accum_step > 1, "third resident must shrink its sub-batch");
+        let out2 = engine::run(
+            ClusterConfig::physical(),
+            &trace,
+            InterferenceModel::new(),
+            &mut SjfFfs,
+        )
+        .unwrap();
+        assert!(
+            out2.jobs[2].queueing_delay().unwrap() > 1.0,
+            "C = 2 must queue the third job: {:?}",
+            out2.jobs[2]
+        );
     }
 
     #[test]

@@ -1,5 +1,6 @@
 //! [`CalendarQueue`] — a bucketed timer wheel for the event core's
-//! finish-projection and restart-expiry queues.
+//! finish-projection and restart-expiry queues (DESIGN.md §15 covers
+//! the million-job event core this queue serves).
 //!
 //! A classic calendar queue (Brown '88) beats a binary heap under heavy
 //! traffic because the common operations touch one bucket instead of a

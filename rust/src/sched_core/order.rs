@@ -1,12 +1,13 @@
 //! [`PendingOrder`]: incrementally maintained orderings of the eligible
 //! pending set, so a policy pass iterates candidates in priority order
-//! without re-sorting the backlog per event.
+//! without re-sorting the backlog per event (DESIGN.md §16 covers the
+//! policy-pass hot path this index serves).
 //!
-//! Two orderings cover the paper's six policies:
+//! Two orderings cover all seven shipped policies:
 //!
 //! * **by estimate** — `(total_cmp(estimated_remaining), id)` ascending:
-//!   the shared SJF-family key (SJF, SJF-FFS, SJF-BSBF) and the
-//!   within-queue order Tiresias admits in.
+//!   the shared SJF-family key (SJF, SJF-FFS, SJF-BSBF, SJF-BSBF-k) and
+//!   the within-queue order Tiresias admits in.
 //! * **by arrival** — `(total_cmp(arrival_s), id)` ascending: FIFO's
 //!   head-of-line order and the Tiresias tie-break.
 //!

@@ -28,7 +28,7 @@ pub use crate::sched_core::{Decision, Event, Policy, SchedContext, Txn};
 
 use crate::cluster::Cluster;
 use crate::jobs::{JobId, JobRecord, JobState};
-use crate::perf::interference::InterferenceModel;
+use crate::perf::interference::{Composition, InterferenceModel};
 
 /// The world data shared by the simulator and the physical coordinator.
 #[derive(Debug, Clone)]
@@ -101,12 +101,14 @@ impl SimState {
             &span,
         );
         let width_scale = workers as f64 / rec.spec.gpus as f64;
-        let xi = self
-            .cluster
-            .co_runners(id)
-            .iter()
-            .map(|&co| self.xi.xi(rec.spec.model, self.jobs[co].spec.model))
-            .fold(1.0f64, f64::max);
+        // k-way co-runner sets compose under the engine-default
+        // MaxDegradation rule — bit-identical to the historical
+        // max-fold for every set size (DESIGN.md §17).
+        let xi = self.xi.xi_set(
+            rec.spec.model,
+            self.cluster.co_runners(id).iter().map(|&co| self.jobs[co].spec.model),
+            Composition::MaxDegradation,
+        );
         solo / width_scale * xi
     }
 }

@@ -29,6 +29,7 @@ fn small_spec(policies: &[&str], job_counts: Vec<usize>, seeds: Vec<u64>) -> Cam
         topologies: Vec::new(),
         workloads: Vec::new(),
         estimators: Vec::new(),
+        share_caps: Vec::new(),
         seeds,
         jobs_scale_load_baseline: None,
     };
@@ -279,7 +280,7 @@ fn topology_axis_produces_per_shape_cells() {
     let csv = campaign::emit::long_csv(&spec.name, &res.cells);
     assert!(
         csv.lines()
-            .any(|l| l.starts_with("test,hetero-16x4-2tier,philly-sim,oracle,64,16,1,SJF,")),
+            .any(|l| l.starts_with("test,hetero-16x4-2tier,philly-sim,oracle,64,16,1,2,SJF,")),
         "{csv}"
     );
 }
@@ -325,18 +326,19 @@ fn topologies_axis_parses_from_json_and_rejects_unknown_shapes() {
 }
 
 #[test]
-fn csv_carries_schema_v3_header() {
-    // The row/column set has changed three times (topology, then
-    // workload/estimator, then the obskit utilization rows) — downstream
-    // consumers pin on the schema comment, so its presence and position
-    // are part of the emitter's contract.
+fn csv_carries_schema_v4_header() {
+    // The row/column set has changed four times (topology, then
+    // workload/estimator, then the obskit utilization rows, then the
+    // share_cap column) — downstream consumers pin on the schema comment,
+    // so its presence and position are part of the emitter's contract.
     let spec = small_spec(&["FIFO"], vec![12], vec![1]);
     let res = campaign::execute(&spec, 0).unwrap();
     let csv = campaign::emit::long_csv(&spec.name, &res.cells);
     let mut lines = csv.lines();
-    assert_eq!(lines.next(), Some("# schema: v3"));
+    assert_eq!(lines.next(), Some("# schema: v4"));
     assert_eq!(lines.next(), Some(campaign::emit::CSV_HEADER));
     assert!(campaign::emit::CSV_HEADER.starts_with("campaign,topology,workload,estimator,"));
+    assert!(campaign::emit::CSV_HEADER.contains(",share_cap,policy,"));
     // The v3 rows are present for every cell.
     for metric in ["gpu_util", "sharing_frac", "unfinished"] {
         assert!(
@@ -374,7 +376,7 @@ fn workloads_and_estimators_axes_run_end_to_end() {
     let csv = campaign::emit::long_csv(&spec.name, &res.cells);
     assert!(
         csv.lines()
-            .any(|l| l.starts_with("test,uniform-4x4,small-job-flood,noisy:1,16,24,1,SJF-BSBF,")),
+            .any(|l| l.starts_with("test,uniform-4x4,small-job-flood,noisy:1,16,24,1,2,SJF-BSBF,")),
         "{csv}"
     );
 }

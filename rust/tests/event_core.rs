@@ -91,7 +91,7 @@ fn prop_calendar_queue_matches_reference_heap_order() {
 
 // ----------------------------------------------------- golden equivalence
 
-/// Paper-scale golden runs for all six policies: the batch engine and the
+/// Paper-scale golden runs for all seven policies: the batch engine and the
 /// incremental pump — with the eager reference shadow re-deriving every
 /// quantity the pre-lazy way — must agree bitwise on every job field.
 #[test]
@@ -193,7 +193,7 @@ impl Policy for PerEventDelivery {
 }
 
 /// Coincident-batch coalescing is an optimization, not a semantics
-/// change: for all six policies on the paper-scale golden trace, the
+/// change: for all seven policies on the paper-scale golden trace, the
 /// batched run and a forced per-event run must agree bitwise on every
 /// job field — only the number of delivered passes may shrink.
 #[test]

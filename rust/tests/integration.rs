@@ -41,7 +41,7 @@ fn every_policy_completes_every_job() {
 fn jct_never_beats_solo_runtime_for_gang_faithful_policies() {
     // A job can never finish faster than its solo runtime on its requested
     // gang (non-elastic policies run it at exactly that width).
-    for name in ["FIFO", "SJF", "Tiresias", "SJF-FFS", "SJF-BSBF"] {
+    for name in ["FIFO", "SJF", "Tiresias", "SJF-FFS", "SJF-BSBF", "SJF-BSBF-k"] {
         let (out, _) = run(name, 60, 5, 1.0, InterferenceModel::new());
         for j in &out.jobs {
             let solo = j.spec.solo_runtime(1);

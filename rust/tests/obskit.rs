@@ -1,7 +1,7 @@
 //! Integration: the obskit contract end to end (DESIGN.md §13). Arming
 //! every sink must not change *simulation results* — per-job records and
 //! the run integrals are compared byte-for-byte against an obs-off run of
-//! the same trace for all six policies — and the written artifacts must
+//! the same trace for all seven policies — and the written artifacts must
 //! be non-empty, schema-clean, and (for the Chrome trace) globally
 //! timestamp-ordered.
 

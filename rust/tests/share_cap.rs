@@ -1,0 +1,214 @@
+//! k-way sharing-set tests (DESIGN.md §17).
+//!
+//! * **C = 2 golden parity**: the k-way generalization must be invisible
+//!   at the paper's pair cap. `SJF-BSBF-k` at C = 2 is *byte-identical*
+//!   to `SJF-BSBF` on the 240-job/64-GPU paper trace, and an explicit
+//!   `with_max_share(2)` cluster is byte-identical to the default path
+//!   for all seven policies — the refactor's equivalence guarantee.
+//! * **Composition properties**: a composed ξ collapses bit-for-bit to
+//!   the pair factor at one aggressor (so every C = 2 code path is
+//!   unaffected by the [`Composition`] choice) and never decreases when
+//!   an aggressor is added, under both composition rules.
+//! * **Eq. 9 at C = 3**: the transaction layer admits a third resident
+//!   only within the k-way memory budget — a full-batch third job is
+//!   rejected, the same job fits after gradient accumulation shrinks
+//!   its sub-batch, and a fourth job trips the C cap itself.
+
+use wise_share::cluster::{Cluster, ClusterConfig};
+use wise_share::jobs::trace::{self, TraceConfig};
+use wise_share::jobs::{JobRecord, JobSpec, JobState};
+use wise_share::perf::interference::{Composition, InterferenceModel};
+use wise_share::perf::profiles::ModelKind;
+use wise_share::prop_assert;
+use wise_share::sched::{self, POLICY_NAMES};
+use wise_share::sim::engine::{self, EngineConfig, SimOutcome};
+use wise_share::sim::SimState;
+use wise_share::sched_core::{SchedContext, Txn};
+use wise_share::util::prop::forall;
+
+/// Every observable of an outcome, with f64s captured as raw bits so the
+/// comparison is byte-exact, not epsilon-close.
+fn fingerprint(out: &SimOutcome) -> Vec<(u64, u64, u64, u64, u32, Vec<usize>, u8)> {
+    out.jobs
+        .iter()
+        .map(|j| {
+            (
+                j.finish_s.unwrap_or(f64::NAN).to_bits(),
+                j.first_start_s.unwrap_or(f64::NAN).to_bits(),
+                j.queued_s.to_bits(),
+                j.remaining_iters.to_bits(),
+                j.accum_step,
+                j.gpus_held.clone(),
+                match j.state {
+                    JobState::Pending => 0,
+                    JobState::Running => 1,
+                    JobState::Preempted => 2,
+                    JobState::Finished => 3,
+                },
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn golden_sjf_bsbf_k_at_c2_is_byte_identical_to_sjf_bsbf() {
+    // At the paper's pair cap the k-way policy *is* the pair policy: same
+    // candidate order, same Theorem-1 arithmetic (share_set delegates to
+    // the pair path at one resident), same gang assembly — pinned on the
+    // full 240-job paper trace.
+    let jobs = trace::generate(&TraceConfig::simulation(240, 1));
+    let mut pair = sched::by_name("SJF-BSBF").unwrap();
+    let a = engine::run(ClusterConfig::simulation(), &jobs, InterferenceModel::new(), pair.as_mut())
+        .unwrap();
+    let mut kway = sched::by_name("SJF-BSBF-k").unwrap();
+    let b = engine::run(ClusterConfig::simulation(), &jobs, InterferenceModel::new(), kway.as_mut())
+        .unwrap();
+    assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits(), "makespan diverged");
+    assert_eq!(a.policy_calls, b.policy_calls, "policy calls diverged");
+    assert_eq!(a.preemptions, b.preemptions, "preemptions diverged");
+    assert_eq!(fingerprint(&a), fingerprint(&b), "job records diverged");
+}
+
+#[test]
+fn golden_explicit_c2_cap_matches_default_for_all_policies() {
+    // `with_max_share(2)` must be a no-op relative to the default config
+    // for every policy — the share-cap knob cannot perturb the C = 2
+    // baseline it generalizes.
+    let jobs = trace::generate(&TraceConfig::simulation(240, 1));
+    for name in POLICY_NAMES {
+        let mut p1 = sched::by_name(name).unwrap();
+        let default = engine::run(
+            ClusterConfig::simulation(),
+            &jobs,
+            InterferenceModel::new(),
+            p1.as_mut(),
+        )
+        .unwrap();
+        let mut p2 = sched::by_name(name).unwrap();
+        let capped = engine::run_cluster(
+            Cluster::new(ClusterConfig::simulation()).with_max_share(2),
+            &jobs,
+            InterferenceModel::new(),
+            p2.as_mut(),
+            EngineConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(
+            default.makespan_s.to_bits(),
+            capped.makespan_s.to_bits(),
+            "{name}: makespan diverged"
+        );
+        assert_eq!(default.policy_calls, capped.policy_calls, "{name}: policy calls");
+        assert_eq!(default.preemptions, capped.preemptions, "{name}: preemptions");
+        assert_eq!(fingerprint(&default), fingerprint(&capped), "{name}: job records diverged");
+    }
+}
+
+#[test]
+fn prop_composition_collapses_to_pair_factor_at_one_aggressor() {
+    // Identity at k = 1 is what keeps every pair (C = 2) code path
+    // bit-for-bit independent of the composition rule.
+    forall("xi-set-collapse", 0x5E7, 256, |rng| {
+        let m = if rng.f64() < 0.25 {
+            InterferenceModel::with_global(1.0 + 2.0 * rng.f64())
+        } else {
+            InterferenceModel::new()
+        };
+        let victim = ModelKind::ALL[rng.index(ModelKind::ALL.len())];
+        let aggressor = ModelKind::ALL[rng.index(ModelKind::ALL.len())];
+        let pair = m.xi(victim, aggressor);
+        for comp in [Composition::MaxDegradation, Composition::PairwiseProduct] {
+            let set = m.xi_set(victim, [aggressor], comp);
+            prop_assert!(
+                set.to_bits() == pair.to_bits(),
+                "{comp:?}: xi_set {set} != pair xi {pair} for \
+                 ({victim:?}, {aggressor:?})"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_composition_never_decreases_when_an_aggressor_is_added() {
+    // Monotonicity: more co-runners can only slow a victim down — under
+    // either rule, and from any starting set (including empty, where the
+    // composed factor is 1).
+    forall("xi-set-monotone", 0x5E8, 256, |rng| {
+        let m = InterferenceModel::new();
+        let victim = ModelKind::ALL[rng.index(ModelKind::ALL.len())];
+        let base: Vec<ModelKind> = (0..rng.index(4))
+            .map(|_| ModelKind::ALL[rng.index(ModelKind::ALL.len())])
+            .collect();
+        let extra = ModelKind::ALL[rng.index(ModelKind::ALL.len())];
+        let mut grown = base.clone();
+        grown.push(extra);
+        for comp in [Composition::MaxDegradation, Composition::PairwiseProduct] {
+            let before = m.xi_set(victim, base.iter().copied(), comp);
+            let after = m.xi_set(victim, grown.iter().copied(), comp);
+            prop_assert!(before >= 1.0, "{comp:?}: composed xi {before} < 1");
+            prop_assert!(
+                after >= before,
+                "{comp:?}: adding {extra:?} to {base:?} decreased xi for \
+                 {victim:?}: {before} -> {after}"
+            );
+        }
+        Ok(())
+    });
+}
+
+/// A 1-GPU Cifar10@128 job record (4.3 GB at full batch) with id `id`,
+/// already arrived.
+fn cifar_job(id: usize) -> JobRecord {
+    JobRecord::new(JobSpec {
+        id,
+        model: ModelKind::Cifar10,
+        gpus: 1,
+        iterations: 1000,
+        batch: 128,
+        arrival_s: 0.0,
+        est_factor: 1.0,
+    })
+}
+
+#[test]
+fn eq9_admits_a_third_resident_only_within_the_kway_budget() {
+    // Three Cifar10@128 residents want 3 x 4.3 = 12.9 GB on an 11 GB GPU:
+    // the transaction layer must reject the full-batch third start, accept
+    // it once gradient accumulation shrinks the sub-batch (Eq. 9), and
+    // reject a fourth start on the C = 3 cap itself.
+    let state = SimState {
+        now: 0.0,
+        cluster: Cluster::new(ClusterConfig::simulation()).with_max_share(3),
+        jobs: (0..4).map(cifar_job).collect(),
+        xi: InterferenceModel::new(),
+        not_before: vec![0.0; 4],
+        service_gpu_s: vec![0.0; 4],
+    };
+    let mut ctx = SchedContext::from_state(state);
+
+    // Two residents fit at full batch (8.6 GB <= 11 GB).
+    for job in [0usize, 1] {
+        let mut txn = Txn::new();
+        txn.start(job, vec![0], 1);
+        ctx.apply(&txn, 0.0).unwrap_or_else(|e| panic!("job {job} must start: {e:#}"));
+    }
+
+    // Full-batch third resident: 12.9 GB > 11 GB — Eq. 9 rejects.
+    let mut over = Txn::new();
+    over.start(2, vec![0], 1);
+    let err = format!("{:#}", ctx.apply(&over, 0.0).unwrap_err());
+    assert!(err.contains("memory over budget"), "wrong rejection: {err}");
+
+    // Same job at accum_step 4 (sub-batch 32, 1.9 GB): 10.5 GB fits.
+    let mut accum = Txn::new();
+    accum.start(2, vec![0], 4);
+    ctx.apply(&accum, 0.0).expect("accumulated third resident fits Eq. 9");
+    assert_eq!(ctx.cluster.slot(0).jobs.len(), 3);
+
+    // A fourth job trips the share cap, not the memory check.
+    let mut fourth = Txn::new();
+    fourth.start(3, vec![0], 4);
+    let err = format!("{:#}", ctx.apply(&fourth, 0.0).unwrap_err());
+    assert!(err.contains("share capacity C = 3"), "wrong rejection: {err}");
+}

@@ -2,7 +2,7 @@
 //!
 //! * **Uniform-topology golden test**: a `Topology` built from the flat
 //!   `ClusterConfig::simulation()` must yield *byte-identical*
-//!   `SimOutcome`s to the flat-config path for all six policies on the
+//!   `SimOutcome`s to the flat-config path for all seven policies on the
 //!   240-job paper trace — the refactor's equivalence guarantee (the
 //!   placed Eq. 2/4/7 arithmetic reproduces the placement-agnostic
 //!   formulas bit-for-bit under reference tiers, and the overlay planning

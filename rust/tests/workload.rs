@@ -3,7 +3,7 @@
 //! * **Golden parity**: the preset-driven generator must reproduce the
 //!   pre-v2 generator *byte-for-byte* on the default (`philly-sim`
 //!   Poisson × oracle) path — pinned against a frozen inline copy of the
-//!   old generator body — and all six policies must produce
+//!   old generator body — and all seven policies must produce
 //!   byte-identical outcomes on the 240-job/64-GPU paper trace whether
 //!   the oracle or a zero-sigma noisy estimator materialized the
 //!   estimates (the estimator plumbing is live either way; `σ = 0` means
